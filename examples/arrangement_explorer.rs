@@ -1,0 +1,102 @@
+//! Arrangement explorer: derive the paper's arrangements with the Rust
+//! algebra mirror and print their hierarchy, index expressions, grids and
+//! padded extents for a chosen problem size — a debugging/teaching tool
+//! for the tensor-oriented metaprogramming model.
+//!
+//! ```bash
+//! cargo run --release --example arrangement_explorer -- mm --m 70 --k 50 --n 90
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+use ninetoothed_repro::arrange::catalog;
+use ninetoothed_repro::cli::Args;
+use ninetoothed_repro::tensor::SymTensor;
+
+fn show(tensors: &[SymTensor], bindings: &BTreeMap<String, i64>) -> Result<()> {
+    for t in tensors {
+        println!("parameter {}:", t.name);
+        for (i, level) in t.levels.iter().enumerate() {
+            let sizes: Vec<String> = level.iter().map(|d| d.size.to_string()).collect();
+            let label = match i {
+                0 => "outermost (tile-to-program)",
+                _ if i + 1 == t.levels.len() => "innermost (application tile)",
+                _ => "loop level",
+            };
+            println!("  level {i} [{label}]: ({})", sizes.join(", "));
+        }
+        for (d, expr) in t.indices.iter().enumerate() {
+            println!("  source dim {d} <- {expr}");
+        }
+        let grid = t.grid(bindings)?;
+        let extents = t.padded_extents(bindings)?;
+        println!("  grid contribution: {grid:?}; padded extents: {extents:?}");
+    }
+    let (grid, _) = catalog::geometry(tensors, bindings)?;
+    let programs: i64 = grid.iter().product();
+    println!("\ntile-to-program mapping: grid {grid:?} -> {programs} programs");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let kernel = args.command.clone().unwrap_or_else(|| "mm".to_string());
+    let block = args.opt_usize("block", 32) as i64;
+
+    let mut bindings: BTreeMap<String, i64> = BTreeMap::new();
+    for key in ["BLOCK_SIZE", "BLOCK_SIZE_M", "BLOCK_SIZE_N", "BLOCK_SIZE_K"] {
+        bindings.insert(key.to_string(), block);
+    }
+
+    let tensors = match kernel.as_str() {
+        "add" => {
+            let n = args.opt_usize("n", 4097) as i64;
+            for t in ["input", "other", "output"] {
+                bindings.insert(format!("{t}_size_0"), n);
+            }
+            catalog::add()?
+        }
+        "mm" => {
+            let (m, k, n) = (
+                args.opt_usize("m", 70) as i64,
+                args.opt_usize("k", 50) as i64,
+                args.opt_usize("n", 90) as i64,
+            );
+            for (key, value) in [
+                ("input_size_0", m), ("input_size_1", k),
+                ("other_size_0", k), ("other_size_1", n),
+                ("output_size_0", m), ("output_size_1", n),
+            ] {
+                bindings.insert(key.to_string(), value);
+            }
+            catalog::mm()?
+        }
+        "conv2d" => {
+            let (n, c, h, w) = (2i64, 3, 12, 12);
+            let (k, r, s) = (4i64, 3, 3);
+            for (key, value) in [
+                ("input_size_0", n), ("input_size_1", c), ("input_size_2", h), ("input_size_3", w),
+                ("filter_size_0", k), ("filter_size_1", c), ("filter_size_2", r), ("filter_size_3", s),
+                ("output_size_0", n), ("output_size_1", k),
+                ("output_size_2", h - r + 1), ("output_size_3", w - s + 1),
+            ] {
+                bindings.insert(key.to_string(), value);
+            }
+            catalog::conv2d()?
+        }
+        "sdpa" => {
+            let (b, h, s, d) = (2i64, 4, 128, 32);
+            for t in ["query", "key", "value", "output"] {
+                for (i, v) in [b, h, s, d].iter().enumerate() {
+                    bindings.insert(format!("{t}_size_{i}"), *v);
+                }
+            }
+            catalog::sdpa()?
+        }
+        other => bail!("unknown arrangement {other:?} (try add, mm, conv2d, sdpa)"),
+    };
+
+    println!("=== {kernel} arrangement (block = {block}) ===\n");
+    show(&tensors, &bindings)
+}

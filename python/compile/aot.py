@@ -1,0 +1,402 @@
+"""AOT export: lower every kernel task and the model steps to HLO text.
+
+This is the single build-time Python entry point (``make artifacts``).
+Python never runs on the request path: the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` through the PJRT C API and executes them
+directly.
+
+Interchange format is HLO **text**, not serialized HloModuleProto — jax
+>= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Emitted:
+
+* ``<kernel>.<variant>.hlo.txt``   — one per Fig 6 task per variant
+  (variants: ``nt`` = NineToothed-generated, ``baseline`` = hand-written
+  Pallas, ``ref`` = pure jnp / the "PyTorch" series)
+* ``model.<step>.<variant>.hlo.txt`` — prefill + decode step per variant
+* ``weights.bin``                  — flat little-endian f32 weight blob
+* ``golden/*.bin``                 — input/output pairs for Rust runtime
+  integration tests
+* ``manifest.json``                — everything the Rust side needs:
+  argument shapes/dtypes, weight table, model config, Fig 6 task list with
+  FLOP estimates, and the full arrangement metadata (levels + index
+  expressions) of every NineToothed kernel for the Rust algebra mirror.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+import model as model_mod
+from kernels import ref as ref_mod
+from kernels.baseline import KERNELS as BASELINE_KERNELS
+from kernels.nt import KERNELS as NT_KERNELS
+
+# ---------------------------------------------------------------------------
+# Fig 6 task table (paper §5.3.1).  Default shapes are scaled so the whole
+# sweep runs in minutes on the CPU-interpret substrate; ``--full`` restores
+# the paper's shapes (see DESIGN.md §6).  float32 substitutes float16.
+# ---------------------------------------------------------------------------
+
+
+def task_table(full: bool):
+    if full:
+        n_vec, mat, bsz = 16777216, 4096, 4
+        conv = ((4, 512, 14, 14), (512, 512, 3, 3))
+        rope_shape, sdpa_shape = (4, 1024, 48, 64), (4, 48, 1024, 64)
+        bmm_shape = (4, 2048, 2048)
+    else:
+        n_vec, mat, bsz = 65536, 256, 2
+        conv = ((2, 64, 14, 14), (64, 64, 3, 3))
+        rope_shape, sdpa_shape = (2, 128, 8, 64), (2, 8, 128, 64)
+        bmm_shape = (2, 128, 128)
+
+    tasks = {}
+
+    tasks["add"] = dict(
+        args=[(n_vec,), (n_vec,)],
+        meta=dict(BLOCK_SIZE=1024),
+        flops=n_vec,
+    )
+    tasks["addmm"] = dict(
+        args=[(mat, mat), (mat, mat), (mat, mat), (), ()],
+        meta=dict(BLOCK_SIZE_M=64, BLOCK_SIZE_N=64, BLOCK_SIZE_K=64),
+        flops=2 * mat**3 + 2 * mat**2,
+    )
+    tasks["bmm"] = dict(
+        args=[bmm_shape, bmm_shape],
+        meta=dict(BLOCK_SIZE_M=64, BLOCK_SIZE_N=64, BLOCK_SIZE_K=64),
+        flops=2 * bmm_shape[0] * bmm_shape[1] ** 3,
+    )
+    n_, c_, h_, w_ = conv[0]
+    k_, _, r_, s_ = conv[1]
+    p_, q_ = h_ - r_ + 1, w_ - s_ + 1
+    tasks["conv2d"] = dict(
+        args=[conv[0], conv[1]],
+        meta=dict(BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32),
+        flops=2 * n_ * k_ * p_ * q_ * c_ * r_ * s_,
+    )
+    tasks["mm"] = dict(
+        args=[(mat, mat), (mat, mat)],
+        meta=dict(BLOCK_SIZE_M=64, BLOCK_SIZE_N=64, BLOCK_SIZE_K=64),
+        flops=2 * mat**3,
+    )
+    tasks["rms_norm"] = dict(args=[(mat, mat)], meta={}, flops=3 * mat * mat)
+    s_len, half = rope_shape[1], rope_shape[3] // 2
+    tasks["rope"] = dict(
+        args=[rope_shape, (s_len, half), (s_len, half)],
+        meta={},
+        flops=6 * int(np.prod(rope_shape)),
+    )
+    b_s, h_s, s_s, d_s = sdpa_shape
+    tasks["sdpa"] = dict(
+        args=[sdpa_shape, sdpa_shape, sdpa_shape],
+        meta=dict(BLOCK_SIZE_M=64, BLOCK_SIZE_N=64),
+        flops=4 * b_s * h_s * s_s * s_s * d_s,
+    )
+    tasks["silu"] = dict(args=[(n_vec,)], meta=dict(BLOCK_SIZE=1024), flops=4 * n_vec)
+    tasks["softmax"] = dict(args=[(mat, mat)], meta={}, flops=5 * mat * mat)
+
+    for t in tasks.values():
+        t["dtype"] = "float32"  # documented float16 -> float32 substitution
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    # Prefer the direct HLO dialect (robust to StableHLO pretty-printer
+    # version skew on ops like dynamic_slice); fall back to the stablehlo
+    # text round-trip used by /opt/xla-example/gen_hlo.py.
+    try:
+        return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+    except Exception:
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        return comp.as_hlo_text()
+
+
+def task_callable(name: str, variant: str, shapes, meta):
+    """A jit-lowerable function running one Fig 6 task under one variant."""
+    if variant == "ref":
+        fn = ref_mod.ALL[name]
+
+        def run(*args):
+            return (fn(*args),)
+
+        return run
+
+    kernels = NT_KERNELS if variant == "nt" else BASELINE_KERNELS
+    kern = kernels[name]
+
+    def run(*args):
+        if name == "add":
+            out = jnp.empty(args[0].shape, args[0].dtype)
+        elif name in ("mm", "addmm"):
+            a, b = (args[1], args[2]) if name == "addmm" else (args[0], args[1])
+            out = jnp.empty((a.shape[0], b.shape[1]), a.dtype)
+        elif name == "bmm":
+            out = jnp.empty(
+                (args[0].shape[0], args[0].shape[1], args[1].shape[2]), args[0].dtype
+            )
+        elif name == "conv2d":
+            x, f = args
+            out = jnp.empty(
+                (
+                    x.shape[0],
+                    f.shape[0],
+                    x.shape[2] - f.shape[2] + 1,
+                    x.shape[3] - f.shape[3] + 1,
+                ),
+                x.dtype,
+            )
+        else:
+            out = jnp.empty(args[0].shape, args[0].dtype)
+        return (kern(*args, out, **meta),)
+
+    return run
+
+
+def example_args(shapes, dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(tuple(s), dtype) for s in shapes]
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def export_kernels(out_dir: Path, full: bool, manifest: dict):
+    tasks = task_table(full)
+    manifest["kernels"] = []
+    for name, spec in tasks.items():
+        for variant in ("nt", "baseline", "ref"):
+            fn = task_callable(name, variant, spec["args"], spec["meta"])
+            args = example_args(spec["args"])
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            path = f"{name}.{variant}.hlo.txt"
+            (out_dir / path).write_text(text)
+            out_shapes = [
+                dict(shape=list(o.shape), dtype=str(o.dtype))
+                for o in jax.eval_shape(fn, *args)
+            ]
+            manifest["kernels"].append(
+                dict(
+                    name=name,
+                    variant=variant,
+                    path=path,
+                    args=[dict(shape=list(s), dtype="float32") for s in spec["args"]],
+                    outputs=out_shapes,
+                    meta=spec["meta"],
+                    flops=spec["flops"],
+                )
+            )
+            print(f"  {path}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+
+def export_model(out_dir: Path, full: bool, manifest: dict):
+    cfg = (
+        model_mod.ModelConfig(max_seq=2112)
+        if full
+        else model_mod.ModelConfig(max_seq=128)
+    )
+    batch, prompt = 2, 32
+    params = model_mod.init_params(cfg, seed=0)
+    names = model_mod.weight_names(cfg)
+
+    # -- weights blob -------------------------------------------------------
+    weights_path = out_dir / "weights.bin"
+    offset = 0
+    table = []
+    with open(weights_path, "wb") as f:
+        for n in names:
+            arr = np.asarray(params[n], np.float32)
+            data = arr.tobytes()
+            table.append(dict(name=n, shape=list(arr.shape), offset=offset, nbytes=len(data)))
+            f.write(data)
+            offset += len(data)
+
+    manifest["model"] = dict(
+        config=dict(
+            vocab_size=cfg.vocab_size,
+            d_model=cfg.d_model,
+            n_layers=cfg.n_layers,
+            n_heads=cfg.n_heads,
+            d_ff=cfg.d_ff,
+            max_seq=cfg.max_seq,
+        ),
+        batch=batch,
+        prompt=prompt,
+        weights_path="weights.bin",
+        weights=table,
+        steps=[],
+    )
+
+    weight_structs = [jax.ShapeDtypeStruct(tuple(params[n].shape), jnp.float32) for n in names]
+    cache_struct = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.d_head), jnp.float32
+    )
+
+    for variant in ("nt", "baseline", "ref"):
+        prefill = model_mod.make_prefill(cfg, variant)
+        t0 = time.time()
+        lowered = jax.jit(prefill).lower(
+            *weight_structs, jax.ShapeDtypeStruct((batch, prompt), jnp.int32)
+        )
+        path = f"model.prefill.{variant}.hlo.txt"
+        (out_dir / path).write_text(to_hlo_text(lowered))
+        manifest["model"]["steps"].append(dict(kind="prefill", variant=variant, path=path))
+        print(f"  {path} in {time.time() - t0:.1f}s")
+
+        decode = model_mod.make_decode_step(cfg, variant)
+        t0 = time.time()
+        lowered = jax.jit(decode).lower(
+            *weight_structs,
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            cache_struct,
+            cache_struct,
+        )
+        path = f"model.decode.{variant}.hlo.txt"
+        (out_dir / path).write_text(to_hlo_text(lowered))
+        manifest["model"]["steps"].append(dict(kind="decode", variant=variant, path=path))
+        print(f"  {path} in {time.time() - t0:.1f}s")
+
+
+def export_golden(out_dir: Path, manifest: dict):
+    """Golden input/output pairs for the Rust runtime integration tests."""
+    golden_dir = out_dir / "golden"
+    golden_dir.mkdir(exist_ok=True)
+    rng = np.random.default_rng(42)
+    manifest["golden"] = []
+
+    # add
+    x = rng.standard_normal(65536).astype(np.float32)
+    y = rng.standard_normal(65536).astype(np.float32)
+    out = np.asarray(ref_mod.add(jnp.asarray(x), jnp.asarray(y)))
+    for fname, arr in [("add.x.bin", x), ("add.y.bin", y), ("add.out.bin", out)]:
+        (golden_dir / fname).write_bytes(arr.tobytes())
+    manifest["golden"].append(
+        dict(kernel="add", inputs=["golden/add.x.bin", "golden/add.y.bin"],
+             output="golden/add.out.bin", shape=[65536])
+    )
+
+    # mm
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 256)).astype(np.float32)
+    out = np.asarray(ref_mod.mm(jnp.asarray(a), jnp.asarray(b)))
+    for fname, arr in [("mm.a.bin", a), ("mm.b.bin", b), ("mm.out.bin", out)]:
+        (golden_dir / fname).write_bytes(arr.tobytes())
+    manifest["golden"].append(
+        dict(kernel="mm", inputs=["golden/mm.a.bin", "golden/mm.b.bin"],
+             output="golden/mm.out.bin", shape=[256, 256])
+    )
+
+
+def export_arrangements(manifest: dict):
+    """Arrangement metadata + evaluation goldens for the Rust algebra mirror."""
+    manifest["arrangements"] = []
+    samples_rng = np.random.default_rng(11)
+    for name, kern in NT_KERNELS.items():
+        meta = kern.export_metadata()
+        # golden evaluations: sample each parameter's index expressions at
+        # random variable bindings so the Rust expression parser/evaluator
+        # can be cross-checked bit-for-bit.
+        goldens = []
+        for param in meta["params"]:
+            env = {}
+            for level in param["levels"]:
+                for dim in level:
+                    env[dim["var"]] = int(samples_rng.integers(0, 7))
+            for expr in param["indices"]:
+                free = _free_names(expr)
+                golden = _sample_golden(expr, free, env, samples_rng)
+                if golden is not None:
+                    golden["param"] = param["name"]
+                    goldens.append(golden)
+        meta["goldens"] = goldens
+        manifest["arrangements"].append(meta)
+
+
+def _sample_golden(expr: str, free: set[str], env: dict, rng):
+    """Sample symbol bindings until the expression evaluates cleanly.
+
+    Size symbols interact (e.g. a conv outer extent ``H - R + 1`` must stay
+    positive to serve as a mixed-radix divisor), so rejection-sample.
+    """
+    import ast as _ast
+
+    from ninetoothed.symbols import Expr
+
+    node = Expr(_ast.parse(expr, mode="eval").body)
+    for attempt in range(64):
+        full_env = dict(env)
+        lo = 8 + attempt  # widen sizes on retries so differences stay positive
+        for f in sorted(free):
+            if f not in full_env:
+                full_env[f] = int(rng.integers(lo, lo + 8))
+        try:
+            value = int(node.evaluate(full_env))
+        except (ZeroDivisionError, ValueError):
+            continue
+        return dict(expr=expr, env=full_env, value=value)
+    return None
+
+
+def _free_names(expr: str) -> set[str]:
+    import ast as _ast
+
+    return {
+        n.id
+        for n in _ast.walk(_ast.parse(expr, mode="eval"))
+        if isinstance(n, _ast.Name) and n.id not in ("cdiv", "min", "max")
+    }
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument("--full", action="store_true", help="paper-scale shapes")
+    parser.add_argument("--skip-model", action="store_true")
+    args = parser.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = dict(version=1, full=bool(args.full))
+
+    print("exporting kernel tasks ...")
+    export_kernels(out_dir, args.full, manifest)
+    if not args.skip_model:
+        print("exporting model steps ...")
+        export_model(out_dir, args.full, manifest)
+    print("exporting goldens ...")
+    export_golden(out_dir, manifest)
+    export_arrangements(manifest)
+    print("exporting code metrics (Table 2) ...")
+    import metrics as metrics_mod
+
+    manifest["metrics"] = metrics_mod.export_metrics(Path(__file__).parent / "kernels")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Kernel library: NineToothed DSL implementations (``nt``), hand-written
+Pallas baselines (``baseline`` — the "Triton" comparator role of paper §5),
+and pure-jnp oracles (``ref``)."""

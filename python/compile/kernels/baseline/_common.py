@@ -1,0 +1,35 @@
+"""Shared launch-glue for the hand-written Pallas baseline kernels.
+
+The baselines play the role Triton plays in the paper's evaluation: the
+explicitly-parallel comparator.  Like Triton kernels they must handle
+out-of-range accesses themselves; on this stack that is done by padding
+inputs to block multiples before the ``pallas_call`` and cropping outputs
+after (the interpret-mode equivalent of ``tl.load(..., mask=..., other=...)``
+— see DESIGN.md §2), so each kernel's body performs the same in-bounds
+block loads a masked Triton kernel performs on its padded last block.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiples, value=0.0):
+    """Pad each dim of ``x`` up to a multiple of ``multiples[d]``."""
+    pads = []
+    needs = False
+    for size, mult in zip(x.shape, multiples):
+        target = cdiv(size, mult) * mult
+        pads.append((0, target - size))
+        needs = needs or target != size
+    return jnp.pad(x, pads, constant_values=value) if needs else x
+
+
+def crop_to(x, shape):
+    if tuple(x.shape) == tuple(shape):
+        return x
+    return x[tuple(slice(0, s) for s in shape)]

@@ -1,0 +1,44 @@
+"""Vector addition, hand-written Pallas (explicit-parallel comparator).
+
+Structured exactly like the Triton add kernel of paper Listing 1/Table 2:
+obtain the program id, compute the block offsets, load, compute, store.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to, pad_to
+
+BLOCK_SIZE = 1024
+
+
+# --- metrics:begin ---
+def add_kernel(x_ref, y_ref, out_ref, *, block_size):
+    pid = pl.program_id(0)
+    offs = pid * block_size
+    x = x_ref[pl.dslice(offs, block_size)]
+    y = y_ref[pl.dslice(offs, block_size)]
+    out = x + y
+    out_ref[pl.dslice(offs, block_size)] = out
+
+
+def launch(x, y, out, block_size=BLOCK_SIZE):
+    n = x.shape[0]
+    grid = (cdiv(n, block_size),)
+    x_p = pad_to(x, (block_size,))
+    y_p = pad_to(y, (block_size,))
+    import functools
+
+    result = pl.pallas_call(
+        functools.partial(add_kernel, block_size=block_size),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, out.dtype),
+        interpret=True,
+    )(x_p, y_p)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(x, y, out, BLOCK_SIZE=BLOCK_SIZE):
+    return launch(x, y, out, block_size=BLOCK_SIZE)

@@ -1,0 +1,62 @@
+"""addmm, hand-written Pallas (explicit-parallel comparator).
+
+out = beta * input + alpha * (mat1 @ mat2) — the Triton-style version
+duplicates the full matmul kernel body and adds the scaled combination;
+there is no arrangement to reuse, which is exactly the redundancy argument
+of paper §3.2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to, pad_to
+
+BLOCK_M = 64
+BLOCK_N = 64
+BLOCK_K = 64
+
+
+# --- metrics:begin ---
+def addmm_kernel(inp_ref, a_ref, b_ref, beta_ref, alpha_ref, c_ref, *, block_m, block_n, block_k):
+    pid_m = pl.program_id(0)
+    pid_n = pl.program_id(1)
+    offs_m = pid_m * block_m
+    offs_n = pid_n * block_n
+    k_size = a_ref.shape[1]
+    acc = jnp.zeros((block_m, block_n), jnp.float32)
+    for k in range(k_size // block_k):
+        offs_k = k * block_k
+        a = a_ref[pl.dslice(offs_m, block_m), pl.dslice(offs_k, block_k)]
+        b = b_ref[pl.dslice(offs_k, block_k), pl.dslice(offs_n, block_n)]
+        acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    inp = inp_ref[pl.dslice(offs_m, block_m), pl.dslice(offs_n, block_n)]
+    beta = beta_ref[...].reshape(())
+    alpha = alpha_ref[...].reshape(())
+    out = beta * inp.astype(jnp.float32) + alpha * acc
+    c_ref[pl.dslice(offs_m, block_m), pl.dslice(offs_n, block_n)] = out.astype(c_ref.dtype)
+
+
+def launch(inp, a, b, beta, alpha, out, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    m, k = a.shape
+    _, n = b.shape
+    grid = (cdiv(m, block_m), cdiv(n, block_n))
+    inp_p = pad_to(inp, (block_m, block_n))
+    a_p = pad_to(a, (block_m, block_k))
+    b_p = pad_to(b, (block_k, block_n))
+    beta = jnp.asarray(beta, jnp.float32).reshape(())
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(())
+    result = pl.pallas_call(
+        functools.partial(addmm_kernel, block_m=block_m, block_n=block_n, block_k=block_k),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), out.dtype),
+        interpret=True,
+    )(inp_p, a_p, b_p, beta, alpha)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(inp, a, b, beta, alpha, out, BLOCK_SIZE_M=BLOCK_M, BLOCK_SIZE_N=BLOCK_N, BLOCK_SIZE_K=BLOCK_K):
+    return launch(inp, a, b, beta, alpha, out, block_m=BLOCK_SIZE_M, block_n=BLOCK_SIZE_N, block_k=BLOCK_SIZE_K)

@@ -1,0 +1,108 @@
+"""2D convolution via implicit GEMM, hand-written Pallas comparator.
+
+This is the explicit version of what paper Listing 8 expresses in six
+meta-operations: each program owns a (BLOCK_M, BLOCK_N) tile of the
+(N*P*Q, K) output GEMM and performs the pointer arithmetic by hand —
+decomposing the GEMM row index into (n, p, q), the GEMM reduction index
+into (c, r, s), and combining them into flat input offsets.  The length
+and opacity of this kernel relative to the NineToothed version is the
+paper's central code-complexity argument.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to
+
+BLOCK_M = 16
+BLOCK_N = 16
+BLOCK_K = 16
+
+
+# --- metrics:begin ---
+def conv2d_kernel(x_ref, w_ref, out_ref, *, dims, block_m, block_n, block_k):
+    n_sz, c_sz, h_sz, w_sz, k_sz, r_sz, s_sz, p_sz, q_sz = dims
+    pid_m = pl.program_id(0)
+    pid_n = pl.program_id(1)
+    gemm_m = n_sz * p_sz * q_sz
+    gemm_k = c_sz * r_sz * s_sz
+
+    rows = pid_m * block_m + jnp.arange(block_m)
+    cols = pid_n * block_n + jnp.arange(block_n)
+
+    # decompose GEMM row index -> (n, p, q)
+    n_idx = rows // (p_sz * q_sz)
+    pq = rows % (p_sz * q_sz)
+    p_idx = pq // q_sz
+    q_idx = pq % q_sz
+
+    x_flat = x_ref[...].reshape(-1)
+    w_flat = w_ref[...].reshape(-1)
+
+    acc = jnp.zeros((block_m, block_n), jnp.float32)
+    for kb in range(cdiv(gemm_k, block_k)):
+        red = kb * block_k + jnp.arange(block_k)
+        # decompose GEMM reduction index -> (c, r, s)
+        c_idx = red // (r_sz * s_sz)
+        rs = red % (r_sz * s_sz)
+        r_idx = rs // s_sz
+        s_idx = rs % s_sz
+        # flat input offsets: x[n, c, p + r, q + s]
+        x_offs = (
+            n_idx[:, None] * (c_sz * h_sz * w_sz)
+            + c_idx[None, :] * (h_sz * w_sz)
+            + (p_idx[:, None] + r_idx[None, :]) * w_sz
+            + (q_idx[:, None] + s_idx[None, :])
+        )
+        valid = (rows[:, None] < gemm_m) & (red[None, :] < gemm_k)
+        x_offs = jnp.where(valid, x_offs, 0)
+        a = jnp.where(valid, x_flat[x_offs.reshape(-1)].reshape(block_m, block_k), 0.0)
+        # flat filter offsets: w[k, c, r, s] viewed as (C*R*S, K) via transpose
+        w_offs = cols[None, :] * (c_sz * r_sz * s_sz) + red[:, None]
+        w_valid = (red[:, None] < gemm_k) & (cols[None, :] < k_sz)
+        w_offs = jnp.where(w_valid, w_offs, 0)
+        b = jnp.where(w_valid, w_flat[w_offs.reshape(-1)].reshape(block_k, block_n), 0.0)
+        acc += jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+    # scatter the tile into out[n, k, p, q]
+    out_offs = (
+        n_idx[:, None] * (k_sz * p_sz * q_sz)
+        + cols[None, :] * (p_sz * q_sz)
+        + p_idx[:, None] * q_sz
+        + q_idx[:, None]
+    )
+    out_valid = (rows[:, None] < gemm_m) & (cols[None, :] < k_sz)
+    # invalid lanes get an out-of-range offset and are dropped by the scatter
+    out_offs = jnp.where(out_valid, out_offs, jnp.iinfo(jnp.int32).max)
+    cur = out_ref[...]
+    flat = cur.reshape(-1)
+    out_ref[...] = (
+        flat.at[out_offs.reshape(-1)]
+        .set(acc.astype(cur.dtype).reshape(-1), mode="drop")
+        .reshape(cur.shape)
+    )
+
+
+def launch(x, w, out, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    n_sz, c_sz, h_sz, w_sz = x.shape
+    k_sz, _, r_sz, s_sz = w.shape
+    p_sz, q_sz = h_sz - r_sz + 1, w_sz - s_sz + 1
+    dims = (n_sz, c_sz, h_sz, w_sz, k_sz, r_sz, s_sz, p_sz, q_sz)
+    grid = (cdiv(n_sz * p_sz * q_sz, block_m), cdiv(k_sz, block_n))
+    result = pl.pallas_call(
+        functools.partial(
+            conv2d_kernel, dims=dims, block_m=block_m, block_n=block_n, block_k=block_k
+        ),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((n_sz, k_sz, p_sz, q_sz), out.dtype),
+        interpret=True,
+    )(x, w)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(x, w, out, BLOCK_SIZE_M=BLOCK_M, BLOCK_SIZE_N=BLOCK_N, BLOCK_SIZE_K=BLOCK_K):
+    return launch(x, w, out, block_m=BLOCK_SIZE_M, block_n=BLOCK_SIZE_N, block_k=BLOCK_SIZE_K)

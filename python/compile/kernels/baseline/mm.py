@@ -1,0 +1,54 @@
+"""Matrix multiplication, hand-written Pallas (explicit-parallel comparator).
+
+Mirrors the canonical Triton matmul tutorial kernel: a 2D launch grid over
+output tiles, an explicit K-loop, manual offset arithmetic for the A and B
+tiles, f32 accumulation, and a final store of the C tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to, pad_to
+
+BLOCK_M = 64
+BLOCK_N = 64
+BLOCK_K = 64
+
+
+# --- metrics:begin ---
+def mm_kernel(a_ref, b_ref, c_ref, *, block_m, block_n, block_k):
+    pid_m = pl.program_id(0)
+    pid_n = pl.program_id(1)
+    offs_m = pid_m * block_m
+    offs_n = pid_n * block_n
+    k_size = a_ref.shape[1]
+    acc = jnp.zeros((block_m, block_n), jnp.float32)
+    for k in range(k_size // block_k):
+        offs_k = k * block_k
+        a = a_ref[pl.dslice(offs_m, block_m), pl.dslice(offs_k, block_k)]
+        b = b_ref[pl.dslice(offs_k, block_k), pl.dslice(offs_n, block_n)]
+        acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    c_ref[pl.dslice(offs_m, block_m), pl.dslice(offs_n, block_n)] = acc.astype(c_ref.dtype)
+
+
+def launch(a, b, out, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    m, k = a.shape
+    _, n = b.shape
+    grid = (cdiv(m, block_m), cdiv(n, block_n))
+    a_p = pad_to(a, (block_m, block_k))
+    b_p = pad_to(b, (block_k, block_n))
+    result = pl.pallas_call(
+        functools.partial(mm_kernel, block_m=block_m, block_n=block_n, block_k=block_k),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), out.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(a, b, out, BLOCK_SIZE_M=BLOCK_M, BLOCK_SIZE_N=BLOCK_N, BLOCK_SIZE_K=BLOCK_K):
+    return launch(a, b, out, block_m=BLOCK_SIZE_M, block_n=BLOCK_SIZE_N, block_k=BLOCK_SIZE_K)

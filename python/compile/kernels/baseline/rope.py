@@ -1,0 +1,50 @@
+"""Rotary position embedding, hand-written Pallas comparator.
+
+Half-rotation (Llama) convention over (B, S, H, D) with (S, D/2) tables;
+one program per (batch, position, head) triple, explicit slice loads for
+the two halves — the manual bookkeeping the NineToothed arrangement
+replaces with ``unsqueeze``/``expand``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import crop_to
+
+
+# --- metrics:begin ---
+def rope_kernel(x_ref, cos_ref, sin_ref, out_ref, *, d):
+    pid_b = pl.program_id(0)
+    pid_s = pl.program_id(1)
+    pid_h = pl.program_id(2)
+    half = d // 2
+    idx = (pl.dslice(pid_b, 1), pl.dslice(pid_s, 1), pl.dslice(pid_h, 1))
+    x1 = x_ref[idx + (pl.dslice(0, half),)].astype(jnp.float32)
+    x2 = x_ref[idx + (pl.dslice(half, half),)].astype(jnp.float32)
+    cos = cos_ref[pl.dslice(pid_s, 1), pl.dslice(0, half)].astype(jnp.float32)
+    sin = sin_ref[pl.dslice(pid_s, 1), pl.dslice(0, half)].astype(jnp.float32)
+    cos = cos[:, None, None, :]
+    sin = sin[:, None, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out_ref[idx + (pl.dslice(0, half),)] = out1.astype(out_ref.dtype)
+    out_ref[idx + (pl.dslice(half, half),)] = out2.astype(out_ref.dtype)
+
+
+def launch(x, cos, sin, out):
+    b, s, h, d = x.shape
+    result = pl.pallas_call(
+        functools.partial(rope_kernel, d=d),
+        grid=(b, s, h),
+        out_shape=jax.ShapeDtypeStruct(x.shape, out.dtype),
+        interpret=True,
+    )(x, cos, sin)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(x, cos, sin, out, **_meta):
+    return launch(x, cos, sin, out)

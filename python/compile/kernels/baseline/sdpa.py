@@ -1,0 +1,72 @@
+"""Scaled dot-product attention (FlashAttention-2), hand-written Pallas.
+
+The explicit version of the NineToothed sdpa kernel: a 3D grid over
+(batch, head, query-block), a manual online-softmax loop over key/value
+blocks, and hand-computed slice offsets for every load and store.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to, pad_to
+
+BLOCK_M = 64
+BLOCK_N = 64
+
+
+# --- metrics:begin ---
+def sdpa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_m, block_n, d):
+    pid_b = pl.program_id(0)
+    pid_h = pl.program_id(1)
+    pid_m = pl.program_id(2)
+    offs_m = pid_m * block_m
+    seq = k_ref.shape[2]
+    scale = 1.0 / d**0.5
+
+    bh = (pl.dslice(pid_b, 1), pl.dslice(pid_h, 1))
+    q = q_ref[bh + (pl.dslice(offs_m, block_m), pl.dslice(0, d))]
+    q = q.reshape(block_m, d).astype(jnp.float32) * scale
+
+    m_i = jnp.full((block_m,), -jnp.inf, jnp.float32)
+    l_i = jnp.zeros((block_m,), jnp.float32)
+    acc = jnp.zeros((block_m, d), jnp.float32)
+
+    for j in range(seq // block_n):
+        offs_n = j * block_n
+        k = k_ref[bh + (pl.dslice(offs_n, block_n), pl.dslice(0, d))]
+        k = k.reshape(block_n, d).astype(jnp.float32)
+        v = v_ref[bh + (pl.dslice(offs_n, block_n), pl.dslice(0, d))]
+        v = v.reshape(block_n, d).astype(jnp.float32)
+        scores = jnp.dot(q, k.T)
+        m_new = jnp.maximum(m_i, jnp.max(scores, axis=1))
+        p = jnp.exp(scores - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_i = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        m_i = m_new
+
+    out = acc / l_i[:, None]
+    o_ref[bh + (pl.dslice(offs_m, block_m), pl.dslice(0, d))] = out.reshape(1, 1, block_m, d).astype(o_ref.dtype)
+
+
+def launch(q, k, v, out, block_m=BLOCK_M, block_n=BLOCK_N):
+    b, h, s, d = q.shape
+    q_p = pad_to(q, (1, 1, block_m, 1))
+    k_p = pad_to(k, (1, 1, block_n, 1))
+    v_p = pad_to(v, (1, 1, block_n, 1))
+    grid = (b, h, cdiv(s, block_m))
+    result = pl.pallas_call(
+        functools.partial(sdpa_kernel, block_m=block_m, block_n=block_n, d=d),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(q_p.shape, out.dtype),
+        interpret=True,
+    )(q_p, k_p, v_p)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(q, k, v, out, BLOCK_SIZE_M=BLOCK_M, BLOCK_SIZE_N=BLOCK_N):
+    return launch(q, k, v, out, block_m=BLOCK_SIZE_M, block_n=BLOCK_SIZE_N)

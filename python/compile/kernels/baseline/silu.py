@@ -1,0 +1,38 @@
+"""SiLU activation, hand-written Pallas (explicit-parallel comparator)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from kernels.baseline._common import cdiv, crop_to, pad_to
+
+BLOCK_SIZE = 1024
+
+
+# --- metrics:begin ---
+def silu_kernel(x_ref, out_ref, *, block_size):
+    pid = pl.program_id(0)
+    offs = pid * block_size
+    x = x_ref[pl.dslice(offs, block_size)].astype(jnp.float32)
+    out = x * jax.nn.sigmoid(x)
+    out_ref[pl.dslice(offs, block_size)] = out.astype(out_ref.dtype)
+
+
+def launch(x, out, block_size=BLOCK_SIZE):
+    n = x.shape[0]
+    grid = (cdiv(n, block_size),)
+    x_p = pad_to(x, (block_size,))
+    result = pl.pallas_call(
+        functools.partial(silu_kernel, block_size=block_size),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, out.dtype),
+        interpret=True,
+    )(x_p)
+    return crop_to(result, out.shape)
+# --- metrics:end ---
+
+
+def kernel(x, out, BLOCK_SIZE=BLOCK_SIZE):
+    return launch(x, out, block_size=BLOCK_SIZE)

@@ -1,0 +1,29 @@
+"""The ten paper kernels implemented in the NineToothed DSL (paper §4/§5.1)."""
+
+from kernels.nt import (  # noqa: F401
+    add,
+    addmm,
+    bmm,
+    conv2d,
+    mm,
+    rms_norm,
+    rope,
+    sdpa,
+    sdpa_bias,
+    silu,
+    softmax,
+)
+
+KERNELS = {
+    "add": add.kernel,
+    "addmm": addmm.kernel,
+    "bmm": bmm.kernel,
+    "conv2d": conv2d.kernel,
+    "mm": mm.kernel,
+    "rms_norm": rms_norm.kernel,
+    "rope": rope.kernel,
+    "sdpa": sdpa.kernel,
+    "sdpa_bias": sdpa_bias.kernel,
+    "silu": silu.kernel,
+    "softmax": softmax.kernel,
+}

@@ -1,0 +1,45 @@
+"""addmm in NineToothed: out = beta * input + alpha * (mat1 @ mat2).
+
+Reuses the matrix-multiplication arrangement (the arrange-and-apply
+modularity argument of paper §3.2); only the added-matrix tiling and the
+final combination differ.
+"""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor, block_size
+
+from kernels.nt import mm
+
+
+def arrangement(
+    input,
+    mat1,
+    mat2,
+    beta,
+    alpha,
+    output,
+    BLOCK_SIZE_M=block_size(64),
+    BLOCK_SIZE_N=block_size(64),
+    BLOCK_SIZE_K=block_size(64),
+):
+    input_arranged = input.tile((BLOCK_SIZE_M, BLOCK_SIZE_N))
+    mat1_arranged, mat2_arranged, output_arranged = mm.arrangement(
+        mat1, mat2, output, BLOCK_SIZE_M, BLOCK_SIZE_N, BLOCK_SIZE_K
+    )
+
+    return input_arranged, mat1_arranged, mat2_arranged, beta, alpha, output_arranged
+
+
+def application(input, mat1, mat2, beta, alpha, output):
+    accumulator = ntl.zeros(output.shape, dtype=ntl.float32)
+
+    for k in range(mat1.shape[0]):
+        accumulator += ntl.dot(mat1[k], mat2[k])
+
+    output = beta * input + alpha * accumulator  # noqa: F841
+
+
+tensors = (Tensor(2), Tensor(2), Tensor(2), Tensor(0), Tensor(0), Tensor(2))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="addmm")

@@ -1,0 +1,45 @@
+"""Batched matrix multiplication in NineToothed (paper task 3)."""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor, block_size
+
+
+def arrangement(
+    input,
+    other,
+    output,
+    BLOCK_SIZE_M=block_size(64),
+    BLOCK_SIZE_N=block_size(64),
+    BLOCK_SIZE_K=block_size(64),
+):
+    output_arranged = output.tile((1, BLOCK_SIZE_M, BLOCK_SIZE_N))
+    output_arranged.dtype = output_arranged.dtype.squeeze(0)
+
+    input_arranged = input.tile((1, BLOCK_SIZE_M, BLOCK_SIZE_K))
+    input_arranged.dtype = input_arranged.dtype.squeeze(0)
+    input_arranged = input_arranged.tile((1, 1, -1))
+    input_arranged = input_arranged.expand((-1, -1, output_arranged.shape[2]))
+    input_arranged.dtype = input_arranged.dtype.squeeze((0, 1))
+
+    other_arranged = other.tile((1, BLOCK_SIZE_K, BLOCK_SIZE_N))
+    other_arranged.dtype = other_arranged.dtype.squeeze(0)
+    other_arranged = other_arranged.tile((1, -1, 1))
+    other_arranged = other_arranged.expand((-1, output_arranged.shape[1], -1))
+    other_arranged.dtype = other_arranged.dtype.squeeze((0, 2))
+
+    return input_arranged, other_arranged, output_arranged
+
+
+def application(input, other, output):
+    accumulator = ntl.zeros(output.shape, dtype=ntl.float32)
+
+    for k in range(input.shape[0]):
+        accumulator += ntl.dot(input[k], other[k])
+
+    output = accumulator  # noqa: F841
+
+
+tensors = (Tensor(3), Tensor(3), Tensor(3))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="bmm")

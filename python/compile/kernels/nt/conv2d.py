@@ -1,0 +1,35 @@
+"""2D convolution in NineToothed via implicit GEMM (paper Listing 8).
+
+The arrangement maps NCHW convolution onto the already-defined matrix
+multiplication: the input is tiled with a filter-shaped window, ravelled
+and flattened into an (N*P*Q, C*R*S) view, the filter into (C*R*S, K), and
+the output into (N*P*Q, K) — after which mm's arrangement *and* mm's
+application are reused verbatim.
+"""
+
+import ninetoothed
+from ninetoothed import Tensor
+
+from kernels.nt import mm
+
+
+def arrangement(input, filter, output):
+    input_arranged = input.tile((1, *filter.shape[1:]), strides=(-1, -1, 1, 1))
+    input_arranged = input_arranged.squeeze(1)
+    input_arranged.dtype = input_arranged.dtype.squeeze(0)
+    input_arranged = input_arranged.ravel()
+    input_arranged = input_arranged.flatten(end_dim=3).flatten(start_dim=1)
+
+    filter_arranged = filter.flatten(start_dim=1)
+    filter_arranged = filter_arranged.permute((1, 0))
+
+    output_arranged = output.permute((0, 2, 3, 1)).flatten(end_dim=3)
+
+    return mm.arrangement(input_arranged, filter_arranged, output_arranged)
+
+
+shape_options = {"constexpr": True}
+
+tensors = tuple(Tensor(4, shape_options=shape_options) for _ in range(3))
+
+kernel = ninetoothed.make(arrangement, mm.application, tensors, name="conv2d")

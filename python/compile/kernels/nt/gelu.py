@@ -1,0 +1,25 @@
+"""GELU activation in NineToothed (extension kernel beyond the paper's
+task list — demonstrates that new element-wise operators cost one line of
+application code, the paper's §2 prototyping argument)."""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Symbol, Tensor
+
+BLOCK_SIZE = Symbol("GELU_BLOCK", constexpr=True, default=1024)
+
+
+def arrangement(input, output, GELU_BLOCK=BLOCK_SIZE):
+    return input.tile((GELU_BLOCK,)), output.tile((GELU_BLOCK,))
+
+
+def application(input, output):
+    x = ntl.cast(input, ntl.float32)
+    # tanh approximation of GELU
+    inner = 0.7978845608028654 * (x + 0.044715 * x * x * x)
+    output = 0.5 * x * (1.0 + (ntl.exp(2.0 * inner) - 1.0) / (ntl.exp(2.0 * inner) + 1.0))  # noqa: F841
+
+
+tensors = (Tensor(1), Tensor(1))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="gelu")

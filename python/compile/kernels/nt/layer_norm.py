@@ -1,0 +1,24 @@
+"""LayerNorm (no affine) in NineToothed — extension kernel: a second
+row-wise reduction built by reusing the rms_norm arrangement verbatim
+(arrange-and-apply modularity, paper §3.2)."""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor
+
+from kernels.nt import rms_norm
+
+EPS = 1e-6
+
+
+def application(input, output):
+    x = ntl.cast(input, ntl.float32)
+    mean = ntl.sum(x) / x.shape[-1]
+    centered = x - mean
+    var = ntl.sum(centered * centered) / x.shape[-1]
+    output = centered * ntl.rsqrt(var + EPS)  # noqa: F841
+
+
+tensors = (Tensor(2), Tensor(2))
+
+kernel = ninetoothed.make(rms_norm.arrangement, application, tensors, name="layer_norm")

@@ -1,0 +1,22 @@
+"""RMS normalization in NineToothed (paper task 6)."""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor
+
+EPS = 1e-6
+
+
+def arrangement(input, output):
+    return input.tile((1, -1)), output.tile((1, -1))
+
+
+def application(input, output):
+    x = ntl.cast(input, ntl.float32)
+    mean_square = ntl.sum(x * x) / x.shape[-1]
+    output = x * ntl.rsqrt(mean_square + EPS)  # noqa: F841
+
+
+tensors = (Tensor(2), Tensor(2))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="rms_norm")

@@ -1,0 +1,48 @@
+"""Rotary position embedding in NineToothed (paper task 7).
+
+Half-rotation (Llama) convention.  ``input`` is (B, S, H, D); the cos/sin
+tables are (S, D/2) and broadcast over batch and heads by ``unsqueeze`` +
+``expand`` in the arrangement.
+"""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor
+
+
+def arrangement(input, cos, sin, output):
+    input_arranged = input.tile((1, 1, 1, -1))
+    input_arranged.dtype = input_arranged.dtype.squeeze((0, 1, 2))
+
+    cos_arranged = cos.tile((1, -1))
+    cos_arranged = cos_arranged.unsqueeze(0).unsqueeze(2)
+    cos_arranged = cos_arranged.expand(
+        (input_arranged.shape[0], -1, input_arranged.shape[2], -1)
+    )
+    cos_arranged.dtype = cos_arranged.dtype.squeeze(0)
+
+    sin_arranged = sin.tile((1, -1))
+    sin_arranged = sin_arranged.unsqueeze(0).unsqueeze(2)
+    sin_arranged = sin_arranged.expand(
+        (input_arranged.shape[0], -1, input_arranged.shape[2], -1)
+    )
+    sin_arranged.dtype = sin_arranged.dtype.squeeze(0)
+
+    output_arranged = output.tile((1, 1, 1, -1))
+    output_arranged.dtype = output_arranged.dtype.squeeze((0, 1, 2))
+
+    return input_arranged, cos_arranged, sin_arranged, output_arranged
+
+
+def application(input, cos, sin, output):
+    half = input.shape[-1] // 2
+    x1 = ntl.cast(input, ntl.float32)[:half]
+    x2 = ntl.cast(input, ntl.float32)[half:]
+    c = ntl.cast(cos, ntl.float32)
+    s = ntl.cast(sin, ntl.float32)
+    output = ntl.cat((x1 * c - x2 * s, x2 * c + x1 * s), axis=-1)  # noqa: F841
+
+
+tensors = (Tensor(4), Tensor(2), Tensor(2), Tensor(4))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="rope")

@@ -1,0 +1,66 @@
+"""Scaled dot-product attention in NineToothed (paper task 8).
+
+FlashAttention-2-style single-pass algorithm: each program owns one query
+row-block; the key/value column-blocks are visited in an online-softmax
+loop with running maximum and denominator.  The arrangement expresses
+exactly the tiling a hand-written FA2 kernel uses: queries tiled by rows,
+keys/values tiled by rows then grouped so each program sees every block.
+"""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor, block_size
+
+
+def arrangement(
+    query,
+    key,
+    value,
+    output,
+    BLOCK_SIZE_M=block_size(64),
+    BLOCK_SIZE_N=block_size(64),
+):
+    query_arranged = query.tile((1, 1, BLOCK_SIZE_M, -1))
+    query_arranged.dtype = query_arranged.dtype.squeeze((0, 1))
+
+    key_arranged = key.tile((1, 1, BLOCK_SIZE_N, -1))
+    key_arranged.dtype = key_arranged.dtype.squeeze((0, 1))
+    key_arranged = key_arranged.tile((1, 1, -1, 1))
+    key_arranged = key_arranged.expand((-1, -1, query_arranged.shape[2], -1))
+    key_arranged.dtype = key_arranged.dtype.squeeze((0, 1, 3))
+
+    value_arranged = value.tile((1, 1, BLOCK_SIZE_N, -1))
+    value_arranged.dtype = value_arranged.dtype.squeeze((0, 1))
+    value_arranged = value_arranged.tile((1, 1, -1, 1))
+    value_arranged = value_arranged.expand((-1, -1, query_arranged.shape[2], -1))
+    value_arranged.dtype = value_arranged.dtype.squeeze((0, 1, 3))
+
+    output_arranged = output.tile((1, 1, BLOCK_SIZE_M, -1))
+    output_arranged.dtype = output_arranged.dtype.squeeze((0, 1))
+
+    return query_arranged, key_arranged, value_arranged, output_arranged
+
+
+def application(query, key, value, output):
+    scale = 1.0 / query.shape[-1] ** 0.5
+    q = ntl.cast(query, ntl.float32) * scale
+
+    m = ntl.full((query.shape[0],), float("-inf"), dtype=ntl.float32)
+    l = ntl.zeros((query.shape[0],), dtype=ntl.float32)  # noqa: E741
+    acc = ntl.zeros((query.shape[0], query.shape[1]), dtype=ntl.float32)
+
+    for j in range(key.shape[0]):
+        scores = ntl.dot(q, ntl.trans(key[j]))
+        m_new = ntl.maximum(m, ntl.max(scores, axis=1))
+        p = ntl.exp(scores - m_new[:, None])
+        alpha = ntl.exp(m - m_new)
+        l = l * alpha + ntl.sum(p, axis=1)  # noqa: E741
+        acc = acc * alpha[:, None] + ntl.dot(p, ntl.cast(value[j], ntl.float32))
+        m = m_new
+
+    output = acc / l[:, None]  # noqa: F841
+
+
+tensors = (Tensor(4), Tensor(4), Tensor(4), Tensor(4))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="sdpa")

@@ -1,0 +1,80 @@
+"""Attention with an additive score bias, in NineToothed.
+
+Extension of the paper-task sdpa kernel used by the end-to-end model
+(paper §5.3.2): the (S_q, S_k) ``bias`` tensor is added to the attention
+scores before the online softmax, which expresses causal masking at
+prefill time and padded-KV-cache masking at decode time with the same
+kernel.  The bias arrangement mirrors mm's input arrangement — tiled,
+grouped into a per-program loop level, and broadcast over batch and heads
+with ``unsqueeze``/``expand`` — demonstrating arrangement reuse across
+kernels (the modularity claim of paper §3.2).
+"""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor, block_size
+
+
+def arrangement(
+    query,
+    key,
+    value,
+    bias,
+    output,
+    BLOCK_SIZE_M=block_size(64),
+    BLOCK_SIZE_N=block_size(64),
+):
+    query_arranged = query.tile((1, 1, BLOCK_SIZE_M, -1))
+    query_arranged.dtype = query_arranged.dtype.squeeze((0, 1))
+
+    key_arranged = key.tile((1, 1, BLOCK_SIZE_N, -1))
+    key_arranged.dtype = key_arranged.dtype.squeeze((0, 1))
+    key_arranged = key_arranged.tile((1, 1, -1, 1))
+    key_arranged = key_arranged.expand((-1, -1, query_arranged.shape[2], -1))
+    key_arranged.dtype = key_arranged.dtype.squeeze((0, 1, 3))
+
+    value_arranged = value.tile((1, 1, BLOCK_SIZE_N, -1))
+    value_arranged.dtype = value_arranged.dtype.squeeze((0, 1))
+    value_arranged = value_arranged.tile((1, 1, -1, 1))
+    value_arranged = value_arranged.expand((-1, -1, query_arranged.shape[2], -1))
+    value_arranged.dtype = value_arranged.dtype.squeeze((0, 1, 3))
+
+    bias_arranged = bias.tile((BLOCK_SIZE_M, BLOCK_SIZE_N))
+    bias_arranged = bias_arranged.tile((1, -1))
+    bias_arranged.dtype = bias_arranged.dtype.squeeze(0)
+    bias_arranged = bias_arranged.unsqueeze(0).unsqueeze(0)
+    bias_arranged = bias_arranged.expand(
+        (query_arranged.shape[0], query_arranged.shape[1], -1, -1)
+    )
+
+    output_arranged = output.tile((1, 1, BLOCK_SIZE_M, -1))
+    output_arranged.dtype = output_arranged.dtype.squeeze((0, 1))
+
+    return query_arranged, key_arranged, value_arranged, bias_arranged, output_arranged
+
+
+def application(query, key, value, bias, output):
+    scale = 1.0 / query.shape[-1] ** 0.5
+    q = ntl.cast(query, ntl.float32) * scale
+
+    m = ntl.full((query.shape[0],), float("-inf"), dtype=ntl.float32)
+    l = ntl.zeros((query.shape[0],), dtype=ntl.float32)  # noqa: E741
+    acc = ntl.zeros((query.shape[0], query.shape[1]), dtype=ntl.float32)
+
+    for j in range(key.shape[0]):
+        scores = ntl.dot(q, ntl.trans(key[j])) + ntl.cast(bias[j], ntl.float32)
+        m_new = ntl.maximum(m, ntl.max(scores, axis=1))
+        p = ntl.exp(scores - m_new[:, None])
+        alpha = ntl.exp(m - m_new)
+        l = l * alpha + ntl.sum(p, axis=1)  # noqa: E741
+        acc = acc * alpha[:, None] + ntl.dot(p, ntl.cast(value[j], ntl.float32))
+        m = m_new
+
+    output = acc / ntl.maximum(l, 1e-20)[:, None]  # noqa: F841
+
+
+# bias pads with a large negative value so padded keys and padded query
+# rows are masked out (finite, not -inf, to keep the online softmax nan-free)
+tensors = (Tensor(4), Tensor(4), Tensor(4), Tensor(2, other=-1e30), Tensor(4))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="sdpa_bias")

@@ -1,0 +1,20 @@
+"""SiLU activation in NineToothed (paper task 9)."""
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Symbol, Tensor
+
+BLOCK_SIZE = Symbol("BLOCK_SIZE", constexpr=True, default=1024)
+
+
+def arrangement(input, output, BLOCK_SIZE=BLOCK_SIZE):
+    return input.tile((BLOCK_SIZE,)), output.tile((BLOCK_SIZE,))
+
+
+def application(input, output):
+    output = ntl.silu(input)  # noqa: F841
+
+
+tensors = (Tensor(1), Tensor(1))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="silu")

@@ -1,0 +1,26 @@
+"""Row-wise softmax in NineToothed (paper task 10).
+
+Each program owns one full row; padding uses ``other=-inf`` so padded
+columns vanish under ``exp`` (the pad-and-crop analogue of Triton's
+``other=-float("inf")`` masked load).
+"""
+
+import math
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Tensor
+
+
+def arrangement(input, output):
+    return input.tile((1, -1)), output.tile((1, -1))
+
+
+def application(input, output):
+    numerator = ntl.exp(ntl.cast(input, ntl.float32) - ntl.max(input))
+    output = numerator / ntl.sum(numerator)  # noqa: F841
+
+
+tensors = (Tensor(2, other=-math.inf), Tensor(2))
+
+kernel = ninetoothed.make(arrangement, application, tensors, name="softmax")

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for all ten paper kernels (evaluation §5.1).
+
+These are the correctness references: every NineToothed-generated kernel
+and every hand-written Pallas baseline is checked against these with
+``assert_allclose`` in ``python/tests``.  They are also lowered to HLO as
+the "PyTorch" supplementary reference series of Fig 6/7 (the framework's
+own operator implementations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def add(input, other):
+    return input + other
+
+
+def addmm(input, mat1, mat2, beta=1.0, alpha=1.0):
+    beta = jnp.asarray(beta, dtype=jnp.float32)
+    alpha = jnp.asarray(alpha, dtype=jnp.float32)
+    mm_ = jnp.dot(mat1, mat2, preferred_element_type=jnp.float32)
+    return (beta * input.astype(jnp.float32) + alpha * mm_).astype(input.dtype)
+
+
+def bmm(input, other):
+    return jnp.matmul(input, other, preferred_element_type=jnp.float32).astype(input.dtype)
+
+
+def conv2d(input, filter):
+    """Basic 2D convolution: stride 1, no padding (paper §4.3)."""
+    out = jax.lax.conv_general_dilated(
+        input.astype(jnp.float32),
+        filter.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out.astype(input.dtype)
+
+
+def mm(input, other):
+    return jnp.dot(input, other, preferred_element_type=jnp.float32).astype(input.dtype)
+
+
+def rms_norm(input, eps=1e-6):
+    x = input.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps)).astype(input.dtype)
+
+
+def rope(input, cos, sin):
+    """Rotary position embedding, half-rotation (Llama) convention.
+
+    input: (B, S, H, D); cos/sin: (S, D/2).
+    """
+    x = input.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos.astype(jnp.float32)[None, :, None, :]
+    s = sin.astype(jnp.float32)[None, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(input.dtype)
+
+
+def sdpa(query, key, value):
+    """Scaled dot-product attention, non-causal (paper task 8).
+
+    query/key/value: (B, H, S, D).
+    """
+    q = query.astype(jnp.float32)
+    k = key.astype(jnp.float32)
+    v = value.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    return out.astype(query.dtype)
+
+
+def silu(input):
+    x = input.astype(jnp.float32)
+    return (x * jax.nn.sigmoid(x)).astype(input.dtype)
+
+
+def softmax(input):
+    """Row-wise softmax over the last dim of a 2D tensor."""
+    x = input.astype(jnp.float32)
+    return jax.nn.softmax(x, axis=-1).astype(input.dtype)
+
+
+ALL = {
+    "add": add,
+    "addmm": addmm,
+    "bmm": bmm,
+    "conv2d": conv2d,
+    "mm": mm,
+    "rms_norm": rms_norm,
+    "rope": rope,
+    "sdpa": sdpa,
+    "silu": silu,
+    "softmax": softmax,
+}

@@ -1,0 +1,252 @@
+"""AST-exact code metrics (the Table 2 suite), radon-compatible definitions.
+
+The paper evaluates code complexity with radon's metric families: raw
+(LOC/LLOC/SLOC), cyclomatic complexity (G), Halstead (η, N, V, D) and the
+maintainability index (MI).  radon is not vendored here, so this module
+implements the same definitions over Python's ``ast`` + ``tokenize``:
+
+* **raw** — LOC: physical lines; SLOC: non-blank non-comment lines;
+  LLOC: logical lines (one per simple statement).
+* **cyclomatic** — per function 1 + decisions (if/elif/for/while/except/
+  boolean operators/ternary/comprehension clauses); the reported G is the
+  sum over functions, which reproduces the paper's add=2 / mm=3 pattern.
+* **Halstead** — AST-based like radon: operators are BinOp/UnaryOp/BoolOp/
+  Compare/AugAssign operator occurrences, operands their direct children;
+  η = η1+η2, N = N1+N2, V = N log2 η, D = η1/2 · N2/η2.
+* **MI** — the SEI/radon formula
+  ``max(0, (171 − 5.2 ln V − 0.23 G − 16.2 ln SLOC) · 100 / 171)``.
+
+Run at AOT time (``aot.py`` calls :func:`export_metrics`); the Rust
+``codemetrics`` module implements a lexer-level version of the same suite
+independently, and the Table 2 harness cross-checks the two.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import json
+import math
+import tokenize
+from pathlib import Path
+
+# ---------------------------------------------------------------------------
+# raw metrics
+# ---------------------------------------------------------------------------
+
+
+def raw_metrics(source: str) -> dict:
+    lines = source.splitlines()
+    loc = len(lines)
+    sloc = 0
+    comment_only = 0
+    blank = 0
+    for line in lines:
+        stripped = line.strip()
+        if not stripped:
+            blank += 1
+        elif stripped.startswith("#"):
+            comment_only += 1
+        else:
+            sloc += 1
+    tree = ast.parse(source)
+    lloc = sum(1 for node in ast.walk(tree) if isinstance(node, ast.stmt))
+    return {"loc": loc, "lloc": lloc, "sloc": sloc, "blank": blank}
+
+
+# ---------------------------------------------------------------------------
+# cyclomatic complexity
+# ---------------------------------------------------------------------------
+
+
+class _CCVisitor(ast.NodeVisitor):
+    def __init__(self):
+        self.complexity = 1
+
+    def generic_visit(self, node):
+        if isinstance(node, (ast.If, ast.For, ast.While, ast.AsyncFor, ast.ExceptHandler, ast.IfExp, ast.Assert)):
+            self.complexity += 1
+        elif isinstance(node, ast.BoolOp):
+            self.complexity += len(node.values) - 1
+        elif isinstance(node, ast.comprehension):
+            self.complexity += 1 + len(node.ifs)
+        super().generic_visit(node)
+
+
+def cyclomatic(source: str) -> int:
+    """Sum over functions of per-function complexity."""
+    tree = ast.parse(source)
+    total = 0
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            visitor = _CCVisitor()
+            for child in ast.iter_child_nodes(node):
+                visitor.visit(child)
+            total += visitor.complexity
+    return total if total else 1
+
+
+# ---------------------------------------------------------------------------
+# Halstead (radon-style AST walk)
+# ---------------------------------------------------------------------------
+
+
+def _operand_name(node) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant):
+        return repr(node.value)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ast.dump(node)
+
+
+class _HalsteadVisitor(ast.NodeVisitor):
+    def __init__(self):
+        self.operators: list[str] = []
+        self.operands: list[str] = []
+
+    def _op(self, op) -> str:
+        return type(op).__name__
+
+    def visit_BinOp(self, node):
+        self.operators.append(self._op(node.op))
+        self.operands.append(_operand_name(node.left))
+        self.operands.append(_operand_name(node.right))
+        self.generic_visit(node)
+
+    def visit_UnaryOp(self, node):
+        self.operators.append(self._op(node.op))
+        self.operands.append(_operand_name(node.operand))
+        self.generic_visit(node)
+
+    def visit_BoolOp(self, node):
+        self.operators.append(self._op(node.op))
+        self.operands.extend(_operand_name(v) for v in node.values)
+        self.generic_visit(node)
+
+    def visit_Compare(self, node):
+        self.operators.extend(self._op(op) for op in node.ops)
+        self.operands.append(_operand_name(node.left))
+        self.operands.extend(_operand_name(c) for c in node.comparators)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self.operators.append(self._op(node.op))
+        self.operands.append(_operand_name(node.target))
+        self.operands.append(_operand_name(node.value))
+        self.generic_visit(node)
+
+
+def halstead(source: str) -> dict:
+    visitor = _HalsteadVisitor()
+    visitor.visit(ast.parse(source))
+    n1 = len(set(visitor.operators))
+    n2 = len(set(visitor.operands))
+    big_n1 = len(visitor.operators)
+    big_n2 = len(visitor.operands)
+    vocabulary = n1 + n2
+    length = big_n1 + big_n2
+    volume = length * math.log2(vocabulary) if vocabulary > 1 else float(length)
+    difficulty = (n1 / 2) * (big_n2 / n2) if n2 else 0.0
+    return {
+        "eta1": n1,
+        "eta2": n2,
+        "N1": big_n1,
+        "N2": big_n2,
+        "vocabulary": vocabulary,
+        "length": length,
+        "volume": volume,
+        "difficulty": difficulty,
+    }
+
+
+# ---------------------------------------------------------------------------
+# maintainability index
+# ---------------------------------------------------------------------------
+
+
+def maintainability_index(volume: float, complexity: int, sloc: int) -> float:
+    if sloc <= 0:
+        return 100.0
+    v = math.log(volume) if volume > 0 else 0.0
+    mi = 171.0 - 5.2 * v - 0.23 * complexity - 16.2 * math.log(sloc)
+    return max(0.0, mi * 100.0 / 171.0)
+
+
+def analyze(source: str) -> dict:
+    raw = raw_metrics(source)
+    g = cyclomatic(source)
+    h = halstead(source)
+    mi = maintainability_index(h["volume"], g, raw["sloc"])
+    return {**raw, "cyclomatic": g, **h, "mi": mi}
+
+
+# ---------------------------------------------------------------------------
+# measured regions
+# ---------------------------------------------------------------------------
+
+MARK_BEGIN = "# --- metrics:begin ---"
+MARK_END = "# --- metrics:end ---"
+
+
+def measured_region(path: Path) -> str:
+    """The comparable region of a kernel file.
+
+    Baseline files delimit the kernel + launch function with marker
+    comments (Triton's role: kernel + grid glue).  NineToothed files are
+    measured whole minus imports — the paper's Listing 3 convention
+    (tensors + arrangement + application + make).
+    """
+    text = path.read_text()
+    if MARK_BEGIN in text:
+        region = text.split(MARK_BEGIN, 1)[1].split(MARK_END, 1)[0]
+        return region.strip() + "\n"
+    # strip module docstring and imports
+    tree = ast.parse(text)
+    lines = text.splitlines()
+    keep_from = 0
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            keep_from = max(keep_from, node.end_lineno)
+        elif (
+            isinstance(node, ast.Expr)
+            and isinstance(node.value, ast.Constant)
+            and isinstance(node.value.value, str)
+        ):
+            keep_from = max(keep_from, node.end_lineno)
+        else:
+            break
+    return "\n".join(lines[keep_from:]).strip() + "\n"
+
+
+KERNELS = [
+    "add",
+    "addmm",
+    "bmm",
+    "conv2d",
+    "mm",
+    "rms_norm",
+    "rope",
+    "sdpa",
+    "silu",
+    "softmax",
+]
+
+
+def export_metrics(kernels_dir: Path) -> dict:
+    """Table 2 rows for every kernel × {nt, baseline}."""
+    rows = []
+    for name in KERNELS:
+        for variant, sub in (("nt", "nt"), ("baseline", "baseline")):
+            path = kernels_dir / sub / f"{name}.py"
+            region = measured_region(path)
+            rows.append({"kernel": name, "variant": variant, **analyze(region)})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = export_metrics(Path(__file__).parent / "kernels")
+    json.dump(out, sys.stdout, indent=1)

@@ -1,0 +1,315 @@
+"""L2: the end-to-end model of paper §5.3.2, in JAX, built on the kernels.
+
+The paper replaces the Attention / Linear / RMSNorm / SiLU modules of
+DeepSeek-R1-Distill-Llama-8B with kernels written in both DSLs and measures
+inference throughput.  We substitute a tiny Llama-family model
+(RMSNorm + rope + attention-with-bias + SiLU-gated MLP; see DESIGN.md §6)
+whose forward pass is assembled from a swappable *kernel backend*:
+
+* ``variant="nt"``        — NineToothed-generated kernels,
+* ``variant="baseline"``  — the hand-written Pallas kernels,
+* ``variant="ref"``       — pure jnp (the "PyTorch" series of Fig 7).
+
+Only the four module kinds the paper swaps differ between variants; all
+glue (embeddings, KV-cache updates, residuals) is shared.  The prefill and
+single-token decode steps are lowered to HLO text by ``aot.py`` and driven
+from the Rust inference engine.
+
+Attention is causal via an additive score bias (the ``sdpa_bias`` kernel):
+at prefill the bias is the lower-triangular 0 / -1e30 matrix; at decode it
+masks KV-cache slots beyond the current position, which lets a fixed-shape
+AOT artifact serve any position within its cache bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MASK_VALUE = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-Llama configuration (substitutes the paper's 8B model)."""
+
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 512
+    max_seq: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# weight order is the AOT calling convention — the Rust engine passes the
+# flat weight list in exactly this order (see manifest.json "weights").
+def weight_names(cfg: ModelConfig) -> list[str]:
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"layer{i}.wq",
+            f"layer{i}.wk",
+            f"layer{i}.wv",
+            f"layer{i}.wo",
+            f"layer{i}.w_gate",
+            f"layer{i}.w_up",
+            f"layer{i}.w_down",
+        ]
+    names += ["lm_head"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    params: dict[str, jnp.ndarray] = {"embed": w(cfg.vocab_size, cfg.d_model, scale=0.02)}
+    for i in range(cfg.n_layers):
+        params[f"layer{i}.wq"] = w(cfg.d_model, cfg.d_model)
+        params[f"layer{i}.wk"] = w(cfg.d_model, cfg.d_model)
+        params[f"layer{i}.wv"] = w(cfg.d_model, cfg.d_model)
+        params[f"layer{i}.wo"] = w(cfg.d_model, cfg.d_model)
+        params[f"layer{i}.w_gate"] = w(cfg.d_model, cfg.d_ff)
+        params[f"layer{i}.w_up"] = w(cfg.d_model, cfg.d_ff)
+        params[f"layer{i}.w_down"] = w(cfg.d_ff, cfg.d_model)
+    params["lm_head"] = w(cfg.d_model, cfg.vocab_size, scale=0.02)
+    return params
+
+
+def rope_tables(cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    half = cfg.d_head // 2
+    pos = np.arange(cfg.max_seq)[:, None]
+    freq = 1.0 / (cfg.rope_base ** (np.arange(half) / half))
+    angles = pos * freq
+    return (
+        jnp.asarray(np.cos(angles), jnp.float32),
+        jnp.asarray(np.sin(angles), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel backends
+# ---------------------------------------------------------------------------
+
+
+class Backend:
+    """The four swappable module kinds of paper §5.3.2 plus rope."""
+
+    def __init__(self, variant: str):
+        self.variant = variant
+        if variant == "ref":
+            from kernels import ref
+
+            self._mm = lambda a, b: ref.mm(a, b)
+            self._rms = lambda x: ref.rms_norm(x)
+            self._silu = lambda x: ref.silu(x)
+            self._rope = lambda x, c, s: ref.rope(x, c, s)
+            self._attn = self._ref_attn
+        elif variant in ("nt", "baseline"):
+            if variant == "nt":
+                from kernels.nt import KERNELS
+            else:
+                from kernels.baseline import KERNELS
+            k = KERNELS
+
+            def _mm(a, b):
+                out = jnp.empty((a.shape[0], b.shape[1]), a.dtype)
+                return k["mm"](a, b, out, BLOCK_SIZE_M=64, BLOCK_SIZE_N=64, BLOCK_SIZE_K=64)
+
+            def _rms(x):
+                return k["rms_norm"](x, jnp.empty_like(x))
+
+            def _silu(x):
+                return k["silu"](x, jnp.empty_like(x), BLOCK_SIZE=1024)
+
+            def _rope(x, c, s):
+                return k["rope"](x, c, s, jnp.empty_like(x))
+
+            def _attn(q, key, value, bias):
+                return k["sdpa_bias"](
+                    q, key, value, bias, jnp.empty_like(q),
+                    BLOCK_SIZE_M=64, BLOCK_SIZE_N=64,
+                )
+
+            self._mm, self._rms, self._silu, self._rope, self._attn = (
+                _mm, _rms, _silu, _rope, _attn,
+            )
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+
+    @staticmethod
+    def _ref_attn(q, key, value, bias):
+        qf = q.astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        scores = jnp.einsum("bhsd,bhtd->bhst", qf, key.astype(jnp.float32)) * scale
+        scores = scores + bias[None, None].astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", probs, value.astype(jnp.float32)).astype(q.dtype)
+
+    # module-level ops used by the model ------------------------------------
+
+    def linear(self, x, w):
+        """x: (..., d_in) @ w: (d_in, d_out) through the 2D mm kernel."""
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        return self._mm(flat, w).reshape(*lead, w.shape[1])
+
+    def rms_norm(self, x):
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        return self._rms(flat).reshape(*lead, x.shape[-1])
+
+    def silu(self, x):
+        shape = x.shape
+        return self._silu(x.reshape(-1)).reshape(shape)
+
+    def rope(self, x, cos, sin):
+        return self._rope(x, cos, sin)
+
+    def attention(self, q, k, v, bias):
+        return self._attn(q, k, v, bias)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_heads):  # (B, S, D) -> (B, H, S, Dh)
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # (B, H, S, Dh) -> (B, S, D)
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _project_kv(backend, cfg, params, i, x, cos, sin):
+    h = backend.rms_norm(x)
+    k = backend.linear(h, params[f"layer{i}.wk"])
+    v = backend.linear(h, params[f"layer{i}.wv"])
+    k = backend.rope(k.reshape(*k.shape[:2], cfg.n_heads, cfg.d_head), cos, sin)
+    k = k.transpose(0, 2, 1, 3)  # (B, H, S, Dh)
+    v = _split_heads(v, cfg.n_heads)
+    return k, v
+
+
+def _block(backend, cfg, params, i, x, keys, values, bias, cos, sin):
+    """One transformer block over (B, S, D) with explicit K/V tensors."""
+    h = backend.rms_norm(x)
+    q = backend.linear(h, params[f"layer{i}.wq"])
+    q = backend.rope(q.reshape(*q.shape[:2], cfg.n_heads, cfg.d_head), cos, sin)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, S, Dh)
+    attn = backend.attention(q, keys, values, bias)
+    x = x + backend.linear(_merge_heads(attn), params[f"layer{i}.wo"])
+    h = backend.rms_norm(x)
+    gate = backend.silu(backend.linear(h, params[f"layer{i}.w_gate"]))
+    up = backend.linear(h, params[f"layer{i}.w_up"])
+    x = x + backend.linear(gate * up, params[f"layer{i}.w_down"])
+    return x
+
+
+def make_prefill(cfg: ModelConfig, variant: str) -> Callable:
+    """(weights..., tokens (B,S) i32) -> (logits (B,vocab), cache_k, cache_v).
+
+    Caches are returned padded to ``cfg.max_seq`` so the decode artifact's
+    input shapes are fixed.
+    """
+    backend = Backend(variant)
+    cos_t, sin_t = rope_tables(cfg)
+    names = weight_names(cfg)
+
+    def prefill(*args):
+        weights, tokens = list(args[:-1]), args[-1]
+        params = dict(zip(names, weights))
+        b, s = tokens.shape
+        cos, sin = cos_t[:s], sin_t[:s]
+        x = params["embed"][tokens]  # (B, S, D)
+        causal = jnp.where(
+            jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, MASK_VALUE
+        ).astype(jnp.float32)
+        cache_k = jnp.zeros(
+            (cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.d_head), jnp.float32
+        )
+        cache_v = jnp.zeros_like(cache_k)
+        for i in range(cfg.n_layers):
+            k, v = _project_kv(backend, cfg, params, i, x, cos, sin)
+            cache_k = cache_k.at[i, :, :, :s].set(k)
+            cache_v = cache_v.at[i, :, :, :s].set(v)
+            x = _block(backend, cfg, params, i, x, k, v, causal, cos, sin)
+        x = backend.rms_norm(x)
+        logits = backend.linear(x[:, -1], params["lm_head"])  # (B, vocab)
+        return logits, cache_k, cache_v
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, variant: str) -> Callable:
+    """(weights..., token (B,) i32, pos () i32, cache_k, cache_v)
+    -> (logits, cache_k, cache_v).
+
+    One autoregressive step against the fixed-size KV cache; slots beyond
+    ``pos`` are masked by the additive bias.
+    """
+    backend = Backend(variant)
+    cos_t, sin_t = rope_tables(cfg)
+    names = weight_names(cfg)
+
+    def decode(*args):
+        weights = list(args[:-4])
+        token, pos, cache_k, cache_v = args[-4:]
+        params = dict(zip(names, weights))
+        x = params["embed"][token][:, None, :]  # (B, 1, D)
+        cos = jax.lax.dynamic_slice_in_dim(cos_t, pos, 1, axis=0)
+        sin = jax.lax.dynamic_slice_in_dim(sin_t, pos, 1, axis=0)
+        positions = jnp.arange(cfg.max_seq)
+        bias = jnp.where(positions[None, :] <= pos, 0.0, MASK_VALUE).astype(jnp.float32)
+        for i in range(cfg.n_layers):
+            k_new, v_new = _project_kv(backend, cfg, params, i, x, cos, sin)
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k_new[None], (i, 0, 0, pos, 0)
+            )
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v_new[None], (i, 0, 0, pos, 0)
+            )
+            x = _block(
+                backend, cfg, params, i, x, cache_k[i], cache_v[i], bias, cos, sin
+            )
+        x = backend.rms_norm(x)
+        logits = backend.linear(x[:, -1], params["lm_head"])
+        return logits, cache_k, cache_v
+
+    return decode
+
+
+def greedy_decode(cfg, variant, params, tokens, steps):
+    """Reference end-to-end loop used by tests and the Fig 7 oracle."""
+    names = weight_names(cfg)
+    weights = [params[n] for n in names]
+    prefill = make_prefill(cfg, variant)
+    decode = make_decode_step(cfg, variant)
+    logits, ck, cv = prefill(*weights, tokens)
+    out = []
+    pos = tokens.shape[1]
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out.append(token)
+    for _ in range(steps - 1):
+        logits, ck, cv = decode(*weights, token, jnp.int32(pos), ck, cv)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+        pos += 1
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,28 @@
+"""ninetoothed-pallas: a reproduction of the NineToothed DSL
+(Huang et al., 2025) targeting JAX/Pallas instead of Triton.
+
+Public API (mirrors the paper's listings):
+
+>>> import ninetoothed
+>>> from ninetoothed import Tensor, Symbol, block_size
+>>> kernel = ninetoothed.make(arrangement, application, tensors)
+"""
+
+from . import language  # noqa: F401  (imported as `ntl` by kernels)
+from .generation import Kernel, TileProxy, make
+from .symbols import Expr, Symbol, block_size
+from .tensor import Dim, Tensor
+
+__all__ = [
+    "Dim",
+    "Expr",
+    "Kernel",
+    "Symbol",
+    "Tensor",
+    "TileProxy",
+    "block_size",
+    "language",
+    "make",
+]
+
+__version__ = "0.1.0"

@@ -1,0 +1,761 @@
+"""The code generator (paper §3.2): serial → parallel transformation.
+
+``make(arrangement, application, tensors)`` integrates an *arrangement* (a
+compile-time function from symbolic tensors to arranged hierarchical
+tensors) with an *application* (a serial function over tiles) into a
+parallel Pallas kernel plus an auto-generated launch function:
+
+1. **Tile-to-program mapping** (§3.2.1).  The outermost levels of all
+   arranged parameters must agree in shape; that shape *is* the Pallas grid
+   (the auto-generated equivalent of Triton's ``grid`` lambda), and the
+   level-0 index variables are bound to ``pl.program_id(...)``.
+
+2. **Serial-code rewrite.**  The application function's AST is transformed
+   — assignments to parameter names become stores (``output = x`` becomes
+   ``__nt_store__(output, x)``), the same AST-level rewrite the paper's
+   generator performs when emitting Triton.  All other statements are kept
+   verbatim: step 4 of the Triton workflow ("perform the computation") is
+   inherently serial and needs no abstraction.
+
+3. **Source-to-target mapping** (§3.2.2).  Each parameter carries one index
+   expression per source dimension (built by the meta-operations).  Binding
+   intermediate-level variables to loop indices and innermost variables to
+   intra-tile iotas evaluates, for every element of a tile, its source
+   coordinate; the dot product with the (padded, contiguous) strides yields
+   the flat offsets used to generate the loads and stores the user never
+   writes.
+
+4. **Launch generation** (§3.2.1 end).  The launch function reads shapes
+   from the runtime arguments, pads every source dimension to the extent
+   the arrangement can touch (interval arithmetic over the index
+   expressions — the pad-and-crop equivalent of Triton's masks, see
+   DESIGN.md §2), launches the grid, and crops the outputs.
+"""
+
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+import textwrap
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .symbols import Expr, Symbol
+from .tensor import Tensor
+
+__all__ = ["make", "Kernel", "TileProxy"]
+
+
+# ---------------------------------------------------------------------------
+# Application AST rewrite
+# ---------------------------------------------------------------------------
+
+
+class _StoreRewriter(ast.NodeTransformer):
+    """Rewrite assignments to kernel parameters into store calls."""
+
+    def __init__(self, params: Sequence[str]):
+        self.params = set(params)
+        self.stored: set[str] = set()
+
+    def _store_call(self, name: str, value: ast.expr) -> ast.stmt:
+        self.stored.add(name)
+        return ast.Expr(
+            value=ast.Call(
+                func=ast.Name(id="__nt_store__", ctx=ast.Load()),
+                args=[ast.Name(id=name, ctx=ast.Load()), value],
+                keywords=[],
+            )
+        )
+
+    def _store_item_call(self, name: str, index: ast.expr, value: ast.expr) -> ast.stmt:
+        self.stored.add(name)
+        return ast.Expr(
+            value=ast.Call(
+                func=ast.Name(id="__nt_store_item__", ctx=ast.Load()),
+                args=[ast.Name(id=name, ctx=ast.Load()), index, value],
+                keywords=[],
+            )
+        )
+
+    def visit_Assign(self, node: ast.Assign):
+        self.generic_visit(node)
+        if len(node.targets) == 1:
+            target = node.targets[0]
+            if isinstance(target, ast.Name) and target.id in self.params:
+                return self._store_call(target.id, node.value)
+            if (
+                isinstance(target, ast.Subscript)
+                and isinstance(target.value, ast.Name)
+                and target.value.id in self.params
+            ):
+                return self._store_item_call(target.value.id, target.slice, node.value)
+        return node
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self.generic_visit(node)
+        if isinstance(node.target, ast.Name) and node.target.id in self.params:
+            combined = ast.BinOp(
+                left=ast.Name(id=node.target.id, ctx=ast.Load()),
+                op=node.op,
+                right=node.value,
+            )
+            return self._store_call(node.target.id, combined)
+        return node
+
+
+def _transform_application(application: Callable, param_names: Sequence[str]):
+    """Compile the store-rewritten application; returns (code, stored names)."""
+    src = textwrap.dedent(inspect.getsource(application))
+    tree = ast.parse(src)
+    fndef = tree.body[0]
+    if not isinstance(fndef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        raise TypeError("application must be a plain function")
+    fndef.decorator_list = []
+    rewriter = _StoreRewriter(param_names)
+    rewriter.visit(fndef)
+    fndef.name = "__nt_application__"
+    ast.fix_missing_locations(tree)
+    code = compile(tree, f"<ninetoothed:{application.__name__}>", "exec")
+    if not rewriter.stored:
+        raise ValueError(
+            f"application {application.__name__!r} never assigns to a parameter; "
+            "at least one output store is required"
+        )
+    return code, rewriter.stored, src
+
+
+# ---------------------------------------------------------------------------
+# Tile proxies: the lazy loads of the generated kernel
+# ---------------------------------------------------------------------------
+
+
+class TileProxy:
+    """A view of one parameter inside one program.
+
+    Starts at the level just below the program (tile-to-program) level;
+    ``proxy[k]`` drills one level down (the paper's ``[...]`` access for
+    >2-level hierarchies); arithmetic at the innermost level materializes a
+    jnp value via the generated gather load.
+    """
+
+    __slots__ = ("_spec", "_level", "_bindings", "_cache")
+
+    def __init__(self, spec: "_ParamSpec", level: int, bindings: dict):
+        self._spec = spec
+        self._level = level
+        self._bindings = bindings
+        self._cache = None
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def shape(self):
+        if self._level >= len(self._spec.level_shapes):
+            return ()
+        return self._spec.level_shapes[self._level]
+
+    @property
+    def dtype(self):
+        return self._spec.dtype
+
+    def __getitem__(self, index):
+        spec = self._spec
+        if self._level >= spec.num_levels - 1:
+            # innermost level: slice the materialized tile
+            return self._nt_materialize()[index]
+        level_vars = spec.level_vars[self._level]
+        if not isinstance(index, tuple):
+            index = (index,)
+        if len(index) != len(level_vars):
+            raise IndexError(
+                f"level {self._level} of {spec.name} has {len(level_vars)} dims, "
+                f"got {len(index)} indices"
+            )
+        bindings = dict(self._bindings)
+        for var, idx in zip(level_vars, index):
+            bindings[var] = idx
+        return TileProxy(spec, self._level + 1, bindings)
+
+    # -- materialization (the generated load) --------------------------------
+
+    def _offsets(self, bindings: dict):
+        return self._spec.offsets(bindings)
+
+    def _nt_materialize(self):
+        if self._cache is not None:
+            return self._cache
+        spec = self._spec
+        if self._level != spec.num_levels - 1:
+            raise ValueError(
+                f"parameter {spec.name!r}: cannot materialize level {self._level} "
+                f"of {spec.num_levels}; index into the remaining levels first"
+            )
+        if spec.fast_plan is not None:
+            value = spec.fast_load(dict(self._bindings))
+            self._cache = value
+            return value
+        bindings = dict(self._bindings)
+        block_shape = spec.level_shapes[-1]
+        for axis, var in enumerate(spec.level_vars[-1]):
+            bindings[var] = _iota(block_shape, axis)
+        offsets = spec.offsets(bindings)
+        offsets = jnp.broadcast_to(offsets, block_shape) if block_shape else offsets
+        flat = spec.ref[...].reshape(-1)
+        value = flat[offsets.reshape(-1)].reshape(block_shape)
+        self._cache = value
+        return value
+
+    # -- arithmetic: materialize then defer to jnp ----------------------------
+
+    def _binop(self, other, op, swap=False):
+        a = self._nt_materialize()
+        b = other._nt_materialize() if isinstance(other, TileProxy) else other
+        return op(b, a) if swap else op(a, b)
+
+    def __add__(self, o):
+        return self._binop(o, jnp.add)
+
+    def __radd__(self, o):
+        return self._binop(o, jnp.add, swap=True)
+
+    def __sub__(self, o):
+        return self._binop(o, jnp.subtract)
+
+    def __rsub__(self, o):
+        return self._binop(o, jnp.subtract, swap=True)
+
+    def __mul__(self, o):
+        return self._binop(o, jnp.multiply)
+
+    def __rmul__(self, o):
+        return self._binop(o, jnp.multiply, swap=True)
+
+    def __truediv__(self, o):
+        return self._binop(o, jnp.divide)
+
+    def __rtruediv__(self, o):
+        return self._binop(o, jnp.divide, swap=True)
+
+    def __neg__(self):
+        return -self._nt_materialize()
+
+    def __matmul__(self, o):
+        b = o._nt_materialize() if isinstance(o, TileProxy) else o
+        return jnp.dot(self._nt_materialize(), b, preferred_element_type=jnp.float32)
+
+    def astype(self, dtype):
+        return self._nt_materialize().astype(dtype)
+
+
+class _ScalarProxy:
+    """A 0-d parameter: each program sees the same scalar value."""
+
+    __slots__ = ("ref",)
+
+    def __init__(self, ref):
+        self.ref = ref
+
+    def _nt_materialize(self):
+        return self.ref[...].reshape(())
+
+    def _binop(self, other, op, swap=False):
+        a = self._nt_materialize()
+        b = other._nt_materialize() if hasattr(other, "_nt_materialize") else other
+        return op(b, a) if swap else op(a, b)
+
+    __add__ = lambda s, o: s._binop(o, jnp.add)  # noqa: E731
+    __radd__ = lambda s, o: s._binop(o, jnp.add, swap=True)  # noqa: E731
+    __sub__ = lambda s, o: s._binop(o, jnp.subtract)  # noqa: E731
+    __rsub__ = lambda s, o: s._binop(o, jnp.subtract, swap=True)  # noqa: E731
+    __mul__ = lambda s, o: s._binop(o, jnp.multiply)  # noqa: E731
+    __rmul__ = lambda s, o: s._binop(o, jnp.multiply, swap=True)  # noqa: E731
+    __truediv__ = lambda s, o: s._binop(o, jnp.divide)  # noqa: E731
+    __rtruediv__ = lambda s, o: s._binop(o, jnp.divide, swap=True)  # noqa: E731
+
+
+def _iota(shape, axis):
+    if not shape:
+        return jnp.int32(0)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+
+
+# ---------------------------------------------------------------------------
+# Specialization: symbolic arrangement -> concrete kernel plan
+# ---------------------------------------------------------------------------
+
+
+class _ParamSpec:
+    """One parameter of one specialized kernel instance."""
+
+    def __init__(self, name, arranged: Tensor, bindings: dict[str, int], dtype, pad_value):
+        self.name = name
+        self.dtype = dtype
+        self.pad_value = pad_value
+        self.is_scalar = arranged.source_ndim == 0
+        self.ref = None  # bound during kernel trace
+
+        # deferred singleton checks from squeeze/expand of symbolic dims
+        for check in arranged.checks:
+            value = int(check.evaluate(bindings))
+            if value != 1:
+                raise ValueError(
+                    f"parameter {name!r}: arrangement requires {check} == 1, "
+                    f"got {value} — the arrangement is invalid (paper §3.2.1)"
+                )
+
+        # Concrete per-level shapes and index-variable names.
+        self.level_shapes = [
+            tuple(int(d.size.evaluate(bindings)) for d in level) for level in arranged.levels
+        ]
+        self.level_vars = [[d.var for d in level] for level in arranged.levels]
+        self.num_levels = len(self.level_shapes)
+
+        # Specialize the source-dim index expressions: after substituting all
+        # shape/meta symbols, the only free names left are index variables.
+        self.index_exprs = [e.substitute(bindings) for e in arranged.indices]
+
+        # Padded extent per source dim via interval arithmetic (DESIGN.md §2).
+        ranges = {}
+        for shapes, names in zip(self.level_shapes, self.level_vars):
+            for size, var in zip(shapes, names):
+                ranges[var] = (0, max(size - 1, 0))
+        self.orig_shape = tuple(
+            int(s.evaluate(bindings)) for s in arranged.source_shape
+        )
+        extents = []
+        for d, expr in enumerate(self.index_exprs):
+            if expr.is_constant:
+                hi = expr.constant()
+            else:
+                _, hi = expr.bounds(ranges)
+            extents.append(max(hi + 1, self.orig_shape[d]))
+        self.padded_shape = tuple(extents)
+        strides = []
+        acc = 1
+        for size in reversed(self.padded_shape):
+            strides.append(acc)
+            acc *= size
+        self.strides = tuple(reversed(strides))
+
+        # Compiled evaluators, one per source dim, taking the binding env.
+        self._evaluators = [expr.evaluate for expr in self.index_exprs]
+
+        # Affine fast path (perf pass, EXPERIMENTS.md §Perf): when every
+        # source-dim index expression is `start(outer/loop vars) + block_var`
+        # with unit coefficient and each block variable used in exactly one
+        # dim, the tile is a contiguous rectangle and the load lowers to
+        # `lax.dynamic_slice` instead of a flat gather (likewise the store
+        # to `lax.dynamic_update_slice`).  Tiled-but-unflattened
+        # arrangements (mm, sdpa, rope, rowwise) all hit this; implicit-GEMM
+        # conv2d keeps the gather path (mixed-radix index decomposition).
+        self.fast_plan = None if self.is_scalar else self._plan_fast_path()
+
+    def _plan_fast_path(self):
+        block_vars = list(self.level_vars[-1]) if self.level_shapes else []
+        block_sizes = list(self.level_shapes[-1]) if self.level_shapes else []
+        if self.num_levels < 2:
+            return None
+        zero_block = {v: 0 for v in block_vars}
+        starts = []  # per source dim: start-expr evaluator
+        dim_var = []  # per source dim: block var name or None
+        used: set[str] = set()
+        for expr in self.index_exprs:
+            start = expr.substitute(zero_block)
+            free = expr.free_symbols() & set(block_vars)
+            if not free:
+                starts.append(start.evaluate)
+                dim_var.append(None)
+                continue
+            if len(free) != 1:
+                return None
+            (var,) = free
+            if var in used:
+                return None
+            # structural check: expr == start + var exactly
+            from .symbols import Expr as _Expr
+            from .tensor import ast_name as _ast_name
+
+            if str(start + _Expr(_ast_name(var))) != str(expr):
+                return None
+            used.add(var)
+            starts.append(start.evaluate)
+            dim_var.append(var)
+        # any block var appearing in an index expression has either been
+        # consumed (single-var, unit-coefficient) or we bailed above; vars
+        # absent from every expression are broadcast dims and need no slice
+        # slice sizes per source dim; mapped dims in source order
+        var_size = dict(zip(block_vars, block_sizes))
+        sizes = [var_size[v] if v is not None else 1 for v in dim_var]
+        mapped_dims = [d for d, v in enumerate(dim_var) if v is not None]
+        # transpose permutation: block axes (var order) <- sliced axes (dim order)
+        perm = []
+        for v in block_vars:
+            if v in used:
+                d = dim_var.index(v)
+                perm.append(mapped_dims.index(d))
+        return {
+            "starts": starts,
+            "dim_var": dim_var,
+            "sizes": sizes,
+            "mapped_dims": mapped_dims,
+            "perm": perm,
+            "block_vars": block_vars,
+        }
+
+    def fast_load(self, bindings: dict):
+        """dynamic_slice load for the affine fast path; block-shaped result."""
+        plan = self.fast_plan
+        starts = [jnp.asarray(f(bindings), jnp.int32) for f in plan["starts"]]
+        sliced = jax.lax.dynamic_slice(self.ref[...], starts, plan["sizes"])
+        # drop unmapped (size-1) dims, reorder to block-axis order
+        squeezed = sliced.reshape([plan["sizes"][d] for d in plan["mapped_dims"]])
+        if plan["perm"] != sorted(plan["perm"]):
+            squeezed = jnp.transpose(squeezed, plan["perm"])
+        return squeezed.reshape(self.level_shapes[-1])
+
+    def fast_store(self, bindings: dict, value):
+        """dynamic_update_slice store for the affine fast path."""
+        plan = self.fast_plan
+        starts = [jnp.asarray(f(bindings), jnp.int32) for f in plan["starts"]]
+        block = jnp.broadcast_to(value, self.level_shapes[-1]).astype(self.dtype)
+        # invert the load's axis mapping: block axes (var order) -> dim order
+        if plan["perm"] != sorted(plan["perm"]):
+            inverse = [plan["perm"].index(i) for i in range(len(plan["perm"]))]
+            block = jnp.transpose(block, inverse)
+        block = block.reshape(plan["sizes"])
+        self.ref[...] = jax.lax.dynamic_update_slice(self.ref[...], block, starts)
+
+    @property
+    def grid_shape(self):
+        return self.level_shapes[0] if self.level_shapes else ()
+
+    def offsets(self, bindings: dict):
+        total = 0
+        for evaluate, stride in zip(self._evaluators, self.strides):
+            total = total + evaluate(bindings) * stride
+        return total
+
+
+class Kernel:
+    """The integrated compute kernel plus its generated launch function.
+
+    Calling the kernel with concrete arrays (and ``meta`` keyword values for
+    the constexpr symbols) specializes, compiles and runs it; compiled
+    specializations are cached by (shapes, dtypes, meta).  The call returns
+    the output array(s) — JAX is functional, so the caller-provided output
+    buffer contributes only its shape and dtype (see ``examples`` for the
+    PyTorch-style wrappers).
+    """
+
+    def __init__(self, arrangement, application, tensors, name: Optional[str] = None):
+        self.arrangement = arrangement
+        self.application = application
+        self.tensors = tuple(tensors)
+        self.name = name or application.__name__
+        sig = inspect.signature(application)
+        self.param_names = [
+            p.name
+            for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+        ]
+        if len(self.param_names) != len(self.tensors):
+            raise ValueError(
+                f"application takes {len(self.param_names)} tensors, "
+                f"make() received {len(self.tensors)}"
+            )
+        self._code, self.output_params, self.application_source = _transform_application(
+            application, self.param_names
+        )
+        # meta-parameter kwargs: `arrangement(..., BLOCK_SIZE_M=block_size())`
+        # introduces an anonymous symbol; callers refer to it by the
+        # arrangement's keyword name, so map kwarg name -> symbol name
+        self.meta_map: dict[str, str] = {}
+        for p in inspect.signature(arrangement).parameters.values():
+            if isinstance(p.default, Symbol):
+                self.meta_map[p.name] = p.default.name
+        self.arranged = tuple(self.arrangement(*self.tensors))
+        if len(self.arranged) != len(self.tensors):
+            raise ValueError("arrangement must return one arranged tensor per parameter")
+        self._check_outermost_consistency()
+        self._cache: dict = {}
+
+    # -- the paper's §3.2.1 correctness principle -----------------------------
+
+    def _check_outermost_consistency(self):
+        """Arranged non-scalar parameters must agree on the outermost level
+        *rank* symbolically; sizes are re-checked numerically per launch."""
+        ranks = {
+            len(a.levels[0])
+            for a, t in zip(self.arranged, self.tensors)
+            if t.source_ndim > 0
+        }
+        if len(ranks) > 1:
+            raise ValueError(
+                f"kernel {self.name!r}: outermost levels of the arranged parameters "
+                f"have mismatched ranks {sorted(ranks)} — the arrangement is invalid "
+                "(paper §3.2.1)"
+            )
+
+    # -- symbol binding --------------------------------------------------------
+
+    def _bindings(self, args, meta):
+        bindings: dict[str, int] = {}
+        for tensor, arg in zip(self.tensors, args):
+            if tensor.source_ndim != len(arg.shape):
+                raise ValueError(
+                    f"parameter {tensor.name!r} expects {tensor.source_ndim} dims, "
+                    f"got array of shape {arg.shape}"
+                )
+            for sym, size in zip(tensor.source_shape, arg.shape):
+                bindings[sym.name] = int(size)
+        for key, value in meta.items():
+            bindings[self.meta_map.get(key, key)] = int(value)
+        # defaults for constexpr meta-symbols the caller did not supply
+        free: set[str] = set()
+        index_vars: set[str] = set()
+        for arranged in self.arranged:
+            for level in arranged.levels:
+                for dim in level:
+                    free |= dim.size.free_symbols()
+                    index_vars.add(dim.var)
+            for expr in arranged.indices:
+                free |= expr.free_symbols()
+        for name in sorted(free - bindings.keys() - index_vars):
+            default = _SYMBOL_DEFAULTS.get(name)
+            if default is None:
+                raise ValueError(
+                    f"kernel {self.name!r}: no value for symbol {name!r} "
+                    "(pass it as a keyword argument)"
+                )
+            bindings[name] = default
+        return bindings
+
+    # -- specialization ----------------------------------------------------------
+
+    def _specialize(self, shapes, dtypes, meta_items):
+        meta = dict(meta_items)
+        fake_args = [jax.ShapeDtypeStruct(s, d) for s, d in zip(shapes, dtypes)]
+        bindings = self._bindings(fake_args, meta)
+
+        specs = [
+            _ParamSpec(name, arranged, bindings, dtype, tensor.other)
+            for name, arranged, tensor, dtype in zip(
+                self.param_names, self.arranged, self.tensors, dtypes
+            )
+        ]
+
+        grids = {s.name: s.grid_shape for s in specs if not s.is_scalar}
+        distinct = {g for g in grids.values()}
+        if len(distinct) > 1:
+            raise ValueError(
+                f"kernel {self.name!r}: outermost-level shapes disagree: {grids} "
+                "— the arrangement is invalid (paper §3.2.1)"
+            )
+        grid = distinct.pop() if distinct else ()
+        grid = grid if grid else (1,)
+
+        in_specs = [s for s in specs if s.name not in self.output_params]
+        out_specs = [s for s in specs if s.name in self.output_params]
+        code = self._code
+        app_globals = dict(self.application.__globals__)
+
+        def kernel_body(*refs):
+            for spec, ref in zip(in_specs + out_specs, refs):
+                spec.ref = ref
+            pids = [pl.program_id(i) for i in range(len(grid))]
+            proxies = {}
+            for spec in specs:
+                if spec.is_scalar:
+                    proxies[spec.name] = _ScalarProxy(spec.ref)
+                    continue
+                bound = {var: pid for var, pid in zip(spec.level_vars[0], pids)}
+                proxies[spec.name] = TileProxy(spec, 1, bound)
+
+            def store(proxy, value):
+                _do_store(proxy, value)
+
+            def store_item(proxy, index, value):
+                _do_store(proxy, value, index)
+
+            scope = dict(app_globals)
+            scope["__nt_store__"] = store
+            scope["__nt_store_item__"] = store_item
+            exec(code, scope)  # noqa: S102 — our own transformed AST
+            scope["__nt_application__"](*(proxies[n] for n in self.param_names))
+
+        out_shape = [
+            jax.ShapeDtypeStruct(s.padded_shape, s.dtype) for s in out_specs
+        ]
+
+        call = pl.pallas_call(
+            kernel_body,
+            grid=grid,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def launch(*arrays):
+            padded = []
+            for spec, arr in zip(specs, arrays):
+                if spec.name in self.output_params:
+                    continue
+                if spec.is_scalar:
+                    padded.append(jnp.asarray(arr).reshape(()))
+                    continue
+                pad = [
+                    (0, p - s) for p, s in zip(spec.padded_shape, arr.shape)
+                ]
+                if any(hi for _, hi in pad):
+                    arr = jnp.pad(arr, pad, constant_values=spec.pad_value)
+                padded.append(arr)
+            results = call(*padded)
+            cropped = []
+            for spec, res in zip(out_specs, results):
+                if res.shape != spec.orig_shape:
+                    res = res[tuple(slice(0, s) for s in spec.orig_shape)]
+                cropped.append(res)
+            return cropped[0] if len(cropped) == 1 else tuple(cropped)
+
+        launch.grid = grid
+        launch.specs = specs
+        return launch
+
+    def specialize(self, *args, **meta):
+        """Return the cached compiled launch function for these arguments."""
+        shapes = tuple(tuple(a.shape) for a in args)
+        dtypes = tuple(jnp.asarray(a).dtype if not hasattr(a, "dtype") else a.dtype for a in args)
+        key = (shapes, dtypes, tuple(sorted(meta.items())))
+        launch = self._cache.get(key)
+        if launch is None:
+            launch = self._specialize(shapes, dtypes, tuple(sorted(meta.items())))
+            self._cache[key] = launch
+        return launch
+
+    def __call__(self, *args, **meta):
+        args = tuple(jnp.asarray(a) for a in args)
+        launch = self.specialize(*args, **meta)
+        return launch(*args)
+
+    # -- auto-tuning (paper §5.2.1 mentions NineToothed's auto-tuner) -----------
+
+    def autotune(self, *args, candidates: dict, repeats: int = 3, **fixed_meta):
+        """Pick the fastest meta-parameter assignment by measurement.
+
+        ``candidates`` maps meta-parameter names to lists of values; the
+        full cross product is timed (``repeats`` runs after one warmup)
+        and the best assignment is returned along with its mean runtime.
+
+        >>> best, secs = kernel.autotune(a, b, out,
+        ...     candidates={"BLOCK_SIZE_M": [32, 64], "BLOCK_SIZE_N": [32, 64]})
+        """
+        import itertools
+        import time
+
+        names = list(candidates)
+        best_meta, best_time = None, float("inf")
+        for values in itertools.product(*(candidates[n] for n in names)):
+            meta = dict(fixed_meta)
+            meta.update(zip(names, values))
+            try:
+                out = self(*args, **meta)
+            except ValueError:
+                continue  # e.g. block larger than a dim the arrangement rejects
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(self(*args, **meta))
+            elapsed = (time.perf_counter() - t0) / repeats
+            if elapsed < best_time:
+                best_meta, best_time = meta, elapsed
+        if best_meta is None:
+            raise ValueError(f"kernel {self.name!r}: no viable candidate assignment")
+        return best_meta, best_time
+
+    # -- metadata export for the Rust mirror (arrange/ in rust) -----------------
+
+    def export_metadata(self) -> dict:
+        params = []
+        for name, arranged, tensor in zip(self.param_names, self.arranged, self.tensors):
+            params.append(
+                {
+                    "name": name,
+                    "source_ndim": tensor.source_ndim,
+                    "is_output": name in self.output_params,
+                    "levels": [
+                        [{"size": str(d.size), "var": d.var} for d in level]
+                        for level in arranged.levels
+                    ],
+                    "indices": [str(e) for e in arranged.indices],
+                    "pad_value": tensor.other,
+                }
+            )
+        return {"kernel": self.name, "params": params}
+
+
+def _do_store(proxy, value, index=None):
+    """The generated store: scatter a tile into its target region."""
+    if isinstance(proxy, _ScalarProxy):
+        raise ValueError("cannot store to a scalar parameter")
+    if not isinstance(proxy, TileProxy):
+        raise TypeError(f"store target must be a kernel parameter, got {type(proxy)}")
+    spec = proxy._spec
+    if proxy._level != spec.num_levels - 1:
+        raise ValueError(
+            f"store to {spec.name!r} must target the innermost level; "
+            f"index into the remaining levels first"
+        )
+    if hasattr(value, "_nt_materialize"):
+        value = value._nt_materialize()
+    if spec.fast_plan is not None and index is None:
+        spec.fast_store(dict(proxy._bindings), value)
+        return
+    bindings = dict(proxy._bindings)
+    block_shape = spec.level_shapes[-1]
+    for axis, var in enumerate(spec.level_vars[-1]):
+        bindings[var] = _iota(block_shape, axis)
+    offsets = spec.offsets(bindings)
+    offsets = jnp.broadcast_to(offsets, block_shape) if block_shape else offsets
+    if hasattr(value, "_nt_materialize"):
+        value = value._nt_materialize()
+    value = jnp.asarray(value, dtype=spec.dtype)
+    if index is not None:
+        offsets = offsets[index]
+        value = jnp.broadcast_to(value, offsets.shape)
+    else:
+        value = jnp.broadcast_to(value, block_shape)
+    ref = spec.ref
+    current = ref[...]
+    updated = (
+        current.reshape(-1)
+        .at[offsets.reshape(-1)]
+        .set(value.reshape(-1))
+        .reshape(current.shape)
+    )
+    ref[...] = updated
+
+
+# Registry of symbol defaults so the launch function can auto-pick block
+# sizes the caller omitted (the paper's `block_size()` meta-parameters).
+_SYMBOL_DEFAULTS: dict[str, int] = {}
+
+_original_symbol_init = Symbol.__init__
+
+
+def _symbol_init(self, name, constexpr=False, default=None):
+    _original_symbol_init(self, name, constexpr=constexpr, default=default)
+    if default is not None:
+        _SYMBOL_DEFAULTS[name] = default
+
+
+Symbol.__init__ = _symbol_init
+
+
+def make(arrangement, application, tensors, name: Optional[str] = None) -> Kernel:
+    """Integrate an arrangement and an application into a compute kernel
+    (paper §3.2.3)."""
+    return Kernel(arrangement, application, tensors, name=name)

@@ -1,0 +1,123 @@
+"""``ntl`` — the in-kernel language (paper Listings 6, 8).
+
+Application functions manipulate *tiles*.  A tile is either a
+:class:`~.generation.TileProxy` (a lazy view into a source tensor that
+materializes to a jnp array on first use — the generated equivalent of a
+Triton ``tl.load``) or an already-materialized jnp array.  Every function
+here accepts both, mirroring ``triton.language``'s role in Triton kernels.
+
+All reductions default to f32 accumulation, matching both Triton's ``tl.dot``
+behaviour and the MXU's native accumulate type on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+float32 = jnp.float32
+float16 = jnp.float16
+bfloat16 = jnp.bfloat16
+int32 = jnp.int32
+
+
+def _m(value):
+    """Materialize a tile proxy (or pass a jnp value through)."""
+    materialize = getattr(value, "_nt_materialize", None)
+    return materialize() if materialize is not None else value
+
+
+def zeros(shape, dtype=jnp.float32):
+    shape = tuple(int(s) for s in shape)
+    return jnp.zeros(shape, dtype)
+
+
+def full(shape, value, dtype=jnp.float32):
+    shape = tuple(int(s) for s in shape)
+    return jnp.full(shape, value, dtype)
+
+
+def arange(start, stop=None, dtype=jnp.int32):
+    return jnp.arange(start, stop, dtype=dtype)
+
+
+def dot(a, b, out_dtype=jnp.float32):
+    """Tile matmul — lowers to the MXU (``jnp.dot``) on real hardware."""
+    return jnp.dot(_m(a), _m(b), preferred_element_type=out_dtype)
+
+
+def trans(a):
+    return jnp.swapaxes(_m(a), -1, -2)
+
+
+def exp(a):
+    return jnp.exp(_m(a))
+
+
+def exp2(a):
+    return jnp.exp2(_m(a))
+
+
+def log(a):
+    return jnp.log(_m(a))
+
+
+def sqrt(a):
+    return jnp.sqrt(_m(a))
+
+
+def rsqrt(a):
+    return jax.lax.rsqrt(_m(a))
+
+
+def sigmoid(a):
+    return jax.nn.sigmoid(_m(a))
+
+
+def silu(a):
+    a = _m(a)
+    return a * jax.nn.sigmoid(a)
+
+
+def maximum(a, b):
+    return jnp.maximum(_m(a), _m(b))
+
+
+def minimum(a, b):
+    return jnp.minimum(_m(a), _m(b))
+
+
+def where(cond, a, b):
+    return jnp.where(_m(cond), _m(a), _m(b))
+
+
+def sum(a, axis=None, keepdims=False):  # noqa: A001 — mirrors tl.sum
+    return jnp.sum(_m(a), axis=axis, keepdims=keepdims)
+
+
+def max(a, axis=None, keepdims=False):  # noqa: A001 — mirrors tl.max
+    return jnp.max(_m(a), axis=axis, keepdims=keepdims)
+
+
+def min(a, axis=None, keepdims=False):  # noqa: A001 — mirrors tl.min
+    return jnp.min(_m(a), axis=axis, keepdims=keepdims)
+
+
+def cast(a, dtype):
+    return _m(a).astype(dtype)
+
+
+def cos(a):
+    return jnp.cos(_m(a))
+
+
+def sin(a):
+    return jnp.sin(_m(a))
+
+
+def cat(tensors, axis=-1):
+    return jnp.concatenate([_m(t) for t in tensors], axis=axis)
+
+
+def reshape(a, shape):
+    return jnp.reshape(_m(a), tuple(int(s) for s in shape))

@@ -1,0 +1,391 @@
+"""AST-backed symbolic expressions — the substrate of tensor-oriented
+metaprogramming (paper §3.1.2).
+
+The paper observes that the symbolic expression trees involved in common
+tensor meta-operations are a subset of the abstract syntax trees of
+high-level languages, and therefore wraps Python's ``ast`` nodes directly
+instead of inventing a fresh CAS.  We do the same: every :class:`Expr`
+holds an ``ast.expr`` node; arithmetic on :class:`Expr` objects builds
+bigger AST nodes; evaluation compiles the tree once and executes it under
+a binding environment (which may contain JAX tracers — the same expression
+tree that sizes the grid at launch time computes offsets inside the
+generated Pallas kernel).
+
+Three operations beyond plain arithmetic matter for code generation:
+
+* :meth:`Expr.substitute` — capture-free replacement of names, used by the
+  meta-operations (``tile`` replaces a dim's index variable with
+  ``outer * stride + inner``; ``flatten`` replaces merged variables with a
+  mixed-radix decomposition of a fresh variable).
+* :meth:`Expr.bounds` — interval arithmetic over the tree, used by the
+  generated launch function to derive padding extents (the pad-and-crop
+  equivalent of Triton's masks, see DESIGN.md §2).
+* ``str(expr)`` — a parseable rendering consumed by the Rust mirror of the
+  algebra (``rust/src/symbolic``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Mapping, Union
+
+Exprish = Union["Expr", int]
+
+_COMPILE_CACHE: dict[str, object] = {}
+
+
+def _cdiv(a, b):
+    """Ceiling division helper available inside evaluated expressions."""
+    return -(-a // b)
+
+
+_EVAL_FUNCS = {"cdiv": _cdiv, "min": min, "max": max}
+
+
+def _to_node(value: Exprish) -> ast.expr:
+    if isinstance(value, Expr):
+        return value.node
+    if isinstance(value, bool):  # bool is an int subclass; reject explicitly
+        raise TypeError("boolean is not a valid symbolic value")
+    if isinstance(value, int):
+        if value < 0:
+            return ast.UnaryOp(op=ast.USub(), operand=ast.Constant(value=-value))
+        return ast.Constant(value=value)
+    raise TypeError(f"cannot convert {value!r} to a symbolic expression")
+
+
+def _const_of(node: ast.expr):
+    """Return the integer value of a constant node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.Constant)
+        and isinstance(node.operand.value, int)
+    ):
+        return -node.operand.value
+    return None
+
+
+class Expr:
+    """A symbolic integer expression wrapping a Python ``ast`` node."""
+
+    __slots__ = ("node",)
+
+    def __init__(self, node: Union[ast.expr, Exprish]):
+        if isinstance(node, ast.expr):
+            self.node = node
+        else:
+            self.node = _to_node(node)
+
+    # -- construction helpers ------------------------------------------------
+
+    @staticmethod
+    def wrap(value: Exprish) -> "Expr":
+        return value if isinstance(value, Expr) else Expr(_to_node(value))
+
+    def _bin(self, other: Exprish, op: ast.operator, swap: bool = False) -> "Expr":
+        lhs, rhs = (_to_node(other), self.node) if swap else (self.node, _to_node(other))
+        folded = _fold(lhs, op, rhs)
+        return Expr(folded)
+
+    def __add__(self, other):
+        return self._bin(other, ast.Add())
+
+    def __radd__(self, other):
+        return self._bin(other, ast.Add(), swap=True)
+
+    def __sub__(self, other):
+        return self._bin(other, ast.Sub())
+
+    def __rsub__(self, other):
+        return self._bin(other, ast.Sub(), swap=True)
+
+    def __mul__(self, other):
+        return self._bin(other, ast.Mult())
+
+    def __rmul__(self, other):
+        return self._bin(other, ast.Mult(), swap=True)
+
+    def __floordiv__(self, other):
+        return self._bin(other, ast.FloorDiv())
+
+    def __rfloordiv__(self, other):
+        return self._bin(other, ast.FloorDiv(), swap=True)
+
+    def __mod__(self, other):
+        return self._bin(other, ast.Mod())
+
+    def __rmod__(self, other):
+        return self._bin(other, ast.Mod(), swap=True)
+
+    def __neg__(self):
+        return Expr(0) - self
+
+    def cdiv(self, other: Exprish) -> "Expr":
+        """Ceiling division — the tiling size rule of paper Algorithm 1."""
+        a, b = _const_of(self.node), _const_of(_to_node(other))
+        if a is not None and b is not None and b != 0:
+            return Expr(_cdiv(a, b))
+        # structural identity: cdiv(x, x) == 1 for positive x (all sizes are
+        # positive); keeps full-dim tiles (`tile((1, -1))`) singleton so the
+        # paper's expand-after-tile idiom type-checks symbolically.
+        if ast.unparse(self.node) == ast.unparse(_to_node(other)):
+            return Expr(1)
+        call = ast.Call(
+            func=ast.Name(id="cdiv", ctx=ast.Load()),
+            args=[self.node, _to_node(other)],
+            keywords=[],
+        )
+        return Expr(call)
+
+    # -- interrogation -------------------------------------------------------
+
+    @property
+    def is_constant(self) -> bool:
+        return _const_of(self.node) is not None
+
+    def constant(self) -> int:
+        value = _const_of(self.node)
+        if value is None:
+            raise ValueError(f"{self} is not constant")
+        return value
+
+    def free_symbols(self) -> set[str]:
+        return {
+            n.id
+            for n in ast.walk(self.node)
+            if isinstance(n, ast.Name) and n.id not in _EVAL_FUNCS
+        }
+
+    # -- transformation ------------------------------------------------------
+
+    def substitute(self, mapping: Mapping[str, Exprish]) -> "Expr":
+        if not mapping:
+            return self
+        nodes = {name: _to_node(value) for name, value in mapping.items()}
+
+        class _Sub(ast.NodeTransformer):
+            def visit_Name(self, node: ast.Name):
+                repl = nodes.get(node.id)
+                return ast.copy_location(_copy_node(repl), node) if repl is not None else node
+
+        new = _Sub().visit(_copy_node(self.node))
+        return Expr(_refold(new))
+
+    def evaluate(self, env: Mapping[str, object]):
+        """Evaluate under ``env``; values may be ints or JAX tracers."""
+        src = str(self)
+        code = _COMPILE_CACHE.get(src)
+        if code is None:
+            code = compile(ast.Expression(body=_with_locations(self.node)), "<expr>", "eval")
+            _COMPILE_CACHE[src] = code
+        scope = dict(_EVAL_FUNCS)
+        scope.update(env)
+        return eval(code, {"__builtins__": {}}, scope)  # noqa: S307 — our own AST
+
+    def bounds(self, ranges: Mapping[str, tuple[int, int]]) -> tuple[int, int]:
+        """Interval [lo, hi] of the expression given variable ranges.
+
+        Conservative (never narrower than the true range).  Used to compute
+        the padded extent each source dimension must provide so every
+        generated load is in bounds — the pad-and-crop substitute for
+        Triton's masked loads.
+        """
+        return _bounds(self.node, ranges)
+
+    # -- misc ----------------------------------------------------------------
+
+    def __str__(self) -> str:
+        return ast.unparse(self.node)
+
+    def __repr__(self) -> str:
+        return f"Expr({self})"
+
+    def __eq__(self, other):
+        if isinstance(other, (Expr, int)):
+            return str(self) == str(Expr.wrap(other))
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(str(self))
+
+    def __int__(self):
+        return self.constant()
+
+    def __index__(self):
+        return self.constant()
+
+
+class Symbol(Expr):
+    """A named symbol (paper Listing 2 / §4.1).
+
+    ``constexpr=True`` marks meta-parameters whose value must be known at
+    kernel-specialization time (block sizes).  ``default`` lets the launch
+    function pick a value when the caller does not supply one.
+    """
+
+    __slots__ = ("name", "constexpr", "default")
+
+    def __init__(self, name: str, constexpr: bool = False, default: int | None = None):
+        if not name.isidentifier():
+            raise ValueError(f"invalid symbol name: {name!r}")
+        super().__init__(ast.Name(id=name, ctx=ast.Load()))
+        self.name = name
+        self.constexpr = constexpr
+        self.default = default
+
+    def __repr__(self):
+        return f"Symbol({self.name!r})"
+
+
+_BLOCK_COUNTER = [0]
+
+
+def block_size(default: int | None = None) -> Symbol:
+    """A fresh constexpr block-size meta-parameter (paper Listing 5)."""
+    _BLOCK_COUNTER[0] += 1
+    return Symbol(f"_ntc_block_{_BLOCK_COUNTER[0]}", constexpr=True, default=default)
+
+
+# -- internals ----------------------------------------------------------------
+
+
+def _copy_node(node: ast.expr) -> ast.expr:
+    # ast nodes are mutable; deep-copy through parse/unparse-free path.
+    import copy
+
+    return copy.deepcopy(node)
+
+
+def _with_locations(node: ast.expr) -> ast.expr:
+    node = _copy_node(node)
+    for n in ast.walk(node):
+        n.lineno = getattr(n, "lineno", 1) or 1
+        n.col_offset = getattr(n, "col_offset", 0) or 0
+        n.end_lineno = getattr(n, "end_lineno", 1) or 1
+        n.end_col_offset = getattr(n, "end_col_offset", 0) or 0
+    return node
+
+
+def _fold(lhs: ast.expr, op: ast.operator, rhs: ast.expr) -> ast.expr:
+    """Constant folding + identity elimination at construction time.
+
+    Keeps expression trees small after the heavy substitutions performed by
+    ``tile``/``flatten`` (e.g. ``v -> 0`` from ``squeeze`` collapses whole
+    products).
+    """
+    a, b = _const_of(lhs), _const_of(rhs)
+    if a is not None and b is not None:
+        if isinstance(op, ast.Add):
+            return _to_node(a + b)
+        if isinstance(op, ast.Sub):
+            return _to_node(a - b)
+        if isinstance(op, ast.Mult):
+            return _to_node(a * b)
+        if isinstance(op, ast.FloorDiv) and b != 0:
+            return _to_node(a // b)
+        if isinstance(op, ast.Mod) and b != 0:
+            return _to_node(a % b)
+    if isinstance(op, ast.Add):
+        if a == 0:
+            return rhs
+        if b == 0:
+            return lhs
+    if isinstance(op, ast.Sub) and b == 0:
+        return lhs
+    if isinstance(op, ast.Mult):
+        if a == 0 or b == 0:
+            return ast.Constant(value=0)
+        if a == 1:
+            return rhs
+        if b == 1:
+            return lhs
+    if isinstance(op, ast.FloorDiv) and b == 1:
+        return lhs
+    if isinstance(op, ast.Mod) and b == 1:
+        return ast.Constant(value=0)
+    return ast.BinOp(left=lhs, op=op, right=rhs)
+
+
+def _refold(node: ast.expr) -> ast.expr:
+    """Re-run folding bottom-up after a substitution."""
+    if isinstance(node, ast.BinOp):
+        left = _refold(node.left)
+        right = _refold(node.right)
+        return _fold(left, node.op, right)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        operand = _refold(node.operand)
+        value = _const_of(operand)
+        if value is not None:
+            return _to_node(-value)
+        return ast.UnaryOp(op=ast.USub(), operand=operand)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        args = [_refold(a) for a in node.args]
+        consts = [_const_of(a) for a in args]
+        if all(c is not None for c in consts):
+            if node.func.id == "cdiv" and consts[1] != 0:
+                return _to_node(_cdiv(consts[0], consts[1]))
+            if node.func.id == "min":
+                return _to_node(min(*consts))
+            if node.func.id == "max":
+                return _to_node(max(*consts))
+        return ast.Call(func=node.func, args=args, keywords=[])
+    return node
+
+
+def _bounds(node: ast.expr, ranges: Mapping[str, tuple[int, int]]) -> tuple[int, int]:
+    value = _const_of(node)
+    if value is not None:
+        return (value, value)
+    if isinstance(node, ast.Name):
+        if node.id not in ranges:
+            raise KeyError(f"no range for symbol {node.id!r}")
+        return ranges[node.id]
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        lo, hi = _bounds(node.operand, ranges)
+        return (-hi, -lo)
+    if isinstance(node, ast.BinOp):
+        alo, ahi = _bounds(node.left, ranges)
+        blo, bhi = _bounds(node.right, ranges)
+        if isinstance(node.op, ast.Add):
+            return (alo + blo, ahi + bhi)
+        if isinstance(node.op, ast.Sub):
+            return (alo - bhi, ahi - blo)
+        if isinstance(node.op, ast.Mult):
+            products = (alo * blo, alo * bhi, ahi * blo, ahi * bhi)
+            return (min(products), max(products))
+        if isinstance(node.op, ast.FloorDiv):
+            if blo <= 0:
+                raise ValueError(f"cannot bound division by {blo}..{bhi}")
+            candidates = (alo // blo, alo // bhi, ahi // blo, ahi // bhi)
+            return (min(candidates), max(candidates))
+        if isinstance(node.op, ast.Mod):
+            if blo <= 0:
+                raise ValueError(f"cannot bound modulo by {blo}..{bhi}")
+            if alo >= 0:
+                return (0, min(ahi, bhi - 1))
+            return (-(bhi - 1), bhi - 1)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        parts = [_bounds(a, ranges) for a in node.args]
+        if node.func.id == "cdiv":
+            (alo, ahi), (blo, bhi) = parts
+            if blo <= 0:
+                raise ValueError("cannot bound cdiv by nonpositive divisor")
+            candidates = (_cdiv(alo, blo), _cdiv(alo, bhi), _cdiv(ahi, blo), _cdiv(ahi, bhi))
+            return (min(candidates), max(candidates))
+        if node.func.id == "min":
+            return (min(p[0] for p in parts), min(p[1] for p in parts))
+        if node.func.id == "max":
+            return (max(p[0] for p in parts), max(p[1] for p in parts))
+    raise ValueError(f"cannot bound expression node {ast.dump(node)}")
+
+
+_VAR_COUNTER = [0]
+
+
+def fresh_var(prefix: str = "i") -> str:
+    """A fresh, globally-unique index-variable name."""
+    _VAR_COUNTER[0] += 1
+    return f"_ntv_{prefix}_{_VAR_COUNTER[0]}"

@@ -1,0 +1,397 @@
+"""Hierarchical symbolic tensors and meta-operations (paper §3.1).
+
+A :class:`Tensor` is *symbolic*: its shape and strides are expression trees
+(:mod:`.symbols`), not numbers, so all six meta-operations of paper Table 1
+(``tile``, ``expand``, ``squeeze``, ``permute``, ``flatten``, ``ravel`` —
+plus ``unsqueeze``, an extension needed by broadcast-style arrangements such
+as rope) are *compile-time* manipulations: no data moves.
+
+Internally an arranged tensor is represented as
+
+* ``levels`` — the hierarchy: a list of levels, each level a list of
+  :class:`Dim` (size expression + a unique index variable).  Level 0 is the
+  outermost level; the innermost level is the tile the application function
+  manipulates.  ``Tensor.dtype`` returns a *view* one level down, so the
+  paper's ``t.dtype = t.dtype.squeeze(0)`` idiom works unchanged.
+* ``indices`` — one expression per **source dimension**, written in terms
+  of the dims' index variables.  This is the source-to-target mapping of
+  paper §3.2.2 in closed form: binding the level-0 variables to program ids
+  (tile-to-program mapping), intermediate-level variables to loop indices,
+  and innermost variables to intra-tile offsets yields, for every element
+  of a tile, its coordinate in the source tensor.
+
+Every meta-operation is a pure function from this representation to a new
+one, implemented as substitution over the ``indices`` expressions:
+
+=========  ==================================================================
+tile       ``v -> outer * stride + inner`` per dim (conv-style ``strides=``
+           supported; default stride equals the tile size — paper §3.1.3)
+expand     broadcast: fresh variable that no index expression references
+squeeze    ``v -> 0`` and the dim disappears
+permute    reorders dims (index expressions untouched)
+flatten    merged variables become a mixed-radix decomposition of one fresh
+           variable — this is what makes implicit-GEMM conv2d expressible
+ravel      concatenates all levels into one (hierarchy only; indices kept)
+=========  ==================================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+from .symbols import Expr, Exprish, Symbol, fresh_var
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    """One dimension of one level: a size expression and its index variable."""
+
+    size: Expr
+    var: str
+
+    def with_size(self, size: Exprish) -> "Dim":
+        return Dim(Expr.wrap(size), self.var)
+
+
+def _fresh_dim(size: Exprish, prefix: str = "i") -> Dim:
+    return Dim(Expr.wrap(size), fresh_var(prefix))
+
+
+class Tensor:
+    """A (possibly hierarchical) symbolic tensor.
+
+    ``Tensor(ndim, name=...)`` constructs a flat source tensor whose shape
+    and stride attributes are fresh symbols (paper Listing 2).  Meta-
+    operations return new tensors sharing the same source.
+
+    Parameters
+    ----------
+    ndim:
+        number of source dimensions (0 allowed: a scalar parameter).
+    name:
+        parameter name; defaults to ``tensor_<n>``.
+    dtype:
+        element dtype *name* ("float32", ...); informational.
+    other:
+        padding value used by the generated launch function when a source
+        dimension must be padded to a tile multiple (the pad-and-crop
+        equivalent of Triton's ``other=`` on masked loads).
+    shape_options:
+        accepted for API parity with the paper's Listing 8 (``constexpr``
+        shapes); recorded but not required by this backend.
+    """
+
+    _COUNTER = [0]
+
+    def __init__(
+        self,
+        ndim: Optional[int] = None,
+        name: Optional[str] = None,
+        dtype: str = "float32",
+        other: float = 0.0,
+        shape_options: Optional[dict] = None,
+        *,
+        _internal: Optional[dict] = None,
+    ):
+        if _internal is not None:
+            self.__dict__.update(_internal)
+            return
+        if ndim is None:
+            raise TypeError("Tensor() requires ndim")
+        Tensor._COUNTER[0] += 1
+        self.name = name or f"tensor_{Tensor._COUNTER[0]}"
+        self.source_ndim = ndim
+        self.element_dtype = dtype
+        self.other = other
+        self.shape_options = dict(shape_options or {})
+        self.source_shape = tuple(
+            Symbol(f"{self.name}_size_{d}", constexpr=bool(self.shape_options.get("constexpr")))
+            for d in range(ndim)
+        )
+        # Stride symbols exist for API parity (paper Listing 2); codegen
+        # derives physical strides from the padded contiguous layout instead.
+        self.source_strides = tuple(Symbol(f"{self.name}_stride_{d}") for d in range(ndim))
+        dims = [_fresh_dim(self.source_shape[d], f"{self.name}{d}") for d in range(ndim)]
+        self.levels: list[list[Dim]] = [dims]
+        self.indices: list[Expr] = [Expr(ast_name(d.var)) for d in dims]
+        # expressions that must evaluate to 1 at specialization time
+        # (squeeze/expand of symbolically-sized dims — e.g. cdiv(C_in, C_filt)
+        # in the implicit-GEMM conv arrangement, paper Listing 8)
+        self.checks: list[Expr] = []
+        self._level_offset = 0
+
+    # -- construction of derived tensors --------------------------------------
+
+    def _derive(self, levels, indices, level_offset=None, extra_checks=None) -> "Tensor":
+        new = Tensor(
+            _internal=dict(
+                name=self.name,
+                source_ndim=self.source_ndim,
+                element_dtype=self.element_dtype,
+                other=self.other,
+                shape_options=self.shape_options,
+                source_shape=self.source_shape,
+                source_strides=self.source_strides,
+                levels=[list(level) for level in levels],
+                indices=list(indices),
+                checks=list(self.checks) + list(extra_checks or []),
+                _level_offset=self._level_offset if level_offset is None else level_offset,
+            )
+        )
+        return new
+
+    # -- inspection ------------------------------------------------------------
+
+    @property
+    def ndim(self) -> int:
+        return len(self.levels[self._level_offset])
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def shape(self) -> tuple[Expr, ...]:
+        """Shape of the *current* level (paper: ``arranged.shape[...]``)."""
+        return tuple(d.size for d in self.levels[self._level_offset])
+
+    @property
+    def strides(self) -> tuple[Expr, ...]:
+        if self._level_offset == 0 and len(self.levels) == 1:
+            return tuple(self.source_strides)
+        raise AttributeError("strides are only defined on flat source tensors")
+
+    @property
+    def dtype(self):
+        """One level down (a view), or the element dtype at the innermost level."""
+        if self._level_offset + 1 < len(self.levels):
+            return self._derive(self.levels, self.indices, self._level_offset + 1)
+        return self.element_dtype
+
+    @dtype.setter
+    def dtype(self, value):
+        """Accept the paper idiom ``t.dtype = t.dtype.squeeze(0)``."""
+        if isinstance(value, Tensor):
+            if value.name != self.name:
+                raise ValueError("dtype assignment must derive from the same tensor")
+            self.levels = [list(level) for level in value.levels]
+            self.indices = list(value.indices)
+            self.checks = list(value.checks)
+        else:
+            self.element_dtype = value
+
+    def __repr__(self):
+        lv = " | ".join(
+            "(" + ", ".join(str(d.size) for d in level) + ")" for level in self.levels
+        )
+        return f"Tensor<{self.name}: {lv}; level={self._level_offset}>"
+
+    # -- internal helpers -------------------------------------------------------
+
+    def _current(self) -> list[Dim]:
+        return self.levels[self._level_offset]
+
+    def _substitute(self, mapping: dict[str, Exprish]) -> list[Expr]:
+        return [expr.substitute(mapping) for expr in self.indices]
+
+    def _norm_dim(self, dim: int, n: Optional[int] = None) -> int:
+        n = self.ndim if n is None else n
+        if dim < 0:
+            dim += n
+        if not 0 <= dim < n:
+            raise IndexError(f"dim {dim} out of range for {n}-d level")
+        return dim
+
+    # -- meta-operations (paper Table 1) ----------------------------------------
+
+    def tile(
+        self,
+        tile_shape: Sequence[Exprish],
+        strides: Optional[Sequence[Exprish]] = None,
+        dilation: Optional[Sequence[Exprish]] = None,
+    ) -> "Tensor":
+        """Form a hierarchical tensor (paper §3.1.3).
+
+        ``tile_shape[d] == -1`` means "the whole dimension".  ``strides``
+        controls the interval at which tiles are generated — analogous to
+        the stride of a convolution; ``-1`` (the default) means "equal to
+        the tile size", the non-overlapping case the paper identifies as
+        the common one.  ``dilation`` spaces the elements *within* a tile.
+        """
+        current = self._current()
+        if len(tile_shape) != len(current):
+            raise ValueError(
+                f"tile shape has {len(tile_shape)} dims, level has {len(current)}"
+            )
+        strides = list(strides) if strides is not None else [-1] * len(current)
+        dilation = list(dilation) if dilation is not None else [1] * len(current)
+        if len(strides) != len(current) or len(dilation) != len(current):
+            raise ValueError("strides/dilation must match the level rank")
+
+        outer: list[Dim] = []
+        inner: list[Dim] = []
+        mapping: dict[str, Exprish] = {}
+        for dim, t, s, dl in zip(current, tile_shape, strides, dilation):
+            t = dim.size if _is_neg_one(t) else Expr.wrap(t)
+            s = t if _is_neg_one(s) else Expr.wrap(s)
+            dl = Expr.wrap(dl)
+            # span of one tile: (t - 1) * dilation + 1
+            span = (t - 1) * dl + 1
+            # number of tiles: floor((S - span) / s) + 1, which collapses to
+            # ceil(S / t) in the default non-overlapping case (Algorithm 1)
+            # under pad-and-crop.
+            if s == t and dl == Expr.wrap(1):
+                outer_size = dim.size.cdiv(t)
+            else:
+                outer_size = (dim.size - span) // s + 1
+            o = _fresh_dim(outer_size, "o")
+            i = _fresh_dim(t, "t")
+            mapping[dim.var] = (
+                Expr(ast_name(o.var)) * s + Expr(ast_name(i.var)) * dl
+            )
+            outer.append(o)
+            inner.append(i)
+
+        off = self._level_offset
+        levels = self.levels[:off] + [outer, inner] + self.levels[off + 1 :]
+        return self._derive(levels, self._substitute(mapping))
+
+    def expand(self, shape: Sequence[Exprish]) -> "Tensor":
+        """Expand singleton dimensions (broadcast); ``-1`` keeps a dim."""
+        current = self._current()
+        if len(shape) != len(current):
+            raise ValueError("expand shape must match the level rank")
+        mapping: dict[str, Exprish] = {}
+        dims: list[Dim] = []
+        deferred: list[Expr] = []
+        for dim, new_size in zip(current, shape):
+            if _is_neg_one(new_size):
+                dims.append(dim)
+                continue
+            if dim.size.is_constant:
+                if dim.size.constant() != 1:
+                    raise ValueError(
+                        f"cannot expand non-singleton dim of size {dim.size}"
+                    )
+            else:
+                deferred.append(dim.size)
+            mapping[dim.var] = 0  # broadcast: the fresh var never feeds indices
+            dims.append(_fresh_dim(new_size, "e"))
+        levels = list(self.levels)
+        levels[self._level_offset] = dims
+        return self._derive(levels, self._substitute(mapping), extra_checks=deferred)
+
+    def squeeze(self, dim: Union[int, Sequence[int]]) -> "Tensor":
+        """Remove singleton dimensions."""
+        dims_to_drop = sorted(
+            {self._norm_dim(d) for d in (dim if isinstance(dim, (tuple, list)) else (dim,))}
+        )
+        current = self._current()
+        mapping: dict[str, Exprish] = {}
+        kept: list[Dim] = []
+        deferred: list[Expr] = []
+        for idx, d in enumerate(current):
+            if idx in dims_to_drop:
+                if d.size.is_constant:
+                    if d.size.constant() != 1:
+                        raise ValueError(f"cannot squeeze dim {idx} of size {d.size}")
+                else:
+                    # symbolically unknown: must evaluate to 1 at launch
+                    # (e.g. cdiv(C_in, C_filter) in implicit-GEMM conv)
+                    deferred.append(d.size)
+                mapping[d.var] = 0
+            else:
+                kept.append(d)
+        levels = list(self.levels)
+        levels[self._level_offset] = kept
+        return self._derive(levels, self._substitute(mapping), extra_checks=deferred)
+
+    def unsqueeze(self, dim: int) -> "Tensor":
+        """Insert a singleton dimension (extension; needed by e.g. rope)."""
+        current = self._current()
+        dim = dim + len(current) + 1 if dim < 0 else dim
+        if not 0 <= dim <= len(current):
+            raise IndexError(f"unsqueeze dim {dim} out of range")
+        dims = list(current)
+        dims.insert(dim, _fresh_dim(1, "u"))
+        levels = list(self.levels)
+        levels[self._level_offset] = dims
+        return self._derive(levels, self.indices)
+
+    def permute(self, order: Sequence[int]) -> "Tensor":
+        """Permute the dimensions of the current level."""
+        current = self._current()
+        norm = [self._norm_dim(d) for d in order]
+        if sorted(norm) != list(range(len(current))):
+            raise ValueError(f"invalid permutation {order}")
+        levels = list(self.levels)
+        levels[self._level_offset] = [current[d] for d in norm]
+        return self._derive(levels, self.indices)
+
+    def flatten(self, start_dim: int = 0, end_dim: Optional[int] = None) -> "Tensor":
+        """Merge dims ``[start_dim, end_dim)`` of the current level into one.
+
+        The merged index variables are replaced by the mixed-radix
+        decomposition of a single fresh variable, so arbitrary (even
+        non-contiguous) source layouts remain addressable — this is the
+        step that lets implicit-GEMM conv2d present an (N·P·Q, C·R·S) view.
+        """
+        current = self._current()
+        n = len(current)
+        start = self._norm_dim(start_dim)
+        end = n if end_dim is None else (end_dim + n if end_dim < 0 else end_dim)
+        if not start < end <= n:
+            raise ValueError(f"invalid flatten range [{start}, {end})")
+        merged = current[start:end]
+        total = merged[0].size
+        for d in merged[1:]:
+            total = total * d.size
+        flat = _fresh_dim(total, "f")
+        w = Expr(ast_name(flat.var))
+        mapping: dict[str, Exprish] = {}
+        trailing = Expr.wrap(1)
+        for d in reversed(merged):
+            component = (w // trailing) % d.size if trailing != Expr.wrap(1) else w % d.size
+            mapping[d.var] = component
+            trailing = trailing * d.size
+        # outermost component needs no modulo: it is bounded by construction
+        first = merged[0]
+        rest = trailing // first.size
+        mapping[first.var] = w // rest if rest != Expr.wrap(1) else w
+        dims = current[:start] + [flat] + current[end:]
+        levels = list(self.levels)
+        levels[self._level_offset] = dims
+        return self._derive(levels, self._substitute(mapping))
+
+    def ravel(self) -> "Tensor":
+        """Flatten *all levels* (from the current one down) into one level
+        (paper §3.1.3: unlike ``flatten``, ``ravel`` collapses hierarchy)."""
+        off = self._level_offset
+        merged: list[Dim] = []
+        for level in self.levels[off:]:
+            merged.extend(level)
+        levels = self.levels[:off] + [merged]
+        return self._derive(levels, self.indices)
+
+    # -- validation helpers used by the code generator ---------------------------
+
+    def names_of_level(self, level: int) -> list[str]:
+        return [d.var for d in self.levels[level]]
+
+    def innermost(self) -> list[Dim]:
+        return self.levels[-1]
+
+
+def ast_name(name: str):
+    import ast as _ast
+
+    return _ast.Name(id=name, ctx=_ast.Load())
+
+
+def _is_neg_one(value: Exprish) -> bool:
+    if isinstance(value, int):
+        return value == -1
+    if isinstance(value, Expr) and value.is_constant:
+        return value.constant() == -1
+    return False

@@ -1,0 +1,135 @@
+"""Auto-tuner behaviour and failure-injection tests for the DSL."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import ninetoothed
+import ninetoothed.language as ntl  # noqa: F401
+from ninetoothed import Symbol, Tensor
+
+BLOCK = Symbol("ATB", constexpr=True, default=64)
+
+
+def _scale_kernel():
+    def arrangement(src, dst, ATB=BLOCK):
+        return src.tile((ATB,)), dst.tile((ATB,))
+
+    def application(src, dst):
+        dst = src * 3.0  # noqa: F841
+
+    return ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+
+
+def test_autotune_picks_a_candidate():
+    kern = _scale_kernel()
+    x = jnp.asarray(np.arange(2048), jnp.float32)
+    best, secs = kern.autotune(
+        x, jnp.empty_like(x), candidates={"ATB": [128, 256, 512]}, repeats=1
+    )
+    assert best["ATB"] in (128, 256, 512)
+    assert secs > 0
+    # the tuned kernel still computes the right thing
+    assert_allclose(kern(x, jnp.empty_like(x), **best), x * 3.0)
+
+
+def test_autotune_no_viable_candidates():
+    kern = _scale_kernel()
+    x = jnp.asarray(np.arange(16), jnp.float32)
+
+    # candidate values that break specialization (block size 0 divides)
+    with pytest.raises((ValueError, ZeroDivisionError)):
+        kern.autotune(x, jnp.empty_like(x), candidates={"ATB": [0]}, repeats=1)
+
+
+# ---------------------------------------------------------------------------
+# failure injection
+# ---------------------------------------------------------------------------
+
+
+def test_arrangement_returning_wrong_arity():
+    def arrangement(a, b):
+        return (a.tile((8,)),)  # drops b
+
+    def application(a, b):
+        b = a  # noqa: F841
+
+    with pytest.raises(ValueError, match="one arranged tensor per parameter"):
+        ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+
+
+def test_application_param_count_mismatch():
+    def arrangement(a):
+        return (a.tile((8,)),)
+
+    def application(a, b):
+        b = a  # noqa: F841
+
+    with pytest.raises(ValueError, match="takes 2 tensors"):
+        ninetoothed.make(arrangement, application, (Tensor(1),))
+
+
+def test_outermost_rank_mismatch_rejected_at_make():
+    """Rank mismatch is detectable symbolically (paper §3.2.1)."""
+
+    def arrangement(a, b):
+        return a.tile((8, 8)), b.tile((8,))
+
+    def application(a, b):
+        b = a  # noqa: F841
+
+    with pytest.raises(ValueError, match="mismatched ranks"):
+        ninetoothed.make(arrangement, application, (Tensor(2), Tensor(1)))
+
+
+def test_store_to_scalar_rejected():
+    def arrangement(a, out):
+        return a, out
+
+    def application(a, out):
+        out = a  # noqa: F841
+
+    kern = ninetoothed.make(arrangement, application, (Tensor(0), Tensor(0)))
+    with pytest.raises(Exception, match="scalar"):
+        kern(jnp.float32(1.0), jnp.float32(0.0))
+
+
+def test_deferred_singleton_check_fires():
+    """conv-style squeeze of cdiv(A, B) must fail when A % B != 0 makes it
+    exceed 1 at launch time."""
+
+    def arrangement(x, f, out):
+        tiled = x.tile((f.shape[0],))  # cdiv(x, f) tiles
+        # deferred: requires cdiv(x_len, f_len) == 1; unsqueeze restores the
+        # outer rank so the §3.2.1 rank check passes and the numeric check
+        # is what fires
+        tiled = tiled.squeeze(0).unsqueeze(0)
+        return tiled, f.tile((-1,)), out.tile((-1,))
+
+    def application(x, f, out):
+        out = x + f  # noqa: F841
+
+    kern = ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1), Tensor(1)))
+    x = jnp.zeros(32, jnp.float32)
+    f = jnp.zeros(8, jnp.float32)  # cdiv(32, 8) = 4 != 1
+    with pytest.raises(ValueError, match="requires cdiv"):
+        kern(x, f, jnp.zeros(8, jnp.float32))
+
+
+def test_float16_end_to_end():
+    kern = _scale_kernel()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(100), jnp.float16)
+    out = kern(x, jnp.empty_like(x), ATB=32)
+    assert out.dtype == jnp.float16
+    assert_allclose(np.asarray(out), np.asarray(x) * 3.0, rtol=1e-2, atol=1e-2)
+
+
+def test_empty_is_never_materialized_from_output():
+    """Outputs are write-only: the kernel must not read the (empty) output
+    buffer's contents."""
+    kern = _scale_kernel()
+    x = jnp.asarray(np.arange(64), jnp.float32)
+    poisoned = jnp.full_like(x, jnp.nan)
+    out = kern(x, poisoned, ATB=32)
+    assert not np.isnan(np.asarray(out)).any()

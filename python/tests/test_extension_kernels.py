@@ -1,0 +1,98 @@
+"""Extension kernels (beyond the paper's 10) + ntl language coverage."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import ninetoothed.language as ntl
+
+RNG = np.random.default_rng(2)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+@pytest.mark.parametrize("n", [256, 1000])
+def test_gelu(n):
+    from kernels.nt import gelu
+
+    x = randn(n)
+    out = gelu.kernel(x, jnp.empty_like(x), GELU_BLOCK=256)
+    expected = jax.nn.gelu(x, approximate=True)
+    assert_allclose(out, expected, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", [(4, 64), (7, 100)])
+def test_layer_norm(m, n):
+    from kernels.nt import layer_norm
+
+    x = randn(m, n)
+    out = layer_norm.kernel(x, jnp.empty_like(x))
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    expected = (x - mean) / jnp.sqrt(var + 1e-6)
+    assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ntl language functions (materialization contract)
+# ---------------------------------------------------------------------------
+
+
+class FakeTile:
+    """Anything exposing _nt_materialize behaves like a tile proxy."""
+
+    def __init__(self, value):
+        self.value = value
+
+    def _nt_materialize(self):
+        return self.value
+
+
+def test_ntl_materializes_proxies():
+    x = FakeTile(jnp.asarray([1.0, 4.0, 9.0]))
+    assert_allclose(ntl.sqrt(x), [1.0, 2.0, 3.0])
+    assert_allclose(ntl.sum(x), 14.0)
+    assert_allclose(ntl.max(x), 9.0)
+    assert_allclose(ntl.cast(x, jnp.int32), [1, 4, 9])
+
+
+def test_ntl_dot_accumulates_f32():
+    a = FakeTile(jnp.ones((4, 4), jnp.float16))
+    b = FakeTile(jnp.ones((4, 4), jnp.float16))
+    out = ntl.dot(a, b)
+    assert out.dtype == jnp.float32
+    assert_allclose(out, 4.0 * jnp.ones((4, 4)))
+
+
+def test_ntl_trans_where_minimum():
+    x = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    assert_allclose(ntl.trans(FakeTile(x)), x.T)
+    assert_allclose(ntl.where(x > 2, x, 0.0), [[0, 0], [3, 4]])
+    assert_allclose(ntl.minimum(FakeTile(x), 2.0), [[1, 2], [2, 2]])
+
+
+def test_ntl_shapes_and_fills():
+    z = ntl.zeros((2, 3))
+    assert z.shape == (2, 3) and float(z.sum()) == 0.0
+    f = ntl.full((4,), -1e30)
+    assert f.shape == (4,)
+    assert np.isclose(float(f[0]), -1e30, rtol=1e-6)
+    r = ntl.reshape(FakeTile(jnp.arange(6.0)), (2, 3))
+    assert r.shape == (2, 3)
+    c = ntl.cat((jnp.ones(2), jnp.zeros(2)))
+    assert c.shape == (4,)
+
+
+def test_ntl_activation_helpers():
+    x = jnp.asarray([-1.0, 0.0, 1.0])
+    assert_allclose(ntl.sigmoid(FakeTile(x)), jax.nn.sigmoid(x))
+    assert_allclose(ntl.silu(FakeTile(x)), x * jax.nn.sigmoid(x))
+    assert_allclose(ntl.rsqrt(FakeTile(jnp.asarray([4.0]))), [0.5])
+    assert_allclose(ntl.exp2(FakeTile(jnp.asarray([3.0]))), [8.0])
+    assert_allclose(ntl.log(FakeTile(jnp.asarray([1.0]))), [0.0])
+    assert_allclose(ntl.cos(FakeTile(jnp.asarray([0.0]))), [1.0])
+    assert_allclose(ntl.sin(FakeTile(jnp.asarray([0.0]))), [0.0])

@@ -1,0 +1,214 @@
+"""Unit tests for the code generator (paper §3.2): AST store-rewrite,
+tile proxies, specialization caching, fast-path/gather-path agreement,
+error handling."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import ninetoothed
+import ninetoothed.language as ntl
+from ninetoothed import Symbol, Tensor
+from ninetoothed.generation import _transform_application
+
+
+# ---------------------------------------------------------------------------
+# AST rewrite
+# ---------------------------------------------------------------------------
+
+
+def test_transform_detects_outputs():
+    def application(a, b, out):
+        out = a + b  # noqa: F841
+
+    _, stored, _ = _transform_application(application, ["a", "b", "out"])
+    assert stored == {"out"}
+
+
+def test_transform_augassign_and_subscript():
+    def application(a, out):
+        out += a  # load-modify-store
+        out[0] = a  # subscript store
+
+    _, stored, _ = _transform_application(application, ["a", "out"])
+    assert stored == {"out"}
+
+
+def test_transform_requires_a_store():
+    def application(a, b):
+        c = a + b  # noqa: F841 — no parameter assignment
+
+    with pytest.raises(ValueError, match="never assigns"):
+        _transform_application(application, ["a", "b"])
+
+
+def test_transform_keeps_local_assignments():
+    def application(a, out):
+        tmp = a * 2
+        out = tmp  # noqa: F841
+
+    code, stored, _ = _transform_application(application, ["a", "out"])
+    assert stored == {"out"}
+    assert code is not None
+
+
+# ---------------------------------------------------------------------------
+# generated kernels: structural behaviours
+# ---------------------------------------------------------------------------
+
+
+BLOCK = Symbol("TB", constexpr=True, default=64)
+
+
+def _copy_kernel():
+    def arrangement(src, dst, TB=BLOCK):
+        return src.tile((TB,)), dst.tile((TB,))
+
+    def application(src, dst):
+        dst = src  # noqa: F841
+
+    return ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+
+
+def test_specialization_cache_reused():
+    kern = _copy_kernel()
+    x = jnp.arange(100, dtype=jnp.float32)
+    launch1 = kern.specialize(x, x, TB=32)
+    launch2 = kern.specialize(x, x, TB=32)
+    assert launch1 is launch2
+    launch3 = kern.specialize(x, x, TB=16)
+    assert launch3 is not launch1
+
+
+def test_symbol_default_used_when_not_passed():
+    kern = _copy_kernel()
+    x = jnp.arange(130, dtype=jnp.float32)
+    out = kern(x, jnp.empty_like(x))  # TB defaults to 64
+    assert_allclose(out, x)
+    assert kern.specialize(x, x).grid == (3,)
+
+
+def test_missing_symbol_raises():
+    nodefault = Symbol("TB_NODEFAULT", constexpr=True)
+
+    def arrangement(src, dst, TB_NODEFAULT=nodefault):
+        return src.tile((TB_NODEFAULT,)), dst.tile((TB_NODEFAULT,))
+
+    def application(src, dst):
+        dst = src  # noqa: F841
+
+    kern = ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+    x = jnp.arange(16, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="no value for symbol"):
+        kern(x, jnp.empty_like(x))
+
+
+def test_wrong_rank_raises():
+    kern = _copy_kernel()
+    x = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="expects 1 dims"):
+        kern(x, x, TB=4)
+
+
+def test_fast_path_and_gather_path_agree():
+    """The affine fast path (dynamic_slice) must be numerically identical
+    to the general gather path on an arrangement both can execute."""
+    import ninetoothed.generation as generation
+
+    def arrangement(src, dst, TB=BLOCK):
+        return src.tile((TB,)), dst.tile((TB,))
+
+    def application(src, dst):
+        dst = src * 2.0  # noqa: F841
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(300), jnp.float32)
+
+    kern_fast = ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+    out_fast = kern_fast(x, jnp.empty_like(x), TB=64)
+    launch = kern_fast.specialize(x, x, TB=64)
+    assert all(s.fast_plan is not None for s in launch.specs)
+
+    # disable the fast path and re-make
+    orig = generation._ParamSpec._plan_fast_path
+    generation._ParamSpec._plan_fast_path = lambda self: None
+    try:
+        kern_slow = ninetoothed.make(arrangement, application, (Tensor(1), Tensor(1)))
+        out_slow = kern_slow(x, jnp.empty_like(x), TB=64)
+    finally:
+        generation._ParamSpec._plan_fast_path = orig
+    assert_allclose(out_fast, out_slow)
+
+
+def test_conv2d_uses_gather_path():
+    """Mixed-radix (flattened) index maps cannot use dynamic_slice."""
+    from kernels.nt import conv2d as conv_mod
+
+    x = jnp.zeros((1, 2, 8, 8), jnp.float32)
+    f = jnp.zeros((3, 2, 3, 3), jnp.float32)
+    launch = conv_mod.kernel.specialize(
+        x, f, jnp.zeros((1, 3, 6, 6), jnp.float32),
+        BLOCK_SIZE_M=16, BLOCK_SIZE_N=16, BLOCK_SIZE_K=16,
+    )
+    by_name = {s.name: s for s in launch.specs}
+    # application params are (input, other, output) — mm.application reused
+    assert by_name["input"].fast_plan is None  # ravel+flatten -> gather
+    assert by_name["other"].fast_plan is None  # flatten+permute -> gather
+
+
+def test_mm_uses_fast_path():
+    from kernels.nt import mm as mm_mod
+
+    a = jnp.zeros((64, 64), jnp.float32)
+    launch = mm_mod.kernel.specialize(
+        a, a, a, BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32
+    )
+    assert all(s.fast_plan is not None for s in launch.specs)
+
+
+def test_grid_exposed_on_launch():
+    from kernels.nt import mm as mm_mod
+
+    a = jnp.zeros((64, 96), jnp.float32)
+    b = jnp.zeros((96, 128), jnp.float32)
+    launch = mm_mod.kernel.specialize(
+        a, b, jnp.zeros((64, 128), jnp.float32),
+        BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32,
+    )
+    assert launch.grid == (2, 4)
+
+
+def test_metadata_export_shape():
+    from kernels.nt import mm as mm_mod
+
+    meta = mm_mod.kernel.export_metadata()
+    assert meta["kernel"] == "mm"
+    assert [p["name"] for p in meta["params"]] == ["input", "other", "output"]
+    for p in meta["params"]:
+        assert len(p["indices"]) == p["source_ndim"]
+        assert p["levels"], "levels must be exported"
+
+
+def test_scalar_params_excluded_from_grid():
+    from kernels.nt import addmm as addmm_mod
+
+    m = jnp.zeros((64, 64), jnp.float32)
+    launch = addmm_mod.kernel.specialize(
+        m, m, m, jnp.float32(1.0), jnp.float32(1.0), m,
+        BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32,
+    )
+    assert launch.grid == (2, 2)
+
+
+def test_kernel_composes_under_jit():
+    """The generated launch function must be traceable (L2 embeds it)."""
+    import jax
+
+    kern = _copy_kernel()
+
+    @jax.jit
+    def fn(x):
+        return kern(x, jnp.empty_like(x), TB=32) + 1.0
+
+    x = jnp.arange(70, dtype=jnp.float32)
+    assert_allclose(fn(x), x + 1.0)

@@ -1,0 +1,144 @@
+"""NineToothed-generated kernels vs the pure-jnp oracles (paper §5.1).
+
+Every kernel is exercised on several shapes including non-divisible ones
+(where the generated pad-and-crop launch path is active) and on float16.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from kernels import ref
+from kernels.nt import KERNELS
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype=dtype)
+
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+TOL16 = dict(rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4097])
+def test_add(n):
+    x, y = randn(n), randn(n)
+    out = KERNELS["add"](x, y, jnp.empty_like(x), BLOCK_SIZE=256)
+    assert_allclose(out, ref.add(x, y), **TOL)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4097])
+def test_silu(n):
+    x = randn(n)
+    out = KERNELS["silu"](x, jnp.empty_like(x), BLOCK_SIZE=256)
+    assert_allclose(out, ref.silu(x), **TOL)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (70, 50, 90), (33, 129, 65)])
+def test_mm(m, k, n):
+    a, b = randn(m, k), randn(k, n)
+    out = KERNELS["mm"](
+        a, b, jnp.empty((m, n), jnp.float32),
+        BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32,
+    )
+    assert_allclose(out, ref.mm(a, b), **TOL)
+
+
+def test_mm_float16():
+    a, b = randn(64, 64, dtype=jnp.float16), randn(64, 64, dtype=jnp.float16)
+    out = KERNELS["mm"](
+        a, b, jnp.empty((64, 64), jnp.float16),
+        BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32,
+    )
+    assert_allclose(np.asarray(out), np.asarray(ref.mm(a, b)), **TOL16)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (70, 50, 90)])
+def test_addmm(m, k, n):
+    inp, a, b = randn(m, n), randn(m, k), randn(k, n)
+    beta, alpha = jnp.float32(0.7), jnp.float32(1.3)
+    out = KERNELS["addmm"](
+        inp, a, b, beta, alpha, jnp.empty((m, n), jnp.float32),
+        BLOCK_SIZE_M=32, BLOCK_SIZE_N=32, BLOCK_SIZE_K=32,
+    )
+    assert_allclose(out, ref.addmm(inp, a, b, 0.7, 1.3), **TOL)
+
+
+@pytest.mark.parametrize("b,m,k,n", [(2, 32, 32, 32), (3, 40, 50, 36)])
+def test_bmm(b, m, k, n):
+    x, y = randn(b, m, k), randn(b, k, n)
+    out = KERNELS["bmm"](
+        x, y, jnp.empty((b, m, n), jnp.float32),
+        BLOCK_SIZE_M=16, BLOCK_SIZE_N=16, BLOCK_SIZE_K=16,
+    )
+    assert_allclose(out, ref.bmm(x, y), **TOL)
+
+
+@pytest.mark.parametrize(
+    "n,c,h,w,k,r,s", [(2, 3, 10, 10, 4, 3, 3), (1, 2, 8, 9, 3, 3, 2)]
+)
+def test_conv2d(n, c, h, w, k, r, s):
+    x, f = randn(n, c, h, w), randn(k, c, r, s)
+    p, q = h - r + 1, w - s + 1
+    out = KERNELS["conv2d"](
+        x, f, jnp.empty((n, k, p, q), jnp.float32),
+        BLOCK_SIZE_M=16, BLOCK_SIZE_N=16, BLOCK_SIZE_K=16,
+    )
+    assert_allclose(out, ref.conv2d(x, f), **TOL)
+
+
+@pytest.mark.parametrize("m,n", [(8, 64), (5, 100), (16, 257)])
+def test_softmax(m, n):
+    x = randn(m, n)
+    out = KERNELS["softmax"](x, jnp.empty_like(x))
+    assert_allclose(out, ref.softmax(x), **TOL)
+
+
+@pytest.mark.parametrize("m,n", [(8, 64), (5, 100)])
+def test_rms_norm(m, n):
+    x = randn(m, n)
+    out = KERNELS["rms_norm"](x, jnp.empty_like(x))
+    assert_allclose(out, ref.rms_norm(x), **TOL)
+
+
+@pytest.mark.parametrize("b,s,h,d", [(2, 8, 3, 16), (1, 5, 2, 8)])
+def test_rope(b, s, h, d):
+    x = randn(b, s, h, d)
+    pos = np.arange(s)[:, None]
+    freq = 1.0 / (10000 ** (np.arange(d // 2) / (d // 2)))
+    cos = jnp.asarray(np.cos(pos * freq), jnp.float32)
+    sin = jnp.asarray(np.sin(pos * freq), jnp.float32)
+    out = KERNELS["rope"](x, cos, sin, jnp.empty_like(x))
+    assert_allclose(out, ref.rope(x, cos, sin), **TOL)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 64, 16), (2, 3, 128, 32)])
+def test_sdpa(b, h, s, d):
+    q, k, v = randn(b, h, s, d), randn(b, h, s, d), randn(b, h, s, d)
+    out = KERNELS["sdpa"](
+        q, k, v, jnp.empty_like(q), BLOCK_SIZE_M=32, BLOCK_SIZE_N=32
+    )
+    assert_allclose(out, ref.sdpa(q, k, v), **TOL)
+
+
+def test_mismatched_arrangement_raises():
+    """Paper §3.2.1: inconsistent outermost levels must signal an error."""
+    import ninetoothed
+    import ninetoothed.language as ntl  # noqa: F401
+    from ninetoothed import Tensor
+
+    def bad_arrangement(input, output):
+        return input.tile((64,)), output.tile((32,))
+
+    def application(input, output):
+        output = input  # noqa: F841
+
+    kern = ninetoothed.make(bad_arrangement, application, (Tensor(1), Tensor(1)))
+    x = jnp.zeros(128, jnp.float32)
+    with pytest.raises(ValueError, match="outermost"):
+        kern(x, jnp.empty_like(x))

@@ -1,0 +1,172 @@
+"""Property-based tests (hypothesis): shape/dtype sweeps of the generated
+kernels against the jnp oracles, and algebraic invariants of the
+meta-operation layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from kernels import ref
+from kernels.nt import KERNELS
+from ninetoothed import Tensor
+from ninetoothed.symbols import Expr, Symbol
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# generated kernels vs oracle, arbitrary shapes (pad-and-crop must hold)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3000),
+    block=st.sampled_from([32, 128, 256]),
+    dtype=st.sampled_from([jnp.float32, jnp.float16]),
+)
+def test_add_any_shape(n, block, dtype):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n), dtype)
+    y = jnp.asarray(rng.standard_normal(n), dtype)
+    out = KERNELS["add"](x, y, jnp.empty_like(x), BLOCK_SIZE=block)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    assert_allclose(np.asarray(out), np.asarray(ref.add(x, y)), rtol=tol, atol=tol)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    block=st.sampled_from([16, 32, 64]),
+)
+def test_mm_any_shape(m, k, n, block):
+    rng = np.random.default_rng(m * 7 + k * 3 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out = KERNELS["mm"](
+        a, b, jnp.empty((m, n), jnp.float32),
+        BLOCK_SIZE_M=block, BLOCK_SIZE_N=block, BLOCK_SIZE_K=block,
+    )
+    assert_allclose(out, ref.mm(a, b), rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 40), n=st.integers(1, 300))
+def test_softmax_any_shape(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    out = KERNELS["softmax"](x, jnp.empty_like(x))
+    assert_allclose(out, ref.softmax(x), rtol=2e-5, atol=2e-5)
+    # softmax rows sum to 1 — reduction over the padded -inf region must
+    # contribute nothing
+    assert_allclose(np.asarray(out).sum(axis=-1), np.ones(m), rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 40), n=st.integers(1, 300))
+def test_rms_norm_any_shape(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    out = KERNELS["rms_norm"](x, jnp.empty_like(x))
+    assert_allclose(out, ref.rms_norm(x), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# meta-operation invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    size=st.integers(1, 300),
+    tile=st.integers(1, 64),
+)
+def test_tile_index_coverage(size, tile):
+    """Every source element of a 1-D tensor is covered by exactly one
+    (outer, inner) pair under default-stride tiling — the paper's
+    non-overlapping observation."""
+    x = Tensor(1, name="x").tile((tile,))
+    outer_size = -(-size // tile)
+    env_base = {"x_size_0": size}
+    seen = {}
+    (outer,), (inner,) = x.levels
+    expr = x.indices[0]
+    for o in range(outer_size):
+        for i in range(tile):
+            v = int(expr.evaluate({**env_base, outer.var: o, inner.var: i}))
+            assert v not in seen, f"element {v} covered twice"
+            seen[v] = (o, i)
+    covered = set(seen)
+    assert set(range(size)).issubset(covered)
+    # padding is bounded by one tile
+    assert max(covered) < outer_size * tile
+
+
+@settings(**SETTINGS)
+@given(
+    s0=st.integers(1, 8),
+    s1=st.integers(1, 8),
+    s2=st.integers(1, 8),
+)
+def test_flatten_is_bijection(s0, s1, s2):
+    """flatten's mixed-radix decomposition is a bijection onto the box."""
+    x = Tensor(3, name="x").flatten()
+    env_base = {"x_size_0": s0, "x_size_1": s1, "x_size_2": s2}
+    var = x.levels[0][0].var
+    seen = set()
+    for w in range(s0 * s1 * s2):
+        coords = tuple(int(e.evaluate({**env_base, var: w})) for e in x.indices)
+        assert coords not in seen
+        seen.add(coords)
+        assert all(0 <= c < s for c, s in zip(coords, (s0, s1, s2)))
+    assert len(seen) == s0 * s1 * s2
+
+
+@settings(**SETTINGS)
+@given(
+    perm=st.permutations(range(4)),
+)
+def test_permute_preserves_index_map(perm):
+    """permute reorders dims but never changes where data comes from."""
+    x = Tensor(4, name="x")
+    p = x.permute(tuple(perm))
+    # index expressions are positionally identical per source dim
+    before = [str(e) for e in x.indices]
+    after = [str(e) for e in p.indices]
+    assert before == after
+
+
+@settings(**SETTINGS)
+@given(
+    a=st.integers(0, 1000),
+    b=st.integers(1, 100),
+    c=st.integers(0, 50),
+)
+def test_expr_eval_matches_python(a, b, c):
+    """Symbolic evaluation agrees with direct Python arithmetic."""
+    x, y, z = Symbol("x"), Symbol("y"), Symbol("z")
+    e = (x + y * 3) // y + (x - z) % y + x.cdiv(y)
+    expected = (a + b * 3) // b + (a - c) % b + -(-a // b)
+    assert e.evaluate({"x": a, "y": b, "z": c}) == expected
+
+
+@settings(**SETTINGS)
+@given(
+    lo=st.integers(0, 50),
+    width=st.integers(0, 50),
+    mul=st.integers(1, 20),
+    add=st.integers(0, 100),
+)
+def test_bounds_are_sound(lo, width, mul, add):
+    """Interval arithmetic never under-approximates (padding soundness)."""
+    x = Symbol("x")
+    e = (x * mul + add) // 3 % 17
+    blo, bhi = e.bounds({"x": (lo, lo + width)})
+    for v in range(lo, lo + width + 1):
+        val = e.evaluate({"x": v})
+        assert blo <= val <= bhi

@@ -1,0 +1,143 @@
+"""Unit tests for the AST-backed symbolic expression system (paper §3.1.2)."""
+
+import pytest
+
+from ninetoothed.symbols import Expr, Symbol, fresh_var
+
+
+def test_symbol_construction():
+    s = Symbol("BLOCK_SIZE", constexpr=True)
+    assert s.name == "BLOCK_SIZE"
+    assert s.constexpr
+    assert str(s) == "BLOCK_SIZE"
+
+
+def test_invalid_symbol_name():
+    with pytest.raises(ValueError):
+        Symbol("not a name")
+
+
+def test_arithmetic_builds_trees():
+    a, b = Symbol("a"), Symbol("b")
+    assert str(a + b) == "a + b"
+    assert str(a * b + 1) == "a * b + 1"
+    assert str((a - b) // 2) == "(a - b) // 2"
+    assert str(a % b) == "a % b"
+
+
+def test_constant_folding():
+    a = Symbol("a")
+    assert str(a + 0) == "a"
+    assert str(a * 1) == "a"
+    assert str(a * 0) == "0"
+    assert str(a // 1) == "a"
+    assert str(a % 1) == "0"
+    assert (Expr(6) * 7).constant() == 42
+    assert (Expr(7) // 2).constant() == 3
+    assert (Expr(7) % 4).constant() == 3
+
+
+def test_reverse_operators():
+    a = Symbol("a")
+    assert str(2 + a) == "2 + a"
+    assert str(2 * a) == "2 * a"
+    assert str(10 - a) == "10 - a"
+    assert str(10 // a) == "10 // a"
+
+
+def test_cdiv():
+    a, b = Symbol("a"), Symbol("b")
+    assert str(a.cdiv(b)) == "cdiv(a, b)"
+    assert Expr(10).cdiv(3).constant() == 4
+    # structural identity
+    assert a.cdiv(a).constant() == 1
+
+
+def test_evaluate():
+    a, b = Symbol("a"), Symbol("b")
+    e = (a + b) * 2 - a // b
+    assert e.evaluate({"a": 7, "b": 3}) == (7 + 3) * 2 - 7 // 3
+    assert a.cdiv(b).evaluate({"a": 10, "b": 4}) == 3
+
+
+def test_substitute():
+    a, b, c = Symbol("a"), Symbol("b"), Symbol("c")
+    e = a * 4 + b
+    sub = e.substitute({"a": c + 1, "b": 0})
+    assert sub.evaluate({"c": 2}) == 12
+    # substitution refolds: b -> 0 disappears
+    assert "b" not in sub.free_symbols()
+
+
+def test_substitute_is_capture_free():
+    a, b = Symbol("a"), Symbol("b")
+    e = a + b
+    sub = e.substitute({"a": b, "b": 7})  # simultaneous, not sequential
+    assert sub.evaluate({"b": 3}) == 10
+
+
+def test_free_symbols():
+    a, b = Symbol("a"), Symbol("b")
+    assert (a * b + a).free_symbols() == {"a", "b"}
+    assert (a.cdiv(b)).free_symbols() == {"a", "b"}
+    assert Expr(5).free_symbols() == set()
+
+
+def test_bounds_linear():
+    a = Symbol("a")
+    lo, hi = (a * 3 + 2).bounds({"a": (0, 9)})
+    assert (lo, hi) == (2, 29)
+
+
+def test_bounds_div_mod():
+    a = Symbol("a")
+    lo, hi = (a // 4).bounds({"a": (0, 10)})
+    assert (lo, hi) == (0, 2)
+    lo, hi = (a % 4).bounds({"a": (0, 10)})
+    assert (lo, hi) == (0, 3)
+
+
+def test_bounds_tile_pattern():
+    """The exact pattern produced by tile(): o * s + i."""
+    o, i = Symbol("o"), Symbol("i")
+    e = o * 16 + i
+    lo, hi = e.bounds({"o": (0, 3), "i": (0, 15)})
+    assert (lo, hi) == (0, 63)
+
+
+def test_bounds_flatten_pattern():
+    """The mixed-radix pattern produced by flatten(): (w // q) % s."""
+    w = Symbol("w")
+    e = (w // 5) % 3
+    lo, hi = e.bounds({"w": (0, 74)})
+    assert (lo, hi) == (0, 2)
+
+
+def test_bounds_unknown_symbol_raises():
+    a = Symbol("a")
+    with pytest.raises(KeyError):
+        a.bounds({})
+
+
+def test_fresh_var_unique():
+    names = {fresh_var() for _ in range(100)}
+    assert len(names) == 100
+
+
+def test_expr_equality_and_hash():
+    a = Symbol("a")
+    assert a + 1 == a + 1
+    assert hash(a + 1) == hash(a + 1)
+    assert a + 1 != a + 2
+
+
+def test_int_conversion():
+    assert int(Expr(5) + 3) == 8
+    with pytest.raises(ValueError):
+        int(Symbol("a") + 1)
+
+
+def test_negative_constants():
+    e = Expr(-3)
+    assert e.constant() == -3
+    assert (e * -2).constant() == 6

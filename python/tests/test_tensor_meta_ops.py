@@ -1,0 +1,178 @@
+"""Unit tests for hierarchical tensors and the meta-operations of paper
+Table 1.  Each test checks both the *hierarchy* (level shapes) and the
+*source-to-target mapping* (index expressions evaluated at sample points).
+"""
+
+import pytest
+
+from ninetoothed import Tensor
+from ninetoothed.symbols import Symbol
+
+
+def evaluate_indices(t, env):
+    return [int(e.evaluate(env)) for e in t.indices]
+
+
+def bind(t, level_values):
+    """Bind each level's variables to the given index tuples."""
+    env = {}
+    for level, values in zip(t.levels, level_values):
+        for dim, v in zip(level, values):
+            env[dim.var] = v
+    return env
+
+
+def test_symbolic_shape_and_strides():
+    x = Tensor(2, name="x")
+    assert tuple(str(s) for s in x.shape) == ("x_size_0", "x_size_1")
+    assert tuple(str(s) for s in x.strides) == ("x_stride_0", "x_stride_1")
+
+
+def test_tile_default_stride():
+    """Paper Algorithm 1: ceil-division outer shape, tile-shape inner."""
+    x = Tensor(2, name="x").tile((16, 32))
+    assert len(x.levels) == 2
+    outer, inner = x.levels
+    assert str(outer[0].size) == "cdiv(x_size_0, 16)"
+    assert str(inner[0].size) == "16"
+    env = bind(x, [(2, 3), (5, 7)])
+    env.update({"x_size_0": 100, "x_size_1": 100})
+    assert evaluate_indices(x, env) == [2 * 16 + 5, 3 * 32 + 7]
+
+
+def test_tile_with_stride_is_convolution_window():
+    """tile(strides=...) generates overlapping windows (paper §3.1.3)."""
+    x = Tensor(1, name="x").tile((3,), strides=(1,))
+    outer, inner = x.levels
+    # floor((S - 3) / 1) + 1 windows
+    assert str(outer[0].size) == "x_size_0 - 3 + 1"
+    env = bind(x, [(4,), (2,)])
+    env["x_size_0"] = 10
+    assert evaluate_indices(x, env) == [4 * 1 + 2]
+
+
+def test_tile_full_dim():
+    x = Tensor(2, name="x").tile((1, -1))
+    outer, inner = x.levels
+    assert str(outer[1].size) == "1"
+    assert str(inner[1].size) == "x_size_1"
+
+
+def test_tile_rank_mismatch():
+    with pytest.raises(ValueError):
+        Tensor(2).tile((4,))
+
+
+def test_expand_broadcasts():
+    x = Tensor(2, name="x").tile((4, -1)).expand((-1, 5))
+    # wait: dim 1 of the outer level is cdiv(x_size_1, x_size_1) == 1
+    outer = x.levels[0]
+    assert str(outer[1].size) == "5"
+    # the expanded variable must not feed the index expressions
+    env = bind(x, [(1, 3), (2, 0)])
+    env["x_size_1"] = 7
+    idx = evaluate_indices(x, env)
+    env2 = bind(x, [(1, 4), (2, 0)])
+    env2["x_size_1"] = 7
+    assert idx == evaluate_indices(x, env2)
+
+
+def test_expand_non_singleton_raises():
+    # inner-level sizes are concrete, so the violation is caught eagerly
+    with pytest.raises(ValueError):
+        Tensor(2).tile((4, 4)).dtype.expand((3, -1))
+
+
+def test_squeeze():
+    x = Tensor(2, name="x").tile((1, 16))
+    x.dtype = x.dtype.squeeze(0)
+    assert len(x.levels[1]) == 1
+    assert str(x.levels[1][0].size) == "16"
+
+
+def test_squeeze_non_singleton_raises():
+    with pytest.raises(ValueError):
+        Tensor(2).tile((4, 16)).dtype.squeeze(0)
+
+
+def test_unsqueeze():
+    x = Tensor(2, name="x").tile((4, 4)).unsqueeze(0)
+    assert len(x.levels[0]) == 3
+    assert str(x.levels[0][0].size) == "1"
+
+
+def test_permute():
+    x = Tensor(3, name="x").permute((2, 0, 1))
+    assert tuple(str(s) for s in x.shape) == ("x_size_2", "x_size_0", "x_size_1")
+    env = bind(x, [(5, 1, 2)])
+    # dims reordered but index expressions still map to source dims
+    assert evaluate_indices(x, env)[2] == 5  # source dim 2 gets the first index
+
+
+def test_permute_invalid():
+    with pytest.raises(ValueError):
+        Tensor(2).permute((0, 0))
+
+
+def test_flatten_mixed_radix():
+    x = Tensor(3, name="x").flatten()
+    assert len(x.levels[0]) == 1
+    env = bind(x, [(37,)])
+    env.update({"x_size_0": 2, "x_size_1": 4, "x_size_2": 5})
+    # 37 = 1*20 + 3*5 + 2
+    assert evaluate_indices(x, env) == [1, 3, 2]
+
+
+def test_flatten_range():
+    x = Tensor(4, name="x").flatten(start_dim=1, end_dim=3)
+    assert len(x.levels[0]) == 3
+
+
+def test_flatten_end_dim_exclusive():
+    """Paper Listing 8: flatten(end_dim=3) merges exactly dims 0..2."""
+    x = Tensor(6, name="x").flatten(end_dim=3)
+    assert len(x.levels[0]) == 4
+
+
+def test_ravel_collapses_levels():
+    x = Tensor(2, name="x").tile((4, 4))
+    r = x.ravel()
+    assert len(r.levels) == 1
+    assert len(r.levels[0]) == 4
+
+
+def test_dtype_view_and_assignment():
+    x = Tensor(2, name="x").tile((4, 8))
+    inner = x.dtype
+    assert tuple(str(s) for s in inner.shape) == ("4", "8")
+    x.dtype = inner.permute((1, 0))
+    assert str(x.levels[1][0].size) == "8"
+
+
+def test_dtype_of_innermost_is_element_type():
+    x = Tensor(2, dtype="float16")
+    assert x.dtype == "float16"
+
+
+def test_conv_arrangement_structure():
+    """Walk paper Listing 8's input arrangement and check every step's shape."""
+    x = Tensor(4, name="x")
+    f = Tensor(4, name="f")
+    arranged = x.tile((1, *f.shape[1:]), strides=(-1, -1, 1, 1))
+    outer = arranged.levels[0]
+    assert str(outer[0].size) == "cdiv(x_size_0, 1)" or str(outer[0].size) == "x_size_0"
+    arranged = arranged.squeeze(1)
+    assert len(arranged.levels[0]) == 3
+    arranged.dtype = arranged.dtype.squeeze(0)
+    assert len(arranged.levels[1]) == 3
+    arranged = arranged.ravel()
+    assert len(arranged.levels) == 1
+    assert len(arranged.levels[0]) == 6
+    arranged = arranged.flatten(end_dim=3).flatten(start_dim=1)
+    assert len(arranged.levels[0]) == 2
+
+
+def test_scalar_tensor():
+    t = Tensor(0, name="beta")
+    assert t.source_ndim == 0
+    assert t.shape == ()

@@ -1,0 +1,104 @@
+//! `cargo bench --bench ablations` — design-choice ablations called out in
+//! DESIGN.md §8:
+//!
+//! 1. **slot packing on/off** — coordinator throughput on a burst of
+//!    variable-length element-wise requests with max_fanin 1 vs 16;
+//! 2. **weight re-serialization** — decode-step latency when weights are
+//!    rebuilt per step vs passed by reference (the Engine's design);
+//! 3. **block-size sweep** — NT mm artifacts are shape-specialized, so the
+//!    sweep reports launch-plan geometry (programs, VMEM/program) from the
+//!    Rust algebra for candidate block sizes — the structural quantity a
+//!    real-TPU tuning pass would optimize.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ninetoothed_repro::arrange::catalog;
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::inference::Engine;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
+
+fn main() {
+    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("manifest"));
+
+    // --- ablation 1: slot packing ------------------------------------------
+    println!("== ablation 1: slot packing (coordinator, 48 add requests) ==");
+    let slot = manifest.kernel("add", "nt").expect("add").args[0].shape[0];
+    for (label, fanin) in [("packing OFF (fanin=1)", 1), ("packing ON (fanin=16)", 16)] {
+        let coordinator = Coordinator::start(
+            manifest.clone(),
+            CoordinatorConfig { workers: 1, queue_capacity: 4096, max_fanin: fanin },
+        );
+        let mut rng = SplitMix64::new(5);
+        let warm = HostTensor::randn(vec![slot], &mut rng);
+        coordinator
+            .submit("add", "nt", vec![warm.clone(), warm])
+            .expect("warm")
+            .recv()
+            .expect("recv")
+            .expect("warm resp");
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..48 {
+            let n = 1024 + rng.below((slot / 12) as u64) as usize;
+            let x = HostTensor::randn(vec![n], &mut rng);
+            let y = HostTensor::randn(vec![n], &mut rng);
+            rxs.push(coordinator.submit("add", "nt", vec![x, y]).expect("submit"));
+        }
+        for rx in rxs {
+            rx.recv().expect("recv").expect("resp");
+        }
+        let elapsed = t0.elapsed();
+        let metrics = coordinator.metrics();
+        println!(
+            "  {label:<22} wall {elapsed:>9.1?}  executions={} batching={:.2}x",
+            metrics.executions, metrics.batching_factor()
+        );
+        coordinator.shutdown();
+    }
+
+    // --- ablation 2: weight passing in the decode loop -----------------------
+    println!("\n== ablation 2: decode-step weight handling (8 steps) ==");
+    let registry = Arc::new(Registry::new(Runtime::cpu().expect("pjrt"), manifest.clone()));
+    let engine = Engine::new(registry, "ref").expect("engine");
+    let prompt = engine.synth_prompt(3);
+    engine.generate(&prompt, 4).expect("warm");
+    let t0 = Instant::now();
+    let result = engine.generate(&prompt, 8).expect("by-reference run");
+    println!(
+        "  weights by reference   decode {:?} ({:.2} tok/s end-to-end)",
+        result.decode_time, result.tokens_per_s
+    );
+    println!("  (re-serializing weights per step was removed in the perf pass — see EXPERIMENTS.md §Perf)");
+
+    // --- ablation 3: mm block-size sweep (launch-plan geometry) --------------
+    println!("\n== ablation 3: mm block-size sweep (structural, Rust algebra) ==");
+    let tensors = catalog::mm().expect("mm catalog");
+    let (m, k, n) = (4096i64, 4096i64, 4096i64);
+    println!("  problem: {m}x{k} @ {k}x{n} (paper scale)");
+    for block in [32i64, 64, 128, 256] {
+        let mut env: BTreeMap<String, i64> = BTreeMap::new();
+        for (key, value) in [
+            ("BLOCK_SIZE_M", block), ("BLOCK_SIZE_N", block), ("BLOCK_SIZE_K", block),
+            ("input_size_0", m), ("input_size_1", k),
+            ("other_size_0", k), ("other_size_1", n),
+            ("output_size_0", m), ("output_size_1", n),
+        ] {
+            env.insert(key.to_string(), value);
+        }
+        let (grid, _) = catalog::geometry(&tensors, &env).expect("geometry");
+        let programs: i64 = grid.iter().product();
+        // per-program tiles: A (bm x bk) strip over K, B strip, C tile
+        let vmem_bytes = (block * block * 4) * 3;
+        let flops_per_program = 2 * block * block * k;
+        println!(
+            "  block {block:>3}: grid {grid:?} -> {programs:>5} programs, \
+             ~{:>6} KiB VMEM/program, {:>7.1} MFLOP/program",
+            vmem_bytes / 1024,
+            flops_per_program as f64 / 1e6
+        );
+    }
+    println!("  (128 is the MXU-native tile; DESIGN.md §8 discusses the real-TPU choice)");
+}

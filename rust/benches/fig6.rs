@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig6` — regenerates paper Fig 6 (single-kernel
+//! performance, NineToothed vs hand-written baseline vs jnp reference).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ninetoothed_repro::harness::fig6;
+use ninetoothed_repro::runtime::{Manifest, Registry, Runtime};
+
+fn main() {
+    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("manifest"));
+    let registry = Registry::new(Runtime::cpu().expect("pjrt"), manifest);
+    let secs = std::env::var("NT_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2u64);
+    println!(
+        "Fig 6 bench ({} scale, >= {secs}s per measurement)",
+        if registry.manifest().full { "paper" } else { "scaled" }
+    );
+    let results = fig6::run_all(&registry, Duration::from_secs(secs)).expect("fig6");
+    println!("{}", fig6::report(&results));
+}

@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig7` — regenerates paper Fig 7 (end-to-end model
+//! inference throughput at several output lengths, three kernel backends).
+
+use std::sync::Arc;
+
+use ninetoothed_repro::harness::fig7;
+use ninetoothed_repro::runtime::{Manifest, Registry, Runtime};
+
+fn main() {
+    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("manifest"));
+    let registry = Arc::new(Registry::new(Runtime::cpu().expect("pjrt"), manifest));
+    let iters = std::env::var("NT_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3usize);
+    let model = registry.manifest().model.as_ref().expect("model");
+    println!(
+        "Fig 7 bench: tiny-Llama d={} L={}, batch {}, prompt {}, {iters} measured iterations",
+        model.d_model, model.n_layers, model.batch, model.prompt
+    );
+    let results = fig7::run_all(&registry, iters).expect("fig7");
+    println!("{}", fig7::report(&results));
+}

@@ -1,0 +1,31 @@
+//! `cargo bench --bench table2` — regenerates paper Table 2 (code metrics).
+//! Not a timing benchmark: the "measurement" is the metric suite itself,
+//! plus a micro-benchmark of the Rust analyzer's throughput.
+
+use std::time::Duration;
+
+use ninetoothed_repro::benchkit::{bench_for, fmt_duration};
+use ninetoothed_repro::cli::Args;
+use ninetoothed_repro::codemetrics;
+use ninetoothed_repro::harness::table2;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    table2::run(&args).expect("table2");
+
+    // analyzer throughput (keeps this an honest `cargo bench` target)
+    let source = std::fs::read_to_string(
+        ninetoothed_repro::harness::repo_root().join("python/compile/kernels/baseline/sdpa.py"),
+    )
+    .expect("sdpa baseline source");
+    let stats = bench_for(3, Duration::from_millis(500), || {
+        let region = codemetrics::measured_region(&source);
+        let metrics = codemetrics::analyze(&region);
+        assert!(metrics.loc > 0);
+    });
+    println!(
+        "analyzer micro-bench: {} per file (sdpa baseline, {} runs)",
+        fmt_duration(stats.mean_s),
+        stats.n
+    );
+}

@@ -1,0 +1,325 @@
+//! Arrangement metadata: loading, validation, launch planning.
+//!
+//! Two sources of truth meet here:
+//!
+//! 1. the **manifest** — the arrangement metadata (levels + index
+//!    expressions per parameter) the Python DSL exported at AOT time, plus
+//!    golden expression evaluations;
+//! 2. the **catalog** — the same arrangements re-derived in Rust through
+//!    `crate::tensor` (paper Listings 3/5/8 re-expressed against the
+//!    mirror).
+//!
+//! The coordinator validates both against each other and computes launch
+//! plans (grid + padded extents) used for request admission and the
+//! VMEM/roofline estimates in the benchmark reports.
+
+pub mod catalog;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::symbolic::{parse, Expr};
+
+/// One parameter of one arrangement, as exported by `Kernel.export_metadata`.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub source_ndim: usize,
+    pub is_output: bool,
+    /// level sizes + variable names
+    pub levels: Vec<Vec<(Expr, String)>>,
+    /// source-to-target mapping (one expr per source dim)
+    pub indices: Vec<Expr>,
+    pub pad_value: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrangementMeta {
+    pub kernel: String,
+    pub params: Vec<ParamMeta>,
+    pub goldens: Vec<Golden>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub expr: String,
+    pub env: BTreeMap<String, i64>,
+    pub value: i64,
+}
+
+impl ArrangementMeta {
+    pub fn from_json(v: &Json) -> Result<ArrangementMeta> {
+        let kernel = v.str("kernel")?.to_string();
+        let mut params = Vec::new();
+        for p in v.arr("params")? {
+            let mut levels = Vec::new();
+            for level in p.arr("levels")? {
+                let mut dims = Vec::new();
+                for d in level.as_arr().context("level is not an array")? {
+                    dims.push((
+                        parse(d.str("size")?).with_context(|| format!("size in {kernel}"))?,
+                        d.str("var")?.to_string(),
+                    ));
+                }
+                levels.push(dims);
+            }
+            let indices = p
+                .arr("indices")?
+                .iter()
+                .map(|e| {
+                    parse(e.as_str().context("index expr not a string")?)
+                        .map_err(anyhow::Error::from)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            params.push(ParamMeta {
+                name: p.str("name")?.to_string(),
+                source_ndim: p.usize("source_ndim")?,
+                is_output: p.req("is_output")?.as_bool().unwrap_or(false),
+                levels,
+                indices,
+                pad_value: p.f64("pad_value").unwrap_or(0.0),
+            });
+        }
+        let mut goldens = Vec::new();
+        for g in v.get("goldens").and_then(|g| g.as_arr()).unwrap_or(&[]) {
+            let mut env = BTreeMap::new();
+            if let Some(Json::Obj(m)) = g.get("env") {
+                for (k, val) in m {
+                    env.insert(
+                        k.clone(),
+                        val.as_i64().context("golden env value not an int")?,
+                    );
+                }
+            }
+            goldens.push(Golden {
+                expr: g.str("expr")?.to_string(),
+                env,
+                value: g.req("value")?.as_i64().context("golden value")?,
+            });
+        }
+        Ok(ArrangementMeta { kernel, params, goldens })
+    }
+
+    /// The §3.2.1 correctness principle: all non-scalar parameters'
+    /// outermost levels must have the same rank (sizes are checked
+    /// numerically per launch in [`ArrangementMeta::launch_plan`]).
+    pub fn validate_structure(&self) -> Result<()> {
+        let ranks: Vec<usize> = self
+            .params
+            .iter()
+            .filter(|p| p.source_ndim > 0)
+            .map(|p| p.levels[0].len())
+            .collect();
+        if let Some(first) = ranks.first() {
+            if ranks.iter().any(|r| r != first) {
+                bail!(
+                    "kernel {}: outermost-level ranks disagree: {ranks:?} (paper §3.2.1)",
+                    self.kernel
+                );
+            }
+        }
+        for p in &self.params {
+            if p.indices.len() != p.source_ndim {
+                bail!(
+                    "kernel {}: parameter {} has {} index exprs for {} source dims",
+                    self.kernel,
+                    p.name,
+                    p.indices.len(),
+                    p.source_ndim
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay the golden expression evaluations exported by Python —
+    /// bit-for-bit agreement check between the two algebra implementations.
+    pub fn check_goldens(&self) -> Result<usize> {
+        for g in &self.goldens {
+            let expr = parse(&g.expr).with_context(|| format!("golden expr {:?}", g.expr))?;
+            let value = expr
+                .eval(&g.env)
+                .with_context(|| format!("golden eval {:?}", g.expr))?;
+            if value != g.value {
+                bail!(
+                    "kernel {}: golden mismatch for {:?}: rust={} python={}",
+                    self.kernel,
+                    g.expr,
+                    value,
+                    g.value
+                );
+            }
+        }
+        Ok(self.goldens.len())
+    }
+
+    /// Compute the launch plan for concrete shape/meta bindings.
+    pub fn launch_plan(&self, bindings: &BTreeMap<String, i64>) -> Result<LaunchPlan> {
+        let mut grid: Option<Vec<i64>> = None;
+        let mut params = Vec::new();
+        for p in &self.params {
+            // per-variable ranges from concrete level sizes
+            let mut ranges: BTreeMap<String, (i64, i64)> = bindings
+                .iter()
+                .map(|(k, v)| (k.clone(), (*v, *v)))
+                .collect();
+            let mut level_shapes = Vec::new();
+            for level in &p.levels {
+                let mut shape = Vec::new();
+                for (size, var) in level {
+                    let s = size.substitute_consts(bindings).eval(bindings).with_context(
+                        || format!("kernel {} param {} size {size}", self.kernel, p.name),
+                    )?;
+                    ranges.insert(var.clone(), (0, (s - 1).max(0)));
+                    shape.push(s);
+                }
+                level_shapes.push(shape);
+            }
+            if p.source_ndim > 0 {
+                let g = level_shapes[0].clone();
+                match &grid {
+                    None => grid = Some(g),
+                    Some(prev) if *prev != g => bail!(
+                        "kernel {}: outermost-level shapes disagree: {prev:?} vs {g:?} \
+                         — the arrangement is invalid (paper §3.2.1)",
+                        self.kernel
+                    ),
+                    _ => {}
+                }
+            }
+            let mut extents = Vec::new();
+            for e in &p.indices {
+                let spec = e.substitute_consts(bindings);
+                let hi = match spec.constant() {
+                    Some(c) => c,
+                    None => spec.bounds(&ranges)?.1,
+                };
+                extents.push(hi + 1);
+            }
+            params.push(ParamPlan {
+                name: p.name.clone(),
+                is_output: p.is_output,
+                block_shape: level_shapes.last().cloned().unwrap_or_default(),
+                padded_extents: extents,
+            });
+        }
+        let grid = grid.unwrap_or_else(|| vec![1]);
+        Ok(LaunchPlan { programs: grid.iter().product::<i64>().max(1), grid, params })
+    }
+}
+
+/// Concrete launch geometry for one specialization.
+#[derive(Debug, Clone)]
+pub struct LaunchPlan {
+    pub grid: Vec<i64>,
+    pub programs: i64,
+    pub params: Vec<ParamPlan>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamPlan {
+    pub name: String,
+    pub is_output: bool,
+    pub block_shape: Vec<i64>,
+    pub padded_extents: Vec<i64>,
+}
+
+impl LaunchPlan {
+    /// Bytes of tile data one program touches (f32) — the VMEM-footprint
+    /// estimate used in the §Perf real-TPU discussion.
+    pub fn vmem_bytes_per_program(&self) -> i64 {
+        self.params
+            .iter()
+            .map(|p| p.block_shape.iter().product::<i64>().max(1) * 4)
+            .sum()
+    }
+}
+
+/// Load every arrangement in the manifest.
+pub fn load_all(manifest: &Json) -> Result<Vec<ArrangementMeta>> {
+    manifest
+        .arr("arrangements")?
+        .iter()
+        .map(ArrangementMeta::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+
+    fn meta_from(json: &str) -> ArrangementMeta {
+        ArrangementMeta::from_json(&Json::parse(json).unwrap()).unwrap()
+    }
+
+    const ADD_META: &str = r#"{
+        "kernel": "add",
+        "params": [
+            {"name": "input", "source_ndim": 1, "is_output": false,
+             "levels": [[{"size": "cdiv(n, B)", "var": "o"}], [{"size": "B", "var": "t"}]],
+             "indices": ["o * B + t"], "pad_value": 0.0},
+            {"name": "output", "source_ndim": 1, "is_output": true,
+             "levels": [[{"size": "cdiv(n, B)", "var": "p"}], [{"size": "B", "var": "u"}]],
+             "indices": ["p * B + u"], "pad_value": 0.0}
+        ],
+        "goldens": [
+            {"expr": "o * B + t", "env": {"o": 3, "B": 16, "t": 5}, "value": 53}
+        ]
+    }"#;
+
+    fn env(pairs: &[(&str, i64)]) -> std::collections::BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let meta = meta_from(ADD_META);
+        meta.validate_structure().unwrap();
+        assert_eq!(meta.check_goldens().unwrap(), 1);
+    }
+
+    #[test]
+    fn launch_plan_geometry() {
+        let meta = meta_from(ADD_META);
+        let plan = meta.launch_plan(&env(&[("n", 100), ("B", 16)])).unwrap();
+        assert_eq!(plan.grid, vec![7]);
+        assert_eq!(plan.programs, 7);
+        assert_eq!(plan.params[0].padded_extents, vec![112]);
+        assert!(plan.params[1].is_output);
+        assert_eq!(plan.vmem_bytes_per_program(), 2 * 16 * 4);
+    }
+
+    #[test]
+    fn grid_disagreement_detected() {
+        // second param tiled with a different block: grids diverge
+        let bad = ADD_META.replace("p * B + u", "p * C + u").replace(
+            r#"[[{"size": "cdiv(n, B)", "var": "p"}], [{"size": "B", "var": "u"}]]"#,
+            r#"[[{"size": "cdiv(n, C)", "var": "p"}], [{"size": "C", "var": "u"}]]"#,
+        );
+        let meta = meta_from(&bad);
+        let err = meta
+            .launch_plan(&env(&[("n", 100), ("B", 16), ("C", 32)]))
+            .unwrap_err();
+        assert!(err.to_string().contains("3.2.1"), "{err}");
+    }
+
+    #[test]
+    fn golden_mismatch_detected() {
+        let bad = ADD_META.replace("\"value\": 53", "\"value\": 54");
+        let meta = meta_from(&bad);
+        assert!(meta.check_goldens().is_err());
+    }
+
+    #[test]
+    fn rank_mismatch_detected() {
+        let bad = ADD_META.replace(
+            r#"[[{"size": "cdiv(n, B)", "var": "p"}], [{"size": "B", "var": "u"}]]"#,
+            r#"[[{"size": "cdiv(n, B)", "var": "p"}, {"size": "1", "var": "q"}], [{"size": "B", "var": "u"}]]"#,
+        );
+        let meta = meta_from(&bad);
+        assert!(meta.validate_structure().is_err());
+    }
+}

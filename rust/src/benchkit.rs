@@ -1,0 +1,160 @@
+//! Benchmark kit: timing statistics and reporting (the offline crate set
+//! has no criterion; `cargo bench` targets use this with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of run times.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[Duration]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut secs: Vec<f64> = samples.iter().map(Duration::as_secs_f64).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        let var = secs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean_s: mean,
+            median_s: secs[n / 2],
+            p95_s: secs[(n * 95 / 100).min(n - 1)],
+            min_s: secs[0],
+            max_s: secs[n - 1],
+            stddev_s: var.sqrt(),
+        }
+    }
+
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.mean_s
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Adaptive variant: run until `min_time` has elapsed (at least 3 iters).
+pub fn bench_for<F: FnMut()>(warmup: usize, min_time: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 1000 {
+            break;
+        }
+    }
+    Stats::from_samples(&samples)
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Simple fixed-width table printer for harness reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            format!("| {} |\n", body.join(" | "))
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep, &widths));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let samples = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let s = Stats::from_samples(&samples);
+        assert_eq!(s.n, 3);
+        assert!((s.mean_s - 0.020).abs() < 1e-9);
+        assert_eq!(s.min_s, 0.010);
+        assert_eq!(s.max_s, 0.030);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| a | bb |"));
+        assert!(r.contains("| 1 |  2 |"));
+    }
+}

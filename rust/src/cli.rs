@@ -1,0 +1,80 @@
+//! Dependency-free CLI argument parsing (no clap in the offline crate set).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` /
+/// `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl Iterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let raw: Vec<String> = raw.collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse(&["serve", "--workers", "4", "extra", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.opt("workers"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["bench", "--iters=12"]);
+        assert_eq!(a.opt_usize("iters", 0), 12);
+    }
+}

@@ -1,0 +1,219 @@
+//! Halstead metrics, token-neighborhood approximation of radon's AST walk.
+//!
+//! radon counts operator occurrences of BinOp/UnaryOp/BoolOp/Compare/
+//! AugAssign nodes and their direct operand children.  At token level we
+//! count the same operator tokens and, for each occurrence, the nearest
+//! name/number/string on each side (skipping balanced brackets), which
+//! coincides with the AST counts on flat expressions and over-counts
+//! shared middles of chains like `a + b + c` by one occurrence — a
+//! documented approximation the Table 2 harness cross-checks against the
+//! AST-exact numbers embedded in the manifest.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{LogicalLine, Tok};
+
+const H_OPERATORS: &[&str] = &[
+    "+", "-", "*", "/", "//", "%", "**", "==", "!=", "<", ">", "<=", ">=", "&", "|", "^",
+    "<<", ">>", "~", "+=", "-=", "*=", "/=", "//=", "**=", ">>=", "<<=",
+];
+const H_KEYWORD_OPERATORS: &[&str] = &["and", "or", "not", "in", "is"];
+
+#[derive(Debug, Clone)]
+pub struct Halstead {
+    pub eta1: usize,
+    pub eta2: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub vocabulary: usize,
+    pub length: usize,
+    pub volume: f64,
+    pub difficulty: f64,
+}
+
+fn operand_text(tok: &Tok) -> Option<String> {
+    match tok {
+        Tok::Name(n) => Some(n.clone()),
+        Tok::Number(n) => Some(n.clone()),
+        Tok::Str => Some("<str>".to_string()),
+        _ => None,
+    }
+}
+
+/// Nearest operand left of `idx`, skipping balanced brackets.
+fn operand_left(tokens: &[Tok], idx: usize) -> Option<String> {
+    let mut depth = 0i64;
+    for j in (0..idx).rev() {
+        match &tokens[j] {
+            Tok::Op(op) if op == ")" || op == "]" || op == "}" => depth += 1,
+            Tok::Op(op) if op == "(" || op == "[" || op == "{" => {
+                if depth == 0 {
+                    return None;
+                }
+                depth -= 1;
+            }
+            tok if depth == 0 => {
+                if let Some(text) = operand_text(tok) {
+                    return Some(text);
+                }
+                if matches!(tok, Tok::Op(op) if op == "," || op == "=" || op == ":") {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn operand_right(tokens: &[Tok], idx: usize) -> Option<String> {
+    let mut depth = 0i64;
+    for tok in tokens.iter().skip(idx + 1) {
+        match tok {
+            Tok::Op(op) if op == "(" || op == "[" || op == "{" => depth += 1,
+            Tok::Op(op) if op == ")" || op == "]" || op == "}" => {
+                if depth == 0 {
+                    return None;
+                }
+                depth -= 1;
+            }
+            tok if depth == 0 => {
+                if let Some(text) = operand_text(tok) {
+                    return Some(text);
+                }
+                if matches!(tok, Tok::Op(op) if op == "," || op == "=" || op == ":") {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// `*` / `**` directly after `(` or `,` are argument-unpacking, not
+/// arithmetic; leading `-`/`+` after operators or `(`/`,`/`=` are signs.
+fn is_non_arith_context(tokens: &[Tok], idx: usize, op: &str) -> bool {
+    let prev = if idx == 0 { None } else { Some(&tokens[idx - 1]) };
+    match op {
+        "*" | "**" => match prev {
+            None => true,
+            Some(Tok::Op(p)) => p == "(" || p == ",",
+            _ => false,
+        },
+        "-" | "+" => matches!(prev, None | Some(Tok::Op(_)) | Some(Tok::Keyword(_))),
+        _ => false,
+    }
+}
+
+pub fn halstead(lines: &[LogicalLine]) -> Halstead {
+    let mut operators: Vec<String> = Vec::new();
+    let mut operands: Vec<String> = Vec::new();
+
+    for line in lines {
+        let toks = &line.tokens;
+        for (i, tok) in toks.iter().enumerate() {
+            let op_name = match tok {
+                Tok::Op(op) if H_OPERATORS.contains(&op.as_str()) => {
+                    if is_non_arith_context(toks, i, op) {
+                        // unary sign: count operator + right operand only
+                        if (op == "-" || op == "+") && !matches!(toks.get(i), None) {
+                            if let Some(r) = operand_right(toks, i) {
+                                operators.push(format!("u{op}"));
+                                operands.push(r);
+                            }
+                        }
+                        continue;
+                    }
+                    op.clone()
+                }
+                Tok::Keyword(k) if H_KEYWORD_OPERATORS.contains(&k.as_str()) => {
+                    // `for x in xs` — `in` is part of the for/comprehension
+                    let is_loop_in = k == "in"
+                        && toks.iter().take(i).any(
+                            |t| matches!(t, Tok::Keyword(kw) if kw == "for"),
+                        );
+                    if is_loop_in || k == "not" {
+                        continue;
+                    }
+                    k.clone()
+                }
+                _ => continue,
+            };
+            operators.push(op_name);
+            if let Some(l) = operand_left(toks, i) {
+                operands.push(l);
+            }
+            if let Some(r) = operand_right(toks, i) {
+                operands.push(r);
+            }
+        }
+    }
+
+    let eta1 = operators.iter().collect::<BTreeSet<_>>().len();
+    let eta2 = operands.iter().collect::<BTreeSet<_>>().len();
+    let n1 = operators.len();
+    let n2 = operands.len();
+    let vocabulary = eta1 + eta2;
+    let length = n1 + n2;
+    let volume = if vocabulary > 1 {
+        length as f64 * (vocabulary as f64).log2()
+    } else {
+        length as f64
+    };
+    let difficulty = if eta2 > 0 {
+        (eta1 as f64 / 2.0) * (n2 as f64 / eta2 as f64)
+    } else {
+        0.0
+    };
+    Halstead { eta1, eta2, n1, n2, vocabulary, length, volume, difficulty }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::tokenize;
+    use super::*;
+
+    #[test]
+    fn simple_addition() {
+        // `output = input + other` — the paper's add application:
+        // eta = 3 (one operator + two operands), N = 3, V = 3 log2 3
+        let h = halstead(&tokenize("output = input + other\n"));
+        assert_eq!((h.eta1, h.eta2, h.n1, h.n2), (1, 2, 1, 2));
+        assert!((h.volume - 4.754_887).abs() < 1e-3);
+        assert!((h.difficulty - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plain_assignment_not_counted() {
+        let h = halstead(&tokenize("x = f(y)\n"));
+        assert_eq!(h.length, 0);
+    }
+
+    #[test]
+    fn argument_star_not_counted() {
+        let h = halstead(&tokenize("f(*args)\n"));
+        assert_eq!(h.n1, 0);
+    }
+
+    #[test]
+    fn comparison_and_bool() {
+        let h = halstead(&tokenize("ok = a < b and b < c\n"));
+        // operators: <, and, < ; operands: a,b | (a<b as left? skipped via keyword), ...
+        assert!(h.n1 >= 3);
+        assert!(h.eta1 >= 2);
+    }
+
+    #[test]
+    fn augmented_assignment() {
+        let h = halstead(&tokenize("acc += x\n"));
+        assert_eq!(h.n1, 1);
+        assert_eq!(h.n2, 2);
+    }
+
+    #[test]
+    fn loop_in_excluded() {
+        let h = halstead(&tokenize("for k in range(n):\n    pass\n"));
+        assert_eq!(h.n1, 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! A Python lexer sufficient for the metric suite: strings (incl. triple-
+//! quoted and prefixes), comments, numbers, names/keywords, operators,
+//! implicit line joining inside brackets, explicit joining with `\`.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Name(String),
+    Keyword(String),
+    Number(String),
+    Str,
+    Op(String),
+}
+
+/// One logical line: physical span + tokens.
+#[derive(Debug, Clone)]
+pub struct LogicalLine {
+    pub first_line: usize,
+    pub tokens: Vec<Tok>,
+    /// indentation (spaces) of the first physical line
+    pub indent: usize,
+}
+
+pub const KEYWORDS: &[&str] = &[
+    "False", "None", "True", "and", "as", "assert", "async", "await", "break", "class",
+    "continue", "def", "del", "elif", "else", "except", "finally", "for", "from", "global",
+    "if", "import", "in", "is", "lambda", "nonlocal", "not", "or", "pass", "raise", "return",
+    "try", "while", "with", "yield",
+];
+
+const OPERATORS: &[&str] = &[
+    "**=", "//=", ">>=", "<<=", "...", "!=", ">=", "<=", "==", "->", ":=", "+=", "-=", "*=",
+    "/=", "%=", "&=", "|=", "^=", "**", "//", ">>", "<<", "+", "-", "*", "/", "%", "@", "&",
+    "|", "^", "~", "<", ">", "(", ")", "[", "]", "{", "}", ",", ":", ".", ";", "=",
+];
+
+pub fn tokenize(source: &str) -> Vec<LogicalLine> {
+    let bytes = source.as_bytes();
+    let mut lines = Vec::new();
+    let mut current: Option<LogicalLine> = None;
+    let mut depth = 0usize; // bracket nesting
+    let mut i = 0usize;
+    let mut line_no = 1usize;
+    let mut at_line_start = true;
+    let mut indent = 0usize;
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+
+        if at_line_start {
+            indent = 0;
+            while i < bytes.len() && (bytes[i] == b' ' || bytes[i] == b'\t') {
+                indent += if bytes[i] == b'\t' { 8 } else { 1 };
+                i += 1;
+            }
+            at_line_start = false;
+            continue;
+        }
+
+        match c {
+            '\n' => {
+                line_no += 1;
+                i += 1;
+                at_line_start = true;
+                if depth == 0 {
+                    if let Some(line) = current.take() {
+                        if !line.tokens.is_empty() {
+                            lines.push(line);
+                        }
+                    }
+                }
+            }
+            '\\' if i + 1 < bytes.len() && bytes[i + 1] == b'\n' => {
+                // explicit line joining
+                line_no += 1;
+                i += 2;
+            }
+            '#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '\'' | '"' => {
+                let (consumed, newlines) = scan_string(&bytes[i..]);
+                i += consumed;
+                line_no += newlines;
+                push_tok(&mut current, line_no, indent, Tok::Str);
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'.' || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                let text = source[start..i].to_string();
+                push_tok(&mut current, line_no, indent, Tok::Number(text));
+            }
+            c if c == '_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i] == b'_' || bytes[i].is_ascii_alphanumeric())
+                {
+                    i += 1;
+                }
+                let text = &source[start..i];
+                // string prefixes (r"...", f"...", b"...", rb"...")
+                if i < bytes.len()
+                    && (bytes[i] == b'"' || bytes[i] == b'\'')
+                    && text.len() <= 2
+                    && text.chars().all(|ch| "rbfuRBFU".contains(ch))
+                {
+                    let (consumed, newlines) = scan_string(&bytes[i..]);
+                    i += consumed;
+                    line_no += newlines;
+                    push_tok(&mut current, line_no, indent, Tok::Str);
+                } else if KEYWORDS.contains(&text) {
+                    push_tok(&mut current, line_no, indent, Tok::Keyword(text.to_string()));
+                } else {
+                    push_tok(&mut current, line_no, indent, Tok::Name(text.to_string()));
+                }
+            }
+            _ => {
+                let mut matched = false;
+                for op in OPERATORS {
+                    if source[i..].starts_with(op) {
+                        match *op {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                            _ => {}
+                        }
+                        push_tok(&mut current, line_no, indent, Tok::Op(op.to_string()));
+                        i += op.len();
+                        matched = true;
+                        break;
+                    }
+                }
+                if !matched {
+                    i += 1; // unknown byte: skip
+                }
+            }
+        }
+    }
+    if let Some(line) = current.take() {
+        if !line.tokens.is_empty() {
+            lines.push(line);
+        }
+    }
+    lines
+}
+
+fn push_tok(current: &mut Option<LogicalLine>, line_no: usize, indent: usize, tok: Tok) {
+    current
+        .get_or_insert_with(|| LogicalLine { first_line: line_no, tokens: Vec::new(), indent })
+        .tokens
+        .push(tok);
+}
+
+/// Scan a string literal starting at a quote; returns (bytes consumed,
+/// newlines crossed).
+fn scan_string(bytes: &[u8]) -> (usize, usize) {
+    let quote = bytes[0];
+    let triple = bytes.len() >= 3 && bytes[1] == quote && bytes[2] == quote;
+    let mut i = if triple { 3 } else { 1 };
+    let mut newlines = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'\n' => {
+                if !triple {
+                    return (i, newlines); // unterminated single-line string
+                }
+                newlines += 1;
+                i += 1;
+            }
+            q if q == quote => {
+                if triple {
+                    if i + 2 < bytes.len() && bytes[i + 1] == quote && bytes[i + 2] == quote {
+                        return (i + 3, newlines);
+                    }
+                    i += 1;
+                } else {
+                    return (i + 1, newlines);
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    (bytes.len(), newlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tokens() {
+        let lines = tokenize("x = a + 42\n");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(
+            lines[0].tokens,
+            vec![
+                Tok::Name("x".into()),
+                Tok::Op("=".into()),
+                Tok::Name("a".into()),
+                Tok::Op("+".into()),
+                Tok::Number("42".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let lines = tokenize("# comment\n\nx = 1  # trailing\n");
+        assert_eq!(lines.len(), 1);
+    }
+
+    #[test]
+    fn implicit_joining() {
+        let lines = tokenize("f(a,\n  b)\ny = 2\n");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].tokens.len(), 6); // f ( a , b )
+    }
+
+    #[test]
+    fn triple_strings() {
+        let lines = tokenize("\"\"\"doc\nstring\"\"\"\nx = 1\n");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].tokens, vec![Tok::Str]);
+    }
+
+    #[test]
+    fn keywords_detected() {
+        let lines = tokenize("for k in range(n):\n    pass\n");
+        assert!(matches!(lines[0].tokens[0], Tok::Keyword(ref k) if k == "for"));
+    }
+
+    #[test]
+    fn string_prefixes() {
+        let lines = tokenize("s = f\"hello {x}\"\n");
+        assert_eq!(lines[0].tokens.last(), Some(&Tok::Str));
+    }
+
+    #[test]
+    fn operators_longest_match() {
+        let lines = tokenize("a //= b ** c\n");
+        assert!(lines[0].tokens.contains(&Tok::Op("//=".into())));
+        assert!(lines[0].tokens.contains(&Tok::Op("**".into())));
+    }
+}

@@ -1,0 +1,128 @@
+//! Raw metrics (LOC/LLOC/SLOC) and cyclomatic complexity over the lexer's
+//! logical lines.
+
+use super::lexer::{LogicalLine, Tok};
+
+#[derive(Debug, Clone)]
+pub struct RawMetrics {
+    pub loc: usize,
+    pub lloc: usize,
+    pub sloc: usize,
+}
+
+pub fn raw_metrics(source: &str, lines: &[LogicalLine]) -> RawMetrics {
+    let loc = source.lines().count();
+    // SLOC: physical lines holding code (non-blank, non-comment-only)
+    let sloc = source
+        .lines()
+        .filter(|l| {
+            let t = l.trim();
+            !t.is_empty() && !t.starts_with('#')
+        })
+        .count();
+    // LLOC: one per logical statement; `;` separates statements, and a
+    // compound header with inline body (`if x: y = 1`) counts the body too.
+    let mut lloc = 0;
+    for line in lines {
+        lloc += 1;
+        lloc += line
+            .tokens
+            .iter()
+            .filter(|t| matches!(t, Tok::Op(op) if op == ";"))
+            .count();
+        // inline compound statement: `:` not at end and header keyword first
+        if let Some(Tok::Keyword(k)) = line.tokens.first() {
+            if matches!(
+                k.as_str(),
+                "if" | "elif" | "else" | "for" | "while" | "def" | "with" | "try" | "except" | "finally" | "class"
+            ) {
+                if let Some(pos) = line
+                    .tokens
+                    .iter()
+                    .rposition(|t| matches!(t, Tok::Op(op) if op == ":"))
+                {
+                    if pos + 1 < line.tokens.len() {
+                        lloc += 1;
+                    }
+                }
+            }
+        }
+    }
+    RawMetrics { loc, lloc, sloc }
+}
+
+/// Cyclomatic complexity: sum over functions of (1 + decision points).
+///
+/// Decision points: `if` / `elif` / `while` / `except` / ternary `if` /
+/// comprehension `if`s (all `if` tokens), `for` (statement or
+/// comprehension), boolean `and` / `or`, `assert`.  Module-level decision
+/// points attach to a synthetic module function only if no `def` exists.
+pub fn cyclomatic(lines: &[LogicalLine]) -> usize {
+    let mut functions = 0usize;
+    let mut decisions = 0usize;
+    for line in lines {
+        // module-level statements (indent 0, no def) are not part of any
+        // function; radon-style per-function complexity ignores their
+        // decision tokens (e.g. the `for` in `tuple(Tensor(1) for _ in ...)`)
+        let in_function = line.indent > 0;
+        for tok in &line.tokens {
+            if let Tok::Keyword(k) = tok {
+                match k.as_str() {
+                    "def" | "lambda" => functions += 1,
+                    "if" | "elif" | "while" | "for" | "except" | "and" | "or" | "assert"
+                        if in_function =>
+                    {
+                        decisions += 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    if functions == 0 {
+        1 + decisions
+    } else {
+        functions + decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::tokenize;
+    use super::*;
+
+    #[test]
+    fn raw_counts() {
+        let src = "# comment\n\nx = 1\ny = 2; z = 3\n";
+        let lines = tokenize(src);
+        let m = raw_metrics(src, &lines);
+        assert_eq!(m.loc, 4);
+        assert_eq!(m.sloc, 2);
+        assert_eq!(m.lloc, 3);
+    }
+
+    #[test]
+    fn cyclomatic_counts_functions_and_decisions() {
+        let src = "\
+def f(x):
+    if x and x > 1:
+        return 1
+    return 0
+
+
+def g(xs):
+    return [x for x in xs if x]
+";
+        let lines = tokenize(src);
+        // f: 1 + if + and = 3; g: 1 + for + if = 3 -> 6
+        assert_eq!(cyclomatic(&lines), 6);
+    }
+
+    #[test]
+    fn module_level_fallback() {
+        // module-level decision tokens are outside any function and are
+        // not counted (radon per-function semantics)
+        let lines = tokenize("x = 1 if y else 2\n");
+        assert_eq!(cyclomatic(&lines), 1);
+    }
+}

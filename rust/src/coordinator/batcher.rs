@@ -1,0 +1,119 @@
+//! Slot packing: dynamic batching under frozen AOT shapes.
+//!
+//! An element-wise artifact is compiled for a fixed vector length (the
+//! "slot", e.g. 65536 for `add`).  Requests carry arbitrary smaller
+//! lengths; the packer bin-packs consecutive compatible requests into one
+//! slot, executes once, and scatters the slices back to their owners.
+//! Padding tail elements are zeros — element-wise kernels map zeros to
+//! values the owners never see.
+
+use crate::runtime::HostTensor;
+
+/// Where each packed request's data lives inside the slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackPlan {
+    pub offsets: Vec<usize>,
+    pub lengths: Vec<usize>,
+    pub used: usize,
+    pub slot: usize,
+}
+
+pub struct Packer {
+    pub slot: usize,
+    /// max requests fused into one execution
+    pub max_fanin: usize,
+}
+
+impl Packer {
+    pub fn new(slot: usize, max_fanin: usize) -> Packer {
+        Packer { slot, max_fanin }
+    }
+
+    /// Greedy first-fit over the queue order: take requests while they fit.
+    /// Returns how many of `lengths` were packed and the plan.
+    pub fn plan(&self, lengths: &[usize]) -> (usize, PackPlan) {
+        let mut offsets = Vec::new();
+        let mut taken_lengths = Vec::new();
+        let mut used = 0;
+        for &len in lengths.iter().take(self.max_fanin) {
+            if used + len > self.slot {
+                break;
+            }
+            offsets.push(used);
+            taken_lengths.push(len);
+            used += len;
+        }
+        let taken = offsets.len();
+        (taken, PackPlan { offsets, lengths: taken_lengths, used, slot: self.slot })
+    }
+
+    /// Gather the per-request vectors into one slot-sized buffer per input.
+    pub fn pack(&self, plan: &PackPlan, inputs_per_request: &[Vec<&HostTensor>]) -> Vec<HostTensor> {
+        let n_args = inputs_per_request[0].len();
+        let mut out = Vec::with_capacity(n_args);
+        for arg in 0..n_args {
+            let mut buf = vec![0f32; self.slot];
+            for (req_idx, req_inputs) in inputs_per_request.iter().enumerate() {
+                let src = req_inputs[arg].as_f32().expect("packable inputs are f32");
+                let off = plan.offsets[req_idx];
+                buf[off..off + src.len()].copy_from_slice(src);
+            }
+            out.push(HostTensor::f32(vec![self.slot], buf).expect("slot shape"));
+        }
+        out
+    }
+
+    /// Split a slot-sized output back into per-request tensors.
+    pub fn unpack(&self, plan: &PackPlan, output: &HostTensor) -> Vec<HostTensor> {
+        let data = output.as_f32().expect("packable outputs are f32");
+        plan.offsets
+            .iter()
+            .zip(&plan.lengths)
+            .map(|(&off, &len)| {
+                HostTensor::f32(vec![len], data[off..off + len].to_vec()).expect("slice")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_respects_slot() {
+        let p = Packer::new(100, 8);
+        let (taken, plan) = p.plan(&[40, 40, 40]);
+        assert_eq!(taken, 2);
+        assert_eq!(plan.offsets, vec![0, 40]);
+        assert_eq!(plan.used, 80);
+    }
+
+    #[test]
+    fn plan_respects_fanin() {
+        let p = Packer::new(100, 2);
+        let (taken, _) = p.plan(&[10, 10, 10]);
+        assert_eq!(taken, 2);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let p = Packer::new(10, 8);
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::f32(vec![4], vec![4.0, 5.0, 6.0, 7.0]).unwrap();
+        let (taken, plan) = p.plan(&[3, 4]);
+        assert_eq!(taken, 2);
+        let packed = p.pack(&plan, &[vec![&a], vec![&b]]);
+        assert_eq!(packed[0].as_f32().unwrap()[..7], [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let outs = p.unpack(&plan, &packed[0]);
+        assert_eq!(outs[0], a);
+        assert_eq!(outs[1], b);
+    }
+
+    #[test]
+    fn oversized_first_request_takes_zero() {
+        let p = Packer::new(10, 8);
+        let (taken, _) = p.plan(&[11]);
+        assert_eq!(taken, 0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Lock-free serving metrics: atomic counters + a log2 latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 28; // 1µs .. ~2min in powers of two
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batched: AtomicU64,
+    pub executions: AtomicU64,
+    pub exec_us_total: AtomicU64,
+    pub queue_us_total: AtomicU64,
+    latency_hist: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency_us(&self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist: Vec<u64> = self
+            .latency_hist
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            executions: self.executions.load(Ordering::Relaxed),
+            exec_us_total: self.exec_us_total.load(Ordering::Relaxed),
+            queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
+            latency_hist: hist,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batched: u64,
+    pub executions: u64,
+    pub exec_us_total: u64,
+    pub queue_us_total: u64,
+    pub latency_hist: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    /// Latency quantile from the log2 histogram (upper bucket bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, count) in self.latency_hist.iter().enumerate() {
+            seen += count;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (BUCKETS - 1)
+    }
+
+    pub fn mean_exec_us(&self) -> f64 {
+        if self.executions == 0 {
+            0.0
+        } else {
+            self.exec_us_total as f64 / self.executions as f64
+        }
+    }
+
+    pub fn mean_queue_us(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.queue_us_total as f64 / self.completed as f64
+        }
+    }
+
+    pub fn batching_factor(&self) -> f64 {
+        if self.executions == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.executions as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} executions={} batching={:.2}x \
+             mean_exec={:.0}µs mean_queue={:.0}µs p50={}µs p99={}µs",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.executions,
+            self.batching_factor(),
+            self.mean_exec_us(),
+            self.mean_queue_us(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let m = Metrics::new();
+        for us in [1u64, 2, 4, 8, 1024, 2048] {
+            m.observe_latency_us(us);
+        }
+        let s = m.snapshot();
+        assert!(s.latency_quantile_us(0.5) <= 16);
+        assert!(s.latency_quantile_us(1.0) >= 2048);
+    }
+
+    #[test]
+    fn batching_factor() {
+        let m = Metrics::new();
+        m.completed.store(10, Ordering::Relaxed);
+        m.executions.store(4, Ordering::Relaxed);
+        assert!((m.snapshot().batching_factor() - 2.5).abs() < 1e-9);
+    }
+}

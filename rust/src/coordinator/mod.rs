@@ -1,0 +1,25 @@
+//! L3 coordinator: a kernel-serving system over the AOT artifacts.
+//!
+//! The paper's contribution lives at the DSL layer, so the coordinator is
+//! the serving shell a production deployment would put around the compiled
+//! kernels (vllm-router-like in miniature):
+//!
+//! * [`router`] — admission + routing: validates request shapes against the
+//!   manifest and the arrangement launch plans, picks the executable.
+//! * [`batcher`] — **slot packing**: AOT artifacts have fixed shapes, so
+//!   variable-size element-wise requests are packed into the fixed vector
+//!   slot of one artifact execution and split back afterwards (the dynamic
+//!   batching strategy available when shapes are frozen ahead of time).
+//! * [`server`] — worker-thread pool over an injector queue with bounded
+//!   capacity (backpressure) and graceful shutdown.
+//! * [`metrics`] — lock-free counters + log2 latency histogram.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{PackPlan, Packer};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Request, Response, Router};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,101 @@
+//! Request admission and routing.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, Manifest};
+
+/// One kernel invocation request.
+#[derive(Debug)]
+pub struct Request {
+    pub kernel: String,
+    pub variant: String,
+    pub inputs: Vec<HostTensor>,
+    pub submitted: Instant,
+    /// where the response is delivered
+    pub reply: mpsc::Sender<Result<Response>>,
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub outputs: Vec<HostTensor>,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    /// how many requests shared the execution (1 = unbatched)
+    pub batch_size: usize,
+}
+
+/// Element-wise kernels whose single vector argument may be slot-packed.
+pub const PACKABLE: &[&str] = &["add", "silu"];
+
+/// Routing decision for an admitted request.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    pub kernel: String,
+    pub variant: String,
+    /// packable requests share a queue per (kernel, variant)
+    pub packable: bool,
+}
+
+pub struct Router {
+    manifest: std::sync::Arc<Manifest>,
+}
+
+impl Router {
+    pub fn new(manifest: std::sync::Arc<Manifest>) -> Router {
+        Router { manifest }
+    }
+
+    /// Validate a request against the manifest; return its route.
+    ///
+    /// Packable element-wise requests may be *smaller* than the artifact
+    /// slot (they are packed); all other requests must match the compiled
+    /// shapes exactly — AOT artifacts are shape-specialized.
+    pub fn admit(&self, req: &Request) -> Result<RouteKey> {
+        let art = self.manifest.kernel(&req.kernel, &req.variant)?;
+        let packable = PACKABLE.contains(&req.kernel.as_str());
+        if req.inputs.len() != art.args.len() {
+            bail!(
+                "kernel {} expects {} inputs, got {}",
+                req.kernel,
+                art.args.len(),
+                req.inputs.len()
+            );
+        }
+        if packable {
+            let slot = art.args[0].shape[0];
+            for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
+                if input.shape.len() != spec.shape.len() {
+                    bail!("input {i} rank mismatch for {}", req.kernel);
+                }
+                if input.len() > slot {
+                    bail!(
+                        "input {i} of {} elements exceeds the {}-element artifact slot",
+                        input.len(),
+                        slot
+                    );
+                }
+            }
+            // all vector inputs must agree in length
+            let n = req.inputs[0].len();
+            if req.inputs.iter().any(|t| t.len() != n) {
+                bail!("packable request inputs must have equal length");
+            }
+        } else {
+            for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
+                if input.shape != spec.shape {
+                    bail!(
+                        "input {i} shape {:?} != compiled shape {:?} for {}.{}",
+                        input.shape,
+                        spec.shape,
+                        req.kernel,
+                        req.variant
+                    );
+                }
+            }
+        }
+        Ok(RouteKey { kernel: req.kernel.clone(), variant: req.variant.clone(), packable })
+    }
+}

@@ -1,0 +1,284 @@
+//! The coordinator event loop: bounded injector queue, per-route pending
+//! queues, a worker-thread pool draining them with slot packing, and
+//! graceful shutdown.  (The PJRT execute call is blocking, so OS threads —
+//! not an async reactor — are the right concurrency primitive here.)
+//!
+//! The `xla` crate's handles are `Rc`-based (not `Send`), so executables
+//! cannot be shared across threads: **each worker owns its own PJRT client
+//! and executable cache**, built lazily from the shared manifest.  This is
+//! also what a multi-device deployment looks like (one client per device).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Packer;
+use super::metrics::Metrics;
+use super::router::{Request, Response, RouteKey, Router};
+use crate::runtime::{Manifest, Registry, Runtime};
+
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// injector queue capacity; submits beyond this are rejected (backpressure)
+    pub queue_capacity: usize,
+    /// max requests fused into one slot-packed execution
+    pub max_fanin: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 2, queue_capacity: 1024, max_fanin: 16 }
+    }
+}
+
+struct Shared {
+    queues: Mutex<State>,
+    available: Condvar,
+    metrics: Metrics,
+}
+
+struct State {
+    /// FIFO of routes with pending work (fairness across kernels)
+    order: VecDeque<RouteKey>,
+    pending: HashMap<RouteKey, VecDeque<Request>>,
+    depth: usize,
+    shutdown: bool,
+}
+
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    router: Arc<Router>,
+    config: CoordinatorConfig,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(manifest: Arc<Manifest>, config: CoordinatorConfig) -> Coordinator {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(State {
+                order: VecDeque::new(),
+                pending: HashMap::new(),
+                depth: 0,
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            metrics: Metrics::new(),
+        });
+        let router = Arc::new(Router::new(manifest.clone()));
+        let mut workers = Vec::new();
+        for worker_id in 0..config.workers.max(1) {
+            let shared = shared.clone();
+            let manifest = manifest.clone();
+            let max_fanin = config.max_fanin;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("nt-worker-{worker_id}"))
+                    .spawn(move || {
+                        // per-worker PJRT client + executable cache
+                        let runtime = Runtime::cpu().expect("PJRT CPU client");
+                        let registry = Registry::new(runtime, manifest);
+                        worker_loop(shared, registry, max_fanin)
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Coordinator { shared, router, config, workers }
+    }
+
+    /// Submit a request; the response arrives on the receiver.
+    /// Fails fast on admission errors and on backpressure.
+    pub fn submit(
+        &self,
+        kernel: &str,
+        variant: &str,
+        inputs: Vec<crate::runtime::HostTensor>,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            kernel: kernel.to_string(),
+            variant: variant.to_string(),
+            inputs,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let route = match self.router.admit(&req) {
+            Ok(route) => route,
+            Err(e) => {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        {
+            let mut state = self.shared.queues.lock().unwrap();
+            if state.depth >= self.config.queue_capacity {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("coordinator queue full ({})", self.config.queue_capacity));
+            }
+            if !state.pending.contains_key(&route) {
+                state.order.push_back(route.clone());
+            }
+            state.pending.entry(route).or_default().push_back(req);
+            state.depth += 1;
+        }
+        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.available.notify_one();
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn shutdown(mut self) {
+        {
+            let mut state = self.shared.queues.lock().unwrap();
+            state.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, registry: Registry, max_fanin: usize) {
+    loop {
+        // take a batch of requests for one route
+        let (route, batch) = {
+            let mut state = shared.queues.lock().unwrap();
+            loop {
+                if let Some(route) = state.order.pop_front() {
+                    let queue = state.pending.get_mut(&route).expect("queued route");
+                    let batch = drain_batch(queue, &route, &registry, max_fanin);
+                    let remaining = !queue.is_empty();
+                    if !remaining {
+                        state.pending.remove(&route);
+                    } else {
+                        state.order.push_back(route.clone());
+                    }
+                    state.depth -= batch.len();
+                    break (route, batch);
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = shared.available.wait(state).unwrap();
+            }
+        };
+        execute_batch(&shared, &registry, &route, batch);
+    }
+}
+
+/// Pull up to one execution's worth of requests off a route queue.
+fn drain_batch(
+    queue: &mut VecDeque<Request>,
+    route: &RouteKey,
+    registry: &Registry,
+    max_fanin: usize,
+) -> Vec<Request> {
+    if !route.packable {
+        return queue.pop_front().into_iter().collect();
+    }
+    let slot = registry
+        .manifest()
+        .kernel(&route.kernel, &route.variant)
+        .map(|a| a.args[0].shape[0])
+        .unwrap_or(0);
+    let packer = Packer::new(slot, max_fanin);
+    let lengths: Vec<usize> = queue.iter().map(|r| r.inputs[0].len()).collect();
+    let (taken, _) = packer.plan(&lengths);
+    let taken = taken.max(1).min(queue.len()); // oversized head: fail it downstream
+    queue.drain(..taken).collect()
+}
+
+fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: Vec<Request>) {
+    if batch.is_empty() {
+        return;
+    }
+    let exe = match registry.kernel(&route.kernel, &route.variant) {
+        Ok(exe) => exe,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch {
+                let _ = req.reply.send(Err(anyhow!("{msg}")));
+            }
+            return;
+        }
+    };
+    let art = registry
+        .manifest()
+        .kernel(&route.kernel, &route.variant)
+        .expect("admitted route has artifact");
+
+    let queue_us: Vec<u64> = batch
+        .iter()
+        .map(|r| r.submitted.elapsed().as_micros() as u64)
+        .collect();
+
+    let t0 = Instant::now();
+    let result = if route.packable && (batch.len() > 1 || batch[0].inputs[0].len() != art.args[0].shape[0]) {
+        // slot-packed execution
+        let slot = art.args[0].shape[0];
+        let packer = Packer::new(slot, batch.len());
+        let lengths: Vec<usize> = batch.iter().map(|r| r.inputs[0].len()).collect();
+        let (taken, plan) = packer.plan(&lengths);
+        if taken != batch.len() {
+            for req in batch {
+                let _ = req
+                    .reply
+                    .send(Err(anyhow!("request does not fit the {slot}-element slot")));
+            }
+            return;
+        }
+        let per_request: Vec<Vec<&crate::runtime::HostTensor>> =
+            batch.iter().map(|r| r.inputs.iter().collect()).collect();
+        let packed = packer.pack(&plan, &per_request);
+        exe.run(&packed).map(|outs| {
+            packer
+                .unpack(&plan, &outs[0])
+                .into_iter()
+                .map(|t| vec![t])
+                .collect::<Vec<_>>()
+        })
+    } else {
+        exe.run(&batch[0].inputs).map(|outs| vec![outs])
+    };
+    let exec_us = t0.elapsed().as_micros() as u64;
+
+    shared.metrics.executions.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+    if batch.len() > 1 {
+        shared
+            .metrics
+            .batched
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    }
+
+    match result {
+        Ok(outputs_per_req) => {
+            let n = batch.len();
+            for ((req, outputs), q_us) in batch.into_iter().zip(outputs_per_req).zip(queue_us) {
+                shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.queue_us_total.fetch_add(q_us, Ordering::Relaxed);
+                let total_us = req.submitted.elapsed().as_micros() as u64;
+                shared.metrics.observe_latency_us(total_us);
+                let _ = req.reply.send(Ok(Response {
+                    outputs,
+                    queue_us: q_us,
+                    exec_us,
+                    batch_size: n,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch {
+                let _ = req.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

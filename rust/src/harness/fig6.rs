@@ -1,0 +1,131 @@
+//! Fig 6 — single-compute-kernel performance: the ten paper tasks, each
+//! executed via the NineToothed-generated artifact, the hand-written
+//! Pallas baseline artifact, and the pure-jnp reference ("PyTorch" series),
+//! on the PJRT CPU substrate.  Reported per task: mean latency, derived
+//! throughput, and the NT-vs-baseline relative difference (the paper's
+//! -1.58%..+3.93% claim).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::benchkit::{bench_for, fmt_duration, Table};
+use crate::cli::Args;
+use crate::prng::SplitMix64;
+use crate::runtime::{HostTensor, Manifest, Registry, Runtime};
+use crate::artifacts_dir;
+
+pub struct TaskResult {
+    pub name: String,
+    pub variant: String,
+    pub mean_s: f64,
+    pub gflops: f64,
+}
+
+/// Build deterministic random inputs for a kernel task.
+pub fn task_inputs(manifest: &Manifest, name: &str, seed: u64) -> Result<Vec<HostTensor>> {
+    let art = manifest.kernel(name, "nt")?;
+    let mut rng = SplitMix64::new(seed);
+    Ok(art
+        .args
+        .iter()
+        .map(|spec| {
+            if spec.shape.is_empty() {
+                // the addmm beta/alpha scalars
+                HostTensor::f32(vec![], vec![0.5 + rng.uniform() as f32]).unwrap()
+            } else {
+                HostTensor::randn(spec.shape.clone(), &mut rng)
+            }
+        })
+        .collect())
+}
+
+pub fn run_all(registry: &Registry, iters_time: Duration) -> Result<Vec<TaskResult>> {
+    let manifest = registry.manifest();
+    let mut results = Vec::new();
+    for name in manifest.kernel_names() {
+        if name.starts_with("model") {
+            continue;
+        }
+        let inputs = task_inputs(manifest, &name, 42)?;
+        let flops = manifest.kernel(&name, "nt")?.flops as f64;
+        for variant in ["nt", "baseline", "ref"] {
+            let exe = registry.kernel(&name, variant)?;
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let stats = bench_for(1, iters_time, || {
+                exe.run_literals(&literals).expect("kernel execution");
+            });
+            results.push(TaskResult {
+                name: name.clone(),
+                variant: variant.to_string(),
+                mean_s: stats.mean_s,
+                gflops: flops / stats.mean_s / 1e9,
+            });
+        }
+    }
+    Ok(results)
+}
+
+pub fn report(results: &[TaskResult]) -> String {
+    let mut out = String::new();
+    let mut table = Table::new(&["task", "NineToothed", "Baseline", "PyTorch-ref", "NT vs base"]);
+    let mut diffs = Vec::new();
+    let names: Vec<String> = {
+        let mut v: Vec<String> = results.iter().map(|r| r.name.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    for name in &names {
+        let get = |variant: &str| {
+            results
+                .iter()
+                .find(|r| &r.name == name && r.variant == variant)
+                .map(|r| r.mean_s)
+        };
+        let (nt, base, reference) = (get("nt"), get("baseline"), get("ref"));
+        let rel = match (nt, base) {
+            // positive = NT slower than baseline
+            (Some(nt), Some(base)) if base > 0.0 => {
+                let d = 100.0 * (nt - base) / base;
+                diffs.push((name.clone(), d));
+                format!("{d:+.2}%")
+            }
+            _ => "-".to_string(),
+        };
+        table.row(vec![
+            name.clone(),
+            nt.map(fmt_duration).unwrap_or_default(),
+            base.map(fmt_duration).unwrap_or_default(),
+            reference.map(fmt_duration).unwrap_or_default(),
+            rel,
+        ]);
+    }
+    out.push_str(&table.render());
+    if !diffs.is_empty() {
+        let min = diffs.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        let max = diffs.iter().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        let avg = diffs.iter().map(|d| d.1).sum::<f64>() / diffs.len() as f64;
+        out.push_str(&format!(
+            "NT-vs-baseline latency difference: min {:+.2}% ({}), max {:+.2}% ({}), avg {:+.2}%\n\
+             (paper, on A100/Triton: min -1.58%, max +3.93%, avg +0.37%)\n",
+            min.1, min.0, max.1, max.0, avg
+        ));
+    }
+    out
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let registry = Registry::new(Runtime::cpu()?, manifest);
+    let secs = args.opt_usize("secs", 2);
+    println!(
+        "Fig 6: single-kernel tasks ({} scale, >= {secs}s per measurement)",
+        if registry.manifest().full { "paper" } else { "scaled" }
+    );
+    let results = run_all(&registry, Duration::from_secs(secs as u64))?;
+    println!("{}", report(&results));
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Fig 7 — end-to-end model inference throughput (tokens/s) for the three
+//! kernel backends at several output lengths, batch 2, input 32 tokens
+//! (shapes per DESIGN.md §6 substitutions; `--full` artifacts enable the
+//! paper's 128/512/2048 ladder).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::artifacts_dir;
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::inference::Engine;
+use crate::runtime::{Manifest, Registry, Runtime};
+
+pub struct E2eResult {
+    pub variant: String,
+    pub steps: usize,
+    pub tokens_per_s: f64,
+}
+
+pub fn output_lengths(manifest: &Manifest, warmup_capped: bool) -> Vec<usize> {
+    let model = manifest.model.as_ref();
+    let cap = model.map(|m| m.max_seq - m.prompt).unwrap_or(64);
+    let ladder: &[usize] = if manifest.full {
+        &[128, 512, 2048]
+    } else {
+        &[16, 32, 64]
+    };
+    ladder
+        .iter()
+        .copied()
+        .filter(|&s| s <= cap && (!warmup_capped || s <= 64))
+        .collect()
+}
+
+pub fn run_all(registry: &Arc<Registry>, measured_iters: usize) -> Result<Vec<E2eResult>> {
+    let manifest = registry.manifest_arc();
+    let lengths = output_lengths(&manifest, false);
+    let mut results = Vec::new();
+    for variant in ["nt", "baseline", "ref"] {
+        let engine = Engine::new(registry.clone(), variant)
+            .with_context(|| format!("loading engine for {variant}"))?;
+        let prompt = engine.synth_prompt(7);
+        for &steps in &lengths {
+            // paper protocol: one warmup iteration + averaged measured runs
+            engine.generate(&prompt, steps)?;
+            let mut tps = 0.0;
+            for _ in 0..measured_iters {
+                tps += engine.generate(&prompt, steps)?.tokens_per_s;
+            }
+            results.push(E2eResult {
+                variant: variant.to_string(),
+                steps,
+                tokens_per_s: tps / measured_iters as f64,
+            });
+        }
+    }
+    Ok(results)
+}
+
+pub fn report(results: &[E2eResult]) -> String {
+    let mut out = String::new();
+    let mut lengths: Vec<usize> = results.iter().map(|r| r.steps).collect();
+    lengths.sort_unstable();
+    lengths.dedup();
+    let mut table = Table::new(&["output len", "NineToothed tok/s", "Baseline tok/s", "PyTorch-ref tok/s", "NT vs base"]);
+    let mut diffs = Vec::new();
+    for &steps in &lengths {
+        let get = |variant: &str| {
+            results
+                .iter()
+                .find(|r| r.steps == steps && r.variant == variant)
+                .map(|r| r.tokens_per_s)
+        };
+        let (nt, base, reference) = (get("nt"), get("baseline"), get("ref"));
+        let rel = match (nt, base) {
+            (Some(nt), Some(base)) if base > 0.0 => {
+                let d = 100.0 * (nt - base) / base;
+                diffs.push(d);
+                format!("{d:+.2}%")
+            }
+            _ => "-".into(),
+        };
+        table.row(vec![
+            steps.to_string(),
+            nt.map(|v| format!("{v:.2}")).unwrap_or_default(),
+            base.map(|v| format!("{v:.2}")).unwrap_or_default(),
+            reference.map(|v| format!("{v:.2}")).unwrap_or_default(),
+            rel,
+        ]);
+    }
+    out.push_str(&table.render());
+    if !diffs.is_empty() {
+        let min = diffs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = diffs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let avg = diffs.iter().sum::<f64>() / diffs.len() as f64;
+        out.push_str(&format!(
+            "NT-vs-baseline throughput difference: min {min:+.2}%, max {max:+.2}%, avg {avg:+.2}%\n\
+             (paper, DeepSeek-8B on A100: min -5.32%, max +0.33%, avg -1.79%)\n"
+        ));
+    }
+    out
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let registry = Arc::new(Registry::new(Runtime::cpu()?, manifest));
+    let iters = args.opt_usize("iters", 3);
+    let model = registry
+        .manifest()
+        .model
+        .as_ref()
+        .context("no model in manifest")?;
+    println!(
+        "Fig 7: end-to-end inference (tiny-Llama d={} L={}, batch {}, input {} tokens, {iters} measured iterations)",
+        model.d_model, model.n_layers, model.batch, model.prompt
+    );
+    let results = run_all(&registry, iters)?;
+    println!("{}", report(&results));
+    Ok(())
+}

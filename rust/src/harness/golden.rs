@@ -1,0 +1,40 @@
+//! Golden-case verification: run AOT artifacts against input/output pairs
+//! recorded by the Python oracle at export time.  This is the end-to-end
+//! numerical check of the whole chain: DSL codegen -> HLO text -> PJRT
+//! compile -> execute from Rust.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, Registry};
+
+const TOL: f32 = 2e-4;
+
+pub fn check_all(registry: &Registry) -> Result<()> {
+    let manifest = registry.manifest();
+    if manifest.goldens.is_empty() {
+        bail!("manifest has no golden cases — re-run `make artifacts`");
+    }
+    for case in manifest.goldens.clone() {
+        let inputs: Vec<HostTensor> = case
+            .inputs
+            .iter()
+            .map(|rel| HostTensor::from_f32_file(&manifest.artifact_path(rel), case.shape.clone()))
+            .collect::<Result<_>>()?;
+        let expected =
+            HostTensor::from_f32_file(&manifest.artifact_path(&case.output), case.shape.clone())?;
+        for variant in ["nt", "baseline", "ref"] {
+            let exe = registry.kernel(&case.kernel, variant)?;
+            let out = exe.run(&inputs)?;
+            let diff = out[0].max_abs_diff(&expected)?;
+            if diff > TOL {
+                bail!(
+                    "golden mismatch for {}.{}: max|diff| = {diff}",
+                    case.kernel,
+                    variant
+                );
+            }
+            println!("golden {}.{variant}: max|diff| = {diff:.2e}", case.kernel);
+        }
+    }
+    Ok(())
+}

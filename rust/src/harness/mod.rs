@@ -1,0 +1,20 @@
+//! The benchmark harness: one module per paper table/figure plus shared
+//! validation utilities.  Each `run` prints the same rows/series the paper
+//! reports (see DESIGN.md §5 for the experiment index).
+
+pub mod fig6;
+pub mod fig7;
+pub mod golden;
+pub mod serve;
+pub mod table2;
+pub mod validate;
+
+use std::path::PathBuf;
+
+/// Repository root: the directory holding `artifacts/` (for locating the
+/// Python kernel sources measured by Table 2).
+pub fn repo_root() -> PathBuf {
+    let mut dir = crate::artifacts_dir();
+    dir.pop();
+    dir
+}

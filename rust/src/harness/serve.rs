@@ -1,0 +1,74 @@
+//! `repro serve` — drive the kernel-serving coordinator with a synthetic
+//! mixed workload and print the serving metrics (latency percentiles,
+//! batching factor, rejection count).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::artifacts_dir;
+use crate::cli::Args;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::prng::SplitMix64;
+use crate::runtime::{HostTensor, Manifest};
+
+pub fn run(args: &Args) -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let workers = args.opt_usize("workers", 2);
+    let requests = args.opt_usize("requests", 64);
+    let config = CoordinatorConfig { workers, ..Default::default() };
+    println!("starting coordinator: {workers} workers, {requests} requests");
+    let coordinator = Coordinator::start(manifest.clone(), config);
+
+    let slot = manifest.kernel("add", "nt")?.args[0].shape[0];
+    let softmax_shape = manifest.kernel("softmax", "nt")?.args[0].shape.clone();
+
+    // warm each worker's lazy compile cache before the measured burst
+    let mut rng0 = SplitMix64::new(1);
+    let warm = HostTensor::randn(vec![slot], &mut rng0);
+    for _ in 0..workers {
+        let rx = coordinator.submit("add", "nt", vec![warm.clone(), warm.clone()])?;
+        rx.recv()??;
+    }
+
+    let mut rng = SplitMix64::new(2024);
+    let mut receivers = Vec::new();
+    for i in 0..requests {
+        match i % 3 {
+            0 => {
+                // variable-length adds exercise slot packing
+                let n = 1024 + rng.below((slot / 8) as u64) as usize;
+                let x = HostTensor::randn(vec![n], &mut rng);
+                let y = HostTensor::randn(vec![n], &mut rng);
+                receivers.push(("add", coordinator.submit("add", "nt", vec![x, y])?));
+            }
+            1 => {
+                let n = 512 + rng.below((slot / 16) as u64) as usize;
+                let x = HostTensor::randn(vec![n], &mut rng);
+                receivers.push(("silu", coordinator.submit("silu", "nt", vec![x])?));
+            }
+            _ => {
+                let x = HostTensor::randn(softmax_shape.clone(), &mut rng);
+                receivers.push(("softmax", coordinator.submit("softmax", "nt", vec![x])?));
+            }
+        }
+    }
+
+    let mut ok = 0;
+    let mut max_batch = 1;
+    for (kernel, rx) in receivers {
+        let resp = rx.recv()??;
+        ok += 1;
+        max_batch = max_batch.max(resp.batch_size);
+        if ok <= 3 {
+            println!(
+                "  {kernel}: batch={} queue={}µs exec={}µs out[0] len={}",
+                resp.batch_size, resp.queue_us, resp.exec_us, resp.outputs[0].len()
+            );
+        }
+    }
+    println!("completed {ok}/{requests}; largest fused batch: {max_batch}");
+    println!("{}", coordinator.metrics().render());
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! Cross-validation of the two algebra implementations: the Rust catalog
+//! arrangements (paper Listings re-derived against `crate::tensor`) must
+//! produce the same launch geometry as the manifest metadata exported by
+//! the Python DSL.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arrange::{self, catalog};
+use crate::runtime::Manifest;
+
+fn bindings(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Rename catalog symbols (`input_size_0`, ...) into the manifest's
+/// parameter-name-based symbols for a kernel, then compare geometry.
+pub fn catalog_parity(manifest: &Manifest) -> Result<()> {
+    let metas = arrange::load_all(&manifest.raw)?;
+    let find = |name: &str| {
+        metas
+            .iter()
+            .find(|m| m.kernel == name)
+            .with_context(|| format!("manifest lacks arrangement {name}"))
+    };
+
+    // --- add (Listing 3) ---------------------------------------------------
+    {
+        let meta = find("add")?;
+        let rust = catalog::add()?;
+        let n = 4097i64;
+        let block = 256i64;
+        let mut env = bindings(&[("BLOCK_SIZE", block)]);
+        for t in ["input", "other", "output"] {
+            env.insert(format!("{t}_size_0"), n);
+        }
+        let (grid, extents) = catalog::geometry(&rust, &env)?;
+        // manifest symbols are tensor_N-based; map them by position
+        let mut menv = bindings(&[("BLOCK_SIZE", block)]);
+        for p in &meta.params {
+            for (sym, _) in collect_size_syms(meta, &p.name) {
+                menv.insert(sym, n);
+            }
+        }
+        bind_meta_params(meta, &mut menv, block);
+        let plan = meta.launch_plan(&menv)?;
+        if plan.grid != grid {
+            bail!("add grid mismatch: catalog {grid:?} vs manifest {:?}", plan.grid);
+        }
+        for (p, e) in plan.params.iter().zip(&extents) {
+            if &p.padded_extents != e {
+                bail!("add extent mismatch for {}: {:?} vs {e:?}", p.name, p.padded_extents);
+            }
+        }
+        println!("catalog parity add: grid {grid:?} extents agree");
+    }
+
+    // --- mm (Listing 5) ------------------------------------------------------
+    {
+        let meta = find("mm")?;
+        let rust = catalog::mm()?;
+        let (m, k, n) = (70i64, 50i64, 90i64);
+        let block = 32i64;
+        let mut env = bindings(&[
+            ("BLOCK_SIZE_M", block),
+            ("BLOCK_SIZE_N", block),
+            ("BLOCK_SIZE_K", block),
+            ("input_size_0", m),
+            ("input_size_1", k),
+            ("other_size_0", k),
+            ("other_size_1", n),
+            ("output_size_0", m),
+            ("output_size_1", n),
+        ]);
+        let (grid, extents) = catalog::geometry(&rust, &env)?;
+
+        let mut menv = bindings(&[("BLOCK_SIZE_M", block), ("BLOCK_SIZE_N", block), ("BLOCK_SIZE_K", block)]);
+        let dims = [(m, k), (k, n), (m, n)];
+        for (p, (d0, d1)) in meta.params.iter().zip(dims) {
+            let syms = collect_size_syms(meta, &p.name);
+            anyhow::ensure!(syms.len() == 2, "mm param {} has {} size syms", p.name, syms.len());
+            menv.insert(syms[0].0.clone(), d0);
+            menv.insert(syms[1].0.clone(), d1);
+        }
+        bind_meta_params(meta, &mut menv, block);
+        let plan = meta.launch_plan(&menv)?;
+        if plan.grid != grid {
+            bail!("mm grid mismatch: catalog {grid:?} vs manifest {:?}", plan.grid);
+        }
+        for (p, e) in plan.params.iter().zip(&extents) {
+            if &p.padded_extents != e {
+                bail!("mm extent mismatch for {}: {:?} vs {e:?}", p.name, p.padded_extents);
+            }
+        }
+        env.insert("dummy".into(), 0);
+        println!("catalog parity mm: grid {grid:?} extents agree");
+    }
+
+    // --- conv2d (Listing 8) ----------------------------------------------------
+    {
+        let meta = find("conv2d")?;
+        let rust = catalog::conv2d()?;
+        let (nn, c, h, w) = (2i64, 3i64, 10i64, 10i64);
+        let (kk, r, s) = (4i64, 3i64, 3i64);
+        let block = 16i64;
+        let env = {
+            let mut e = bindings(&[
+                ("BLOCK_SIZE_M", block),
+                ("BLOCK_SIZE_N", block),
+                ("BLOCK_SIZE_K", block),
+                ("input_size_0", nn),
+                ("input_size_1", c),
+                ("input_size_2", h),
+                ("input_size_3", w),
+                ("filter_size_0", kk),
+                ("filter_size_1", c),
+                ("filter_size_2", r),
+                ("filter_size_3", s),
+                ("output_size_0", nn),
+                ("output_size_1", kk),
+            ]);
+            e.insert("output_size_2".into(), h - r + 1);
+            e.insert("output_size_3".into(), w - s + 1);
+            e
+        };
+        let (grid, _) = catalog::geometry(&rust, &env)?;
+
+        let mut menv = bindings(&[("BLOCK_SIZE_M", block), ("BLOCK_SIZE_N", block), ("BLOCK_SIZE_K", block)]);
+        let dims: [&[i64]; 3] = [&[nn, c, h, w], &[kk, c, r, s], &[nn, kk, h - r + 1, w - s + 1]];
+        for (p, d) in meta.params.iter().zip(dims) {
+            let syms = collect_size_syms(meta, &p.name);
+            anyhow::ensure!(syms.len() == d.len());
+            for ((sym, _), v) in syms.iter().zip(d) {
+                menv.insert(sym.clone(), *v);
+            }
+        }
+        bind_meta_params(meta, &mut menv, block);
+        let plan = meta.launch_plan(&menv)?;
+        if plan.grid != grid {
+            bail!("conv2d grid mismatch: catalog {grid:?} vs manifest {:?}", plan.grid);
+        }
+        println!("catalog parity conv2d: grid {grid:?} agrees (implicit GEMM)");
+    }
+
+    Ok(())
+}
+
+
+/// Bind every meta-parameter symbol (block sizes — `BLOCK_SIZE*` or the
+/// auto-generated `_ntc_block_*`) in the arrangement to `block`.
+fn bind_meta_params(meta: &arrange::ArrangementMeta, env: &mut BTreeMap<String, i64>, block: i64) {
+    for p in &meta.params {
+        for e in &p.indices {
+            for s in e.free_symbols() {
+                if !s.starts_with("_ntv_") && !s.contains("_size_") {
+                    env.entry(s).or_insert(block);
+                }
+            }
+        }
+        for (size, _) in p.levels.iter().flatten() {
+            for s in size.free_symbols() {
+                if !s.starts_with("_ntv_") && !s.contains("_size_") {
+                    env.entry(s).or_insert(block);
+                }
+            }
+        }
+    }
+}
+
+/// Map manifest tensor-name prefixes to parameters.
+///
+/// The DSL auto-names tensors `tensor_<n>` with a global counter, so the
+/// numerically-sorted prefixes correspond to the parameters in declaration
+/// order (scalars included — they simply have no size symbols).  Returns
+/// `<prefix>_size_<d>` symbols for the given parameter.
+fn collect_size_syms(meta: &arrange::ArrangementMeta, name: &str) -> Vec<(String, usize)> {
+    // gather every size symbol in the whole arrangement
+    let mut all: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for p in &meta.params {
+        for e in &p.indices {
+            all.extend(e.free_symbols());
+        }
+        for (size, _) in p.levels.iter().flatten() {
+            all.extend(size.free_symbols());
+        }
+    }
+    let mut prefixes: Vec<(u64, String)> = all
+        .iter()
+        .filter_map(|s| {
+            let (prefix, _) = s.split_once("_size_")?;
+            let n: u64 = prefix.strip_prefix("tensor_")?.parse().ok()?;
+            Some((n, prefix.to_string()))
+        })
+        .collect();
+    prefixes.sort();
+    prefixes.dedup();
+    // zip prefixes with non-scalar params in order
+    let non_scalar: Vec<&arrange::ParamMeta> =
+        meta.params.iter().filter(|p| p.source_ndim > 0).collect();
+    let idx = non_scalar
+        .iter()
+        .position(|p| p.name == name)
+        .expect("param");
+    let prefix = &prefixes[idx].1;
+    let param = meta.params.iter().find(|p| p.name == name).expect("param");
+    (0..param.source_ndim)
+        .map(|d| (format!("{prefix}_size_{d}"), d))
+        .collect()
+}

@@ -1,0 +1,189 @@
+//! End-to-end autoregressive inference engine (paper §5.3.2 / Fig 7).
+//!
+//! Loads the tiny-Llama weights and the prefill/decode AOT artifacts for a
+//! kernel variant, then runs greedy decoding with the KV cache
+//! round-tripping through the fixed-shape decode step.  Python is not
+//! involved: this is the L3 request path.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::prng::SplitMix64;
+use crate::runtime::{Executable, HostTensor, Registry};
+
+pub struct Engine {
+    variant: String,
+    prefill: Arc<Executable>,
+    decode: Arc<Executable>,
+    /// weight literals, prebuilt once (the decode hot loop reuses them)
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub tokens: Vec<Vec<i32>>, // [batch][steps]
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub steps: usize,
+    /// end-to-end tokens/second over generated tokens (the Fig 7 metric)
+    pub tokens_per_s: f64,
+}
+
+impl Engine {
+    pub fn new(registry: Arc<Registry>, variant: &str) -> Result<Engine> {
+        let manifest = registry.manifest_arc();
+        let model = manifest
+            .model
+            .as_ref()
+            .context("manifest has no model section — re-run `make artifacts`")?;
+        let prefill = registry.model_step("prefill", variant)?;
+        let decode = registry.model_step("decode", variant)?;
+
+        // load the weight blob and slice it per the manifest table
+        let blob = std::fs::read(manifest.artifact_path(&model.weights_path))
+            .context("reading weights.bin")?;
+        let mut weights = Vec::with_capacity(model.weights.len());
+        for entry in &model.weights {
+            let bytes = blob
+                .get(entry.offset..entry.offset + entry.nbytes)
+                .with_context(|| format!("weight {} out of range", entry.name))?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let t = HostTensor::f32(entry.shape.clone(), data)?;
+            weights.push(t.to_literal()?);
+        }
+
+        Ok(Engine {
+            variant: variant.to_string(),
+            prefill,
+            decode,
+            weights,
+            batch: model.batch,
+            prompt_len: model.prompt,
+            max_seq: model.max_seq,
+            vocab: model.vocab_size,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// A deterministic synthetic prompt (the Fig 7 workload generator).
+    pub fn synth_prompt(&self, seed: u64) -> Vec<i32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..self.batch * self.prompt_len)
+            .map(|_| rng.below(self.vocab as u64) as i32)
+            .collect()
+    }
+
+    /// Greedy-decode `steps` tokens after prefilling `prompt`
+    /// (row-major `[batch, prompt_len]`).
+    pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<DecodeResult> {
+        if prompt.len() != self.batch * self.prompt_len {
+            bail!(
+                "prompt must be batch*prompt_len = {} tokens, got {}",
+                self.batch * self.prompt_len,
+                prompt.len()
+            );
+        }
+        if self.prompt_len + steps > self.max_seq {
+            bail!(
+                "prompt {} + steps {} exceeds the compiled KV-cache capacity {}",
+                self.prompt_len,
+                steps,
+                self.max_seq
+            );
+        }
+        let tokens_lit = HostTensor::i32(
+            vec![self.batch, self.prompt_len],
+            prompt.to_vec(),
+        )?
+        .to_literal()?;
+
+        // ---- prefill ---------------------------------------------------------
+        let t0 = Instant::now();
+        let mut inputs: Vec<&xla::Literal> = self.weights.iter().collect();
+        inputs.push(&tokens_lit);
+        let outs = self.prefill.run_literals(&inputs)?;
+        let prefill_time = t0.elapsed();
+        let (logits, mut cache_k, mut cache_v) = take3(outs)?;
+
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(steps); self.batch];
+        let mut next = argmax_rows(&HostTensor::from_literal(&logits)?)?;
+        for (b, t) in next.iter().enumerate() {
+            tokens[b].push(*t);
+        }
+
+        // ---- decode loop ------------------------------------------------------
+        let t0 = Instant::now();
+        let mut pos = self.prompt_len as i32;
+        for _ in 1..steps {
+            let token_lit = HostTensor::i32(vec![self.batch], next.clone())?.to_literal()?;
+            let pos_lit = xla::Literal::scalar(pos);
+            let mut inputs: Vec<&xla::Literal> = self.weights.iter().collect();
+            inputs.push(&token_lit);
+            inputs.push(&pos_lit);
+            inputs.push(&cache_k);
+            inputs.push(&cache_v);
+            let outs = self.decode.run_literals(&inputs)?;
+            let (logits, ck, cv) = take3(outs)?;
+            cache_k = ck;
+            cache_v = cv;
+            next = argmax_rows(&HostTensor::from_literal(&logits)?)?;
+            for (b, t) in next.iter().enumerate() {
+                tokens[b].push(*t);
+            }
+            pos += 1;
+        }
+        let decode_time = t0.elapsed();
+
+        let generated = (steps * self.batch) as f64;
+        let total = prefill_time.as_secs_f64() + decode_time.as_secs_f64();
+        Ok(DecodeResult {
+            tokens,
+            prefill_time,
+            decode_time,
+            steps,
+            tokens_per_s: generated / total,
+        })
+    }
+}
+
+fn take3(mut outs: Vec<xla::Literal>) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+    if outs.len() != 3 {
+        bail!("model step returned {} outputs, expected 3", outs.len());
+    }
+    let c = outs.pop().unwrap();
+    let b = outs.pop().unwrap();
+    let a = outs.pop().unwrap();
+    Ok((a, b, c))
+}
+
+fn argmax_rows(logits: &HostTensor) -> Result<Vec<i32>> {
+    let data = logits.as_f32()?;
+    if logits.shape.len() != 2 {
+        bail!("logits must be 2-D, got {:?}", logits.shape);
+    }
+    let (rows, cols) = (logits.shape[0], logits.shape[1]);
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let mut best = 0usize;
+        for (i, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = i;
+            }
+        }
+        out.push(best as i32);
+    }
+    Ok(out)
+}

@@ -1,0 +1,53 @@
+//! ninetoothed-repro: the L3 Rust coordinator of the NineToothed
+//! (Huang et al., 2025) reproduction.
+//!
+//! The paper's contribution is a kernel-authoring DSL (L1/L2, in
+//! `python/compile/`); this crate is everything around it that makes the
+//! result a deployable system and regenerates the paper's evaluation:
+//!
+//! * [`symbolic`] / [`tensor`] / [`arrange`] — a full Rust mirror of the
+//!   DSL's tensor-oriented metaprogramming algebra, used to validate
+//!   arrangements and compute launch plans at serve time;
+//! * [`runtime`] — PJRT client, AOT artifact loading, executable registry;
+//! * [`coordinator`] — the kernel-serving system: router, dynamic batcher,
+//!   worker pool, metrics;
+//! * [`inference`] — the end-to-end autoregressive engine of Fig 7;
+//! * [`codemetrics`] — the Table 2 metric suite (raw, cyclomatic, Halstead,
+//!   maintainability index) over Python kernel sources;
+//! * [`harness`] — regenerates every table and figure of the paper's
+//!   evaluation section;
+//! * [`json`] / [`prng`] / [`benchkit`] / [`cli`] — dependency-free
+//!   infrastructure (the offline crate set contains only the xla closure).
+
+pub mod arrange;
+pub mod benchkit;
+pub mod cli;
+pub mod codemetrics;
+pub mod coordinator;
+pub mod harness;
+pub mod inference;
+pub mod json;
+pub mod prng;
+pub mod runtime;
+pub mod symbolic;
+pub mod tensor;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory (env override, then target-relative).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("NT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // walk up from cwd until an `artifacts/manifest.json` is found
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let candidate = dir.join("artifacts");
+        if candidate.join("manifest.json").exists() {
+            return candidate;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! `repro` — the leader entrypoint/CLI of the NineToothed reproduction.
+//!
+//! Subcommands:
+//!   smoke         load + run the golden kernels, verify numerics
+//!   validate      validate all arrangements (structure, goldens, plans)
+//!   code-metrics  regenerate Table 2
+//!   bench-kernels regenerate Fig 6 (single-kernel tasks)
+//!   bench-e2e     regenerate Fig 7 (end-to-end inference)
+//!   serve         run the kernel-serving coordinator demo workload
+//!   inspect       print manifest + launch-plan details
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ninetoothed_repro::{
+    arrange, artifacts_dir, cli::Args, harness,
+    runtime::{Manifest, Registry, Runtime},
+};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("smoke") => smoke(),
+        Some("validate") => validate(),
+        Some("code-metrics") => harness::table2::run(&args),
+        Some("bench-kernels") => harness::fig6::run(&args),
+        Some("bench-e2e") => harness::fig7::run(&args),
+        Some("serve") => harness::serve::run(&args),
+        Some("inspect") => inspect(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: repro <command>\n\
+                 \n\
+                 commands:\n\
+                 \x20 smoke          load + run golden kernels, verify numerics\n\
+                 \x20 validate       validate arrangements (structure, goldens, launch plans)\n\
+                 \x20 code-metrics   regenerate Table 2 (code complexity)\n\
+                 \x20 bench-kernels  regenerate Fig 6 (single-kernel performance)\n\
+                 \x20 bench-e2e      regenerate Fig 7 (end-to-end inference throughput)\n\
+                 \x20 serve          run the kernel-serving coordinator demo\n\
+                 \x20 inspect        print manifest and launch-plan details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn smoke() -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let registry = Registry::new(Runtime::cpu()?, manifest.clone());
+    println!("platform: {}", registry.runtime().platform());
+    harness::golden::check_all(&registry)?;
+    println!("smoke OK");
+    Ok(())
+}
+
+fn validate() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let arrangements = arrange::load_all(&manifest.raw)?;
+    let mut goldens = 0;
+    for a in &arrangements {
+        a.validate_structure()?;
+        goldens += a.check_goldens()?;
+        println!("arrangement {:<12} params={} ok", a.kernel, a.params.len());
+    }
+    println!("validated {} arrangements, {} golden evaluations", arrangements.len(), goldens);
+    harness::validate::catalog_parity(&manifest)?;
+    Ok(())
+}
+
+fn inspect() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("full-scale: {}", manifest.full);
+    println!("kernels ({}):", manifest.kernels.len());
+    for k in &manifest.kernels {
+        let shapes: Vec<String> = k.args.iter().map(|a| format!("{:?}", a.shape)).collect();
+        println!("  {:<10} {:<9} args={} flops={}", k.name, k.variant, shapes.join(","), k.flops);
+    }
+    if let Some(model) = &manifest.model {
+        println!(
+            "model: d={} L={} H={} ff={} vocab={} max_seq={} ({} weights)",
+            model.d_model, model.n_layers, model.n_heads, model.d_ff, model.vocab_size,
+            model.max_seq, model.weights.len()
+        );
+    }
+    Ok(())
+}

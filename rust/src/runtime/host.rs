@@ -1,0 +1,155 @@
+//! Host-side tensors: the coordinator's own nd-array type for staging
+//! kernel inputs/outputs (f32 / i32, row-major contiguous).
+
+use anyhow::{bail, Context, Result};
+
+use crate::prng::SplitMix64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: HostData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: HostData::I32(data) })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape, data: HostData::F32(vec![0.0; n]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor { shape: vec![], data: HostData::I32(vec![v]) }
+    }
+
+    pub fn randn(shape: Vec<usize>, rng: &mut SplitMix64) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape, data: HostData::F32(rng.normal_vec(n)) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Build an `xla::Literal` (copies the data into XLA's layout).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            HostData::F32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            HostData::I32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor { shape: dims, data: HostData::F32(lit.to_vec::<f32>()?) })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor { shape: dims, data: HostData::I32(lit.to_vec::<i32>()?) })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Max |a - b| against another tensor (validation helper).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Read a raw little-endian f32 blob (the golden/weight format).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<HostTensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("{}: expected {} bytes, got {}", path.display(), n * 4, bytes.len());
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        HostTensor::f32(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::f32(vec![3], vec![1.0, 2.5, 3.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = SplitMix64::new(5);
+        let mut r2 = SplitMix64::new(5);
+        assert_eq!(
+            HostTensor::randn(vec![4, 4], &mut r1),
+            HostTensor::randn(vec![4, 4], &mut r2)
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Typed view of `artifacts/manifest.json` (produced by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub name: String,
+    pub variant: String,
+    pub path: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub flops: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelStep {
+    pub kind: String,
+    pub variant: String,
+    pub path: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub prompt: usize,
+    pub weights_path: String,
+    pub weights: Vec<WeightEntry>,
+    pub steps: Vec<ModelStep>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenCase {
+    pub kernel: String,
+    pub inputs: Vec<String>,
+    pub output: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything the Rust side needs from the AOT step.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub full: bool,
+    pub kernels: Vec<KernelArtifact>,
+    pub model: Option<ModelInfo>,
+    pub goldens: Vec<GoldenCase>,
+    pub raw: Json,
+}
+
+fn arg_specs(items: &[Json]) -> Result<Vec<ArgSpec>> {
+    items
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                shape: a.usize_vec("shape")?,
+                dtype: a.str("dtype").unwrap_or("float32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let raw = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut kernels = Vec::new();
+        for k in raw.arr("kernels")? {
+            kernels.push(KernelArtifact {
+                name: k.str("name")?.to_string(),
+                variant: k.str("variant")?.to_string(),
+                path: k.str("path")?.to_string(),
+                args: arg_specs(k.arr("args")?)?,
+                outputs: arg_specs(k.arr("outputs")?)?,
+                flops: k.f64("flops").unwrap_or(0.0) as u64,
+            });
+        }
+
+        let model = match raw.get("model") {
+            Some(m) => {
+                let cfg = m.req("config")?;
+                let mut weights = Vec::new();
+                for w in m.arr("weights")? {
+                    weights.push(WeightEntry {
+                        name: w.str("name")?.to_string(),
+                        shape: w.usize_vec("shape")?,
+                        offset: w.usize("offset")?,
+                        nbytes: w.usize("nbytes")?,
+                    });
+                }
+                let mut steps = Vec::new();
+                for s in m.arr("steps")? {
+                    steps.push(ModelStep {
+                        kind: s.str("kind")?.to_string(),
+                        variant: s.str("variant")?.to_string(),
+                        path: s.str("path")?.to_string(),
+                    });
+                }
+                Some(ModelInfo {
+                    vocab_size: cfg.usize("vocab_size")?,
+                    d_model: cfg.usize("d_model")?,
+                    n_layers: cfg.usize("n_layers")?,
+                    n_heads: cfg.usize("n_heads")?,
+                    d_ff: cfg.usize("d_ff")?,
+                    max_seq: cfg.usize("max_seq")?,
+                    batch: m.usize("batch")?,
+                    prompt: m.usize("prompt")?,
+                    weights_path: m.str("weights_path")?.to_string(),
+                    weights,
+                    steps,
+                })
+            }
+            None => None,
+        };
+
+        let mut goldens = Vec::new();
+        for g in raw.get("golden").and_then(|g| g.as_arr()).unwrap_or(&[]) {
+            goldens.push(GoldenCase {
+                kernel: g.str("kernel")?.to_string(),
+                inputs: g
+                    .arr("inputs")?
+                    .iter()
+                    .filter_map(|s| s.as_str().map(str::to_string))
+                    .collect(),
+                output: g.str("output")?.to_string(),
+                shape: g.usize_vec("shape")?,
+            });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            full: raw.get("full").and_then(Json::as_bool).unwrap_or(false),
+            kernels,
+            model,
+            goldens,
+            raw,
+        })
+    }
+
+    pub fn kernel(&self, name: &str, variant: &str) -> Result<&KernelArtifact> {
+        self.kernels
+            .iter()
+            .find(|k| k.name == name && k.variant == variant)
+            .with_context(|| format!("no artifact for kernel {name}.{variant}"))
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.kernels.iter().map(|k| k.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    pub fn artifact_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}

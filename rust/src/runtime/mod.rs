@@ -1,0 +1,103 @@
+//! Runtime: PJRT client wrapper + AOT artifact loading (L3 <-> L2 bridge).
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (see python/compile/aot.py).
+
+mod host;
+mod manifest;
+mod registry;
+
+pub use host::HostTensor;
+pub use manifest::{GoldenCase, KernelArtifact, Manifest, ModelInfo, WeightEntry};
+pub use registry::{ExecKey, Registry};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled, loaded executable plus its output arity.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+impl Executable {
+    /// Execute with host tensors, returning host tensors.
+    ///
+    /// Handles both root conventions jax's HLO dialect produces: a plain
+    /// array root for single-output functions and a tuple root for
+    /// multi-output functions.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let out = self.run_literals(&literals)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute with pre-built literals (hot-path variant: callers keep
+    /// reusable input literals — weights are passed by reference so the
+    /// decode loop never re-serializes them).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let buffers = &result[0];
+        let mut literals = Vec::with_capacity(self.n_outputs);
+        if buffers.len() == 1 && self.n_outputs > 1 {
+            // tuple root: one buffer holding the whole tuple
+            let lit = buffers[0].to_literal_sync()?;
+            literals.extend(lit.to_tuple()?);
+        } else {
+            for b in buffers.iter() {
+                let lit = b.to_literal_sync()?;
+                // a 1-tuple root still needs unwrapping
+                if self.n_outputs == 1 && matches!(lit.shape(), Ok(xla::Shape::Tuple(_))) {
+                    literals.extend(lit.to_tuple()?);
+                } else {
+                    literals.push(lit);
+                }
+            }
+        }
+        anyhow::ensure!(
+            literals.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            literals.len()
+        );
+        Ok(literals)
+    }
+}
+
+/// The PJRT client plus compile cache — shared by coordinator and harness.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load_artifact(&self, path: &Path, name: &str, n_outputs: usize) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { name: name.to_string(), exe, n_outputs })
+    }
+}

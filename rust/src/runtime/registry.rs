@@ -1,0 +1,91 @@
+//! Executable registry: lazy compile-on-first-use cache over the manifest.
+//!
+//! One compiled executable per (kernel, variant) — the Rust analogue of the
+//! DSL's per-specialization cache.  Thread-safe: the coordinator's worker
+//! pool shares one registry.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{Executable, Manifest, Runtime};
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ExecKey {
+    pub name: String,
+    pub variant: String,
+}
+
+pub struct Registry {
+    runtime: Runtime,
+    manifest: Arc<Manifest>,
+    cache: Mutex<HashMap<ExecKey, Arc<Executable>>>,
+}
+
+impl Registry {
+    pub fn new(runtime: Runtime, manifest: Arc<Manifest>) -> Registry {
+        Registry { runtime, manifest, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn manifest_arc(&self) -> Arc<Manifest> {
+        self.manifest.clone()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Fetch (compiling if needed) the executable for a kernel task.
+    pub fn kernel(&self, name: &str, variant: &str) -> Result<Arc<Executable>> {
+        let key = ExecKey { name: name.to_string(), variant: variant.to_string() };
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.kernel(name, variant)?;
+        let exe = Arc::new(self.runtime.load_artifact(
+            &self.manifest.artifact_path(&art.path),
+            &format!("{name}.{variant}"),
+            art.outputs.len(),
+        )?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Fetch a model-step executable (prefill/decode return 3 outputs).
+    pub fn model_step(&self, kind: &str, variant: &str) -> Result<Arc<Executable>> {
+        let key = ExecKey { name: format!("model.{kind}"), variant: variant.to_string() };
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let model = self
+            .manifest
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no model section"))?;
+        let step = model
+            .steps
+            .iter()
+            .find(|s| s.kind == kind && s.variant == variant)
+            .ok_or_else(|| anyhow::anyhow!("no model step {kind}.{variant}"))?;
+        let exe = Arc::new(self.runtime.load_artifact(
+            &self.manifest.artifact_path(&step.path),
+            &format!("model.{kind}.{variant}"),
+            3,
+        )?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

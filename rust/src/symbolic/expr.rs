@@ -1,0 +1,402 @@
+//! Expression trees: construction, folding, substitution, evaluation,
+//! interval bounds.  Semantics match Python exactly (floor division and
+//! modulo follow Python's sign rules).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::rc::Rc;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ExprError {
+    #[error("unbound symbol {0:?}")]
+    Unbound(String),
+    #[error("division by zero in {0}")]
+    DivZero(String),
+    #[error("cannot bound {0}")]
+    Unbounded(String),
+    #[error("{0} is not constant")]
+    NotConst(String),
+}
+
+/// A symbolic integer expression.  Cheap to clone (`Rc` nodes).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    Const(i64),
+    Sym(Rc<str>),
+    Add(Rc<Expr>, Rc<Expr>),
+    Sub(Rc<Expr>, Rc<Expr>),
+    Mul(Rc<Expr>, Rc<Expr>),
+    FloorDiv(Rc<Expr>, Rc<Expr>),
+    Mod(Rc<Expr>, Rc<Expr>),
+    /// ceiling division — `cdiv(a, b)` in the manifest
+    CeilDiv(Rc<Expr>, Rc<Expr>),
+    Min(Rc<Expr>, Rc<Expr>),
+    Max(Rc<Expr>, Rc<Expr>),
+    Neg(Rc<Expr>),
+}
+
+/// Python floor division (rounds toward negative infinity).
+pub fn py_floordiv(a: i64, b: i64) -> i64 {
+    let q = a / b;
+    if (a % b != 0) && ((a < 0) != (b < 0)) {
+        q - 1
+    } else {
+        q
+    }
+}
+
+/// Python modulo (result has the divisor's sign).
+pub fn py_mod(a: i64, b: i64) -> i64 {
+    let r = a % b;
+    if r != 0 && ((r < 0) != (b < 0)) {
+        r + b
+    } else {
+        r
+    }
+}
+
+/// Python-semantics ceiling division, as the manifest's `cdiv` helper
+/// (`-(-a // b)`).
+pub fn py_cdiv(a: i64, b: i64) -> i64 {
+    -py_floordiv(-a, b)
+}
+
+impl Expr {
+    pub fn sym(name: &str) -> Expr {
+        Expr::Sym(Rc::from(name))
+    }
+
+    pub fn constant(&self) -> Option<i64> {
+        match self {
+            Expr::Const(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    // -- folding constructors (mirror symbols.py `_fold`) ---------------------
+
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) => Expr::Const(x + y),
+            (Some(0), _) => b,
+            (_, Some(0)) => a,
+            _ => Expr::Add(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) => Expr::Const(x - y),
+            (_, Some(0)) => a,
+            _ => Expr::Sub(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) => Expr::Const(x * y),
+            (Some(0), _) | (_, Some(0)) => Expr::Const(0),
+            (Some(1), _) => b,
+            (_, Some(1)) => a,
+            _ => Expr::Mul(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn floordiv(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) if y != 0 => Expr::Const(py_floordiv(x, y)),
+            (_, Some(1)) => a,
+            _ => Expr::FloorDiv(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn modulo(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) if y != 0 => Expr::Const(py_mod(x, y)),
+            (_, Some(1)) => Expr::Const(0),
+            _ => Expr::Mod(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn cdiv(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) if y != 0 => Expr::Const(py_cdiv(x, y)),
+            _ if a == b => Expr::Const(1), // structural identity, sizes are positive
+            _ => Expr::CeilDiv(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn min2(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) => Expr::Const(x.min(y)),
+            _ => Expr::Min(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn max2(a: Expr, b: Expr) -> Expr {
+        match (a.constant(), b.constant()) {
+            (Some(x), Some(y)) => Expr::Const(x.max(y)),
+            _ => Expr::Max(Rc::new(a), Rc::new(b)),
+        }
+    }
+
+    pub fn neg(a: Expr) -> Expr {
+        match a.constant() {
+            Some(x) => Expr::Const(-x),
+            None => Expr::Neg(Rc::new(a)),
+        }
+    }
+
+    // -- interrogation ---------------------------------------------------------
+
+    pub fn free_symbols(&self) -> BTreeSet<String> {
+        let mut set = BTreeSet::new();
+        self.collect_symbols(&mut set);
+        set
+    }
+
+    fn collect_symbols(&self, set: &mut BTreeSet<String>) {
+        match self {
+            Expr::Const(_) => {}
+            Expr::Sym(s) => {
+                set.insert(s.to_string());
+            }
+            Expr::Neg(a) => a.collect_symbols(set),
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::FloorDiv(a, b)
+            | Expr::Mod(a, b)
+            | Expr::CeilDiv(a, b)
+            | Expr::Min(a, b)
+            | Expr::Max(a, b) => {
+                a.collect_symbols(set);
+                b.collect_symbols(set);
+            }
+        }
+    }
+
+    // -- evaluation --------------------------------------------------------------
+
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, ExprError> {
+        match self {
+            Expr::Const(c) => Ok(*c),
+            Expr::Sym(s) => env
+                .get(s.as_ref())
+                .copied()
+                .ok_or_else(|| ExprError::Unbound(s.to_string())),
+            Expr::Neg(a) => Ok(-a.eval(env)?),
+            Expr::Add(a, b) => Ok(a.eval(env)? + b.eval(env)?),
+            Expr::Sub(a, b) => Ok(a.eval(env)? - b.eval(env)?),
+            Expr::Mul(a, b) => Ok(a.eval(env)? * b.eval(env)?),
+            Expr::FloorDiv(a, b) => {
+                let d = b.eval(env)?;
+                if d == 0 {
+                    return Err(ExprError::DivZero(self.to_string()));
+                }
+                Ok(py_floordiv(a.eval(env)?, d))
+            }
+            Expr::Mod(a, b) => {
+                let d = b.eval(env)?;
+                if d == 0 {
+                    return Err(ExprError::DivZero(self.to_string()));
+                }
+                Ok(py_mod(a.eval(env)?, d))
+            }
+            Expr::CeilDiv(a, b) => {
+                let d = b.eval(env)?;
+                if d == 0 {
+                    return Err(ExprError::DivZero(self.to_string()));
+                }
+                Ok(py_cdiv(a.eval(env)?, d))
+            }
+            Expr::Min(a, b) => Ok(a.eval(env)?.min(b.eval(env)?)),
+            Expr::Max(a, b) => Ok(a.eval(env)?.max(b.eval(env)?)),
+        }
+    }
+
+    /// Partial evaluation: substitute bound symbols, fold what folds.
+    pub fn substitute(&self, env: &BTreeMap<String, Expr>) -> Expr {
+        match self {
+            Expr::Const(c) => Expr::Const(*c),
+            Expr::Sym(s) => env.get(s.as_ref()).cloned().unwrap_or_else(|| self.clone()),
+            Expr::Neg(a) => Expr::neg(a.substitute(env)),
+            Expr::Add(a, b) => Expr::add(a.substitute(env), b.substitute(env)),
+            Expr::Sub(a, b) => Expr::sub(a.substitute(env), b.substitute(env)),
+            Expr::Mul(a, b) => Expr::mul(a.substitute(env), b.substitute(env)),
+            Expr::FloorDiv(a, b) => Expr::floordiv(a.substitute(env), b.substitute(env)),
+            Expr::Mod(a, b) => Expr::modulo(a.substitute(env), b.substitute(env)),
+            Expr::CeilDiv(a, b) => Expr::cdiv(a.substitute(env), b.substitute(env)),
+            Expr::Min(a, b) => Expr::min2(a.substitute(env), b.substitute(env)),
+            Expr::Max(a, b) => Expr::max2(a.substitute(env), b.substitute(env)),
+        }
+    }
+
+    // -- interval bounds (mirror of symbols.py `_bounds`) --------------------------
+
+    /// Conservative interval of the expression given per-symbol ranges.
+    /// Used to compute padded extents (the pad-and-crop launch plan).
+    pub fn bounds(
+        &self,
+        ranges: &BTreeMap<String, (i64, i64)>,
+    ) -> Result<(i64, i64), ExprError> {
+        match self {
+            Expr::Const(c) => Ok((*c, *c)),
+            Expr::Sym(s) => ranges
+                .get(s.as_ref())
+                .copied()
+                .ok_or_else(|| ExprError::Unbound(s.to_string())),
+            Expr::Neg(a) => {
+                let (lo, hi) = a.bounds(ranges)?;
+                Ok((-hi, -lo))
+            }
+            Expr::Add(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                Ok((alo + blo, ahi + bhi))
+            }
+            Expr::Sub(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                Ok((alo - bhi, ahi - blo))
+            }
+            Expr::Mul(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                let p = [alo * blo, alo * bhi, ahi * blo, ahi * bhi];
+                Ok((*p.iter().min().unwrap(), *p.iter().max().unwrap()))
+            }
+            Expr::FloorDiv(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                if blo <= 0 {
+                    return Err(ExprError::Unbounded(self.to_string()));
+                }
+                let c = [
+                    py_floordiv(alo, blo),
+                    py_floordiv(alo, bhi),
+                    py_floordiv(ahi, blo),
+                    py_floordiv(ahi, bhi),
+                ];
+                Ok((*c.iter().min().unwrap(), *c.iter().max().unwrap()))
+            }
+            Expr::Mod(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                if blo <= 0 {
+                    return Err(ExprError::Unbounded(self.to_string()));
+                }
+                if alo >= 0 {
+                    Ok((0, ahi.min(bhi - 1)))
+                } else {
+                    Ok((-(bhi - 1), bhi - 1))
+                }
+            }
+            Expr::CeilDiv(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                if blo <= 0 {
+                    return Err(ExprError::Unbounded(self.to_string()));
+                }
+                let c = [
+                    py_cdiv(alo, blo),
+                    py_cdiv(alo, bhi),
+                    py_cdiv(ahi, blo),
+                    py_cdiv(ahi, bhi),
+                ];
+                Ok((*c.iter().min().unwrap(), *c.iter().max().unwrap()))
+            }
+            Expr::Min(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                Ok((alo.min(blo), ahi.min(bhi)))
+            }
+            Expr::Max(a, b) => {
+                let (alo, ahi) = a.bounds(ranges)?;
+                let (blo, bhi) = b.bounds(ranges)?;
+                Ok((alo.max(blo), ahi.max(bhi)))
+            }
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    /// Renders with the same conventions as Python's `ast.unparse`
+    /// (fully parenthesized where precedence demands it).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn prec(e: &Expr) -> u8 {
+            match e {
+                Expr::Add(..) | Expr::Sub(..) => 1,
+                Expr::Mul(..) | Expr::FloorDiv(..) | Expr::Mod(..) => 2,
+                Expr::Neg(..) => 3,
+                _ => 4,
+            }
+        }
+        fn go(e: &Expr, parent: u8, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            let p = prec(e);
+            let need = p < parent;
+            if need {
+                write!(f, "(")?;
+            }
+            match e {
+                Expr::Const(c) => write!(f, "{c}")?,
+                Expr::Sym(s) => write!(f, "{s}")?,
+                Expr::Neg(a) => {
+                    write!(f, "-")?;
+                    go(a, 3, f)?;
+                }
+                Expr::Add(a, b) => {
+                    go(a, 1, f)?;
+                    write!(f, " + ")?;
+                    go(b, 2, f)?;
+                }
+                Expr::Sub(a, b) => {
+                    go(a, 1, f)?;
+                    write!(f, " - ")?;
+                    go(b, 2, f)?;
+                }
+                Expr::Mul(a, b) => {
+                    go(a, 2, f)?;
+                    write!(f, " * ")?;
+                    go(b, 3, f)?;
+                }
+                Expr::FloorDiv(a, b) => {
+                    go(a, 2, f)?;
+                    write!(f, " // ")?;
+                    go(b, 3, f)?;
+                }
+                Expr::Mod(a, b) => {
+                    go(a, 2, f)?;
+                    write!(f, " % ")?;
+                    go(b, 3, f)?;
+                }
+                Expr::CeilDiv(a, b) => {
+                    write!(f, "cdiv(")?;
+                    go(a, 0, f)?;
+                    write!(f, ", ")?;
+                    go(b, 0, f)?;
+                    write!(f, ")")?;
+                }
+                Expr::Min(a, b) => {
+                    write!(f, "min(")?;
+                    go(a, 0, f)?;
+                    write!(f, ", ")?;
+                    go(b, 0, f)?;
+                    write!(f, ")")?;
+                }
+                Expr::Max(a, b) => {
+                    write!(f, "max(")?;
+                    go(a, 0, f)?;
+                    write!(f, ", ")?;
+                    go(b, 0, f)?;
+                    write!(f, ")")?;
+                }
+            }
+            if need {
+                write!(f, ")")?;
+            }
+            Ok(())
+        }
+        go(self, 0, f)
+    }
+}

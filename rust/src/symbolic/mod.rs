@@ -1,0 +1,18 @@
+//! Rust mirror of the NineToothed symbolic-expression algebra
+//! (`python/compile/ninetoothed/symbols.py`).
+//!
+//! The AOT manifest carries every arranged parameter's index expressions
+//! (source-to-target mapping, paper §3.2.2) and level-size expressions
+//! (tile-to-program mapping, §3.2.1) as rendered Python expressions.  This
+//! module parses, simplifies, evaluates and bounds them so the coordinator
+//! can *independently* validate arrangements and compute launch plans —
+//! grid sizes, padded extents, per-program offsets — without Python.
+
+mod expr;
+mod parser;
+
+pub use expr::{Expr, ExprError};
+pub use parser::parse;
+
+#[cfg(test)]
+mod tests;

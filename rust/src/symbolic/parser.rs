@@ -1,0 +1,176 @@
+//! Parser for the Python-expression strings the AOT manifest carries
+//! (the output of `ast.unparse` over the DSL's expression trees).
+//!
+//! Grammar (precedence low to high):
+//!
+//! ```text
+//! expr    := term (('+' | '-') term)*
+//! term    := unary (('*' | '//' | '%') unary)*
+//! unary   := '-' unary | atom
+//! atom    := INT | NAME | NAME '(' expr (',' expr)* ')' | '(' expr ')'
+//! ```
+
+use super::expr::Expr;
+
+#[derive(Debug, thiserror::Error)]
+#[error("expression parse error at byte {pos}: {msg} in {src:?}")]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+    pub src: String,
+}
+
+pub fn parse(src: &str) -> Result<Expr, ParseError> {
+    let mut p = P { src, bytes: src.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let e = p.expr()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing input"));
+    }
+    Ok(e)
+}
+
+struct P<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.into(), src: self.src.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(tok.as_bytes()) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.term()?;
+        loop {
+            self.skip_ws();
+            if self.eat("+") {
+                let rhs = self.term()?;
+                lhs = Expr::add(lhs, rhs);
+            } else if self.peek() == Some(b'-') {
+                self.pos += 1;
+                let rhs = self.term()?;
+                lhs = Expr::sub(lhs, rhs);
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary()?;
+        loop {
+            self.skip_ws();
+            if self.eat("//") {
+                let rhs = self.unary()?;
+                lhs = Expr::floordiv(lhs, rhs);
+            } else if self.eat("*") {
+                let rhs = self.unary()?;
+                lhs = Expr::mul(lhs, rhs);
+            } else if self.eat("%") {
+                let rhs = self.unary()?;
+                lhs = Expr::modulo(lhs, rhs);
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        self.skip_ws();
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+            let inner = self.unary()?;
+            return Ok(Expr::neg(inner));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr, ParseError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'(') => {
+                self.pos += 1;
+                let e = self.expr()?;
+                self.skip_ws();
+                if self.peek() != Some(b')') {
+                    return Err(self.err("expected ')'"));
+                }
+                self.pos += 1;
+                Ok(e)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.pos;
+                while matches!(self.peek(), Some(d) if d.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+                let text = &self.src[start..self.pos];
+                text.parse::<i64>()
+                    .map(Expr::Const)
+                    .map_err(|_| self.err("integer overflow"))
+            }
+            Some(c) if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = self.pos;
+                while matches!(self.peek(), Some(d) if d == b'_' || d.is_ascii_alphanumeric()) {
+                    self.pos += 1;
+                }
+                let name = &self.src[start..self.pos];
+                self.skip_ws();
+                if self.peek() == Some(b'(') {
+                    self.pos += 1;
+                    let mut args = vec![self.expr()?];
+                    loop {
+                        self.skip_ws();
+                        match self.peek() {
+                            Some(b',') => {
+                                self.pos += 1;
+                                args.push(self.expr()?);
+                            }
+                            Some(b')') => {
+                                self.pos += 1;
+                                break;
+                            }
+                            _ => return Err(self.err("expected ',' or ')'")),
+                        }
+                    }
+                    if args.len() != 2 {
+                        return Err(self.err("calls take exactly two arguments"));
+                    }
+                    let b = args.pop().unwrap();
+                    let a = args.pop().unwrap();
+                    match name {
+                        "cdiv" => Ok(Expr::cdiv(a, b)),
+                        "min" => Ok(Expr::min2(a, b)),
+                        "max" => Ok(Expr::max2(a, b)),
+                        other => Err(self.err(&format!("unknown function {other:?}"))),
+                    }
+                } else {
+                    Ok(Expr::sym(name))
+                }
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+}

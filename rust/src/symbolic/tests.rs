@@ -1,0 +1,196 @@
+//! Unit + property tests for the symbolic mirror.  The property tests use
+//! the in-repo PRNG (`crate::prng`) as the offline stand-in for proptest.
+
+use std::collections::BTreeMap;
+
+use super::{parse, Expr};
+use crate::prng::SplitMix64;
+
+fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+#[test]
+fn parses_and_evaluates_basic() {
+    let e = parse("a * 4 + b").unwrap();
+    assert_eq!(e.eval(&env(&[("a", 3), ("b", 5)])).unwrap(), 17);
+}
+
+#[test]
+fn parses_cdiv_min_max() {
+    let e = parse("cdiv(a, 4) + min(a, 3) + max(a, 100)").unwrap();
+    assert_eq!(e.eval(&env(&[("a", 10)])).unwrap(), 3 + 3 + 100);
+}
+
+#[test]
+fn parses_floordiv_mod_precedence() {
+    // (w // 5) % 3 == w // 5 % 3 under Python precedence
+    let a = parse("(w // 5) % 3").unwrap();
+    let b = parse("w // 5 % 3").unwrap();
+    for w in 0..100 {
+        let e = env(&[("w", w)]);
+        assert_eq!(a.eval(&e).unwrap(), b.eval(&e).unwrap());
+    }
+}
+
+#[test]
+fn python_division_semantics() {
+    let e = parse("a // b").unwrap();
+    assert_eq!(e.eval(&env(&[("a", -7), ("b", 2)])).unwrap(), -4); // not -3
+    let m = parse("a % b").unwrap();
+    assert_eq!(m.eval(&env(&[("a", -7), ("b", 2)])).unwrap(), 1);
+}
+
+#[test]
+fn unary_minus() {
+    let e = parse("-a + -3").unwrap();
+    assert_eq!(e.eval(&env(&[("a", 5)])).unwrap(), -8);
+}
+
+#[test]
+fn folding_via_substitute() {
+    let e = parse("a * b + c").unwrap();
+    let sub: BTreeMap<String, Expr> = [
+        ("a".to_string(), Expr::Const(0)),
+        ("c".to_string(), Expr::sym("d")),
+    ]
+    .into_iter()
+    .collect();
+    let folded = e.substitute(&sub);
+    assert_eq!(folded, Expr::sym("d"));
+}
+
+#[test]
+fn unbound_symbol_errors() {
+    let e = parse("a + b").unwrap();
+    assert!(e.eval(&env(&[("a", 1)])).is_err());
+}
+
+#[test]
+fn rejects_bad_syntax() {
+    assert!(parse("a +").is_err());
+    assert!(parse("(a").is_err());
+    assert!(parse("foo(a, b)").is_err());
+    assert!(parse("a ** b").is_err());
+}
+
+#[test]
+fn display_roundtrip() {
+    for src in [
+        "a * 4 + b",
+        "(a + b) * c",
+        "cdiv(x_size_0, 64)",
+        "(w // 5) % 3",
+        "a - (b - c)",
+        "-a * 3",
+    ] {
+        let e = parse(src).unwrap();
+        let e2 = parse(&e.to_string()).unwrap();
+        let vars = ["a", "b", "c", "w", "x_size_0"];
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..50 {
+            let mut bindings = BTreeMap::new();
+            for v in vars {
+                bindings.insert(v.to_string(), (rng.next_u64() % 97) as i64 + 1);
+            }
+            assert_eq!(e.eval(&bindings).unwrap(), e2.eval(&bindings).unwrap(), "{src}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests
+// ---------------------------------------------------------------------------
+
+/// Random expression generator for the property tests.
+fn random_expr(rng: &mut SplitMix64, depth: usize) -> Expr {
+    let vars = ["a", "b", "c"];
+    if depth == 0 || rng.next_u64() % 4 == 0 {
+        return if rng.next_u64() % 2 == 0 {
+            Expr::Const((rng.next_u64() % 21) as i64 - 10)
+        } else {
+            Expr::sym(vars[(rng.next_u64() % 3) as usize])
+        };
+    }
+    let a = random_expr(rng, depth - 1);
+    let b = random_expr(rng, depth - 1);
+    match rng.next_u64() % 7 {
+        0 => Expr::add(a, b),
+        1 => Expr::sub(a, b),
+        2 => Expr::mul(a, b),
+        3 => Expr::floordiv(a, Expr::max2(b, Expr::Const(1))),
+        4 => Expr::modulo(a, Expr::max2(b, Expr::Const(1))),
+        5 => Expr::min2(a, b),
+        _ => Expr::max2(a, b),
+    }
+}
+
+#[test]
+fn prop_display_parse_roundtrip() {
+    let mut rng = SplitMix64::new(42);
+    for _ in 0..500 {
+        let e = random_expr(&mut rng, 4);
+        let parsed = parse(&e.to_string()).unwrap_or_else(|err| {
+            panic!("failed to reparse {e}: {err}");
+        });
+        for trial in 0..10 {
+            let bindings = env(&[
+                ("a", (trial * 13 % 29) - 5),
+                ("b", (trial * 7 % 23) - 3),
+                ("c", trial),
+            ]);
+            assert_eq!(
+                e.eval(&bindings).unwrap(),
+                parsed.eval(&bindings).unwrap(),
+                "mismatch for {e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bounds_sound() {
+    // bounds() must contain every concrete evaluation — the padding
+    // soundness property the generated launch plans rely on.
+    let mut rng = SplitMix64::new(9);
+    for _ in 0..300 {
+        let e = random_expr(&mut rng, 3);
+        let mut ranges = BTreeMap::new();
+        ranges.insert("a".to_string(), (0i64, 7i64));
+        ranges.insert("b".to_string(), (1i64, 5i64));
+        ranges.insert("c".to_string(), (2i64, 9i64));
+        let Ok((lo, hi)) = e.bounds(&ranges) else {
+            continue; // divisor range includes nonpositive values: skipped
+        };
+        for a in 0..=7 {
+            for b in 1..=5 {
+                for c in 2..=9 {
+                    let bindings = env(&[("a", a), ("b", b), ("c", c)]);
+                    let v = e.eval(&bindings).unwrap();
+                    assert!(
+                        lo <= v && v <= hi,
+                        "{e}: value {v} outside [{lo}, {hi}] at a={a} b={b} c={c}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_substitute_commutes_with_eval() {
+    let mut rng = SplitMix64::new(123);
+    for _ in 0..300 {
+        let e = random_expr(&mut rng, 3);
+        // substitute a -> 3 then eval(b, c) must equal eval(a=3, b, c)
+        let sub: BTreeMap<String, Expr> = [("a".to_string(), Expr::Const(3))].into_iter().collect();
+        let subbed = e.substitute(&sub);
+        let full = env(&[("a", 3), ("b", 4), ("c", 5)]);
+        let partial = env(&[("b", 4), ("c", 5)]);
+        match (e.eval(&full), subbed.eval(&partial)) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "{e}"),
+            (Err(_), Err(_)) => {}
+            (x, y) => panic!("divergent results for {e}: {x:?} vs {y:?}"),
+        }
+    }
+}

@@ -1,0 +1,408 @@
+//! Rust mirror of the hierarchical symbolic tensor and the meta-operations
+//! of paper Table 1 (`python/compile/ninetoothed/tensor.py`).
+//!
+//! The coordinator uses this to re-derive arrangements independently of the
+//! Python DSL: the ten paper arrangements are re-expressed in Rust
+//! (`crate::arrange::catalog`) and cross-checked against the manifest
+//! metadata the AOT step exported — a structural regression test that the
+//! two implementations of the algebra agree.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::symbolic::Expr;
+
+/// One dimension of one level: a size expression plus its index variable.
+#[derive(Debug, Clone)]
+pub struct Dim {
+    pub size: Expr,
+    pub var: String,
+}
+
+/// A hierarchical symbolic tensor (levels + per-source-dim index exprs).
+#[derive(Debug, Clone)]
+pub struct SymTensor {
+    pub name: String,
+    pub source_ndim: usize,
+    /// level 0 is outermost; the innermost level is the application tile
+    pub levels: Vec<Vec<Dim>>,
+    /// source-to-target mapping: one expression per source dimension
+    pub indices: Vec<Expr>,
+    /// expressions that must evaluate to 1 at specialization time
+    pub checks: Vec<Expr>,
+    /// which level "dtype views" operate on
+    level_offset: usize,
+    counter: u64,
+}
+
+impl SymTensor {
+    pub fn new(name: &str, ndim: usize) -> SymTensor {
+        let mut t = SymTensor {
+            name: name.to_string(),
+            source_ndim: ndim,
+            levels: vec![Vec::new()],
+            indices: Vec::new(),
+            checks: Vec::new(),
+            level_offset: 0,
+            counter: 0,
+        };
+        for d in 0..ndim {
+            let var = t.fresh(&format!("{name}{d}"));
+            t.levels[0].push(Dim { size: Expr::sym(&format!("{name}_size_{d}")), var: var.clone() });
+            t.indices.push(Expr::sym(&var));
+        }
+        t
+    }
+
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("_rs_{}_{}_{}", self.name, prefix, self.counter)
+    }
+
+    pub fn shape(&self) -> Vec<Expr> {
+        self.levels[self.level_offset].iter().map(|d| d.size.clone()).collect()
+    }
+
+    /// A view one level down (the paper's `t.dtype`).
+    pub fn dtype(&self) -> SymTensor {
+        let mut v = self.clone();
+        v.level_offset += 1;
+        assert!(v.level_offset < v.levels.len(), "dtype view past innermost level");
+        v
+    }
+
+    /// The paper's `t.dtype = view` assignment.
+    pub fn set_dtype(&mut self, view: SymTensor) {
+        self.levels = view.levels;
+        self.indices = view.indices;
+        self.checks = view.checks;
+        self.counter = self.counter.max(view.counter);
+    }
+
+    fn substitute_indices(&mut self, mapping: &BTreeMap<String, Expr>) {
+        for e in &mut self.indices {
+            *e = e.substitute(mapping);
+        }
+    }
+
+    // -- meta-operations -------------------------------------------------------
+
+    /// `tile(tile_shape, strides)`; `None` entries mean -1 (defaults).
+    pub fn tile(&self, tile_shape: &[Option<Expr>], strides: Option<&[Option<Expr>]>) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        if tile_shape.len() != current.len() {
+            bail!("tile shape rank {} != level rank {}", tile_shape.len(), current.len());
+        }
+        let mut out = self.clone();
+        let mut outer = Vec::new();
+        let mut inner = Vec::new();
+        let mut mapping = BTreeMap::new();
+        for (i, dim) in current.iter().enumerate() {
+            let t = tile_shape[i].clone().unwrap_or_else(|| dim.size.clone());
+            let s = strides
+                .and_then(|ss| ss[i].clone())
+                .unwrap_or_else(|| t.clone());
+            let outer_size = if s == t {
+                Expr::cdiv(dim.size.clone(), t.clone())
+            } else {
+                Expr::add(
+                    Expr::floordiv(Expr::sub(dim.size.clone(), t.clone()), s.clone()),
+                    Expr::Const(1),
+                )
+            };
+            let ov = out.fresh("o");
+            let iv = out.fresh("t");
+            mapping.insert(
+                dim.var.clone(),
+                Expr::add(Expr::mul(Expr::sym(&ov), s), Expr::sym(&iv)),
+            );
+            outer.push(Dim { size: outer_size, var: ov });
+            inner.push(Dim { size: t, var: iv });
+        }
+        let off = out.level_offset;
+        out.levels.splice(off..off + 1, [outer, inner]);
+        out.substitute_indices(&mapping);
+        Ok(out)
+    }
+
+    /// `expand(shape)`; `None` entries mean -1 (keep).
+    pub fn expand(&self, shape: &[Option<Expr>]) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        if shape.len() != current.len() {
+            bail!("expand rank mismatch");
+        }
+        let mut out = self.clone();
+        let mut dims = Vec::new();
+        let mut mapping = BTreeMap::new();
+        for (dim, new_size) in current.iter().zip(shape) {
+            match new_size {
+                None => dims.push(dim.clone()),
+                Some(size) => {
+                    match dim.size.constant() {
+                        Some(1) => {}
+                        Some(_) => bail!("cannot expand non-singleton dim {}", dim.size),
+                        None => out.checks.push(dim.size.clone()),
+                    }
+                    mapping.insert(dim.var.clone(), Expr::Const(0));
+                    let var = out.fresh("e");
+                    dims.push(Dim { size: size.clone(), var });
+                }
+            }
+        }
+        out.levels[self.level_offset] = dims;
+        out.substitute_indices(&mapping);
+        Ok(out)
+    }
+
+    pub fn squeeze(&self, dims: &[i64]) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        let n = current.len() as i64;
+        let mut drop: Vec<usize> = dims
+            .iter()
+            .map(|&d| {
+                let d = if d < 0 { d + n } else { d };
+                usize::try_from(d).ok().filter(|&d| d < current.len())
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow::anyhow!("squeeze dim out of range"))?;
+        drop.sort_unstable();
+        let mut out = self.clone();
+        let mut kept = Vec::new();
+        let mut mapping = BTreeMap::new();
+        for (i, dim) in current.iter().enumerate() {
+            if drop.contains(&i) {
+                match dim.size.constant() {
+                    Some(1) => {}
+                    Some(_) => bail!("cannot squeeze dim of size {}", dim.size),
+                    None => out.checks.push(dim.size.clone()),
+                }
+                mapping.insert(dim.var.clone(), Expr::Const(0));
+            } else {
+                kept.push(dim.clone());
+            }
+        }
+        out.levels[self.level_offset] = kept;
+        out.substitute_indices(&mapping);
+        Ok(out)
+    }
+
+    pub fn unsqueeze(&self, dim: i64) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        let n = current.len() as i64 + 1;
+        let d = if dim < 0 { dim + n } else { dim };
+        let d = usize::try_from(d)
+            .ok()
+            .filter(|&d| d <= current.len())
+            .ok_or_else(|| anyhow::anyhow!("unsqueeze dim out of range"))?;
+        let mut out = self.clone();
+        let var = out.fresh("u");
+        out.levels[self.level_offset].insert(d, Dim { size: Expr::Const(1), var });
+        Ok(out)
+    }
+
+    pub fn permute(&self, order: &[usize]) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        let mut sorted = order.to_vec();
+        sorted.sort_unstable();
+        if sorted != (0..current.len()).collect::<Vec<_>>() {
+            bail!("invalid permutation {order:?}");
+        }
+        let mut out = self.clone();
+        out.levels[self.level_offset] = order.iter().map(|&d| current[d].clone()).collect();
+        Ok(out)
+    }
+
+    /// `flatten(start, end)` with Python-slice (exclusive-end) semantics.
+    pub fn flatten(&self, start: usize, end: Option<usize>) -> Result<SymTensor> {
+        let current = self.levels[self.level_offset].clone();
+        let end = end.unwrap_or(current.len());
+        if !(start < end && end <= current.len()) {
+            bail!("invalid flatten range [{start}, {end})");
+        }
+        let merged = &current[start..end];
+        let mut total = merged[0].size.clone();
+        for d in &merged[1..] {
+            total = Expr::mul(total, d.size.clone());
+        }
+        let mut out = self.clone();
+        let fv = out.fresh("f");
+        let w = Expr::sym(&fv);
+        let mut mapping = BTreeMap::new();
+        let mut trailing = Expr::Const(1);
+        for d in merged.iter().rev() {
+            let component = if trailing == Expr::Const(1) {
+                Expr::modulo(w.clone(), d.size.clone())
+            } else {
+                Expr::modulo(Expr::floordiv(w.clone(), trailing.clone()), d.size.clone())
+            };
+            mapping.insert(d.var.clone(), component);
+            trailing = Expr::mul(trailing, d.size.clone());
+        }
+        // the outermost merged dim needs no modulo
+        let first = &merged[0];
+        let rest = Expr::floordiv(trailing.clone(), first.size.clone());
+        let top = if rest == Expr::Const(1) {
+            w.clone()
+        } else {
+            Expr::floordiv(w.clone(), rest)
+        };
+        mapping.insert(first.var.clone(), top);
+
+        let mut dims = current[..start].to_vec();
+        dims.push(Dim { size: total, var: fv });
+        dims.extend_from_slice(&current[end..]);
+        out.levels[self.level_offset] = dims;
+        out.substitute_indices(&mapping);
+        Ok(out)
+    }
+
+    /// `ravel()`: collapse all levels (from the view level down) into one.
+    pub fn ravel(&self) -> SymTensor {
+        let mut out = self.clone();
+        let off = out.level_offset;
+        let merged: Vec<Dim> = out.levels[off..].iter().flatten().cloned().collect();
+        out.levels.truncate(off);
+        out.levels.push(merged);
+        out
+    }
+
+    // -- launch-plan computation -------------------------------------------------
+
+    /// Evaluate the outermost-level shape (the grid) under bindings.
+    pub fn grid(&self, bindings: &BTreeMap<String, i64>) -> Result<Vec<i64>> {
+        self.levels[0]
+            .iter()
+            .map(|d| Ok(d.size.substitute_consts(bindings).eval(bindings)?))
+            .collect()
+    }
+
+    /// Padded extent per source dim (interval arithmetic over index exprs),
+    /// mirroring `_ParamSpec` in generation.py.
+    pub fn padded_extents(&self, bindings: &BTreeMap<String, i64>) -> Result<Vec<i64>> {
+        let mut ranges: BTreeMap<String, (i64, i64)> = BTreeMap::new();
+        for level in &self.levels {
+            for dim in level {
+                let size = dim.size.substitute_consts(bindings).eval(bindings)?;
+                ranges.insert(dim.var.clone(), (0, (size - 1).max(0)));
+            }
+        }
+        for (k, v) in bindings {
+            ranges.insert(k.clone(), (*v, *v));
+        }
+        self.indices
+            .iter()
+            .map(|e| {
+                let (_, hi) = e.bounds(&ranges)?;
+                Ok(hi + 1)
+            })
+            .collect()
+    }
+}
+
+impl Expr {
+    /// Substitute integer bindings (helper bridging `BTreeMap<String, i64>`).
+    pub fn substitute_consts(&self, bindings: &BTreeMap<String, i64>) -> Expr {
+        let env: BTreeMap<String, Expr> = bindings
+            .iter()
+            .map(|(k, v)| (k.clone(), Expr::Const(*v)))
+            .collect();
+        self.substitute(&env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn tile_produces_hierarchy() {
+        let x = SymTensor::new("x", 2);
+        let t = x.tile(&[Some(Expr::Const(16)), Some(Expr::Const(32))], None).unwrap();
+        assert_eq!(t.levels.len(), 2);
+        let g = t.grid(&b(&[("x_size_0", 100), ("x_size_1", 64)])).unwrap();
+        assert_eq!(g, vec![7, 2]);
+    }
+
+    #[test]
+    fn tile_index_coverage() {
+        // every source element covered exactly once (paper's non-overlap default)
+        let x = SymTensor::new("x", 1);
+        let t = x.tile(&[Some(Expr::Const(4))], None).unwrap();
+        let expr = &t.indices[0];
+        let (outer, inner) = (&t.levels[0][0], &t.levels[1][0]);
+        let mut seen = std::collections::BTreeSet::new();
+        for o in 0..3 {
+            for i in 0..4 {
+                let mut env = b(&[("x_size_0", 10)]);
+                env.insert(outer.var.clone(), o);
+                env.insert(inner.var.clone(), i);
+                let v = expr.eval(&env).unwrap();
+                assert!(seen.insert(v), "duplicate coverage of {v}");
+            }
+        }
+        assert!((0..10).all(|v| seen.contains(&v)));
+    }
+
+    #[test]
+    fn conv_tile_strides() {
+        // tile((3,), strides=(1,)) — overlapping windows
+        let x = SymTensor::new("x", 1);
+        let t = x
+            .tile(&[Some(Expr::Const(3))], Some(&[Some(Expr::Const(1))]))
+            .unwrap();
+        let g = t.grid(&b(&[("x_size_0", 10)])).unwrap();
+        assert_eq!(g, vec![8]); // 10 - 3 + 1
+    }
+
+    #[test]
+    fn expand_is_broadcast() {
+        let x = SymTensor::new("x", 2);
+        let t = x.tile(&[Some(Expr::Const(4)), None], None).unwrap();
+        let e = t.expand(&[None, Some(Expr::sym("N"))]).unwrap();
+        // expanded var does not appear in the index expressions
+        let frees: std::collections::BTreeSet<String> =
+            e.indices.iter().flat_map(|i| i.free_symbols()).collect();
+        let expanded_var = &e.levels[0][1].var;
+        assert!(!frees.contains(expanded_var));
+    }
+
+    #[test]
+    fn flatten_bijection() {
+        let x = SymTensor::new("x", 3);
+        let f = x.flatten(0, None).unwrap();
+        let var = f.levels[0][0].var.clone();
+        let sizes = b(&[("x_size_0", 2), ("x_size_1", 4), ("x_size_2", 5)]);
+        let mut seen = std::collections::BTreeSet::new();
+        for w in 0..40 {
+            let mut env = sizes.clone();
+            env.insert(var.clone(), w);
+            let coords: Vec<i64> = f.indices.iter().map(|e| e.eval(&env).unwrap()).collect();
+            assert!(seen.insert(coords.clone()));
+            assert!(coords[0] < 2 && coords[1] < 4 && coords[2] < 5);
+        }
+        assert_eq!(seen.len(), 40);
+    }
+
+    #[test]
+    fn padded_extents_cover_reads() {
+        let x = SymTensor::new("x", 1);
+        let t = x.tile(&[Some(Expr::sym("B"))], None).unwrap();
+        let ext = t.padded_extents(&b(&[("x_size_0", 10), ("B", 4)])).unwrap();
+        assert_eq!(ext, vec![12]); // 3 tiles of 4
+    }
+
+    #[test]
+    fn dtype_view_roundtrip() {
+        let mut x = SymTensor::new("x", 2)
+            .tile(&[Some(Expr::Const(1)), Some(Expr::Const(16))], None)
+            .unwrap();
+        let squeezed = x.dtype().squeeze(&[0]).unwrap();
+        x.set_dtype(squeezed);
+        assert_eq!(x.levels[1].len(), 1);
+    }
+}

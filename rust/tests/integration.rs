@@ -1,0 +1,240 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! Covers: runtime loading + numerics, all-kernel NT/baseline/ref agreement,
+//! arrangement validation + golden replay, launch-plan geometry, the
+//! coordinator (routing, packing, backpressure, rejection), and the
+//! end-to-end inference engine.
+
+use std::sync::Arc;
+
+use ninetoothed_repro::arrange;
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::harness::fig6;
+use ninetoothed_repro::inference::Engine;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("run `make artifacts`"))
+}
+
+fn registry() -> Registry {
+    Registry::new(Runtime::cpu().expect("pjrt cpu"), manifest())
+}
+
+#[test]
+fn golden_cases_pass_for_all_variants() {
+    let registry = registry();
+    ninetoothed_repro::harness::golden::check_all(&registry).unwrap();
+}
+
+#[test]
+fn all_kernels_nt_matches_ref() {
+    let registry = registry();
+    let manifest = registry.manifest();
+    for name in manifest.kernel_names() {
+        let inputs = fig6::task_inputs(manifest, &name, 123).unwrap();
+        let nt = registry.kernel(&name, "nt").unwrap().run(&inputs).unwrap();
+        let reference = registry.kernel(&name, "ref").unwrap().run(&inputs).unwrap();
+        let diff = nt[0].max_abs_diff(&reference[0]).unwrap();
+        // mm-family accumulate different orders; scaled tolerance
+        assert!(diff < 5e-3, "{name}: nt vs ref max|diff| = {diff}");
+    }
+}
+
+#[test]
+fn all_kernels_baseline_matches_ref() {
+    let registry = registry();
+    let manifest = registry.manifest();
+    for name in manifest.kernel_names() {
+        let inputs = fig6::task_inputs(manifest, &name, 321).unwrap();
+        let baseline = registry.kernel(&name, "baseline").unwrap().run(&inputs).unwrap();
+        let reference = registry.kernel(&name, "ref").unwrap().run(&inputs).unwrap();
+        let diff = baseline[0].max_abs_diff(&reference[0]).unwrap();
+        assert!(diff < 5e-3, "{name}: baseline vs ref max|diff| = {diff}");
+    }
+}
+
+#[test]
+fn arrangements_validate_and_goldens_replay() {
+    let manifest = manifest();
+    let arrangements = arrange::load_all(&manifest.raw).unwrap();
+    assert!(arrangements.len() >= 10);
+    let mut goldens = 0;
+    for a in &arrangements {
+        a.validate_structure().unwrap();
+        goldens += a.check_goldens().unwrap();
+    }
+    assert!(goldens > 50, "expected many golden evaluations, got {goldens}");
+}
+
+#[test]
+fn catalog_matches_manifest_geometry() {
+    ninetoothed_repro::harness::validate::catalog_parity(&manifest()).unwrap();
+}
+
+#[test]
+fn launch_plan_reports_grid_and_vmem() {
+    let manifest = manifest();
+    let arrangements = arrange::load_all(&manifest.raw).unwrap();
+    let mm = arrangements.iter().find(|a| a.kernel == "mm").unwrap();
+    // bind every symbol the arrangement references
+    let mut env = std::collections::BTreeMap::new();
+    for p in &mm.params {
+        for e in &p.indices {
+            for s in e.free_symbols() {
+                env.entry(s.clone()).or_insert(256);
+            }
+        }
+        for (size, _) in p.levels.iter().flatten() {
+            for s in size.free_symbols() {
+                env.entry(s.clone()).or_insert(256);
+            }
+        }
+    }
+    // block sizes: 64
+    for (k, v) in env.iter_mut() {
+        if !k.contains("_size_") {
+            *v = 64;
+        }
+    }
+    let plan = mm.launch_plan(&env).unwrap();
+    assert_eq!(plan.grid, vec![4, 4]);
+    assert!(plan.vmem_bytes_per_program() > 0);
+}
+
+#[test]
+fn coordinator_packs_and_verifies() {
+    let manifest = manifest();
+    let coordinator = Coordinator::start(
+        manifest.clone(),
+        CoordinatorConfig { workers: 1, queue_capacity: 128, max_fanin: 8 },
+    );
+    let mut rng = SplitMix64::new(9);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let n = 700 + i * 131;
+        let x = HostTensor::randn(vec![n], &mut rng);
+        let y = HostTensor::randn(vec![n], &mut rng);
+        let want: Vec<f32> = x
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(y.as_f32().unwrap())
+            .map(|(a, b)| a + b)
+            .collect();
+        expected.push(want);
+        rxs.push(coordinator.submit("add", "nt", vec![x, y]).unwrap());
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap().unwrap();
+        let got = resp.outputs[0].as_f32().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.completed, 6);
+    assert!(metrics.executions < 6, "expected packing to fuse executions");
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_rejects_malformed_requests() {
+    let manifest = manifest();
+    let coordinator = Coordinator::start(manifest.clone(), CoordinatorConfig::default());
+    let mut rng = SplitMix64::new(1);
+    // wrong arity
+    let x = HostTensor::randn(vec![16], &mut rng);
+    assert!(coordinator.submit("add", "nt", vec![x.clone()]).is_err());
+    // unknown kernel
+    assert!(coordinator.submit("nope", "nt", vec![x.clone()]).is_err());
+    // oversized packable request
+    let slot = manifest.kernel("add", "nt").unwrap().args[0].shape[0];
+    let big = HostTensor::randn(vec![slot + 1], &mut rng);
+    assert!(coordinator
+        .submit("add", "nt", vec![big.clone(), big])
+        .is_err());
+    // wrong shape for a non-packable kernel
+    let bad = HostTensor::randn(vec![3, 3], &mut rng);
+    assert!(coordinator.submit("mm", "nt", vec![bad.clone(), bad]).is_err());
+    assert_eq!(coordinator.metrics().rejected, 4);
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_backpressure() {
+    let manifest = manifest();
+    // capacity 2, zero workers draining slowly: start coordinator with 1
+    // worker but saturate with many requests before it can drain
+    let coordinator = Coordinator::start(
+        manifest.clone(),
+        CoordinatorConfig { workers: 1, queue_capacity: 2, max_fanin: 1 },
+    );
+    let mut rng = SplitMix64::new(2);
+    let shape = manifest.kernel("softmax", "nt").unwrap().args[0].shape.clone();
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..12 {
+        let x = HostTensor::randn(shape.clone(), &mut rng);
+        match coordinator.submit("softmax", "nt", vec![x]) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue of capacity 2 must reject part of a 12-burst");
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn engine_generates_and_backends_agree() {
+    let registry = Arc::new(registry());
+    let mut all_tokens = Vec::new();
+    for variant in ["nt", "ref"] {
+        let engine = Engine::new(registry.clone(), variant).unwrap();
+        let prompt = engine.synth_prompt(5);
+        let result = engine.generate(&prompt, 4).unwrap();
+        assert_eq!(result.tokens.len(), engine.batch);
+        assert_eq!(result.tokens[0].len(), 4);
+        assert!(result.tokens_per_s > 0.0);
+        all_tokens.push(result.tokens);
+    }
+    assert_eq!(all_tokens[0], all_tokens[1], "nt vs ref greedy decode diverged");
+}
+
+#[test]
+fn engine_rejects_overlong_generation() {
+    let registry = Arc::new(registry());
+    let engine = Engine::new(registry, "ref").unwrap();
+    let prompt = engine.synth_prompt(1);
+    let too_many = engine.max_seq - engine.prompt_len + 1;
+    assert!(engine.generate(&prompt, too_many).is_err());
+}
+
+#[test]
+fn table2_metrics_present_and_favorable() {
+    let manifest = manifest();
+    // MI favors NineToothed on most kernels (paper: all 10; our baseline is
+    // Pallas, which hides some of Triton's pointer arithmetic — DESIGN.md §6)
+    let rows = manifest.raw.req("metrics").unwrap().arr("rows").unwrap();
+    assert_eq!(rows.len(), 20);
+    let mut wins = 0;
+    for kernel in ["add", "addmm", "bmm", "conv2d", "mm", "silu", "softmax", "sdpa", "rms_norm", "rope"] {
+        let get = |variant: &str| {
+            rows.iter()
+                .find(|r| r.str("kernel").unwrap() == kernel && r.str("variant").unwrap() == variant)
+                .unwrap()
+                .f64("mi")
+                .unwrap()
+        };
+        if get("nt") > get("baseline") {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 8, "NineToothed should win MI on nearly all kernels, won {wins}/10");
+}
