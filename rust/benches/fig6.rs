@@ -8,8 +8,21 @@ use ninetoothed_repro::harness::fig6;
 use ninetoothed_repro::runtime::{Manifest, Registry, Runtime};
 
 fn main() {
-    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("manifest"));
-    let registry = Registry::new(Runtime::cpu().expect("pjrt"), manifest);
+    let manifest = match Manifest::load(&ninetoothed_repro::artifacts_dir()) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            println!("skipping fig6 bench (requires `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping fig6 bench (requires a PJRT runtime): {e:#}");
+            return;
+        }
+    };
+    let registry = Registry::new(runtime, manifest);
     let secs = std::env::var("NT_BENCH_SECS")
         .ok()
         .and_then(|s| s.parse().ok())

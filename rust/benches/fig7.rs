@@ -7,8 +7,21 @@ use ninetoothed_repro::harness::fig7;
 use ninetoothed_repro::runtime::{Manifest, Registry, Runtime};
 
 fn main() {
-    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("manifest"));
-    let registry = Arc::new(Registry::new(Runtime::cpu().expect("pjrt"), manifest));
+    let manifest = match Manifest::load(&ninetoothed_repro::artifacts_dir()) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            println!("skipping fig7 bench (requires `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping fig7 bench (requires a PJRT runtime): {e:#}");
+            return;
+        }
+    };
+    let registry = Arc::new(Registry::new(runtime, manifest));
     let iters = std::env::var("NT_BENCH_ITERS")
         .ok()
         .and_then(|s| s.parse().ok())

@@ -11,13 +11,19 @@ use ninetoothed_repro::harness::table2;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    table2::run(&args).expect("table2");
+    if let Err(e) = table2::run(&args) {
+        // the AST-exact rows live in the AOT manifest; without it only the
+        // Rust-lexer micro-bench below can run
+        println!("skipping table 2 rows (requires `make artifacts`): {e:#}");
+    }
 
     // analyzer throughput (keeps this an honest `cargo bench` target)
-    let source = std::fs::read_to_string(
+    let Ok(source) = std::fs::read_to_string(
         ninetoothed_repro::harness::repo_root().join("python/compile/kernels/baseline/sdpa.py"),
-    )
-    .expect("sdpa baseline source");
+    ) else {
+        println!("skipping analyzer micro-bench: sdpa baseline source not found");
+        return;
+    };
     let stats = bench_for(3, Duration::from_millis(500), || {
         let region = codemetrics::measured_region(&source);
         let metrics = codemetrics::analyze(&region);

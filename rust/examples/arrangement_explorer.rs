@@ -85,6 +85,22 @@ fn main() -> Result<()> {
             }
             catalog::conv2d()?
         }
+        "bmm" => {
+            let (b, m, k, n) = (
+                args.opt_usize("b", 3) as i64,
+                args.opt_usize("m", 70) as i64,
+                args.opt_usize("k", 50) as i64,
+                args.opt_usize("n", 90) as i64,
+            );
+            for (key, value) in [
+                ("input_size_0", b), ("input_size_1", m), ("input_size_2", k),
+                ("other_size_0", b), ("other_size_1", k), ("other_size_2", n),
+                ("output_size_0", b), ("output_size_1", m), ("output_size_2", n),
+            ] {
+                bindings.insert(key.to_string(), value);
+            }
+            catalog::bmm()?
+        }
         "sdpa" => {
             let (b, h, s, d) = (2i64, 4, 128, 32);
             for t in ["query", "key", "value", "output"] {
@@ -94,7 +110,7 @@ fn main() -> Result<()> {
             }
             catalog::sdpa()?
         }
-        other => bail!("unknown arrangement {other:?} (try add, mm, conv2d, sdpa)"),
+        other => bail!("unknown arrangement {other:?} (try add, mm, bmm, conv2d, sdpa)"),
     };
 
     println!("=== {kernel} arrangement (block = {block}) ===\n");

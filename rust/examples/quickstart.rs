@@ -1,0 +1,58 @@
+//! Quickstart: resolve a kernel through the registry and run it — via its
+//! AOT artifact when `make artifacts` ran on a PJRT-enabled machine, via
+//! the native tile-execution backend otherwise (no setup needed).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{Backend, HostTensor, Manifest, Registry};
+
+fn main() -> Result<()> {
+    let manifest = Arc::new(Manifest::load_or_builtin(&ninetoothed_repro::artifacts_dir()));
+    let registry = Registry::auto(manifest.clone());
+    println!(
+        "artifacts: {} kernels; PJRT runtime: {}",
+        manifest.kernels.len(),
+        if registry.runtime().is_some() { "yes" } else { "no (native fallback)" }
+    );
+
+    // the paper's Listing 3 kernel: shape taken from the artifact when one
+    // exists, arbitrary otherwise (native kernels are shape-polymorphic)
+    let n = manifest.kernel("add", "nt").map(|a| a.args[0].shape[0]).unwrap_or(5000);
+    let mut rng = SplitMix64::new(1);
+    let x = HostTensor::randn(vec![n], &mut rng);
+    let y = HostTensor::randn(vec![n], &mut rng);
+
+    let nt = registry.resolve("add", "nt")?;
+    println!("add.nt resolves to {} ({})", nt.name(), nt.kind().as_str());
+    let outputs = nt.run(&[x.clone(), y.clone()])?;
+
+    // compare against the reference backend
+    let reference = registry.resolve("add", "ref")?;
+    let expected = reference.run(&[x, y])?;
+    let diff = outputs[0].max_abs_diff(&expected[0])?;
+    println!("max |nt - ref| = {diff:.3e}");
+    assert!(diff < 1e-5);
+
+    // matrix multiplication (Listings 5-7)
+    let (m, k, n2) = match manifest.kernel("mm", "nt") {
+        Ok(art) => (art.args[0].shape[0], art.args[0].shape[1], art.args[1].shape[1]),
+        Err(_) => (70, 50, 90),
+    };
+    println!("mm: ({m}x{k}) @ ({k}x{n2})");
+    let a = HostTensor::randn(vec![m, k], &mut rng);
+    let b = HostTensor::randn(vec![k, n2], &mut rng);
+    let mm = registry.resolve("mm", "nt")?;
+    let mm_ref = registry.resolve("mm", "ref")?;
+    let got = mm.run(&[a.clone(), b.clone()])?;
+    let want = mm_ref.run(&[a, b])?;
+    println!("max |nt - ref| = {:.3e}", got[0].max_abs_diff(&want[0])?);
+
+    println!("quickstart OK");
+    Ok(())
+}

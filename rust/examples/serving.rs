@@ -20,8 +20,13 @@ fn main() -> Result<()> {
     let clients = args.opt_usize("clients", 4);
     let per_client = args.opt_usize("requests", 12);
 
-    let manifest = Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir())?);
-    let slot = manifest.kernel("add", "nt")?.args[0].shape[0];
+    // with artifacts the add kernel has a fixed packing slot; natively any
+    // length works — use the artifact slot when present, 64k otherwise
+    let manifest = Arc::new(Manifest::load_or_builtin(&ninetoothed_repro::artifacts_dir()));
+    let slot = manifest
+        .kernel("add", "nt")
+        .map(|a| a.args[0].shape[0])
+        .unwrap_or(65536);
     let coordinator = Arc::new(Coordinator::start(
         manifest.clone(),
         CoordinatorConfig { workers, queue_capacity: 256, max_fanin: 16 },

@@ -21,13 +21,18 @@ fn s(name: &str) -> Option<Expr> {
     Some(Expr::sym(name))
 }
 
+/// 1-D element-wise arrangement: every parameter tiled by BLOCK_SIZE
+/// (paper Listing 3 generalized to any parameter list).
+pub fn elementwise_1d(names: &[&str]) -> Result<Vec<SymTensor>> {
+    names
+        .iter()
+        .map(|name| SymTensor::new(name, 1).tile(&[s("BLOCK_SIZE")], None))
+        .collect()
+}
+
 /// Vector addition (paper Listing 3): each tensor tiled by BLOCK_SIZE.
 pub fn add() -> Result<Vec<SymTensor>> {
-    let mut out = Vec::new();
-    for name in ["input", "other", "output"] {
-        out.push(SymTensor::new(name, 1).tile(&[s("BLOCK_SIZE")], None)?);
-    }
-    Ok(out)
+    elementwise_1d(&["input", "other", "output"])
 }
 
 /// Matrix multiplication (paper Listing 5).
@@ -98,6 +103,38 @@ pub fn conv2d() -> Result<Vec<SymTensor>> {
     fl2.set_dtype(v);
 
     Ok(vec![in2, fl2, out2])
+}
+
+/// Batched matrix multiplication (paper task 3): the mm arrangement with a
+/// leading batch grid dimension (mirrors `python/compile/kernels/nt/bmm.py`).
+pub fn bmm() -> Result<Vec<SymTensor>> {
+    let input = SymTensor::new("input", 3);
+    let other = SymTensor::new("other", 3);
+    let output = SymTensor::new("output", 3);
+
+    let mut output_arranged =
+        output.tile(&[c(1), s("BLOCK_SIZE_M"), s("BLOCK_SIZE_N")], None)?;
+    let v = output_arranged.dtype().squeeze(&[0])?;
+    output_arranged.set_dtype(v);
+    let out_shape = output_arranged.shape();
+
+    let mut input_arranged = input.tile(&[c(1), s("BLOCK_SIZE_M"), s("BLOCK_SIZE_K")], None)?;
+    let v = input_arranged.dtype().squeeze(&[0])?;
+    input_arranged.set_dtype(v);
+    input_arranged = input_arranged.tile(&[c(1), c(1), None], None)?;
+    input_arranged = input_arranged.expand(&[None, None, Some(out_shape[2].clone())])?;
+    let v = input_arranged.dtype().squeeze(&[0, 1])?;
+    input_arranged.set_dtype(v);
+
+    let mut other_arranged = other.tile(&[c(1), s("BLOCK_SIZE_K"), s("BLOCK_SIZE_N")], None)?;
+    let v = other_arranged.dtype().squeeze(&[0])?;
+    other_arranged.set_dtype(v);
+    other_arranged = other_arranged.tile(&[c(1), None, c(1)], None)?;
+    other_arranged = other_arranged.expand(&[None, Some(out_shape[1].clone()), None])?;
+    let v = other_arranged.dtype().squeeze(&[0, 2])?;
+    other_arranged.set_dtype(v);
+
+    Ok(vec![input_arranged, other_arranged, output_arranged])
 }
 
 /// Row-wise kernels (softmax / rms_norm): one program per row.

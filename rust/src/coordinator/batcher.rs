@@ -48,6 +48,9 @@ impl Packer {
     }
 
     /// Gather the per-request vectors into one slot-sized buffer per input.
+    ///
+    /// Inputs are guaranteed f32 by router admission (packable routes
+    /// reject non-f32 and zero-length tensors before they reach a queue).
     pub fn pack(&self, plan: &PackPlan, inputs_per_request: &[Vec<&HostTensor>]) -> Vec<HostTensor> {
         let n_args = inputs_per_request[0].len();
         let mut out = Vec::with_capacity(n_args);

@@ -6,6 +6,8 @@
 //!
 //! * [`router`] — admission + routing: validates request shapes against the
 //!   manifest and the arrangement launch plans, picks the executable.
+//!   Kernels without AOT artifacts route to the native tile-execution
+//!   backend (`crate::exec`) — the coordinator serves them transparently.
 //! * [`batcher`] — **slot packing**: AOT artifacts have fixed shapes, so
 //!   variable-size element-wise requests are packed into the fixed vector
 //!   slot of one artifact execution and split back afterwards (the dynamic

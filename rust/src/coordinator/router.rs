@@ -1,4 +1,12 @@
 //! Request admission and routing.
+//!
+//! A request resolves against the manifest first (shape-specialized AOT
+//! artifacts); when no artifact exists for the (kernel, variant), the
+//! router validates against the native tile-program catalog instead and
+//! marks the route native — the workers then execute it through the
+//! `crate::exec` backend.  Malformed requests (wrong arity, rank-0 or
+//! zero-length tensors, non-f32 data, incompatible shapes) are rejected
+//! here with a clean error, never deeper in the pipeline.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -25,6 +33,8 @@ pub struct Response {
     pub exec_us: u64,
     /// how many requests shared the execution (1 = unbatched)
     pub batch_size: usize,
+    /// which backend served the request ("artifact", "native", "reference")
+    pub backend: &'static str,
 }
 
 /// Element-wise kernels whose single vector argument may be slot-packed.
@@ -37,6 +47,8 @@ pub struct RouteKey {
     pub variant: String,
     /// packable requests share a queue per (kernel, variant)
     pub packable: bool,
+    /// no artifact exists: execute through the native tile backend
+    pub native: bool,
 }
 
 pub struct Router {
@@ -48,54 +60,107 @@ impl Router {
         Router { manifest }
     }
 
-    /// Validate a request against the manifest; return its route.
+    /// Validate a request; return its route.
     ///
-    /// Packable element-wise requests may be *smaller* than the artifact
-    /// slot (they are packed); all other requests must match the compiled
-    /// shapes exactly — AOT artifacts are shape-specialized.
+    /// Artifact routes: packable element-wise requests may be *smaller*
+    /// than the artifact slot (they are packed); all other requests must
+    /// match the compiled shapes exactly — AOT artifacts are
+    /// shape-specialized.  Native routes are shape-polymorphic: admission
+    /// checks arity and computes a launch plan, which rejects anything
+    /// the arrangement cannot tile.
     pub fn admit(&self, req: &Request) -> Result<RouteKey> {
-        let art = self.manifest.kernel(&req.kernel, &req.variant)?;
-        let packable = PACKABLE.contains(&req.kernel.as_str());
-        if req.inputs.len() != art.args.len() {
-            bail!(
-                "kernel {} expects {} inputs, got {}",
-                req.kernel,
-                art.args.len(),
-                req.inputs.len()
-            );
+        if req.inputs.is_empty() {
+            bail!("request for {} carries no input tensors", req.kernel);
         }
-        if packable {
-            let slot = art.args[0].shape[0];
-            for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
-                if input.shape.len() != spec.shape.len() {
-                    bail!("input {i} rank mismatch for {}", req.kernel);
-                }
-                if input.len() > slot {
+        for (i, input) in req.inputs.iter().enumerate() {
+            // rank-0 scalars are legal for artifact kernels that declare
+            // them (addmm's alpha/beta); zero-length data never is
+            if input.shape.iter().any(|&d| d == 0) {
+                bail!(
+                    "input {i} of {} has a zero-length dimension (shape {:?})",
+                    req.kernel,
+                    input.shape
+                );
+            }
+        }
+        match self.manifest.kernel(&req.kernel, &req.variant) {
+            Ok(art) => {
+                let packable = PACKABLE.contains(&req.kernel.as_str());
+                if req.inputs.len() != art.args.len() {
                     bail!(
-                        "input {i} of {} elements exceeds the {}-element artifact slot",
-                        input.len(),
-                        slot
+                        "kernel {} expects {} inputs, got {}",
+                        req.kernel,
+                        art.args.len(),
+                        req.inputs.len()
                     );
                 }
+                if packable {
+                    for (i, input) in req.inputs.iter().enumerate() {
+                        if input.as_f32().is_err() {
+                            bail!("input {i} of packable kernel {} must be f32", req.kernel);
+                        }
+                    }
+                    let slot = art.args[0].shape[0];
+                    for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
+                        if input.shape.len() != spec.shape.len() {
+                            bail!("input {i} rank mismatch for {}", req.kernel);
+                        }
+                        if input.len() > slot {
+                            bail!(
+                                "input {i} of {} elements exceeds the {}-element artifact slot",
+                                input.len(),
+                                slot
+                            );
+                        }
+                    }
+                    // all vector inputs must agree in length
+                    let n = req.inputs[0].len();
+                    if req.inputs.iter().any(|t| t.len() != n) {
+                        bail!("packable request inputs must have equal length");
+                    }
+                } else {
+                    for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
+                        if input.shape != spec.shape {
+                            bail!(
+                                "input {i} shape {:?} != compiled shape {:?} for {}.{}",
+                                input.shape,
+                                spec.shape,
+                                req.kernel,
+                                req.variant
+                            );
+                        }
+                    }
+                }
+                Ok(RouteKey {
+                    kernel: req.kernel.clone(),
+                    variant: req.variant.clone(),
+                    packable,
+                    native: false,
+                })
             }
-            // all vector inputs must agree in length
-            let n = req.inputs[0].len();
-            if req.inputs.iter().any(|t| t.len() != n) {
-                bail!("packable request inputs must have equal length");
-            }
-        } else {
-            for (i, (input, spec)) in req.inputs.iter().zip(&art.args).enumerate() {
-                if input.shape != spec.shape {
+            Err(no_artifact) => {
+                // native fallback: eligibility is decided by the same
+                // classifier Registry::resolve uses, then the inputs must
+                // pass the kernel's cheap shape checks
+                if let Err(e) = crate::runtime::native_fallback_kind(&req.kernel, &req.variant)
+                {
                     bail!(
-                        "input {i} shape {:?} != compiled shape {:?} for {}.{}",
-                        input.shape,
-                        spec.shape,
+                        "kernel {}.{}: no AOT artifact ({no_artifact:#}); {e:#}",
                         req.kernel,
                         req.variant
                     );
                 }
+                if let Some(kernel) = crate::exec::lookup(&req.kernel) {
+                    kernel.check(&req.inputs)?;
+                }
+                // (a ref-only kernel with no tile program validates at run)
+                Ok(RouteKey {
+                    kernel: req.kernel.clone(),
+                    variant: req.variant.clone(),
+                    packable: false,
+                    native: true,
+                })
             }
         }
-        Ok(RouteKey { kernel: req.kernel.clone(), variant: req.variant.clone(), packable })
     }
 }

@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use super::batcher::Packer;
 use super::metrics::Metrics;
 use super::router::{Request, Response, RouteKey, Router};
-use crate::runtime::{Manifest, Registry, Runtime};
+use crate::runtime::{Backend, Manifest, Registry};
 
 pub struct CoordinatorConfig {
     pub workers: usize,
@@ -70,7 +70,8 @@ impl Coordinator {
         });
         let router = Arc::new(Router::new(manifest.clone()));
         let mut workers = Vec::new();
-        for worker_id in 0..config.workers.max(1) {
+        let worker_count = config.workers.max(1);
+        for worker_id in 0..worker_count {
             let shared = shared.clone();
             let manifest = manifest.clone();
             let max_fanin = config.max_fanin;
@@ -78,9 +79,15 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("nt-worker-{worker_id}"))
                     .spawn(move || {
-                        // per-worker PJRT client + executable cache
-                        let runtime = Runtime::cpu().expect("PJRT CPU client");
-                        let registry = Registry::new(runtime, manifest);
+                        // per-worker backend cache; PJRT client when one is
+                        // available, native-only otherwise.  Native grid
+                        // executions share the machine with the other
+                        // workers, so divide the cores among them.
+                        let cores = std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1);
+                        let registry = Registry::auto(manifest)
+                            .with_native_threads((cores / worker_count).max(1));
                         worker_loop(shared, registry, max_fanin)
                     })
                     .expect("spawn worker"),
@@ -199,8 +206,8 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
     if batch.is_empty() {
         return;
     }
-    let exe = match registry.kernel(&route.kernel, &route.variant) {
-        Ok(exe) => exe,
+    let backend = match registry.resolve(&route.kernel, &route.variant) {
+        Ok(backend) => backend,
         Err(e) => {
             let msg = format!("{e:#}");
             for req in batch {
@@ -209,20 +216,28 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
             return;
         }
     };
-    let art = registry
-        .manifest()
-        .kernel(&route.kernel, &route.variant)
-        .expect("admitted route has artifact");
+    let backend_name = backend.kind().as_str();
 
     let queue_us: Vec<u64> = batch
         .iter()
         .map(|r| r.submitted.elapsed().as_micros() as u64)
         .collect();
 
+    // slot dimension for packable (artifact) routes; native routes are
+    // shape-polymorphic and never packed
+    let slot = if route.packable {
+        registry
+            .manifest()
+            .kernel(&route.kernel, &route.variant)
+            .map(|a| a.args[0].shape[0])
+            .expect("packable routes are artifact routes")
+    } else {
+        0
+    };
+
     let t0 = Instant::now();
-    let result = if route.packable && (batch.len() > 1 || batch[0].inputs[0].len() != art.args[0].shape[0]) {
+    let result = if route.packable && (batch.len() > 1 || batch[0].inputs[0].len() != slot) {
         // slot-packed execution
-        let slot = art.args[0].shape[0];
         let packer = Packer::new(slot, batch.len());
         let lengths: Vec<usize> = batch.iter().map(|r| r.inputs[0].len()).collect();
         let (taken, plan) = packer.plan(&lengths);
@@ -237,7 +252,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
         let per_request: Vec<Vec<&crate::runtime::HostTensor>> =
             batch.iter().map(|r| r.inputs.iter().collect()).collect();
         let packed = packer.pack(&plan, &per_request);
-        exe.run(&packed).map(|outs| {
+        backend.run(&packed).map(|outs| {
             packer
                 .unpack(&plan, &outs[0])
                 .into_iter()
@@ -245,7 +260,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                 .collect::<Vec<_>>()
         })
     } else {
-        exe.run(&batch[0].inputs).map(|outs| vec![outs])
+        backend.run(&batch[0].inputs).map(|outs| vec![outs])
     };
     let exec_us = t0.elapsed().as_micros() as u64;
 
@@ -271,6 +286,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                     queue_us: q_us,
                     exec_us,
                     batch_size: n,
+                    backend: backend_name,
                 }));
             }
         }

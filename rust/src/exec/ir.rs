@@ -1,0 +1,240 @@
+//! The tile-program IR: a register machine over [`Tile`]s mirroring the
+//! `ntl` operations the catalog application functions use (paper §3.3) —
+//! load/store, zeros, dot, exp, max, sum, broadcast, element-wise
+//! arithmetic — plus a single loop construct for the sub-tile sequences
+//! that arrangements like mm/bmm hand to the application function.
+//!
+//! A [`TileProgram`] expresses the *serial* per-program semantics of the
+//! paper; the grid scheduler (`super::scheduler`) runs it once per grid
+//! cell, exactly as generated Triton code would be launched.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::tile::{BinOp, ReduceOp, Tile, UnaryOp};
+use super::view::ParamView;
+use crate::runtime::HostTensor;
+
+pub type Reg = usize;
+
+#[derive(Debug, Clone)]
+pub enum Instr {
+    /// Load the current sub-tile of a parameter into a register.
+    Load { dst: Reg, param: usize },
+    /// A zero tile shaped like a parameter's application block
+    /// (`ntl.zeros(output.shape)`).
+    Zeros { dst: Reg, like_param: usize },
+    /// A scalar constant tile (shape `[1]`).
+    Const { dst: Reg, value: f32 },
+    Unary { dst: Reg, a: Reg, op: UnaryOp },
+    Binary { dst: Reg, a: Reg, b: Reg, op: BinOp },
+    /// Keep-dims reduction; `axis: None` reduces all axes.
+    Reduce { dst: Reg, a: Reg, axis: Option<usize>, op: ReduceOp },
+    /// 2-D matrix product.
+    Dot { dst: Reg, a: Reg, b: Reg },
+    /// Broadcast register `a` to the block shape of a parameter.
+    Broadcast { dst: Reg, a: Reg, like_param: usize },
+    /// Iterate the body once per sub-tile (the `for k in range(...)` of
+    /// the mm application).  Loops do not nest.
+    Loop { body: Vec<Instr> },
+    /// Store a register into the current sub-tile of a parameter.
+    Store { param: usize, src: Reg },
+}
+
+#[derive(Debug, Clone)]
+pub struct TileProgram {
+    pub name: &'static str,
+    /// number of registers the program uses
+    pub regs: usize,
+    pub instrs: Vec<Instr>,
+}
+
+impl TileProgram {
+    /// Static sanity checks: register bounds, parameter bounds, loop
+    /// nesting, stores target outputs only.
+    pub fn validate(&self, n_params: usize, is_output: &[bool]) -> Result<()> {
+        fn walk(
+            instrs: &[Instr],
+            regs: usize,
+            n_params: usize,
+            is_output: &[bool],
+            in_loop: bool,
+        ) -> Result<()> {
+            for instr in instrs {
+                let (rs, ps): (Vec<Reg>, Vec<usize>) = match instr {
+                    Instr::Load { dst, param } => (vec![*dst], vec![*param]),
+                    Instr::Zeros { dst, like_param } => (vec![*dst], vec![*like_param]),
+                    Instr::Const { dst, .. } => (vec![*dst], vec![]),
+                    Instr::Unary { dst, a, .. } => (vec![*dst, *a], vec![]),
+                    Instr::Binary { dst, a, b, .. } => (vec![*dst, *a, *b], vec![]),
+                    Instr::Reduce { dst, a, .. } => (vec![*dst, *a], vec![]),
+                    Instr::Dot { dst, a, b } => (vec![*dst, *a, *b], vec![]),
+                    Instr::Broadcast { dst, a, like_param } => {
+                        (vec![*dst, *a], vec![*like_param])
+                    }
+                    Instr::Loop { body } => {
+                        if in_loop {
+                            bail!("tile programs do not support nested loops");
+                        }
+                        walk(body, regs, n_params, is_output, true)?;
+                        (vec![], vec![])
+                    }
+                    Instr::Store { param, src } => {
+                        if !is_output.get(*param).copied().unwrap_or(false) {
+                            bail!("store to non-output parameter {param}");
+                        }
+                        (vec![*src], vec![*param])
+                    }
+                };
+                for r in rs {
+                    if r >= regs {
+                        bail!("register {r} out of range (program has {regs})");
+                    }
+                }
+                for p in ps {
+                    if p >= n_params {
+                        bail!("parameter {p} out of range (program has {n_params})");
+                    }
+                }
+            }
+            Ok(())
+        }
+        walk(&self.instrs, self.regs, n_params, is_output, false)
+    }
+}
+
+/// Where a parameter's data lives during execution.
+pub enum ParamData<'a> {
+    In(&'a HostTensor),
+    /// Outputs are written through the scheduler's writer closure; the
+    /// shape is needed for bounds/strides only (held by the view).
+    Out,
+}
+
+/// Execute a tile program for one grid cell.
+///
+/// `write(param, flat_offset, value)` receives every in-range output
+/// element the cell produces.  Distinct cells produce distinct offsets
+/// (§3.2.1 non-overlap), which the scheduler relies on.
+pub fn exec_cell(
+    program: &TileProgram,
+    views: &[ParamView],
+    data: &[ParamData<'_>],
+    cell: &[i64],
+    loop_shape: &[usize],
+    write: &mut dyn FnMut(usize, usize, f32),
+) -> Result<()> {
+    let mut regs: Vec<Option<Tile>> = vec![None; program.regs];
+    let no_sub: Vec<usize> = Vec::new();
+    run_block(
+        &program.instrs,
+        &mut regs,
+        views,
+        data,
+        cell,
+        loop_shape,
+        None,
+        &no_sub,
+        write,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    instrs: &[Instr],
+    regs: &mut Vec<Option<Tile>>,
+    views: &[ParamView],
+    data: &[ParamData<'_>],
+    cell: &[i64],
+    loop_shape: &[usize],
+    sub: Option<&[usize]>,
+    no_sub: &[usize],
+    write: &mut dyn FnMut(usize, usize, f32),
+) -> Result<()> {
+    // register reads borrow — every op produces a fresh output tile, so
+    // no clone is needed on the hot path
+    fn get(regs: &[Option<Tile>], r: Reg) -> Result<&Tile> {
+        regs[r]
+            .as_ref()
+            .ok_or_else(|| anyhow!("read of uninitialized register {r}"))
+    }
+    // sub-tile coordinates for a parameter: parameters without loop levels
+    // always see sub-tile 0
+    fn param_sub<'a>(
+        views: &[ParamView],
+        param: usize,
+        sub: Option<&'a [usize]>,
+        no_sub: &'a [usize],
+    ) -> &'a [usize] {
+        if views[param].loop_shape.is_empty() {
+            no_sub
+        } else {
+            sub.unwrap_or(no_sub)
+        }
+    }
+    for instr in instrs {
+        match instr {
+            Instr::Load { dst, param } => {
+                let tensor = match &data[*param] {
+                    ParamData::In(t) => *t,
+                    ParamData::Out => bail!("load from output parameter {param}"),
+                };
+                let s = param_sub(views, *param, sub, no_sub);
+                if !views[*param].loop_shape.is_empty() && s.is_empty() {
+                    // a looped parameter loaded outside the loop: sub-tile 0
+                    let zeros = vec![0usize; views[*param].loop_shape.len()];
+                    regs[*dst] = Some(views[*param].gather(tensor, cell, &zeros)?);
+                } else {
+                    regs[*dst] = Some(views[*param].gather(tensor, cell, s)?);
+                }
+            }
+            Instr::Zeros { dst, like_param } => {
+                regs[*dst] = Some(Tile::zeros(views[*like_param].block_shape.clone()));
+            }
+            Instr::Const { dst, value } => {
+                regs[*dst] = Some(Tile::scalar(*value));
+            }
+            Instr::Unary { dst, a, op } => {
+                let t = get(regs, *a)?.unary(*op);
+                regs[*dst] = Some(t);
+            }
+            Instr::Binary { dst, a, b, op } => {
+                let t = get(regs, *a)?.binary(get(regs, *b)?, *op)?;
+                regs[*dst] = Some(t);
+            }
+            Instr::Reduce { dst, a, axis, op } => {
+                let t = get(regs, *a)?.reduce(*axis, *op)?;
+                regs[*dst] = Some(t);
+            }
+            Instr::Dot { dst, a, b } => {
+                let t = get(regs, *a)?.dot(get(regs, *b)?)?;
+                regs[*dst] = Some(t);
+            }
+            Instr::Broadcast { dst, a, like_param } => {
+                let t = get(regs, *a)?.broadcast_to(&views[*like_param].block_shape)?;
+                regs[*dst] = Some(t);
+            }
+            Instr::Loop { body } => {
+                let n: usize = loop_shape.iter().product::<usize>().max(1);
+                let mut coords = vec![0usize; loop_shape.len()];
+                for _ in 0..n {
+                    run_block(
+                        body, regs, views, data, cell, loop_shape, Some(&coords), no_sub, write,
+                    )?;
+                    for d in (0..loop_shape.len()).rev() {
+                        coords[d] += 1;
+                        if coords[d] < loop_shape[d] {
+                            break;
+                        }
+                        coords[d] = 0;
+                    }
+                }
+            }
+            Instr::Store { param, src } => {
+                let tile = get(regs, *src)?;
+                let s = param_sub(views, *param, sub, no_sub);
+                views[*param].scatter_with(tile, cell, s, |off, v| write(*param, off, v))?;
+            }
+        }
+    }
+    Ok(())
+}

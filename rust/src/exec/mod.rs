@@ -1,0 +1,176 @@
+//! Native tile-execution backend: run arrangements without AOT artifacts.
+//!
+//! The paper separates *arrangement* (tiling geometry, §3.2) from
+//! *application* (per-tile compute, §3.3).  The rest of this crate mirrors
+//! the arrangement algebra symbolically; this subsystem closes the loop by
+//! actually **executing** applications over arranged tiles:
+//!
+//! * [`tile`] — dense f32 tiles with the `ntl` operation set (dot, exp,
+//!   max/sum reductions, broadcastable element-wise arithmetic);
+//! * [`ir`] — the tile-program IR (load/store/zeros/loop + compute ops)
+//!   and its interpreter: the serial per-program semantics of the paper;
+//! * [`view`] — strided [`view::ParamView`]s: an arrangement's index
+//!   expressions lowered (and verified) to affine gather/scatter over
+//!   [`crate::runtime::HostTensor`] buffers, with pad-value edge handling;
+//! * [`scheduler`] — the grid scheduler: one program instance per
+//!   outermost-level cell, auto-parallelized over a std-only worker pool
+//!   exactly as the code generator would launch the grid;
+//! * [`native`] — the kernel catalog (add, silu, softmax, rms_norm, mm,
+//!   bmm): arrangement specializers + tile programs, shape-polymorphic
+//!   per request;
+//! * [`reference`] — straightforward oracle implementations the tile
+//!   programs are cross-checked against in `cargo test`.
+//!
+//! The coordinator reaches this subsystem through the
+//! [`crate::runtime::Backend`] trait: when a (kernel, variant) has no AOT
+//! artifact — or no PJRT runtime exists at all, as in the offline build —
+//! the registry falls back to native execution transparently.
+
+pub mod ir;
+pub mod native;
+pub mod reference;
+pub mod scheduler;
+pub mod tile;
+pub mod view;
+
+pub use ir::{Instr, TileProgram};
+pub use native::{kernels, lookup, NativeKernel, Specialization};
+pub use scheduler::GridScheduler;
+pub use tile::{BinOp, ReduceOp, Tile, UnaryOp};
+pub use view::ParamView;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::HostTensor;
+
+/// Convenience entry point: execute a native kernel by name.
+pub fn run_native(
+    name: &str,
+    inputs: &[HostTensor],
+    scheduler: &GridScheduler,
+) -> Result<Vec<HostTensor>> {
+    let kernel = lookup(name)
+        .ok_or_else(|| anyhow!("kernel {name:?} has no native tile program"))?;
+    kernel.run(inputs, scheduler)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    const TOL: f32 = 1e-4;
+
+    fn randn(shape: &[usize], rng: &mut SplitMix64) -> HostTensor {
+        HostTensor::randn(shape.to_vec(), rng)
+    }
+
+    /// Native (serial and pooled) vs reference, asserting max|diff| ≤ 1e-4.
+    fn check(name: &str, inputs: &[HostTensor]) {
+        let expected = reference::run(name, inputs).expect("reference");
+        for scheduler in [GridScheduler::serial(), GridScheduler::pooled(4)] {
+            let got = run_native(name, inputs, &scheduler).expect(name);
+            assert_eq!(got.len(), expected.len());
+            for (g, e) in got.iter().zip(&expected) {
+                assert_eq!(g.shape, e.shape, "{name} output shape");
+                let diff = g.max_abs_diff(e).unwrap();
+                assert!(
+                    diff <= TOL,
+                    "{name} ({} threads): max|diff| = {diff}",
+                    scheduler.threads
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_add_matches_reference() {
+        let mut rng = SplitMix64::new(11);
+        // 1000 is not a multiple of the 1024 block: exercises edge padding
+        let x = randn(&[1000], &mut rng);
+        let y = randn(&[1000], &mut rng);
+        check("add", &[x, y]);
+    }
+
+    #[test]
+    fn native_silu_matches_reference() {
+        let mut rng = SplitMix64::new(12);
+        let x = randn(&[777], &mut rng);
+        check("silu", &[x]);
+    }
+
+    #[test]
+    fn native_softmax_matches_reference() {
+        let mut rng = SplitMix64::new(13);
+        let x = randn(&[7, 301], &mut rng);
+        check("softmax", &[x]);
+    }
+
+    #[test]
+    fn native_rms_norm_matches_reference() {
+        let mut rng = SplitMix64::new(14);
+        let x = randn(&[5, 257], &mut rng);
+        check("rms_norm", &[x]);
+    }
+
+    #[test]
+    fn native_mm_matches_reference() {
+        let mut rng = SplitMix64::new(15);
+        // deliberately not multiples of the 32-wide blocks
+        let a = randn(&[70, 50], &mut rng);
+        let b = randn(&[50, 90], &mut rng);
+        check("mm", &[a, b]);
+    }
+
+    #[test]
+    fn native_bmm_matches_reference() {
+        let mut rng = SplitMix64::new(16);
+        let a = randn(&[3, 33, 17], &mut rng);
+        let b = randn(&[3, 17, 29], &mut rng);
+        check("bmm", &[a, b]);
+    }
+
+    #[test]
+    fn native_mm_exact_tiles() {
+        // block-aligned case: no padding path at all
+        let mut rng = SplitMix64::new(17);
+        let a = randn(&[64, 64], &mut rng);
+        let b = randn(&[64, 64], &mut rng);
+        check("mm", &[a, b]);
+    }
+
+    #[test]
+    fn zero_and_scalar_inputs_rejected() {
+        let empty = HostTensor::f32(vec![0], vec![]).unwrap();
+        let scalar = HostTensor::f32(vec![], vec![1.0]).unwrap();
+        let sched = GridScheduler::serial();
+        for bad in [empty, scalar] {
+            let err = run_native("silu", &[bad.clone()], &sched).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("zero-length") || msg.contains("rank-0"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_is_a_clean_error() {
+        let sched = GridScheduler::serial();
+        let x = HostTensor::f32(vec![4], vec![1.0; 4]).unwrap();
+        assert!(run_native("conv99", &[x], &sched).is_err());
+    }
+
+    #[test]
+    fn specialization_reports_launch_geometry() {
+        let mut rng = SplitMix64::new(18);
+        let a = randn(&[70, 50], &mut rng);
+        let b = randn(&[50, 90], &mut rng);
+        let spec = lookup("mm").unwrap().specialize(&[a, b]).unwrap();
+        // cdiv(70,32) = 3, cdiv(90,32) = 3, k-loop cdiv(50,32) = 2
+        assert_eq!(spec.grid, vec![3, 3]);
+        assert_eq!(spec.loop_shape, vec![2]);
+        assert_eq!(spec.programs(), 9);
+        assert_eq!(spec.output_shapes, vec![vec![70, 90]]);
+    }
+}

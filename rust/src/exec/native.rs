@@ -1,0 +1,421 @@
+//! The native kernel catalog: tile programs + arrangement specializers
+//! for the kernels the exec backend can compute without AOT artifacts.
+//!
+//! Each entry pairs a catalog arrangement (`crate::arrange::catalog`, the
+//! paper Listings re-derived against the Rust tensor mirror) with a tile
+//! program mirroring the Python application function.  Unlike artifacts,
+//! native kernels are *shape-polymorphic*: specialization happens per
+//! request from the concrete input shapes, exactly as the DSL would
+//! re-specialize for a new shape bucket.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use super::ir::{Instr, TileProgram};
+use super::scheduler::GridScheduler;
+use super::tile::{BinOp, ReduceOp, UnaryOp};
+use super::view::ParamView;
+use crate::arrange::catalog;
+use crate::runtime::HostTensor;
+use crate::tensor::SymTensor;
+
+/// A fully specialized launch: concrete views + output shapes.
+pub struct Specialization {
+    pub grid: Vec<i64>,
+    pub loop_shape: Vec<usize>,
+    pub views: Vec<ParamView>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl Specialization {
+    pub fn programs(&self) -> i64 {
+        self.grid.iter().product::<i64>().max(1)
+    }
+}
+
+pub struct NativeKernel {
+    pub name: &'static str,
+    /// number of input (non-output) parameters
+    pub arity: usize,
+    pub program: TileProgram,
+    /// cheap shape preconditions (no lowering) — what admission runs
+    shape_check: fn(&[HostTensor]) -> Result<()>,
+    specialize: fn(&[HostTensor]) -> Result<Specialization>,
+}
+
+impl NativeKernel {
+    /// Cheap admission-time validation: arity, dtype, rank / zero-length
+    /// dims, and the kernel's shape preconditions.  No affine lowering —
+    /// the router calls this per request; the expensive specialization
+    /// happens once, on the worker.
+    pub fn check(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.arity {
+            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, inputs.len());
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape.is_empty() {
+                bail!("kernel {}: input {i} is rank-0 (scalar tensors are not tileable)", self.name);
+            }
+            if t.shape.iter().any(|&d| d == 0) {
+                bail!("kernel {}: input {i} has a zero-length dimension {:?}", self.name, t.shape);
+            }
+            t.as_f32()
+                .map_err(|_| anyhow::anyhow!("kernel {}: input {i} must be f32", self.name))?;
+        }
+        (self.shape_check)(inputs)
+    }
+
+    /// Validate inputs and compute the concrete launch for them.
+    pub fn specialize(&self, inputs: &[HostTensor]) -> Result<Specialization> {
+        self.check(inputs)?;
+        (self.specialize)(inputs)
+    }
+
+    /// Execute natively under the given scheduler.
+    pub fn run(&self, inputs: &[HostTensor], scheduler: &GridScheduler) -> Result<Vec<HostTensor>> {
+        let spec = self.specialize(inputs)?;
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        scheduler.run(&self.program, &spec.views, &refs, &spec.output_shapes)
+    }
+}
+
+/// Look up a native kernel by name.
+pub fn lookup(name: &str) -> Option<&'static NativeKernel> {
+    kernels().iter().find(|k| k.name == name)
+}
+
+/// All native kernels.
+pub fn kernels() -> &'static [NativeKernel] {
+    static CATALOG: OnceLock<Vec<NativeKernel>> = OnceLock::new();
+    CATALOG.get_or_init(build_catalog)
+}
+
+// -- specialization helpers ---------------------------------------------------
+
+fn bind(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Size bindings `<name>_size_<d>` for one parameter.
+fn bind_sizes(bindings: &mut BTreeMap<String, i64>, name: &str, shape: &[usize]) {
+    for (d, &s) in shape.iter().enumerate() {
+        bindings.insert(format!("{name}_size_{d}"), s as i64);
+    }
+}
+
+/// Element-wise block size: a power of two covering small inputs exactly.
+fn elementwise_block(n: usize) -> i64 {
+    (n.next_power_of_two() as i64).min(4096)
+}
+
+fn build_spec(
+    tensors: &[SymTensor],
+    bindings: &BTreeMap<String, i64>,
+    shapes: &[&[usize]],
+    is_output: &[bool],
+    pad_values: &[f32],
+) -> Result<Specialization> {
+    let mut views = Vec::new();
+    for (((t, shape), &out), &pad) in
+        tensors.iter().zip(shapes).zip(is_output).zip(pad_values)
+    {
+        views.push(ParamView::specialize(t, bindings, shape, out, pad)?);
+    }
+    let grid = views[0].grid.clone();
+    for v in &views {
+        if v.grid != grid {
+            bail!(
+                "outermost-level shapes disagree: {:?} ({}) vs {grid:?} (paper §3.2.1)",
+                v.grid,
+                v.name
+            );
+        }
+    }
+    let mut loop_shape = Vec::new();
+    for v in &views {
+        if !v.loop_shape.is_empty() {
+            if loop_shape.is_empty() {
+                loop_shape = v.loop_shape.clone();
+            } else if loop_shape != v.loop_shape {
+                bail!("loop-level shapes disagree: {:?} ({})", v.loop_shape, v.name);
+            }
+        }
+    }
+    let output_shapes = views
+        .iter()
+        .zip(shapes)
+        .filter(|(v, _)| v.is_output)
+        .map(|(_, s)| s.to_vec())
+        .collect();
+    Ok(Specialization { grid, loop_shape, views, output_shapes })
+}
+
+// -- per-kernel shape preconditions -------------------------------------------
+
+fn check_add(inputs: &[HostTensor]) -> Result<()> {
+    let (a, b) = (&inputs[0], &inputs[1]);
+    if a.shape.len() != 1 || a.shape != b.shape {
+        bail!("add expects two equal 1-D tensors, got {:?} and {:?}", a.shape, b.shape);
+    }
+    Ok(())
+}
+
+fn check_1d(inputs: &[HostTensor]) -> Result<()> {
+    if inputs[0].shape.len() != 1 {
+        bail!("expected a 1-D tensor, got {:?}", inputs[0].shape);
+    }
+    Ok(())
+}
+
+fn check_2d(inputs: &[HostTensor]) -> Result<()> {
+    if inputs[0].shape.len() != 2 {
+        bail!("expected a 2-D tensor, got {:?}", inputs[0].shape);
+    }
+    Ok(())
+}
+
+fn check_mm(inputs: &[HostTensor]) -> Result<()> {
+    let (a, b) = (&inputs[0], &inputs[1]);
+    if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
+        bail!("mm expects [m,k] x [k,n], got {:?} and {:?}", a.shape, b.shape);
+    }
+    Ok(())
+}
+
+fn check_bmm(inputs: &[HostTensor]) -> Result<()> {
+    let (a, b) = (&inputs[0], &inputs[1]);
+    if a.shape.len() != 3
+        || b.shape.len() != 3
+        || a.shape[0] != b.shape[0]
+        || a.shape[2] != b.shape[1]
+    {
+        bail!("bmm expects [b,m,k] x [b,k,n], got {:?} and {:?}", a.shape, b.shape);
+    }
+    Ok(())
+}
+
+// -- per-kernel specializers --------------------------------------------------
+
+fn spec_add(inputs: &[HostTensor]) -> Result<Specialization> {
+    check_add(inputs)?;
+    let a = &inputs[0];
+    let n = a.shape[0];
+    let tensors = catalog::add()?;
+    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(n))]);
+    for name in ["input", "other", "output"] {
+        bind_sizes(&mut bindings, name, &a.shape);
+    }
+    build_spec(
+        &tensors,
+        &bindings,
+        &[&a.shape, &a.shape, &a.shape],
+        &[false, false, true],
+        &[0.0, 0.0, 0.0],
+    )
+}
+
+fn spec_silu(inputs: &[HostTensor]) -> Result<Specialization> {
+    check_1d(inputs)?;
+    let a = &inputs[0];
+    let tensors = catalog::elementwise_1d(&["input", "output"])?;
+    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(a.shape[0]))]);
+    bind_sizes(&mut bindings, "input", &a.shape);
+    bind_sizes(&mut bindings, "output", &a.shape);
+    build_spec(&tensors, &bindings, &[&a.shape, &a.shape], &[false, true], &[0.0, 0.0])
+}
+
+fn spec_rowwise(pad: f32, inputs: &[HostTensor]) -> Result<Specialization> {
+    check_2d(inputs)?;
+    let a = &inputs[0];
+    let tensors = catalog::rowwise()?;
+    let mut bindings = BTreeMap::new();
+    bind_sizes(&mut bindings, "input", &a.shape);
+    bind_sizes(&mut bindings, "output", &a.shape);
+    build_spec(&tensors, &bindings, &[&a.shape, &a.shape], &[false, true], &[pad, 0.0])
+}
+
+fn spec_softmax(inputs: &[HostTensor]) -> Result<Specialization> {
+    spec_rowwise(f32::NEG_INFINITY, inputs)
+}
+
+fn spec_rms_norm(inputs: &[HostTensor]) -> Result<Specialization> {
+    spec_rowwise(0.0, inputs)
+}
+
+const MM_BLOCK: i64 = 32;
+
+fn spec_mm(inputs: &[HostTensor]) -> Result<Specialization> {
+    check_mm(inputs)?;
+    let (a, b) = (&inputs[0], &inputs[1]);
+    let out = vec![a.shape[0], b.shape[1]];
+    let tensors = catalog::mm()?;
+    let mut bindings = bind(&[
+        ("BLOCK_SIZE_M", MM_BLOCK),
+        ("BLOCK_SIZE_N", MM_BLOCK),
+        ("BLOCK_SIZE_K", MM_BLOCK),
+    ]);
+    bind_sizes(&mut bindings, "input", &a.shape);
+    bind_sizes(&mut bindings, "other", &b.shape);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(
+        &tensors,
+        &bindings,
+        &[&a.shape, &b.shape, &out],
+        &[false, false, true],
+        &[0.0, 0.0, 0.0],
+    )
+}
+
+fn spec_bmm(inputs: &[HostTensor]) -> Result<Specialization> {
+    check_bmm(inputs)?;
+    let (a, b) = (&inputs[0], &inputs[1]);
+    let out = vec![a.shape[0], a.shape[1], b.shape[2]];
+    let tensors = catalog::bmm()?;
+    let mut bindings = bind(&[
+        ("BLOCK_SIZE_M", MM_BLOCK),
+        ("BLOCK_SIZE_N", MM_BLOCK),
+        ("BLOCK_SIZE_K", MM_BLOCK),
+    ]);
+    bind_sizes(&mut bindings, "input", &a.shape);
+    bind_sizes(&mut bindings, "other", &b.shape);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(
+        &tensors,
+        &bindings,
+        &[&a.shape, &b.shape, &out],
+        &[false, false, true],
+        &[0.0, 0.0, 0.0],
+    )
+}
+
+// -- tile programs ------------------------------------------------------------
+
+fn program_add() -> TileProgram {
+    TileProgram {
+        name: "add",
+        regs: 3,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Load { dst: 1, param: 1 },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
+            Instr::Store { param: 2, src: 2 },
+        ],
+    }
+}
+
+fn program_silu() -> TileProgram {
+    TileProgram {
+        name: "silu",
+        regs: 3,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Unary { dst: 1, a: 0, op: UnaryOp::Sigmoid },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 2 },
+        ],
+    }
+}
+
+fn program_softmax() -> TileProgram {
+    TileProgram {
+        name: "softmax",
+        regs: 6,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Max },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
+            Instr::Unary { dst: 3, a: 2, op: UnaryOp::Exp },
+            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Sum },
+            Instr::Binary { dst: 5, a: 3, b: 4, op: BinOp::Div },
+            Instr::Store { param: 1, src: 5 },
+        ],
+    }
+}
+
+fn program_rms_norm() -> TileProgram {
+    TileProgram {
+        name: "rms_norm",
+        regs: 7,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
+            Instr::Reduce { dst: 2, a: 1, axis: None, op: ReduceOp::Mean },
+            Instr::Const { dst: 3, value: 1e-6 },
+            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Add },
+            Instr::Unary { dst: 5, a: 4, op: UnaryOp::Rsqrt },
+            Instr::Binary { dst: 6, a: 0, b: 5, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 6 },
+        ],
+    }
+}
+
+/// The mm/bmm application: `acc = zeros(output.shape); for k: acc +=
+/// dot(input[k], other[k]); output = acc` — identical for both kernels
+/// because the arrangements reduce both to the same tile-level view.
+fn program_matmul(name: &'static str) -> TileProgram {
+    TileProgram {
+        name,
+        regs: 4,
+        instrs: vec![
+            Instr::Zeros { dst: 0, like_param: 2 },
+            Instr::Loop {
+                body: vec![
+                    Instr::Load { dst: 1, param: 0 },
+                    Instr::Load { dst: 2, param: 1 },
+                    Instr::Dot { dst: 3, a: 1, b: 2 },
+                    Instr::Binary { dst: 0, a: 0, b: 3, op: BinOp::Add },
+                ],
+            },
+            Instr::Store { param: 2, src: 0 },
+        ],
+    }
+}
+
+fn build_catalog() -> Vec<NativeKernel> {
+    vec![
+        NativeKernel {
+            name: "add",
+            arity: 2,
+            program: program_add(),
+            shape_check: check_add,
+            specialize: spec_add,
+        },
+        NativeKernel {
+            name: "silu",
+            arity: 1,
+            program: program_silu(),
+            shape_check: check_1d,
+            specialize: spec_silu,
+        },
+        NativeKernel {
+            name: "softmax",
+            arity: 1,
+            program: program_softmax(),
+            shape_check: check_2d,
+            specialize: spec_softmax,
+        },
+        NativeKernel {
+            name: "rms_norm",
+            arity: 1,
+            program: program_rms_norm(),
+            shape_check: check_2d,
+            specialize: spec_rms_norm,
+        },
+        NativeKernel {
+            name: "mm",
+            arity: 2,
+            program: program_matmul("mm"),
+            shape_check: check_mm,
+            specialize: spec_mm,
+        },
+        NativeKernel {
+            name: "bmm",
+            arity: 2,
+            program: program_matmul("bmm"),
+            shape_check: check_bmm,
+            specialize: spec_bmm,
+        },
+    ]
+}

@@ -1,0 +1,162 @@
+//! Straightforward reference implementations of the native-backend
+//! kernels (the Rust analogue of `python/compile/kernels/ref.py`).
+//!
+//! These are the correctness oracles the native tile programs are
+//! cross-checked against in `cargo test`: simple loops, f64 accumulation
+//! for reductions and matrix products, no tiling.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+pub fn add(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+    let (x, y) = (a.as_f32()?, b.as_f32()?);
+    if a.shape != b.shape {
+        bail!("add shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    }
+    HostTensor::f32(a.shape.clone(), x.iter().zip(y).map(|(p, q)| p + q).collect())
+}
+
+pub fn silu(a: &HostTensor) -> Result<HostTensor> {
+    let x = a.as_f32()?;
+    HostTensor::f32(
+        a.shape.clone(),
+        x.iter().map(|&v| v * (1.0 / (1.0 + (-v).exp()))).collect(),
+    )
+}
+
+pub fn softmax(a: &HostTensor) -> Result<HostTensor> {
+    let x = a.as_f32()?;
+    if a.shape.len() != 2 {
+        bail!("softmax expects a 2-D tensor, got {:?}", a.shape);
+    }
+    let (rows, cols) = (a.shape[0], a.shape[1]);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += ((v - max) as f64).exp();
+        }
+        for (o, &v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *o = (((v - max) as f64).exp() / denom) as f32;
+        }
+    }
+    HostTensor::f32(a.shape.clone(), out)
+}
+
+pub fn rms_norm(a: &HostTensor) -> Result<HostTensor> {
+    const EPS: f64 = 1e-6;
+    let x = a.as_f32()?;
+    if a.shape.len() != 2 {
+        bail!("rms_norm expects a 2-D tensor, got {:?}", a.shape);
+    }
+    let (rows, cols) = (a.shape[0], a.shape[1]);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let ms = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / cols as f64;
+        let scale = 1.0 / (ms + EPS).sqrt();
+        for (o, &v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *o = (v as f64 * scale) as f32;
+        }
+    }
+    HostTensor::f32(a.shape.clone(), out)
+}
+
+pub fn mm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+    let (x, y) = (a.as_f32()?, b.as_f32()?);
+    if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
+        bail!("mm shape mismatch: {:?} x {:?}", a.shape, b.shape);
+    }
+    let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += x[i * k + p] as f64 * y[p * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    HostTensor::f32(vec![m, n], out)
+}
+
+pub fn bmm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+    if a.shape.len() != 3
+        || b.shape.len() != 3
+        || a.shape[0] != b.shape[0]
+        || a.shape[2] != b.shape[1]
+    {
+        bail!("bmm shape mismatch: {:?} x {:?}", a.shape, b.shape);
+    }
+    let (batch, m, k) = (a.shape[0], a.shape[1], a.shape[2]);
+    let n = b.shape[2];
+    let (x, y) = (a.as_f32()?, b.as_f32()?);
+    let mut out = vec![0.0f32; batch * m * n];
+    for bi in 0..batch {
+        let xa = &x[bi * m * k..(bi + 1) * m * k];
+        let yb = &y[bi * k * n..(bi + 1) * k * n];
+        let ob = &mut out[bi * m * n..(bi + 1) * m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += xa[i * k + p] as f64 * yb[p * n + j] as f64;
+                }
+                ob[i * n + j] = acc as f32;
+            }
+        }
+    }
+    HostTensor::f32(vec![batch, m, n], out)
+}
+
+/// Kernels [`run`] can dispatch — the single source of truth the router
+/// and registry consult before admitting a `ref`-variant fallback.
+pub const SUPPORTED: &[&str] = &["add", "silu", "softmax", "rms_norm", "mm", "bmm"];
+
+/// True if a reference oracle exists for this kernel.
+pub fn supports(name: &str) -> bool {
+    SUPPORTED.contains(&name)
+}
+
+/// Dispatch by kernel name (the oracle the native backend is checked
+/// against, and the `ref` variant of the native serving path).
+pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let need = |n: usize| -> Result<()> {
+        if inputs.len() != n {
+            bail!("reference {name} expects {n} inputs, got {}", inputs.len());
+        }
+        Ok(())
+    };
+    let out = match name {
+        "add" => {
+            need(2)?;
+            add(&inputs[0], &inputs[1])?
+        }
+        "silu" => {
+            need(1)?;
+            silu(&inputs[0])?
+        }
+        "softmax" => {
+            need(1)?;
+            softmax(&inputs[0])?
+        }
+        "rms_norm" => {
+            need(1)?;
+            rms_norm(&inputs[0])?
+        }
+        "mm" => {
+            need(2)?;
+            mm(&inputs[0], &inputs[1])?
+        }
+        "bmm" => {
+            need(2)?;
+            bmm(&inputs[0], &inputs[1])?
+        }
+        other => bail!("no reference implementation for kernel {other:?}"),
+    };
+    Ok(vec![out])
+}

@@ -1,0 +1,254 @@
+//! Parallel grid scheduler: run a tile program once per grid cell across
+//! a std-only worker pool.
+//!
+//! The paper's execution model is serial per program instance and
+//! embarrassingly parallel across the grid — the code generator emits one
+//! Triton program per outermost-level cell.  This scheduler reproduces
+//! that: grid cells are distributed over OS threads in contiguous chunks,
+//! and every thread writes the shared output buffers directly.
+//!
+//! # Safety
+//!
+//! Workers write outputs through a raw pointer ([`SharedOut`]).  This is
+//! sound because the §3.2.1 non-overlap property of valid arrangements
+//! guarantees distinct grid cells scatter to *disjoint* output offsets.
+//! `run` enforces the property before parallelizing: every output view
+//! must vary with every non-trivial grid dimension (checked against the
+//! affine-lowered cell coefficients), so no two threads ever write the
+//! same element.  The unsafe surface is confined to the single write in
+//! `run_cells`.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ir::{exec_cell, ParamData, TileProgram};
+use super::view::ParamView;
+use crate::runtime::HostTensor;
+
+/// Raw output pointer that may cross thread boundaries (see module docs).
+#[derive(Clone, Copy)]
+struct SharedOut(*mut f32, usize);
+
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+#[derive(Debug, Clone)]
+pub struct GridScheduler {
+    /// worker threads; 1 = serial execution on the caller's thread
+    pub threads: usize,
+}
+
+impl Default for GridScheduler {
+    fn default() -> Self {
+        GridScheduler {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+impl GridScheduler {
+    pub fn serial() -> GridScheduler {
+        GridScheduler { threads: 1 }
+    }
+
+    pub fn pooled(threads: usize) -> GridScheduler {
+        GridScheduler { threads: threads.max(1) }
+    }
+
+    /// Execute `program` over the whole grid.
+    ///
+    /// `inputs` are the non-output parameters in order; outputs are
+    /// allocated as zero-filled f32 tensors of `output_shapes` and
+    /// returned in parameter order.
+    pub fn run(
+        &self,
+        program: &TileProgram,
+        views: &[ParamView],
+        inputs: &[&HostTensor],
+        output_shapes: &[Vec<usize>],
+    ) -> Result<Vec<HostTensor>> {
+        // marshal parameter data: inputs in declaration order, outputs
+        // allocated here
+        let is_output: Vec<bool> = views.iter().map(|v| v.is_output).collect();
+        program.validate(views.len(), &is_output)?;
+        let n_inputs = views.iter().filter(|v| !v.is_output).count();
+        if inputs.len() != n_inputs {
+            bail!("program {} expects {} inputs, got {}", program.name, n_inputs, inputs.len());
+        }
+        let grid = views
+            .first()
+            .map(|v| v.grid.clone())
+            .ok_or_else(|| anyhow!("program {} has no parameters", program.name))?;
+        for v in views {
+            if v.grid != grid {
+                bail!(
+                    "outermost-level shapes disagree: {:?} ({}) vs {grid:?} — invalid \
+                     arrangement (paper §3.2.1)",
+                    v.grid,
+                    v.name
+                );
+            }
+        }
+        // the loop (sub-tile) shape shared by looped parameters
+        let mut loop_shape: Vec<usize> = Vec::new();
+        for v in views {
+            if !v.loop_shape.is_empty() {
+                if loop_shape.is_empty() {
+                    loop_shape = v.loop_shape.clone();
+                } else if loop_shape != v.loop_shape {
+                    bail!(
+                        "loop-level shapes disagree: {:?} ({}) vs {loop_shape:?}",
+                        v.loop_shape,
+                        v.name
+                    );
+                }
+            }
+        }
+
+        let mut outputs: Vec<HostTensor> = Vec::new();
+        {
+            let mut shapes = output_shapes.iter();
+            for v in views {
+                if v.is_output {
+                    let shape = shapes
+                        .next()
+                        .ok_or_else(|| anyhow!("missing output shape for {}", v.name))?;
+                    // the scatter bounds-check uses the view's src_shape,
+                    // so the buffer MUST match it — the raw-pointer write
+                    // below is only sound under this equality
+                    if shape != &v.src_shape {
+                        bail!(
+                            "output shape {shape:?} for {} does not match its view's \
+                             source shape {:?}",
+                            v.name,
+                            v.src_shape
+                        );
+                    }
+                    outputs.push(HostTensor::zeros_f32(shape.clone()));
+                }
+            }
+        }
+        let data: Vec<ParamData<'_>> = {
+            let mut ins = inputs.iter().copied();
+            views
+                .iter()
+                .map(|v| {
+                    if v.is_output {
+                        ParamData::Out
+                    } else {
+                        ParamData::In(ins.next().expect("input arity checked above"))
+                    }
+                })
+                .collect()
+        };
+
+        let cells: i64 = grid.iter().product::<i64>().max(1);
+        let out_ptrs: Vec<SharedOut> = outputs
+            .iter_mut()
+            .map(|t| match &mut t.data {
+                crate::runtime::HostData::F32(v) => SharedOut(v.as_mut_ptr(), v.len()),
+                crate::runtime::HostData::I32(_) => unreachable!("outputs are f32"),
+            })
+            .collect();
+
+        // parallel writes are sound only if distinct cells scatter to
+        // disjoint offsets: for every output view and every non-trivial
+        // grid dimension, some source dim's cell stride must clear the
+        // whole window one cell writes (an expanded grid dim — or a
+        // sliding-window stride smaller than the tile — would make cells
+        // along it write overlapping elements concurrently)
+        for v in views.iter().filter(|v| v.is_output) {
+            for (g, &size) in grid.iter().enumerate() {
+                if size > 1 && !v.grid_dim_disjoint(g) {
+                    bail!(
+                        "output parameter {} writes overlapping regions across grid \
+                         dim {g} (size {size}) — invalid arrangement for parallel \
+                         execution (paper §3.2.1 non-overlap)",
+                        v.name
+                    );
+                }
+            }
+        }
+
+        // below ~2 cells per worker the spawn/join cost dominates: run on
+        // the caller's thread instead
+        let threads = if (cells as usize) < self.threads.saturating_mul(2) {
+            1
+        } else {
+            self.threads
+        };
+        if threads == 1 {
+            run_cells(program, views, &data, &grid, &loop_shape, 0, cells, &out_ptrs)?;
+        } else {
+            let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            let chunk = (cells + threads as i64 - 1) / threads as i64;
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let (data, failure) = (&data, &failure);
+                    let (grid, loop_shape, out_ptrs) = (&grid, &loop_shape, &out_ptrs);
+                    let lo = t as i64 * chunk;
+                    let hi = (lo + chunk).min(cells);
+                    scope.spawn(move || {
+                        if let Err(e) =
+                            run_cells(program, views, data, grid, loop_shape, lo, hi, out_ptrs)
+                        {
+                            *failure.lock().unwrap() = Some(e);
+                        }
+                    });
+                }
+            });
+            if let Some(e) = failure.into_inner().unwrap() {
+                return Err(e);
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cells(
+    program: &TileProgram,
+    views: &[ParamView],
+    data: &[ParamData<'_>],
+    grid: &[i64],
+    loop_shape: &[usize],
+    lo: i64,
+    hi: i64,
+    out_ptrs: &[SharedOut],
+) -> Result<()> {
+    let out_index: Vec<Option<usize>> = {
+        let mut next = 0usize;
+        views
+            .iter()
+            .map(|v| {
+                if v.is_output {
+                    next += 1;
+                    Some(next - 1)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    };
+    let mut cell = vec![0i64; grid.len()];
+    let mut write = |param: usize, off: usize, v: f32| {
+        let SharedOut(ptr, len) = out_ptrs[out_index[param].expect("store targets an output")];
+        debug_assert!(off < len, "scatter offset {off} out of range {len}");
+        // SAFETY: distinct grid cells write disjoint offsets — §3.2.1
+        // non-overlap, enforced by the output-disjointness check in
+        // `GridScheduler::run` before any thread is spawned; `ptr`
+        // outlives the scope and `off < len` by scatter bounds-checking.
+        unsafe { *ptr.add(off) = v };
+    };
+    for linear in lo..hi {
+        // linear → multi-index (row-major)
+        let mut rem = linear;
+        for d in (0..grid.len()).rev() {
+            cell[d] = rem % grid[d].max(1);
+            rem /= grid[d].max(1);
+        }
+        exec_cell(program, views, data, &cell, loop_shape, &mut write)?;
+    }
+    Ok(())
+}

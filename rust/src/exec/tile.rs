@@ -1,0 +1,301 @@
+//! Dense f32 tiles: the value type the tile-program interpreter computes
+//! on.  A tile is the materialized innermost level of one arranged
+//! parameter at one grid cell — small (a block), row-major, always f32
+//! (the accumulation dtype of every catalog application function).
+//!
+//! Binary operations broadcast with NumPy right-alignment semantics, which
+//! is exactly what `ntl` expressions like `x - max(x)` need after a
+//! keep-dim reduction.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tile {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Exp,
+    Sigmoid,
+    Rsqrt,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Mean,
+}
+
+fn elem_count(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Row-major strides for a shape.
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut out = vec![0; shape.len()];
+    let mut acc = 1;
+    for (dim, stride) in shape.iter().zip(out.iter_mut()).rev() {
+        *stride = acc;
+        acc *= dim;
+    }
+    out
+}
+
+impl Tile {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tile> {
+        if data.len() != elem_count(&shape) {
+            bail!("tile shape {shape:?} needs {} elements, got {}", elem_count(&shape), data.len());
+        }
+        Ok(Tile { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tile {
+        let n = elem_count(&shape);
+        Tile { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(value: f32) -> Tile {
+        Tile { shape: vec![1], data: vec![value] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn unary(&self, op: UnaryOp) -> Tile {
+        let f: fn(f32) -> f32 = match op {
+            UnaryOp::Exp => f32::exp,
+            UnaryOp::Sigmoid => |x: f32| 1.0 / (1.0 + (-x).exp()),
+            UnaryOp::Rsqrt => |x: f32| 1.0 / x.sqrt(),
+            UnaryOp::Neg => |x: f32| -x,
+        };
+        Tile { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Broadcasted result shape of two operands (NumPy right-alignment).
+    fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+        let rank = a.len().max(b.len());
+        let mut out = vec![0; rank];
+        for i in 0..rank {
+            let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+            let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+            out[i] = match (da, db) {
+                (x, y) if x == y => x,
+                (1, y) => y,
+                (x, 1) => x,
+                (x, y) => bail!("cannot broadcast {a:?} with {b:?} (dim {x} vs {y})"),
+            };
+        }
+        Ok(out)
+    }
+
+    /// Strides of an operand viewed at the broadcast rank (0 on expanded
+    /// or size-1 dims).
+    fn broadcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
+        let own = strides(shape);
+        let offset = out.len() - shape.len();
+        (0..out.len())
+            .map(|i| {
+                if i < offset || shape[i - offset] == 1 {
+                    0
+                } else {
+                    own[i - offset]
+                }
+            })
+            .collect()
+    }
+
+    pub fn binary(&self, other: &Tile, op: BinOp) -> Result<Tile> {
+        let f: fn(f32, f32) -> f32 = match op {
+            BinOp::Add => |x: f32, y: f32| x + y,
+            BinOp::Sub => |x: f32, y: f32| x - y,
+            BinOp::Mul => |x: f32, y: f32| x * y,
+            BinOp::Div => |x: f32, y: f32| x / y,
+            BinOp::Max => f32::max,
+        };
+        let shape = Tile::broadcast_shape(&self.shape, &other.shape)?;
+        if shape == self.shape && shape == other.shape {
+            // fast path: identical shapes
+            let data = self.data.iter().zip(&other.data).map(|(&x, &y)| f(x, y)).collect();
+            return Ok(Tile { shape, data });
+        }
+        let sa = Tile::broadcast_strides(&self.shape, &shape);
+        let sb = Tile::broadcast_strides(&other.shape, &shape);
+        let n = elem_count(&shape);
+        let mut data = Vec::with_capacity(n);
+        let mut coords = vec![0usize; shape.len()];
+        let (mut ia, mut ib) = (0usize, 0usize);
+        for _ in 0..n {
+            data.push(f(self.data[ia], other.data[ib]));
+            // odometer increment with incremental flat offsets
+            for d in (0..shape.len()).rev() {
+                coords[d] += 1;
+                ia += sa[d];
+                ib += sb[d];
+                if coords[d] < shape[d] {
+                    break;
+                }
+                ia -= sa[d] * shape[d];
+                ib -= sb[d] * shape[d];
+                coords[d] = 0;
+            }
+        }
+        Ok(Tile { shape, data })
+    }
+
+    /// Reduce with keep-dims: `axis: None` reduces every axis (result is
+    /// all-ones shape of the same rank), `Some(d)` reduces only axis `d`.
+    pub fn reduce(&self, axis: Option<usize>, op: ReduceOp) -> Result<Tile> {
+        let rank = self.shape.len();
+        if let Some(d) = axis {
+            if d >= rank {
+                bail!("reduce axis {d} out of range for shape {:?}", self.shape);
+            }
+        }
+        let reduced: Vec<bool> = (0..rank).map(|d| axis.map_or(true, |a| a == d)).collect();
+        let out_shape: Vec<usize> = self
+            .shape
+            .iter()
+            .zip(&reduced)
+            .map(|(&s, &r)| if r { 1 } else { s })
+            .collect();
+        let count: usize = self
+            .shape
+            .iter()
+            .zip(&reduced)
+            .filter(|(_, &r)| r)
+            .map(|(&s, _)| s)
+            .product();
+        if count == 0 {
+            bail!("reduce over zero elements in shape {:?}", self.shape);
+        }
+        let out_strides = strides(&out_shape);
+        let n_out = elem_count(&out_shape);
+        let init = match op {
+            ReduceOp::Sum | ReduceOp::Mean => 0.0f64,
+            ReduceOp::Max => f64::NEG_INFINITY,
+        };
+        let mut acc = vec![init; n_out];
+        let mut coords = vec![0usize; rank];
+        for &v in &self.data {
+            let mut off = 0;
+            for d in 0..rank {
+                if !reduced[d] {
+                    off += coords[d] * out_strides[d];
+                }
+            }
+            match op {
+                ReduceOp::Sum | ReduceOp::Mean => acc[off] += v as f64,
+                ReduceOp::Max => acc[off] = acc[off].max(v as f64),
+            }
+            for d in (0..rank).rev() {
+                coords[d] += 1;
+                if coords[d] < self.shape[d] {
+                    break;
+                }
+                coords[d] = 0;
+            }
+        }
+        let scale = if op == ReduceOp::Mean { 1.0 / count as f64 } else { 1.0 };
+        Ok(Tile {
+            shape: out_shape,
+            data: acc.into_iter().map(|v| (v * scale) as f32).collect(),
+        })
+    }
+
+    /// 2-D matrix product `[M, K] x [K, N] -> [M, N]` (f32 accumulate,
+    /// i-k-j loop order — the innermost loop walks both `b` and `out`
+    /// rows contiguously).
+    pub fn dot(&self, other: &Tile) -> Result<Tile> {
+        let (a, b) = (self, other);
+        if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
+            bail!("dot shape mismatch: {:?} x {:?}", a.shape, b.shape);
+        }
+        let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Ok(Tile { shape: vec![m, n], data: out })
+    }
+
+    /// Broadcast this tile to the shape of `like` (via `+ zeros(like)`).
+    pub fn broadcast_to(&self, like: &[usize]) -> Result<Tile> {
+        self.binary(&Tile::zeros(like.to_vec()), BinOp::Add)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_broadcasts_rowwise() {
+        let x = Tile::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let m = Tile::new(vec![1, 1], vec![4.0]).unwrap();
+        let d = x.binary(&m, BinOp::Sub).unwrap();
+        assert_eq!(d.shape, vec![1, 4]);
+        assert_eq!(d.data, vec![-3.0, -2.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn binary_broadcasts_rank_mismatch() {
+        let x = Tile::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let s = Tile::scalar(10.0);
+        let y = x.binary(&s, BinOp::Add).unwrap();
+        assert_eq!(y.shape, vec![2, 2]);
+        assert_eq!(y.data, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn reduce_axis_and_all() {
+        let x = Tile::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let rows = x.reduce(Some(1), ReduceOp::Sum).unwrap();
+        assert_eq!(rows.shape, vec![2, 1]);
+        assert_eq!(rows.data, vec![6.0, 15.0]);
+        let all = x.reduce(None, ReduceOp::Max).unwrap();
+        assert_eq!(all.shape, vec![1, 1]);
+        assert_eq!(all.data, vec![6.0]);
+        let mean = x.reduce(None, ReduceOp::Mean).unwrap();
+        assert_eq!(mean.data, vec![3.5]);
+    }
+
+    #[test]
+    fn dot_matches_by_hand() {
+        let a = Tile::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tile::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = a.dot(&b).unwrap();
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn bad_broadcast_rejected() {
+        let a = Tile::zeros(vec![2, 3]);
+        let b = Tile::zeros(vec![2, 4]);
+        assert!(a.binary(&b, BinOp::Add).is_err());
+    }
+}

@@ -1,0 +1,420 @@
+//! Strided tile views: the bridge from an arrangement's *symbolic* launch
+//! plan to *concrete* memory traffic.
+//!
+//! A [`ParamView`] is one arranged parameter specialized to concrete shape
+//! and meta bindings.  Its hierarchy levels split into three classes:
+//!
+//! * **outermost level** — the grid (tile-to-program mapping, paper §3.2.1);
+//! * **middle levels** — the loop the application function iterates
+//!   (`for k in range(input.shape[0])` in the mm kernels);
+//! * **innermost level** — the application tile the program computes on.
+//!
+//! The per-source-dim index expressions (source-to-target mapping, §3.2.2)
+//! are lowered to affine form — one base plus one integer stride per level
+//! variable — and *verified* against the symbolic evaluator at probe
+//! points, so gather/scatter run on plain integer arithmetic (`Send +
+//! Sync`, no `Rc`-based `Expr` in the hot path) without trusting the
+//! lowering blindly.  Out-of-range coordinates read the parameter's pad
+//! value and drop writes — the pad-and-crop edge semantics of the DSL.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::tile::Tile;
+use crate::prng::SplitMix64;
+use crate::runtime::HostTensor;
+use crate::symbolic::Expr;
+use crate::tensor::SymTensor;
+
+/// One affine index expression: `base + Σ coeff[class][i] * var[class][i]`.
+#[derive(Debug, Clone)]
+struct AffineIndex {
+    base: i64,
+    cell: Vec<i64>,
+    sub: Vec<i64>,
+    inner: Vec<i64>,
+}
+
+/// One arranged parameter, specialized and lowered for native execution.
+#[derive(Debug, Clone)]
+pub struct ParamView {
+    pub name: String,
+    pub is_output: bool,
+    /// concrete source-tensor shape
+    pub src_shape: Vec<usize>,
+    /// innermost-level (application tile) shape
+    pub block_shape: Vec<usize>,
+    /// flattened middle-level shape (empty = no loop)
+    pub loop_shape: Vec<usize>,
+    /// outermost-level shape — identical across parameters (§3.2.1)
+    pub grid: Vec<i64>,
+    pub pad_value: f32,
+    index: Vec<AffineIndex>,
+    /// row-major strides of the source tensor
+    src_strides: Vec<usize>,
+}
+
+fn eval_size(size: &Expr, bindings: &BTreeMap<String, i64>, what: &str) -> Result<i64> {
+    let v = size
+        .substitute_consts(bindings)
+        .eval(bindings)
+        .with_context(|| format!("evaluating {what} size {size}"))?;
+    if v < 0 {
+        bail!("{what} size {size} evaluated to negative {v}");
+    }
+    Ok(v)
+}
+
+impl ParamView {
+    /// Lower one arranged parameter under concrete bindings.
+    ///
+    /// `src_shape` is the concrete source-tensor shape; `bindings` must
+    /// cover every size/meta symbol the arrangement references.
+    pub fn specialize(
+        tensor: &SymTensor,
+        bindings: &BTreeMap<String, i64>,
+        src_shape: &[usize],
+        is_output: bool,
+        pad_value: f32,
+    ) -> Result<ParamView> {
+        let name = tensor.name.clone();
+        if tensor.levels.len() < 2 {
+            bail!("parameter {name}: arrangement needs at least outer + tile levels");
+        }
+        if tensor.indices.len() != src_shape.len() {
+            bail!(
+                "parameter {name}: {} index expressions for source rank {}",
+                tensor.indices.len(),
+                src_shape.len()
+            );
+        }
+        tensor.validate_checks(bindings)?;
+
+        // level sizes + variable classification
+        let n_levels = tensor.levels.len();
+        let mut grid = Vec::new();
+        let mut loop_shape = Vec::new();
+        let mut block_shape = Vec::new();
+        // (var name, class, position): class 0 = cell, 1 = sub, 2 = inner
+        let mut vars: Vec<(String, usize, usize)> = Vec::new();
+        for (li, level) in tensor.levels.iter().enumerate() {
+            let class = if li == 0 {
+                0
+            } else if li + 1 == n_levels {
+                2
+            } else {
+                1
+            };
+            for dim in level {
+                let size = eval_size(&dim.size, bindings, &format!("parameter {name} level {li}"))?;
+                let pos = match class {
+                    0 => {
+                        grid.push(size);
+                        grid.len() - 1
+                    }
+                    1 => {
+                        loop_shape.push(size as usize);
+                        loop_shape.len() - 1
+                    }
+                    _ => {
+                        block_shape.push(size as usize);
+                        block_shape.len() - 1
+                    }
+                };
+                vars.push((dim.var.clone(), class, pos));
+            }
+        }
+        // drop size-1 middle dims: they carry no loop structure
+        // (keep coefficients aligned by NOT dropping — a size-1 loop dim
+        //  simply never advances, which is equivalent and simpler)
+
+        // affine lowering of each index expression
+        let zero_env = |env: &mut BTreeMap<String, i64>| {
+            for (v, _, _) in &vars {
+                env.insert(v.clone(), 0);
+            }
+        };
+        let mut index = Vec::new();
+        for expr in &tensor.indices {
+            let spec = expr.substitute_consts(bindings);
+            let mut env = bindings.clone();
+            zero_env(&mut env);
+            let base = spec
+                .eval(&env)
+                .with_context(|| format!("parameter {name}: index {expr} at origin"))?;
+            let mut aff = AffineIndex {
+                base,
+                cell: vec![0; grid.len()],
+                sub: vec![0; loop_shape.len()],
+                inner: vec![0; block_shape.len()],
+            };
+            for (v, class, pos) in &vars {
+                env.insert(v.clone(), 1);
+                let coeff = spec
+                    .eval(&env)
+                    .with_context(|| format!("parameter {name}: index {expr} probing {v}"))?
+                    - base;
+                env.insert(v.clone(), 0);
+                match *class {
+                    0 => aff.cell[*pos] += coeff,
+                    1 => aff.sub[*pos] += coeff,
+                    _ => aff.inner[*pos] += coeff,
+                }
+            }
+            // verify the lowering is exact (the expression is affine) at
+            // deterministic probe points: all-max plus pseudo-random
+            let var_max = |class: usize, pos: usize| -> i64 {
+                match class {
+                    0 => (grid[pos] - 1).max(0),
+                    1 => (loop_shape[pos] as i64 - 1).max(0),
+                    _ => (block_shape[pos] as i64 - 1).max(0),
+                }
+            };
+            let mut rng = SplitMix64::new(0x9e37 ^ base as u64);
+            for probe in 0..4 {
+                let mut env = bindings.clone();
+                let mut predicted = base;
+                for (v, class, pos) in &vars {
+                    let hi = var_max(*class, *pos);
+                    let val = if probe == 0 { hi } else { rng.below(hi as u64 + 1) as i64 };
+                    env.insert(v.clone(), val);
+                    let coeff = match *class {
+                        0 => aff.cell[*pos],
+                        1 => aff.sub[*pos],
+                        _ => aff.inner[*pos],
+                    };
+                    predicted += coeff * val;
+                }
+                let actual = spec
+                    .eval(&env)
+                    .with_context(|| format!("parameter {name}: index {expr} probe"))?;
+                if actual != predicted {
+                    bail!(
+                        "parameter {name}: index expression {expr} is not affine in its \
+                         level variables (probe disagrees: {actual} vs {predicted}); \
+                         the native backend cannot lower this arrangement"
+                    );
+                }
+            }
+            index.push(aff);
+        }
+
+        let mut src_strides = vec![0usize; src_shape.len()];
+        let mut acc = 1usize;
+        for (dim, stride) in src_shape.iter().zip(src_strides.iter_mut()).rev() {
+            *stride = acc;
+            acc *= dim;
+        }
+
+        Ok(ParamView {
+            name,
+            is_output,
+            src_shape: src_shape.to_vec(),
+            block_shape,
+            loop_shape,
+            grid,
+            pad_value,
+            index,
+            src_strides,
+        })
+    }
+
+    /// Number of loop iterations (sub-tiles) one grid cell sees.
+    pub fn n_sub(&self) -> usize {
+        self.loop_shape.iter().product::<usize>().max(1)
+    }
+
+    /// True if adjacent cells along grid dimension `g` provably address
+    /// disjoint source regions: some source dim's cell stride along `g`
+    /// is at least the full span that dim's coordinates cover within one
+    /// cell (over all inner and loop variables).  The scheduler requires
+    /// this of every output view on every non-trivial grid dim before
+    /// parallelizing — two cells writing the same offsets concurrently
+    /// would be a data race.
+    pub fn grid_dim_disjoint(&self, g: usize) -> bool {
+        self.index.iter().any(|aff| {
+            let stride = aff.cell.get(g).copied().unwrap_or(0).abs();
+            if stride == 0 {
+                return false;
+            }
+            // widest window this source dim's coordinate sweeps per cell
+            let mut span: i64 = 1;
+            for (coeff, dim) in aff.inner.iter().zip(&self.block_shape) {
+                span += coeff.abs() * (*dim as i64 - 1).max(0);
+            }
+            for (coeff, dim) in aff.sub.iter().zip(&self.loop_shape) {
+                span += coeff.abs() * (*dim as i64 - 1).max(0);
+            }
+            stride >= span
+        })
+    }
+
+    /// Per-source-dim start coordinate for a (cell, sub) pair.
+    fn starts(&self, cell: &[i64], sub: &[usize]) -> Vec<i64> {
+        self.index
+            .iter()
+            .map(|aff| {
+                let mut v = aff.base;
+                for (c, coeff) in cell.iter().zip(&aff.cell) {
+                    v += c * coeff;
+                }
+                for (s, coeff) in sub.iter().zip(&aff.sub) {
+                    v += *s as i64 * coeff;
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Walk every element of the block at (cell, sub), yielding
+    /// `(flat source offset or None-if-padded)` in row-major block order.
+    fn for_each_coord<F: FnMut(Option<usize>)>(&self, cell: &[i64], sub: &[usize], mut f: F) {
+        let starts = self.starts(cell, sub);
+        let rank = self.src_shape.len();
+        let n: usize = self.block_shape.iter().product::<usize>().max(1);
+        let mut block_coords = vec![0usize; self.block_shape.len()];
+        // coords[d] for the current element, updated incrementally
+        let mut coords = starts.clone();
+        for _ in 0..n {
+            let mut off = 0usize;
+            let mut inside = true;
+            for d in 0..rank {
+                let c = coords[d];
+                if c < 0 || c >= self.src_shape[d] as i64 {
+                    inside = false;
+                    break;
+                }
+                off += c as usize * self.src_strides[d];
+            }
+            f(if inside { Some(off) } else { None });
+            // odometer over block coords; coords[d] updated by the
+            // per-inner-variable stride of each source dim
+            for b in (0..self.block_shape.len()).rev() {
+                block_coords[b] += 1;
+                for (d, aff) in self.index.iter().enumerate() {
+                    coords[d] += aff.inner[b];
+                }
+                if block_coords[b] < self.block_shape[b] {
+                    break;
+                }
+                for (d, aff) in self.index.iter().enumerate() {
+                    coords[d] -= aff.inner[b] * self.block_shape[b] as i64;
+                }
+                block_coords[b] = 0;
+            }
+        }
+    }
+
+    /// Materialize the block at (cell, sub) from a source tensor,
+    /// padding out-of-range elements.
+    pub fn gather(&self, src: &HostTensor, cell: &[i64], sub: &[usize]) -> Result<Tile> {
+        let data = src.as_f32()?;
+        let n: usize = self.block_shape.iter().product::<usize>().max(1);
+        let mut out = Vec::with_capacity(n);
+        self.for_each_coord(cell, sub, |off| {
+            out.push(match off {
+                Some(o) => data[o],
+                None => self.pad_value,
+            });
+        });
+        Tile::new(self.block_shape.clone(), out)
+    }
+
+    /// Scatter a computed block back, dropping out-of-range elements.
+    /// `write(flat_offset, value)` receives only in-range destinations —
+    /// the §3.2.1 non-overlap property guarantees distinct grid cells hit
+    /// distinct offsets, which is what makes the grid parallelizable.
+    pub fn scatter_with<F: FnMut(usize, f32)>(
+        &self,
+        tile: &Tile,
+        cell: &[i64],
+        sub: &[usize],
+        mut write: F,
+    ) -> Result<()> {
+        if tile.shape != self.block_shape {
+            bail!(
+                "store of tile shape {:?} into parameter {} with block {:?}",
+                tile.shape,
+                self.name,
+                self.block_shape
+            );
+        }
+        let mut it = tile.data.iter();
+        self.for_each_coord(cell, sub, |off| {
+            let v = *it.next().expect("tile length matches block");
+            if let Some(o) = off {
+                write(o, v);
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SymTensor;
+
+    fn bind(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn view_1d(n: usize, block: i64) -> ParamView {
+        let t = SymTensor::new("x", 1)
+            .tile(&[Some(Expr::sym("B"))], None)
+            .unwrap();
+        let bindings = bind(&[("x_size_0", n as i64), ("B", block)]);
+        ParamView::specialize(&t, &bindings, &[n], false, -1.0).unwrap()
+    }
+
+    #[test]
+    fn gather_pads_the_tail() {
+        let view = view_1d(10, 4);
+        assert_eq!(view.grid, vec![3]);
+        assert_eq!(view.block_shape, vec![4]);
+        let src = HostTensor::f32(vec![10], (0..10).map(|i| i as f32).collect()).unwrap();
+        let t = view.gather(&src, &[2], &[]).unwrap();
+        assert_eq!(t.data, vec![8.0, 9.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn scatter_drops_the_tail() {
+        let view = view_1d(10, 4);
+        let tile = Tile::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut writes = Vec::new();
+        view.scatter_with(&tile, &[2], &[], |off, v| writes.push((off, v))).unwrap();
+        assert_eq!(writes, vec![(8, 1.0), (9, 2.0)]);
+    }
+
+    #[test]
+    fn mm_input_view_walks_k_tiles() {
+        // the Listing-5 input arrangement: [M, K] seen as (gm, gn) grid of
+        // k-sequences of [BM, BK] tiles
+        let tensors = crate::arrange::catalog::mm().unwrap();
+        let input = &tensors[0];
+        let bindings = bind(&[
+            ("BLOCK_SIZE_M", 2),
+            ("BLOCK_SIZE_N", 2),
+            ("BLOCK_SIZE_K", 2),
+            ("input_size_0", 4),
+            ("input_size_1", 4),
+            ("other_size_0", 4),
+            ("other_size_1", 4),
+            ("output_size_0", 4),
+            ("output_size_1", 4),
+        ]);
+        let view = ParamView::specialize(input, &bindings, &[4, 4], false, 0.0).unwrap();
+        assert_eq!(view.grid, vec![2, 2]);
+        assert_eq!(view.loop_shape, vec![2]);
+        assert_eq!(view.block_shape, vec![2, 2]);
+        let src =
+            HostTensor::f32(vec![4, 4], (0..16).map(|i| i as f32).collect()).unwrap();
+        // cell (1, 0) [second row-block], k-tile 1 → rows 2..4, cols 2..4
+        let t = view.gather(&src, &[1, 0], &[1]).unwrap();
+        assert_eq!(t.data, vec![10.0, 11.0, 14.0, 15.0]);
+        // the expanded grid dim must not move the input view
+        let t2 = view.gather(&src, &[1, 1], &[1]).unwrap();
+        assert_eq!(t2.data, t.data);
+    }
+}

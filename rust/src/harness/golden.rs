@@ -2,12 +2,72 @@
 //! recorded by the Python oracle at export time.  This is the end-to-end
 //! numerical check of the whole chain: DSL codegen -> HLO text -> PJRT
 //! compile -> execute from Rust.
+//!
+//! [`check_native`] is the artifact-free analogue: the native
+//! tile-execution backend checked against the in-crate reference oracles.
 
 use anyhow::{bail, Result};
 
+use crate::exec::{self, GridScheduler};
+use crate::prng::SplitMix64;
 use crate::runtime::{HostTensor, Registry};
 
 const TOL: f32 = 2e-4;
+
+/// Native-backend tolerance (ISSUE acceptance: max |diff| ≤ 1e-4).
+const NATIVE_TOL: f32 = 1e-4;
+
+/// Cross-check every native tile program against its reference oracle,
+/// serial and pooled.  Returns the number of (kernel, scheduler) cases.
+pub fn check_native() -> Result<usize> {
+    let mut rng = SplitMix64::new(2025);
+    let mut cases = 0;
+    for kernel in exec::kernels() {
+        let inputs = native_task_inputs(kernel.name, &mut rng)?;
+        let expected = exec::reference::run(kernel.name, &inputs)?;
+        for scheduler in [GridScheduler::serial(), GridScheduler::pooled(4)] {
+            let got = kernel.run(&inputs, &scheduler)?;
+            for (g, e) in got.iter().zip(&expected) {
+                let diff = g.max_abs_diff(e)?;
+                if diff > NATIVE_TOL {
+                    bail!(
+                        "native {} ({} threads): max|diff| = {diff} > {NATIVE_TOL}",
+                        kernel.name,
+                        scheduler.threads
+                    );
+                }
+                println!(
+                    "native {}.{}t: max|diff| = {diff:.2e}",
+                    kernel.name, scheduler.threads
+                );
+            }
+            cases += 1;
+        }
+    }
+    Ok(cases)
+}
+
+/// Deterministic inputs for a native kernel (edge-exercising odd sizes).
+pub fn native_task_inputs(name: &str, rng: &mut SplitMix64) -> Result<Vec<HostTensor>> {
+    Ok(match name {
+        "add" => vec![
+            HostTensor::randn(vec![1000], rng),
+            HostTensor::randn(vec![1000], rng),
+        ],
+        "silu" => vec![HostTensor::randn(vec![777], rng)],
+        "softmax" => vec![HostTensor::randn(vec![7, 301], rng)],
+        "rms_norm" => vec![HostTensor::randn(vec![5, 257], rng)],
+        "mm" => vec![
+            HostTensor::randn(vec![70, 50], rng),
+            HostTensor::randn(vec![50, 90], rng),
+        ],
+        "bmm" => vec![
+            HostTensor::randn(vec![3, 33, 17], rng),
+            HostTensor::randn(vec![3, 17, 29], rng),
+        ],
+        other => bail!("no native task inputs for kernel {other:?}"),
+    })
+}
 
 pub fn check_all(registry: &Registry) -> Result<()> {
     let manifest = registry.manifest();

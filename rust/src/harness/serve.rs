@@ -13,15 +13,25 @@ use crate::prng::SplitMix64;
 use crate::runtime::{HostTensor, Manifest};
 
 pub fn run(args: &Args) -> Result<()> {
-    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let manifest = Arc::new(Manifest::load_or_builtin(&artifacts_dir()));
     let workers = args.opt_usize("workers", 2);
     let requests = args.opt_usize("requests", 64);
     let config = CoordinatorConfig { workers, ..Default::default() };
-    println!("starting coordinator: {workers} workers, {requests} requests");
+    println!(
+        "starting coordinator: {workers} workers, {requests} requests ({})",
+        if manifest.kernels.is_empty() { "native backend" } else { "AOT artifacts" }
+    );
     let coordinator = Coordinator::start(manifest.clone(), config);
 
-    let slot = manifest.kernel("add", "nt")?.args[0].shape[0];
-    let softmax_shape = manifest.kernel("softmax", "nt")?.args[0].shape.clone();
+    // artifact slot when present; natively any shape works
+    let slot = manifest
+        .kernel("add", "nt")
+        .map(|a| a.args[0].shape[0])
+        .unwrap_or(65536);
+    let softmax_shape = manifest
+        .kernel("softmax", "nt")
+        .map(|a| a.args[0].shape.clone())
+        .unwrap_or_else(|_| vec![64, 256]);
 
     // warm each worker's lazy compile cache before the measured burst
     let mut rng0 = SplitMix64::new(1);

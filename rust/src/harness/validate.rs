@@ -14,6 +14,25 @@ fn bindings(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
     pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
 }
 
+/// Artifact-free validation: specialize every native kernel at its smoke
+/// shapes and print the launch geometry the affine lowering produced.
+pub fn native_catalog() -> Result<()> {
+    let mut rng = crate::prng::SplitMix64::new(7);
+    for kernel in crate::exec::kernels() {
+        let inputs = super::golden::native_task_inputs(kernel.name, &mut rng)?;
+        let spec = kernel.specialize(&inputs)?;
+        println!(
+            "native {:<10} grid {:?} x {} programs, loop {:?}, outputs {:?}",
+            kernel.name,
+            spec.grid,
+            spec.programs(),
+            spec.loop_shape,
+            spec.output_shapes
+        );
+    }
+    Ok(())
+}
+
 /// Rename catalog symbols (`input_size_0`, ...) into the manifest's
 /// parameter-name-based symbols for a kernel, then compare geometry.
 pub fn catalog_parity(manifest: &Manifest) -> Result<()> {

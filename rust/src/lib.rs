@@ -8,22 +8,33 @@
 //! * [`symbolic`] / [`tensor`] / [`arrange`] — a full Rust mirror of the
 //!   DSL's tensor-oriented metaprogramming algebra, used to validate
 //!   arrangements and compute launch plans at serve time;
-//! * [`runtime`] — PJRT client, AOT artifact loading, executable registry;
+//! * [`exec`] — the **native tile-execution backend**: a tile-program IR
+//!   mirroring the `ntl` operation set, strided tile views materialized
+//!   from specialized launch plans (pad-value edge handling included),
+//!   and a parallel grid scheduler — the first path by which the Rust
+//!   system computes kernel results end-to-end on its own;
+//! * [`runtime`] — execution backends behind the
+//!   [`runtime::Backend`] trait: PJRT/AOT artifact loading plus the
+//!   native fallback, unified in the executable [`runtime::Registry`]
+//!   (artifact when present, native tile program otherwise);
 //! * [`coordinator`] — the kernel-serving system: router, dynamic batcher,
-//!   worker pool, metrics;
+//!   worker pool, metrics.  Requests for kernels without artifacts are
+//!   routed to the native backend transparently;
 //! * [`inference`] — the end-to-end autoregressive engine of Fig 7;
 //! * [`codemetrics`] — the Table 2 metric suite (raw, cyclomatic, Halstead,
 //!   maintainability index) over Python kernel sources;
 //! * [`harness`] — regenerates every table and figure of the paper's
 //!   evaluation section;
 //! * [`json`] / [`prng`] / [`benchkit`] / [`cli`] — dependency-free
-//!   infrastructure (the offline crate set contains only the xla closure).
+//!   infrastructure (the offline crate set contains only in-tree path
+//!   crates; see `vendor/`).
 
 pub mod arrange;
 pub mod benchkit;
 pub mod cli;
 pub mod codemetrics;
 pub mod coordinator;
+pub mod exec;
 pub mod harness;
 pub mod inference;
 pub mod json;

@@ -83,6 +83,42 @@ fn arg_specs(items: &[Json]) -> Result<Vec<ArgSpec>> {
 }
 
 impl Manifest {
+    /// An artifact-free manifest: no kernels, no model, no goldens.  The
+    /// registry resolves every kernel against the native tile-program
+    /// catalog instead — this is what lets the system serve requests on a
+    /// machine where `make artifacts` never ran.
+    pub fn builtin() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("artifacts"),
+            full: false,
+            kernels: Vec::new(),
+            model: None,
+            goldens: Vec::new(),
+            raw: Json::Obj(std::collections::BTreeMap::new()),
+        }
+    }
+
+    /// Load `manifest.json` if present, else fall back to the builtin
+    /// (native-only) manifest.  A manifest that *exists but fails to
+    /// load* is a loud warning, not a silent downgrade — otherwise a
+    /// corrupt file would quietly reroute every benchmark and request to
+    /// the native backend.
+    pub fn load_or_builtin(dir: &Path) -> Manifest {
+        match Manifest::load(dir) {
+            Ok(m) => m,
+            Err(e) => {
+                if dir.join("manifest.json").exists() {
+                    eprintln!(
+                        "warning: artifacts manifest at {} exists but failed to load \
+                         ({e:#}); falling back to native-only serving",
+                        dir.display()
+                    );
+                }
+                Manifest::builtin()
+            }
+        }
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -1,18 +1,27 @@
-//! Runtime: PJRT client wrapper + AOT artifact loading (L3 <-> L2 bridge).
+//! Runtime: execution backends + AOT artifact loading (L3 <-> L2 bridge).
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
-//! HLO *text* is the interchange format (see python/compile/aot.py).
+//! Two ways to execute a kernel meet behind the [`Backend`] trait:
+//!
+//! * **artifacts** — the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//!   `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//!   HLO *text* is the interchange format (see python/compile/aot.py).
+//!   Shape-specialized, fast, but only available when the AOT step ran
+//!   and a PJRT plugin exists.
+//! * **native tile programs** — `crate::exec`: the arrangement executed
+//!   directly over host buffers by the grid scheduler.  Shape-polymorphic
+//!   and always available; the [`Registry`] falls back to it when an
+//!   artifact is missing.
 
 mod host;
 mod manifest;
 mod registry;
 
-pub use host::HostTensor;
+pub use host::{HostData, HostTensor};
 pub use manifest::{GoldenCase, KernelArtifact, Manifest, ModelInfo, WeightEntry};
 pub use registry::{ExecKey, Registry};
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -71,6 +80,139 @@ impl Executable {
             literals.len()
         );
         Ok(literals)
+    }
+}
+
+/// Variants the native fallback may serve when no artifact exists.  The
+/// tile programs implement the `nt` application semantics; `baseline`
+/// computes the same mathematical function, so serving it natively is
+/// sound; `ref` goes to the reference oracle.  Anything else (a typo, a
+/// future variant) is rejected at admission instead of silently served.
+pub const NATIVE_VARIANTS: &[&str] = &["nt", "baseline", "native", "ref"];
+
+/// Decide how a (kernel, variant) with no artifact is served — the single
+/// classifier both router admission and [`Registry::resolve`] consult, so
+/// the two can never drift apart.
+pub fn native_fallback_kind(name: &str, variant: &str) -> Result<BackendKind> {
+    if !NATIVE_VARIANTS.contains(&variant) {
+        anyhow::bail!(
+            "the native fallback serves only variants {NATIVE_VARIANTS:?}, not {variant:?}"
+        );
+    }
+    if variant == "ref" && crate::exec::reference::supports(name) {
+        return Ok(BackendKind::Reference);
+    }
+    if crate::exec::lookup(name).is_some() {
+        return Ok(BackendKind::Native);
+    }
+    anyhow::bail!("kernel {name} has no native tile program or reference oracle")
+}
+
+/// Which execution path a resolved backend uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// compiled AOT artifact via PJRT
+    Artifact,
+    /// native tile-program execution (`crate::exec`)
+    Native,
+    /// straightforward reference implementation (`crate::exec::reference`)
+    Reference,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Artifact => "artifact",
+            BackendKind::Native => "native",
+            BackendKind::Reference => "reference",
+        }
+    }
+}
+
+/// Something that can execute one kernel: an AOT artifact or a native
+/// tile program.  Not `Send` — artifact executables hold `Rc`-based PJRT
+/// handles, so each coordinator worker owns its own registry, exactly as
+/// before.
+pub trait Backend {
+    fn name(&self) -> &str;
+    fn kind(&self) -> BackendKind;
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// [`Backend`] over a compiled AOT artifact.
+pub struct ArtifactBackend {
+    pub exe: Arc<Executable>,
+}
+
+impl Backend for ArtifactBackend {
+    fn name(&self) -> &str {
+        &self.exe.name
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Artifact
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.exe.run(inputs)
+    }
+}
+
+/// [`Backend`] over a native tile program.
+pub struct NativeBackend {
+    kernel: &'static crate::exec::NativeKernel,
+    scheduler: crate::exec::GridScheduler,
+    label: String,
+}
+
+impl NativeBackend {
+    pub fn new(kernel: &'static crate::exec::NativeKernel, threads: usize) -> NativeBackend {
+        NativeBackend {
+            kernel,
+            scheduler: crate::exec::GridScheduler::pooled(threads),
+            label: format!("{}.native", kernel.name),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.kernel.run(inputs, &self.scheduler)
+    }
+}
+
+/// [`Backend`] over the reference oracles (the `ref` variant when no
+/// artifact exists).
+pub struct RefBackend {
+    kernel: String,
+    label: String,
+}
+
+impl RefBackend {
+    pub fn new(kernel: &str) -> RefBackend {
+        RefBackend { kernel: kernel.to_string(), label: format!("{kernel}.ref-native") }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Reference
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        crate::exec::reference::run(&self.kernel, inputs)
     }
 }
 

@@ -1,15 +1,24 @@
-//! Executable registry: lazy compile-on-first-use cache over the manifest.
+//! Executable registry: lazy resolve-on-first-use cache over the manifest
+//! *and* the native kernel catalog.
 //!
-//! One compiled executable per (kernel, variant) — the Rust analogue of the
-//! DSL's per-specialization cache.  Thread-safe: the coordinator's worker
-//! pool shares one registry.
+//! One backend per (kernel, variant) — the Rust analogue of the DSL's
+//! per-specialization cache.  Resolution order:
+//!
+//! 1. a compiled AOT artifact, when the manifest has one **and** a PJRT
+//!    runtime is available;
+//! 2. otherwise the native tile program for the kernel (`crate::exec`),
+//!    with the reference oracle serving the `ref` variant.
+//!
+//! Artifact executables hold `Rc`-based PJRT handles, so a registry is not
+//! `Send`: the coordinator's workers each own one, built from the shared
+//! manifest.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::{Executable, Manifest, Runtime};
+use super::{ArtifactBackend, Backend, Executable, Manifest, NativeBackend, RefBackend, Runtime};
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ExecKey {
@@ -18,14 +27,49 @@ pub struct ExecKey {
 }
 
 pub struct Registry {
-    runtime: Runtime,
+    runtime: Option<Runtime>,
     manifest: Arc<Manifest>,
     cache: Mutex<HashMap<ExecKey, Arc<Executable>>>,
+    backends: Mutex<HashMap<ExecKey, Arc<dyn Backend>>>,
+    /// worker threads per native grid execution
+    native_threads: usize,
 }
 
 impl Registry {
     pub fn new(runtime: Runtime, manifest: Arc<Manifest>) -> Registry {
-        Registry { runtime, manifest, cache: Mutex::new(HashMap::new()) }
+        Registry {
+            runtime: Some(runtime),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            backends: Mutex::new(HashMap::new()),
+            native_threads: default_native_threads(),
+        }
+    }
+
+    /// A registry with no PJRT runtime: every kernel resolves natively.
+    pub fn native_only(manifest: Arc<Manifest>) -> Registry {
+        Registry {
+            runtime: None,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            backends: Mutex::new(HashMap::new()),
+            native_threads: default_native_threads(),
+        }
+    }
+
+    /// Use a PJRT runtime if one can be created, else run native-only —
+    /// the constructor the coordinator workers use.
+    pub fn auto(manifest: Arc<Manifest>) -> Registry {
+        match Runtime::cpu() {
+            Ok(runtime) => Registry::new(runtime, manifest),
+            Err(_) => Registry::native_only(manifest),
+        }
+    }
+
+    /// Override the native grid scheduler's thread count.
+    pub fn with_native_threads(mut self, threads: usize) -> Registry {
+        self.native_threads = threads.max(1);
+        self
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -36,27 +80,62 @@ impl Registry {
         self.manifest.clone()
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.runtime.as_ref()
     }
 
-    /// Fetch (compiling if needed) the executable for a kernel task.
-    pub fn kernel(&self, name: &str, variant: &str) -> Result<Arc<Executable>> {
+    /// Resolve (kernel, variant) to an executable backend: artifact when
+    /// possible, native tile program otherwise.
+    pub fn resolve(&self, name: &str, variant: &str) -> Result<Arc<dyn Backend>> {
+        let key = ExecKey { name: name.to_string(), variant: variant.to_string() };
+        if let Some(backend) = self.backends.lock().unwrap().get(&key) {
+            return Ok(backend.clone());
+        }
+        let backend: Arc<dyn Backend> = match self.try_artifact(name, variant) {
+            Ok(exe) => Arc::new(ArtifactBackend { exe }),
+            Err(artifact_err) => match super::native_fallback_kind(name, variant) {
+                Ok(super::BackendKind::Reference) => Arc::new(RefBackend::new(name)),
+                Ok(_) => {
+                    let kernel = crate::exec::lookup(name)
+                        .expect("classifier only returns Native when a tile program exists");
+                    Arc::new(NativeBackend::new(kernel, self.native_threads))
+                }
+                Err(fallback_err) => {
+                    return Err(anyhow!(
+                        "kernel {name}.{variant}: no artifact ({artifact_err:#}); \
+                         {fallback_err:#}"
+                    ));
+                }
+            },
+        };
+        self.backends.lock().unwrap().insert(key, backend.clone());
+        Ok(backend)
+    }
+
+    fn try_artifact(&self, name: &str, variant: &str) -> Result<Arc<Executable>> {
+        let art = self.manifest.kernel(name, variant)?;
+        let runtime = self
+            .runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("no PJRT runtime in this registry"))?;
         let key = ExecKey { name: name.to_string(), variant: variant.to_string() };
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
-        let art = self.manifest.kernel(name, variant)?;
-        let exe = Arc::new(self.runtime.load_artifact(
+        let exe = Arc::new(runtime.load_artifact(
             &self.manifest.artifact_path(&art.path),
             &format!("{name}.{variant}"),
             art.outputs.len(),
         )?);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, exe.clone());
+        self.cache.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
+    }
+
+    /// Fetch (compiling if needed) the artifact executable for a kernel
+    /// task.  Artifact-only — harness paths that measure AOT execution
+    /// use this; serving paths use [`Registry::resolve`].
+    pub fn kernel(&self, name: &str, variant: &str) -> Result<Arc<Executable>> {
+        self.try_artifact(name, variant)
     }
 
     /// Fetch a model-step executable (prefill/decode return 3 outputs).
@@ -65,17 +144,21 @@ impl Registry {
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
+        let runtime = self
+            .runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("no PJRT runtime in this registry"))?;
         let model = self
             .manifest
             .model
             .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("manifest has no model section"))?;
+            .ok_or_else(|| anyhow!("manifest has no model section"))?;
         let step = model
             .steps
             .iter()
             .find(|s| s.kind == kind && s.variant == variant)
-            .ok_or_else(|| anyhow::anyhow!("no model step {kind}.{variant}"))?;
-        let exe = Arc::new(self.runtime.load_artifact(
+            .ok_or_else(|| anyhow!("no model step {kind}.{variant}"))?;
+        let exe = Arc::new(runtime.load_artifact(
             &self.manifest.artifact_path(&step.path),
             &format!("model.{kind}.{variant}"),
             3,
@@ -84,8 +167,17 @@ impl Registry {
         Ok(exe)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of compiled artifact executables currently cached.
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+
+    /// Number of resolved backends currently cached.
+    pub fn resolved_count(&self) -> usize {
+        self.backends.lock().unwrap().len()
+    }
+}
+
+fn default_native_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }

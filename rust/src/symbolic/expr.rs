@@ -6,17 +6,26 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::rc::Rc;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ExprError {
-    #[error("unbound symbol {0:?}")]
     Unbound(String),
-    #[error("division by zero in {0}")]
     DivZero(String),
-    #[error("cannot bound {0}")]
     Unbounded(String),
-    #[error("{0} is not constant")]
     NotConst(String),
 }
+
+impl fmt::Display for ExprError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExprError::Unbound(s) => write!(f, "unbound symbol {s:?}"),
+            ExprError::DivZero(e) => write!(f, "division by zero in {e}"),
+            ExprError::Unbounded(e) => write!(f, "cannot bound {e}"),
+            ExprError::NotConst(e) => write!(f, "{e} is not constant"),
+        }
+    }
+}
+
+impl std::error::Error for ExprError {}
 
 /// A symbolic integer expression.  Cheap to clone (`Rc` nodes).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]

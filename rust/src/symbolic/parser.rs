@@ -10,15 +10,28 @@
 //! atom    := INT | NAME | NAME '(' expr (',' expr)* ')' | '(' expr ')'
 //! ```
 
+use std::fmt;
+
 use super::expr::Expr;
 
-#[derive(Debug, thiserror::Error)]
-#[error("expression parse error at byte {pos}: {msg} in {src:?}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
     pub src: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "expression parse error at byte {}: {} in {:?}",
+            self.pos, self.msg, self.src
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(src: &str) -> Result<Expr, ParseError> {
     let mut p = P { src, bytes: src.as_bytes(), pos: 0 };

@@ -99,6 +99,122 @@ fn display_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// parser edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn precedence_mul_binds_tighter_than_add() {
+    let e = parse("a + b * c - d").unwrap();
+    // a + (b*c) - d, left-associative additive chain
+    assert_eq!(e.eval(&env(&[("a", 1), ("b", 2), ("c", 3), ("d", 4)])).unwrap(), 3);
+    let f = parse("(a + b) * (c - d)").unwrap();
+    assert_eq!(f.eval(&env(&[("a", 1), ("b", 2), ("c", 3), ("d", 4)])).unwrap(), -3);
+}
+
+#[test]
+fn precedence_multiplicative_left_associative() {
+    // Python: 100 // 7 % 5 * 2 == (((100 // 7) % 5) * 2) == 8
+    let e = parse("100 // 7 % 5 * 2").unwrap();
+    assert_eq!(e.eval(&BTreeMap::new()).unwrap(), 8);
+    // additive chain: 10 - 4 - 3 == 3 (left associative, not 9)
+    let f = parse("10 - 4 - 3").unwrap();
+    assert_eq!(f.eval(&BTreeMap::new()).unwrap(), 3);
+}
+
+#[test]
+fn cdiv_floordiv_roundtrip_identity() {
+    // cdiv(a, b) == -((-a) // b) for every a, all positive b (the
+    // manifest's cdiv helper definition)
+    let cdiv = parse("cdiv(a, b)").unwrap();
+    let neg = parse("-(-a // b)").unwrap();
+    for a in -25..=25 {
+        for b in 1..=7 {
+            let e = env(&[("a", a), ("b", b)]);
+            assert_eq!(cdiv.eval(&e).unwrap(), neg.eval(&e).unwrap(), "a={a} b={b}");
+        }
+    }
+    // and floor/ceil bracket the rational quotient: cdiv - floordiv ∈ {0, 1}
+    let floor = parse("a // b").unwrap();
+    for a in -25..=25 {
+        for b in 1..=7 {
+            let e = env(&[("a", a), ("b", b)]);
+            let d = cdiv.eval(&e).unwrap() - floor.eval(&e).unwrap();
+            assert!(d == 0 || d == 1, "a={a} b={b}: {d}");
+            assert_eq!(d == 0, a % b == 0, "a={a} b={b}");
+        }
+    }
+}
+
+#[test]
+fn cdiv_display_parse_roundtrip() {
+    let e = parse("cdiv(cdiv(n, B), 2) * B + cdiv(m, 4)").unwrap();
+    let e2 = parse(&e.to_string()).unwrap();
+    for n in [0, 1, 63, 64, 65] {
+        let b = env(&[("n", n), ("B", 16), ("m", 10)]);
+        assert_eq!(e.eval(&b).unwrap(), e2.eval(&b).unwrap(), "n={n}");
+    }
+}
+
+#[test]
+fn unary_minus_binds_like_python() {
+    // Python parses -a // b as (-a) // b, which differs from -(a // b)
+    let e = parse("-a // b").unwrap();
+    assert_eq!(e.eval(&env(&[("a", 7), ("b", 2)])).unwrap(), -4);
+    let f = parse("-(a // b)").unwrap();
+    assert_eq!(f.eval(&env(&[("a", 7), ("b", 2)])).unwrap(), -3);
+    // double negation and unary minus of a call
+    let g = parse("--a").unwrap();
+    assert_eq!(g.eval(&env(&[("a", 5)])).unwrap(), 5);
+    let h = parse("-cdiv(a, 2)").unwrap();
+    assert_eq!(h.eval(&env(&[("a", 5)])).unwrap(), -3);
+    // unary minus in the middle of an additive chain: a - -b
+    let i = parse("a - -b").unwrap();
+    assert_eq!(i.eval(&env(&[("a", 1), ("b", 2)])).unwrap(), 3);
+}
+
+#[test]
+fn malformed_inputs_error_with_position() {
+    for (src, expect_pos_at_most) in [
+        ("", 0),
+        ("+", 0),
+        ("a +", 3),
+        ("a + * b", 4),
+        ("(a", 2),
+        ("a)", 2),
+        ("cdiv(a)", 7),
+        ("cdiv(a, b, c)", 13),
+        ("cdiv(a; b)", 7),
+        ("unknown_fn(a, b)", 16),
+        ("a ** b", 5),
+        ("a $ b", 2),
+        ("1.5", 2),
+        ("99999999999999999999999", 23),
+    ] {
+        let err = parse(src).unwrap_err();
+        assert!(
+            err.pos <= expect_pos_at_most,
+            "{src:?}: error position {} past {expect_pos_at_most}",
+            err.pos
+        );
+        // errors carry the offending source for diagnostics
+        assert!(err.to_string().contains(&format!("{src:?}")), "{src:?}: {err}");
+    }
+}
+
+#[test]
+fn whitespace_and_identifiers() {
+    let e = parse("  _ntv_x0   *  2\t+ x_size_0 ").unwrap();
+    assert_eq!(
+        e.eval(&env(&[("_ntv_x0", 4), ("x_size_0", 1)])).unwrap(),
+        9
+    );
+    // identifiers may contain digits after the first character
+    assert!(parse("a1b2").is_ok());
+    // ...but may not start with one ("1a" parses the 1, then chokes)
+    assert!(parse("1a").is_err());
+}
+
+// ---------------------------------------------------------------------------
 // property tests
 // ---------------------------------------------------------------------------
 

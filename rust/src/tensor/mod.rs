@@ -269,6 +269,22 @@ impl SymTensor {
 
     // -- launch-plan computation -------------------------------------------------
 
+    /// Verify every deferred expand/squeeze check evaluates to 1 under the
+    /// bindings (symbolic size-1 dims are only provable at specialization
+    /// time).  The native exec backend calls this before lowering.
+    pub fn validate_checks(&self, bindings: &BTreeMap<String, i64>) -> Result<()> {
+        for check in &self.checks {
+            let v = check.substitute_consts(bindings).eval(bindings)?;
+            if v != 1 {
+                bail!(
+                    "parameter {}: expand/squeeze check {check} = {v}, expected 1",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Evaluate the outermost-level shape (the grid) under bindings.
     pub fn grid(&self, bindings: &BTreeMap<String, i64>) -> Result<Vec<i64>> {
         self.levels[0]

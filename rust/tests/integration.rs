@@ -1,36 +1,219 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! Integration tests.
 //!
-//! Covers: runtime loading + numerics, all-kernel NT/baseline/ref agreement,
-//! arrangement validation + golden replay, launch-plan geometry, the
-//! coordinator (routing, packing, backpressure, rejection), and the
-//! end-to-end inference engine.
+//! The native tile-execution backend makes most of the system testable
+//! with no AOT artifacts at all: the coordinator serves kernels through
+//! `exec`, and numerics are checked against the in-crate reference
+//! oracles.  Tests that genuinely need compiled artifacts (goldens from
+//! the Python oracle, the inference engine, Table 2 metrics) detect their
+//! absence and skip with a visible message instead of failing — run
+//! `make artifacts` on a PJRT-enabled machine to activate them.
 
 use std::sync::Arc;
 
 use ninetoothed_repro::arrange;
 use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::exec;
 use ninetoothed_repro::harness::fig6;
 use ninetoothed_repro::inference::Engine;
 use ninetoothed_repro::prng::SplitMix64;
-use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
+use ninetoothed_repro::runtime::{Backend, BackendKind, HostTensor, Manifest, Registry, Runtime};
 
+/// The manifest to serve from: real artifacts when present, builtin
+/// (native-only) otherwise.
 fn manifest() -> Arc<Manifest> {
-    Arc::new(Manifest::load(&ninetoothed_repro::artifacts_dir()).expect("run `make artifacts`"))
+    Arc::new(Manifest::load_or_builtin(&ninetoothed_repro::artifacts_dir()))
 }
 
-fn registry() -> Registry {
-    Registry::new(Runtime::cpu().expect("pjrt cpu"), manifest())
+/// Artifact-backed registry, when both artifacts and a PJRT runtime
+/// exist.  `None` in the offline build.
+fn artifact_registry(test: &str) -> Option<Registry> {
+    let manifest = Manifest::load(&ninetoothed_repro::artifacts_dir()).ok()?;
+    match Runtime::cpu() {
+        Ok(runtime) => Some(Registry::new(runtime, Arc::new(manifest))),
+        Err(e) => {
+            eprintln!("skipping {test}: no PJRT runtime ({e:#})");
+            None
+        }
+    }
+}
+
+fn artifact_manifest(test: &str) -> Option<Arc<Manifest>> {
+    match Manifest::load(&ninetoothed_repro::artifacts_dir()) {
+        Ok(m) => Some(Arc::new(m)),
+        Err(e) => {
+            eprintln!("skipping {test}: no AOT artifacts ({e:#})");
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native backend end-to-end (no artifacts required)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_goldens_pass_for_all_kernels() {
+    // every native tile program vs its reference oracle, serial + pooled
+    let cases = ninetoothed_repro::harness::golden::check_native().unwrap();
+    assert!(cases >= 12, "expected ≥ 6 kernels x 2 schedulers, got {cases}");
 }
 
 #[test]
+fn registry_resolves_native_fallback() {
+    let registry = Registry::native_only(Arc::new(Manifest::builtin()));
+    let mm = registry.resolve("mm", "nt").unwrap();
+    assert_eq!(mm.kind(), BackendKind::Native);
+    let reference = registry.resolve("mm", "ref").unwrap();
+    assert_eq!(reference.kind(), BackendKind::Reference);
+    assert!(registry.resolve("no_such_kernel", "nt").is_err());
+    assert_eq!(registry.resolved_count(), 2);
+
+    // and the two backends agree numerically
+    let mut rng = SplitMix64::new(3);
+    let a = HostTensor::randn(vec![40, 30], &mut rng);
+    let b = HostTensor::randn(vec![30, 20], &mut rng);
+    let got = mm.run(&[a.clone(), b.clone()]).unwrap();
+    let want = reference.run(&[a, b]).unwrap();
+    assert!(got[0].max_abs_diff(&want[0]).unwrap() <= 1e-4);
+}
+
+#[test]
+fn coordinator_serves_artifactless_kernels_natively() {
+    // the fallback integration test: a coordinator over a manifest with
+    // NO artifact for these kernels serves them via the native backend
+    let manifest = Arc::new(Manifest::builtin());
+    let coordinator = Coordinator::start(
+        manifest,
+        CoordinatorConfig { workers: 2, queue_capacity: 128, max_fanin: 8 },
+    );
+    let mut rng = SplitMix64::new(21);
+
+    // mixed workload: variable-length adds, an mm, a softmax
+    let mut cases = Vec::new();
+    for i in 0..4 {
+        let n = 500 + i * 137;
+        let x = HostTensor::randn(vec![n], &mut rng);
+        let y = HostTensor::randn(vec![n], &mut rng);
+        let rx = coordinator.submit("add", "nt", vec![x.clone(), y.clone()]).unwrap();
+        cases.push((vec![x, y], "add", rx));
+    }
+    let a = HostTensor::randn(vec![70, 50], &mut rng);
+    let b = HostTensor::randn(vec![50, 90], &mut rng);
+    let rx = coordinator.submit("mm", "nt", vec![a.clone(), b.clone()]).unwrap();
+    cases.push((vec![a, b], "mm", rx));
+    let s = HostTensor::randn(vec![9, 129], &mut rng);
+    let rx = coordinator.submit("softmax", "nt", vec![s.clone()]).unwrap();
+    cases.push((vec![s], "softmax", rx));
+
+    for (inputs, kernel, rx) in cases {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.backend, "native", "{kernel} must fall back to the native backend");
+        let expected = exec::reference::run(kernel, &inputs).unwrap();
+        let diff = resp.outputs[0].max_abs_diff(&expected[0]).unwrap();
+        assert!(diff <= 1e-4, "{kernel} served natively: max|diff| = {diff}");
+    }
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.completed, 6);
+    assert_eq!(metrics.rejected, 0);
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_rejects_malformed_requests() {
+    let coordinator = Coordinator::start(manifest(), CoordinatorConfig::default());
+    let mut rng = SplitMix64::new(1);
+    let x = HostTensor::randn(vec![16], &mut rng);
+    // wrong arity
+    assert!(coordinator.submit("add", "nt", vec![x.clone()]).is_err());
+    // unknown kernel
+    assert!(coordinator.submit("nope", "nt", vec![x.clone()]).is_err());
+    // incompatible mm shapes (k mismatch)
+    let a = HostTensor::randn(vec![8, 3], &mut rng);
+    let b = HostTensor::randn(vec![4, 8], &mut rng);
+    assert!(coordinator.submit("mm", "nt", vec![a, b]).is_err());
+    // zero-length tensor (regression: must reject cleanly, not panic)
+    let empty = HostTensor::f32(vec![0], vec![]).unwrap();
+    let err = coordinator
+        .submit("add", "nt", vec![empty.clone(), empty])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("zero-length"), "{err:#}");
+    // rank-0 tensor where a vector is expected (regression: clean error)
+    let scalar = HostTensor::f32(vec![], vec![1.0]).unwrap();
+    assert!(coordinator
+        .submit("silu", "nt", vec![scalar])
+        .is_err());
+    // no input tensors at all
+    assert!(coordinator.submit("add", "nt", vec![]).is_err());
+    assert_eq!(coordinator.metrics().rejected, 6);
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_backpressure() {
+    // capacity 2, one worker: a burst of expensive requests must trip the
+    // queue-full rejection path
+    let manifest = manifest();
+    let coordinator = Coordinator::start(
+        manifest.clone(),
+        CoordinatorConfig { workers: 1, queue_capacity: 2, max_fanin: 1 },
+    );
+    let mut rng = SplitMix64::new(2);
+    // artifact runs must use the compiled shape (requests of any other
+    // shape are rejected at admission, which would make this test
+    // vacuous); native runs use a deliberately large softmax
+    let shape = manifest
+        .kernel("softmax", "nt")
+        .map(|a| a.args[0].shape.clone())
+        .unwrap_or_else(|_| vec![512, 2048]);
+    // one tensor, cloned per request: submission is a memcpy while
+    // execution is an O(rows x cols) softmax — the queue fills first
+    let x = HostTensor::randn(shape, &mut rng);
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..16 {
+        match coordinator.submit("softmax", "nt", vec![x.clone()]) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue of capacity 2 must reject part of a 16-burst");
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn native_mm_parallel_matches_serial() {
+    // the §3.2.1 non-overlap argument in practice: pooled and serial grid
+    // execution write identical outputs
+    let mut rng = SplitMix64::new(77);
+    let a = HostTensor::randn(vec![130, 70], &mut rng);
+    let b = HostTensor::randn(vec![70, 110], &mut rng);
+    let serial = exec::run_native("mm", &[a.clone(), b.clone()], &exec::GridScheduler::serial())
+        .unwrap();
+    let pooled = exec::run_native("mm", &[a, b], &exec::GridScheduler::pooled(8)).unwrap();
+    assert_eq!(serial[0], pooled[0], "parallel scatter must be bit-identical to serial");
+}
+
+// ---------------------------------------------------------------------------
+// artifact-backed paths (skip with a message when `make artifacts` has not
+// run — the offline container has no PJRT plugin)
+// ---------------------------------------------------------------------------
+
+#[test]
 fn golden_cases_pass_for_all_variants() {
-    let registry = registry();
+    let Some(registry) = artifact_registry("golden_cases_pass_for_all_variants") else {
+        return;
+    };
     ninetoothed_repro::harness::golden::check_all(&registry).unwrap();
 }
 
 #[test]
 fn all_kernels_nt_matches_ref() {
-    let registry = registry();
+    let Some(registry) = artifact_registry("all_kernels_nt_matches_ref") else {
+        return;
+    };
     let manifest = registry.manifest();
     for name in manifest.kernel_names() {
         let inputs = fig6::task_inputs(manifest, &name, 123).unwrap();
@@ -44,7 +227,9 @@ fn all_kernels_nt_matches_ref() {
 
 #[test]
 fn all_kernels_baseline_matches_ref() {
-    let registry = registry();
+    let Some(registry) = artifact_registry("all_kernels_baseline_matches_ref") else {
+        return;
+    };
     let manifest = registry.manifest();
     for name in manifest.kernel_names() {
         let inputs = fig6::task_inputs(manifest, &name, 321).unwrap();
@@ -57,7 +242,9 @@ fn all_kernels_baseline_matches_ref() {
 
 #[test]
 fn arrangements_validate_and_goldens_replay() {
-    let manifest = manifest();
+    let Some(manifest) = artifact_manifest("arrangements_validate_and_goldens_replay") else {
+        return;
+    };
     let arrangements = arrange::load_all(&manifest.raw).unwrap();
     assert!(arrangements.len() >= 10);
     let mut goldens = 0;
@@ -70,12 +257,24 @@ fn arrangements_validate_and_goldens_replay() {
 
 #[test]
 fn catalog_matches_manifest_geometry() {
-    ninetoothed_repro::harness::validate::catalog_parity(&manifest()).unwrap();
+    let Some(manifest) = artifact_manifest("catalog_matches_manifest_geometry") else {
+        return;
+    };
+    ninetoothed_repro::harness::validate::catalog_parity(&manifest).unwrap();
+}
+
+#[test]
+fn native_catalog_specializes() {
+    // the artifact-free counterpart of catalog parity: every native kernel
+    // specializes at its smoke shapes
+    ninetoothed_repro::harness::validate::native_catalog().unwrap();
 }
 
 #[test]
 fn launch_plan_reports_grid_and_vmem() {
-    let manifest = manifest();
+    let Some(manifest) = artifact_manifest("launch_plan_reports_grid_and_vmem") else {
+        return;
+    };
     let arrangements = arrange::load_all(&manifest.raw).unwrap();
     let mm = arrangements.iter().find(|a| a.kernel == "mm").unwrap();
     // bind every symbol the arrangement references
@@ -105,7 +304,10 @@ fn launch_plan_reports_grid_and_vmem() {
 
 #[test]
 fn coordinator_packs_and_verifies() {
-    let manifest = manifest();
+    // slot packing applies to artifact routes (fixed compiled shapes)
+    let Some(manifest) = artifact_manifest("coordinator_packs_and_verifies") else {
+        return;
+    };
     let coordinator = Coordinator::start(
         manifest.clone(),
         CoordinatorConfig { workers: 1, queue_capacity: 128, max_fanin: 8 },
@@ -142,58 +344,11 @@ fn coordinator_packs_and_verifies() {
 }
 
 #[test]
-fn coordinator_rejects_malformed_requests() {
-    let manifest = manifest();
-    let coordinator = Coordinator::start(manifest.clone(), CoordinatorConfig::default());
-    let mut rng = SplitMix64::new(1);
-    // wrong arity
-    let x = HostTensor::randn(vec![16], &mut rng);
-    assert!(coordinator.submit("add", "nt", vec![x.clone()]).is_err());
-    // unknown kernel
-    assert!(coordinator.submit("nope", "nt", vec![x.clone()]).is_err());
-    // oversized packable request
-    let slot = manifest.kernel("add", "nt").unwrap().args[0].shape[0];
-    let big = HostTensor::randn(vec![slot + 1], &mut rng);
-    assert!(coordinator
-        .submit("add", "nt", vec![big.clone(), big])
-        .is_err());
-    // wrong shape for a non-packable kernel
-    let bad = HostTensor::randn(vec![3, 3], &mut rng);
-    assert!(coordinator.submit("mm", "nt", vec![bad.clone(), bad]).is_err());
-    assert_eq!(coordinator.metrics().rejected, 4);
-    coordinator.shutdown();
-}
-
-#[test]
-fn coordinator_backpressure() {
-    let manifest = manifest();
-    // capacity 2, zero workers draining slowly: start coordinator with 1
-    // worker but saturate with many requests before it can drain
-    let coordinator = Coordinator::start(
-        manifest.clone(),
-        CoordinatorConfig { workers: 1, queue_capacity: 2, max_fanin: 1 },
-    );
-    let mut rng = SplitMix64::new(2);
-    let shape = manifest.kernel("softmax", "nt").unwrap().args[0].shape.clone();
-    let mut rejected = 0;
-    let mut rxs = Vec::new();
-    for _ in 0..12 {
-        let x = HostTensor::randn(shape.clone(), &mut rng);
-        match coordinator.submit("softmax", "nt", vec![x]) {
-            Ok(rx) => rxs.push(rx),
-            Err(_) => rejected += 1,
-        }
-    }
-    assert!(rejected > 0, "queue of capacity 2 must reject part of a 12-burst");
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
-    }
-    coordinator.shutdown();
-}
-
-#[test]
 fn engine_generates_and_backends_agree() {
-    let registry = Arc::new(registry());
+    let Some(registry) = artifact_registry("engine_generates_and_backends_agree") else {
+        return;
+    };
+    let registry = Arc::new(registry);
     let mut all_tokens = Vec::new();
     for variant in ["nt", "ref"] {
         let engine = Engine::new(registry.clone(), variant).unwrap();
@@ -209,8 +364,10 @@ fn engine_generates_and_backends_agree() {
 
 #[test]
 fn engine_rejects_overlong_generation() {
-    let registry = Arc::new(registry());
-    let engine = Engine::new(registry, "ref").unwrap();
+    let Some(registry) = artifact_registry("engine_rejects_overlong_generation") else {
+        return;
+    };
+    let engine = Engine::new(Arc::new(registry), "ref").unwrap();
     let prompt = engine.synth_prompt(1);
     let too_many = engine.max_seq - engine.prompt_len + 1;
     assert!(engine.generate(&prompt, too_many).is_err());
@@ -218,16 +375,22 @@ fn engine_rejects_overlong_generation() {
 
 #[test]
 fn table2_metrics_present_and_favorable() {
-    let manifest = manifest();
+    let Some(manifest) = artifact_manifest("table2_metrics_present_and_favorable") else {
+        return;
+    };
     // MI favors NineToothed on most kernels (paper: all 10; our baseline is
     // Pallas, which hides some of Triton's pointer arithmetic — DESIGN.md §6)
     let rows = manifest.raw.req("metrics").unwrap().arr("rows").unwrap();
     assert_eq!(rows.len(), 20);
     let mut wins = 0;
-    for kernel in ["add", "addmm", "bmm", "conv2d", "mm", "silu", "softmax", "sdpa", "rms_norm", "rope"] {
+    for kernel in
+        ["add", "addmm", "bmm", "conv2d", "mm", "silu", "softmax", "sdpa", "rms_norm", "rope"]
+    {
         let get = |variant: &str| {
             rows.iter()
-                .find(|r| r.str("kernel").unwrap() == kernel && r.str("variant").unwrap() == variant)
+                .find(|r| {
+                    r.str("kernel").unwrap() == kernel && r.str("variant").unwrap() == variant
+                })
                 .unwrap()
                 .f64("mi")
                 .unwrap()

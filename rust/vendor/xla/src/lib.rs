@@ -1,0 +1,278 @@
+//! Offline stub of the `xla` (PJRT C API) binding.
+//!
+//! The offline container has no PJRT plugin, so this crate replaces the
+//! real binding with two kinds of types:
+//!
+//! * **functional host types** — [`Literal`], [`Shape`], [`ArrayShape`],
+//!   [`ElementType`] hold real data and behave exactly like the binding's
+//!   host-side containers, so tensor conversion code keeps working;
+//! * **uninhabited execution types** — [`PjRtClient`],
+//!   [`PjRtLoadedExecutable`], [`PjRtBuffer`], [`HloModuleProto`] cannot be
+//!   constructed ([`PjRtClient::cpu`] returns an error), which statically
+//!   guarantees no code path pretends to execute an artifact.  The
+//!   coordinator detects this and falls back to the native tile-execution
+//!   backend (`ninetoothed_repro::exec`).
+//!
+//! Swapping this path crate for the real `xla` binding (on a machine with
+//! a PJRT plugin) re-enables AOT-artifact execution with no source changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every fallible operation reports PJRT unavailability.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (offline xla stub build); \
+         artifact execution requires the real xla binding"
+    ))
+}
+
+/// The uninhabited core of every execution-side type.
+#[derive(Debug, Clone, Copy)]
+enum Void {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    Pred,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn new(dims: Vec<i64>, ty: ElementType) -> ArrayShape {
+        ArrayShape { dims, ty }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>().max(0) as usize
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Internal typed storage (public only because [`NativeType`] mentions it).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+/// Host-side literal: a real, functional container (dims + typed data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Element types [`Literal`] can hold (sealed).
+pub trait NativeType: Sized + Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+    #[doc(hidden)]
+    fn element_type() -> ElementType;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::S32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::S32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { dims: vec![values.len() as i64], data: T::wrap(values.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) i32 literal.
+    pub fn scalar(value: i32) -> Literal {
+        Literal { dims: vec![], data: Data::S32(vec![value]) }
+    }
+
+    fn element_type(&self) -> ElementType {
+        match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::S32(_) => ElementType::S32,
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n.max(0) as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} needs {n} elements, literal has {}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(self.array_shape()?))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape::new(self.dims.clone(), self.element_type()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).map(<[T]>::to_vec).ok_or_else(|| {
+            Error(format!(
+                "literal holds {:?}, requested {:?}",
+                self.element_type(),
+                T::element_type()
+            ))
+        })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("stub literals are never tuples".to_string()))
+    }
+}
+
+/// PJRT device buffer — uninhabited in the stub.
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+/// Compiled executable — uninhabited in the stub.
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// PJRT client — uninhabited in the stub; [`PjRtClient::cpu`] always errs.
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+/// Parsed HLO module — uninhabited in the stub.
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation handle — uninhabited in the stub.
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct a client");
+        assert!(err.to_string().contains("PJRT runtime unavailable"), "{err}");
+    }
+}
