@@ -1,69 +1,102 @@
 //! `cargo bench --bench native_backend` — native tile-execution backend
-//! throughput: single-thread vs pooled grid scheduler, and (when
-//! artifacts + a PJRT runtime exist) vs the AOT artifact path.
+//! throughput.
 //!
-//! Emits a `BENCH_native.json` report next to the working directory with
-//! one row per (kernel, scheduler): mean latency, GFLOP/s, and the pooled
-//! speedup over serial — the scaling evidence that the grid scheduler
-//! actually parallelizes (ISSUE 1 acceptance).
+//! Three sections:
 //!
-//! Environment: `NT_BENCH_SECS` (min seconds per measurement, default 1),
-//! `NT_BENCH_THREADS` (pool width, default = available parallelism).
+//! 1. **dot microkernel sweep** — naive i-k-j loop vs the blocked GEMM
+//!    on single tiles across sizes (the ISSUE 2 acceptance series: the
+//!    512^3 row must show >= 4x GFLOP/s over naive);
+//! 2. **kernel sweeps** — mm / bmm / softmax GFLOP/s across sizes,
+//!    serial vs pooled grid scheduler (grid-vs-intra-tile parallelism
+//!    evidence);
+//! 3. the **artifact path** for context, when AOT artifacts + a PJRT
+//!    runtime exist.
+//!
+//! Emits `BENCH_native.json` with one keyed row per measurement.
+//! `tools/bench_check.rs` compares those keys against the committed
+//! `BENCH_baseline.json` and fails CI on a > 25% throughput regression.
+//!
+//! Environment:
+//! * `NT_BENCH_SECS`  — min seconds per measurement (float, default 1.0;
+//!   0.25 under smoke);
+//! * `NT_BENCH_THREADS` — pool width (default = available parallelism);
+//! * `NT_BENCH_SMOKE=1` — reduced-size sweep for the CI bench-smoke job.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 use ninetoothed_repro::benchkit::{bench_for, fmt_duration, Table};
-use ninetoothed_repro::exec::{self, GridScheduler};
+use ninetoothed_repro::exec::{self, GridScheduler, Tile};
 use ninetoothed_repro::json::Json;
 use ninetoothed_repro::prng::SplitMix64;
 use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
 
 struct Case {
+    key: String,
     kernel: &'static str,
     inputs: Vec<HostTensor>,
     flops: f64,
 }
 
-fn cases(rng: &mut SplitMix64) -> Vec<Case> {
-    // debug builds (cargo test runs bench targets under the dev profile)
-    // use smaller problems; real numbers come from `cargo bench` (release)
-    let (mm, bmm, add_n, sm) = if cfg!(debug_assertions) {
-        ((192usize, 192usize, 192usize), (4usize, 64usize, 64usize, 64usize), 1_000_000usize, (64usize, 1024usize))
+fn mm_case(m: usize, k: usize, n: usize, rng: &mut SplitMix64) -> Case {
+    Case {
+        key: format!("mm_{m}x{k}x{n}"),
+        kernel: "mm",
+        inputs: vec![HostTensor::randn(vec![m, k], rng), HostTensor::randn(vec![k, n], rng)],
+        flops: 2.0 * (m * k * n) as f64,
+    }
+}
+
+fn bmm_case(b: usize, m: usize, k: usize, n: usize, rng: &mut SplitMix64) -> Case {
+    Case {
+        key: format!("bmm_{b}x{m}x{k}x{n}"),
+        kernel: "bmm",
+        inputs: vec![
+            HostTensor::randn(vec![b, m, k], rng),
+            HostTensor::randn(vec![b, k, n], rng),
+        ],
+        flops: 2.0 * (b * m * k * n) as f64,
+    }
+}
+
+fn softmax_case(r: usize, c: usize, rng: &mut SplitMix64) -> Case {
+    Case {
+        key: format!("softmax_{r}x{c}"),
+        kernel: "softmax",
+        inputs: vec![HostTensor::randn(vec![r, c], rng)],
+        flops: 5.0 * (r * c) as f64,
+    }
+}
+
+fn kernel_cases(smoke: bool, rng: &mut SplitMix64) -> Vec<Case> {
+    let mut cases = vec![
+        mm_case(128, 128, 128, rng),
+        mm_case(256, 256, 256, rng),
+        bmm_case(4, 64, 64, 64, rng),
+        softmax_case(256, 2048, rng),
+    ];
+    if !smoke {
+        cases.push(mm_case(512, 512, 512, rng));
+        cases.push(bmm_case(8, 128, 128, 128, rng));
+        cases.push(softmax_case(1024, 4096, rng));
+    }
+    cases
+}
+
+/// Dot sweep sizes.  384^3 is the smoke gate's collapse detector: B no
+/// longer fits per-core L2, so the naive loop turns memory-bound while
+/// the packed kernel stays compute-bound — its baseline speedup floor
+/// sits well above 1.0, which is what lets `bench_check` actually fail
+/// if the blocked path ever regresses to naive throughput.  (Dev-profile
+/// runs stop at 256 to keep `cargo test` quick.)
+fn dot_sizes(smoke: bool) -> Vec<(usize, usize, usize)> {
+    if cfg!(debug_assertions) {
+        vec![(128, 128, 128), (256, 256, 256)]
+    } else if smoke {
+        vec![(128, 128, 128), (256, 256, 256), (384, 384, 384)]
     } else {
-        ((384, 384, 384), (8, 128, 128, 128), 4_000_000, (256, 2048))
-    };
-    vec![
-        Case {
-            kernel: "add",
-            inputs: vec![
-                HostTensor::randn(vec![add_n], rng),
-                HostTensor::randn(vec![add_n], rng),
-            ],
-            flops: add_n as f64,
-        },
-        Case {
-            kernel: "softmax",
-            inputs: vec![HostTensor::randn(vec![sm.0, sm.1], rng)],
-            flops: 5.0 * (sm.0 * sm.1) as f64,
-        },
-        Case {
-            kernel: "mm",
-            inputs: vec![
-                HostTensor::randn(vec![mm.0, mm.1], rng),
-                HostTensor::randn(vec![mm.1, mm.2], rng),
-            ],
-            flops: 2.0 * (mm.0 * mm.1 * mm.2) as f64,
-        },
-        Case {
-            kernel: "bmm",
-            inputs: vec![
-                HostTensor::randn(vec![bmm.0, bmm.1, bmm.2], rng),
-                HostTensor::randn(vec![bmm.0, bmm.2, bmm.3], rng),
-            ],
-            flops: 2.0 * (bmm.0 * bmm.1 * bmm.2 * bmm.3) as f64,
-        },
-    ]
+        vec![(128, 128, 128), (256, 256, 256), (384, 384, 384), (512, 512, 512)]
+    }
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -71,18 +104,69 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
 }
 
 fn main() {
-    let secs = std::env::var("NT_BENCH_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(1u64);
+    // dev-profile runs (cargo test builds bench targets) always take the
+    // reduced sweep; real numbers come from `cargo bench` (release)
+    let smoke = std::env::var("NT_BENCH_SMOKE").is_ok_and(|v| v == "1") || cfg!(debug_assertions);
+    let secs: f64 = std::env::var("NT_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if cfg!(debug_assertions) {
+            0.05
+        } else if smoke {
+            0.25
+        } else {
+            1.0
+        });
     let threads = std::env::var("NT_BENCH_THREADS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         });
-    let min_time = Duration::from_secs(secs);
+    let min_time = Duration::from_secs_f64(secs);
     println!(
-        "native backend bench: serial vs {threads}-thread pooled grid scheduler \
-         (>= {secs}s per measurement)"
+        "native backend bench{}: serial vs {threads}-thread pooled grid scheduler \
+         (>= {secs}s per measurement)",
+        if smoke { " [smoke]" } else { "" }
     );
+
+    let mut rng = SplitMix64::new(2024);
+    let mut rows = Vec::new();
+
+    // -- 1. dot microkernel: naive loop vs blocked GEMM ----------------------
+    let mut dot_table =
+        Table::new(&["dot (m=k=n)", "naive", "blocked", "naive GF/s", "blocked GF/s", "speedup"]);
+    for (m, k, n) in dot_sizes(smoke) {
+        let a = Tile::new(vec![m, k], rng.normal_vec(m * k)).expect("tile a");
+        let b = Tile::new(vec![k, n], rng.normal_vec(k * n)).expect("tile b");
+        let flops = 2.0 * (m * k * n) as f64;
+        let naive = bench_for(1, min_time, || {
+            a.dot_naive(&b).expect("naive dot");
+        });
+        let blocked = bench_for(1, min_time, || {
+            a.dot_blocked(&b).expect("blocked dot");
+        });
+        let speedup = naive.mean_s / blocked.mean_s;
+        let (gf_naive, gf_blocked) = (flops / naive.mean_s / 1e9, flops / blocked.mean_s / 1e9);
+        dot_table.row(vec![
+            format!("{m}"),
+            fmt_duration(naive.mean_s),
+            fmt_duration(blocked.mean_s),
+            format!("{gf_naive:.2}"),
+            format!("{gf_blocked:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("key", Json::Str(format!("dot_{m}x{k}x{n}"))),
+            ("kernel", Json::Str("dot".to_string())),
+            ("naive_mean_s", Json::Num(naive.mean_s)),
+            ("blocked_mean_s", Json::Num(blocked.mean_s)),
+            ("naive_gflops", Json::Num(gf_naive)),
+            ("gflops", Json::Num(gf_blocked)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", dot_table.render());
 
     // artifact path for comparison, when available (shapes differ — the
     // artifact is compiled for its own shapes, so this is context, not an
@@ -94,12 +178,18 @@ fn main() {
         println!("(no AOT artifacts / PJRT runtime: native-only run)");
     }
 
-    let mut rng = SplitMix64::new(2024);
+    // -- 2. kernel sweeps: serial vs pooled grid scheduler -------------------
     let mut table = Table::new(&[
-        "kernel", "grid", "serial", "pooled", "speedup", "serial GFLOP/s", "pooled GFLOP/s",
+        "case", "grid", "serial", "pooled", "speedup", "serial GFLOP/s", "pooled GFLOP/s",
     ]);
-    let mut rows = Vec::new();
-    for case in cases(&mut rng) {
+    let cases = kernel_cases(smoke, &mut rng);
+    let mut benched_kernels: Vec<&'static str> = Vec::new();
+    for case in &cases {
+        if !benched_kernels.contains(&case.kernel) {
+            benched_kernels.push(case.kernel);
+        }
+    }
+    for case in &cases {
         let kernel = exec::lookup(case.kernel).expect("native kernel");
         let spec = kernel.specialize(&case.inputs).expect("specialize");
         let serial = GridScheduler::serial();
@@ -112,7 +202,7 @@ fn main() {
         });
         let speedup = stats_serial.mean_s / stats_pooled.mean_s;
         table.row(vec![
-            case.kernel.to_string(),
+            case.key.clone(),
             format!("{:?}", spec.grid),
             fmt_duration(stats_serial.mean_s),
             fmt_duration(stats_pooled.mean_s),
@@ -121,6 +211,7 @@ fn main() {
             format!("{:.2}", case.flops / stats_pooled.mean_s / 1e9),
         ]);
         rows.push(obj(vec![
+            ("key", Json::Str(case.key.clone())),
             ("kernel", Json::Str(case.kernel.to_string())),
             ("backend", Json::Str("native".to_string())),
             (
@@ -135,11 +226,15 @@ fn main() {
             ("gflops_serial", Json::Num(case.flops / stats_serial.mean_s / 1e9)),
             ("gflops_pooled", Json::Num(case.flops / stats_pooled.mean_s / 1e9)),
         ]));
+    }
+    println!("{}", table.render());
 
-        // artifact-path comparison at the artifact's own compiled shapes
-        if let Some(registry) = &artifact_registry {
-            if let Ok(exe) = registry.kernel(case.kernel, "nt") {
-                if let Ok(art) = registry.manifest().kernel(case.kernel, "nt") {
+    // -- 3. artifact-path comparison, once per kernel, at the artifact's own
+    //       compiled shapes
+    if let Some(registry) = &artifact_registry {
+        for kernel in benched_kernels {
+            if let Ok(exe) = registry.kernel(kernel, "nt") {
+                if let Ok(art) = registry.manifest().kernel(kernel, "nt") {
                     let mut arng = SplitMix64::new(7);
                     let inputs: Vec<HostTensor> = art
                         .args
@@ -150,13 +245,14 @@ fn main() {
                         exe.run(&inputs).expect("artifact run");
                     });
                     rows.push(obj(vec![
-                        ("kernel", Json::Str(case.kernel.to_string())),
+                        ("key", Json::Str(format!("{kernel}_artifact"))),
+                        ("kernel", Json::Str(kernel.to_string())),
                         ("backend", Json::Str("artifact".to_string())),
                         ("mean_s", Json::Num(stats.mean_s)),
                     ]));
                     println!(
                         "  {} artifact path ({:?}-shaped): {}",
-                        case.kernel,
+                        kernel,
                         art.args[0].shape,
                         fmt_duration(stats.mean_s)
                     );
@@ -164,10 +260,10 @@ fn main() {
             }
         }
     }
-    println!("{}", table.render());
 
     let report = obj(vec![
         ("bench", Json::Str("native_backend".to_string())),
+        ("smoke", Json::Bool(smoke)),
         ("threads", Json::Num(threads as f64)),
         ("rows", Json::Arr(rows)),
     ]);
@@ -177,7 +273,7 @@ fn main() {
         Err(e) => println!("could not write {path}: {e}"),
     }
     println!(
-        "pooled-beats-serial on the large grids above demonstrates the grid scheduler \
-         parallelizes (§3.2.1 non-overlap makes cells independent)"
+        "gate: `cargo run --release --bin bench_check` compares the keyed rows above \
+         against BENCH_baseline.json (>25% throughput regression fails; --update rebaselines)"
     );
 }

@@ -1,0 +1,459 @@
+//! Blocked, cache-aware f32 GEMM microkernel (`C += A x B`).
+//!
+//! The naive i-k-j loop that [`super::tile::Tile::dot`] shipped with is
+//! memory-bound the moment operands leave L2: every element of `B` is
+//! re-streamed `M` times.  This module applies the classic three-level
+//! blocking scheme (Goto/BLIS; see also ML-Triton's lowering levels in
+//! PAPERS.md):
+//!
+//! * **KC x NC panels of `B`** are packed into a contiguous buffer laid
+//!   out as NR-column strips, so the inner kernel reads it sequentially;
+//! * **MC x KC panels of `A`** are packed as MR-row strips the same way;
+//! * an **MR x NR register tile** is accumulated over the KC depth by a
+//!   fully unrolled FMA kernel written so the autovectorizer emits SIMD
+//!   (`std`-only: no intrinsics, no new dependencies).
+//!
+//! Edge strips are zero-padded during packing, so the microkernel is
+//! always full-size and only the write-back masks partial tiles.  Inputs
+//! address arbitrary strided windows (`offset + i*row_stride +
+//! j*col_stride` over a flat buffer), which is what lets
+//! [`super::ir::Instr::DotAcc`] feed source tensors straight into the
+//! kernel without materializing tiles first.
+//!
+//! Shapes too small to amortize packing take [`small_gemm`], a strided
+//! i-k-j loop — tiny tiles (the 32-wide legacy blocks) pay no packing
+//! overhead at all.  The path is chosen from the *full* problem shape
+//! before any row-splitting, so [`gemm_rows_parallel`] produces
+//! bit-identical results for every thread count.
+
+use std::cell::RefCell;
+
+/// Rows of the register tile.
+pub const MR: usize = 8;
+/// Columns of the register tile.
+pub const NR: usize = 8;
+/// Rows of a packed `A` panel (multiple of `MR`).
+const MC: usize = 64;
+/// Columns of a packed `B` panel (multiple of `NR`).
+const NC: usize = 128;
+/// Shared depth of one packed panel pair.
+const KC: usize = 256;
+/// At or below this many multiply-adds packing costs more than it saves.
+pub const SMALL_MADDS: usize = 64 * 64 * 64;
+/// Minimum multiply-adds before intra-tile row-splitting is worth a spawn.
+pub const INTRA_PAR_MIN_MADDS: usize = 1 << 20;
+
+thread_local! {
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// `base + delta` in flat-buffer coordinates (strides may be negative).
+#[inline(always)]
+fn at(base: usize, delta: isize) -> usize {
+    (base as isize + delta) as usize
+}
+
+/// `C[m x n] += A[m x k] x B[k x n]` over strided windows.
+///
+/// `A` is addressed as `a[a_off + i*a_rs + p*a_cs]`, `B` as
+/// `b[b_off + p*b_rs + j*b_cs]`, and `C` as `c[c_off + i*c_rs + j]`
+/// (`C` columns are always unit-stride — both `Tile` buffers and
+/// accumulator registers are row-major contiguous).  Every addressed
+/// element must be in range; callers guarantee that via
+/// `ParamView::dense_window` or by passing contiguous tiles.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_off: usize,
+    a_rs: isize,
+    a_cs: isize,
+    b: &[f32],
+    b_off: usize,
+    b_rs: isize,
+    b_cs: isize,
+    c: &mut [f32],
+    c_off: usize,
+    c_rs: usize,
+) {
+    let small = m * n * k <= SMALL_MADDS;
+    gemm_path(small, m, n, k, a, a_off, a_rs, a_cs, b, b_off, b_rs, b_cs, c, c_off, c_rs);
+}
+
+/// [`gemm`] with the small-vs-blocked decision already made — row-split
+/// callers pin the path from the full shape so chunking never changes
+/// summation order.
+#[allow(clippy::too_many_arguments)]
+fn gemm_path(
+    small: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_off: usize,
+    a_rs: isize,
+    a_cs: isize,
+    b: &[f32],
+    b_off: usize,
+    b_rs: isize,
+    b_cs: isize,
+    c: &mut [f32],
+    c_off: usize,
+    c_rs: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if small {
+        small_gemm(m, n, k, a, a_off, a_rs, a_cs, b, b_off, b_rs, b_cs, c, c_off, c_rs);
+        return;
+    }
+    PACK_A.with(|pa| {
+        PACK_B.with(|pb| {
+            let (mut pa, mut pb) = (pa.borrow_mut(), pb.borrow_mut());
+            for jc in (0..n).step_by(NC) {
+                let nc = NC.min(n - jc);
+                for pc in (0..k).step_by(KC) {
+                    let kc = KC.min(k - pc);
+                    pack_b(
+                        kc,
+                        nc,
+                        b,
+                        at(b_off, pc as isize * b_rs + jc as isize * b_cs),
+                        b_rs,
+                        b_cs,
+                        &mut pb,
+                    );
+                    for ic in (0..m).step_by(MC) {
+                        let mc = MC.min(m - ic);
+                        pack_a(
+                            mc,
+                            kc,
+                            a,
+                            at(a_off, ic as isize * a_rs + pc as isize * a_cs),
+                            a_rs,
+                            a_cs,
+                            &mut pa,
+                        );
+                        macro_kernel(mc, nc, kc, &pa, &pb, c, c_off + ic * c_rs + jc, c_rs);
+                    }
+                }
+            }
+        })
+    });
+}
+
+/// `C += A x B` with `C` exactly `m * n` contiguous row-major elements,
+/// rows split across up to `threads` scoped worker threads.  This is the
+/// intra-tile parallelism path the grid scheduler enables when the grid
+/// is too small to occupy the pool (a big single-tile GEMM).  Results are
+/// bit-identical for every thread count: the small-vs-blocked choice is
+/// pinned from the full shape, and each `C` element's accumulation order
+/// is independent of the row split.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows_parallel(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_off: usize,
+    a_rs: isize,
+    a_cs: isize,
+    b: &[f32],
+    b_off: usize,
+    b_rs: isize,
+    b_cs: isize,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(c.len(), m * n, "gemm_rows_parallel C must be exactly m*n");
+    let small = m * n * k <= SMALL_MADDS;
+    let t = threads.min(m.div_ceil(MR)).max(1);
+    if t == 1 {
+        gemm_path(small, m, n, k, a, a_off, a_rs, a_cs, b, b_off, b_rs, b_cs, c, 0, n);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        let mut row0 = 0usize;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let (head, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_base = at(a_off, row0 as isize * a_rs);
+            scope.spawn(move || {
+                gemm_path(
+                    small, rows, n, k, a, a_base, a_rs, a_cs, b, b_off, b_rs, b_cs, head, 0, n,
+                );
+            });
+            row0 += rows;
+        }
+    });
+}
+
+/// Strided i-k-j loop for shapes below the packing threshold.  The inner
+/// loop walks `B` and `C` rows contiguously when `b_cs == 1` (the common
+/// tile layout), which the autovectorizer turns into an AXPY.
+#[allow(clippy::too_many_arguments)]
+fn small_gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_off: usize,
+    a_rs: isize,
+    a_cs: isize,
+    b: &[f32],
+    b_off: usize,
+    b_rs: isize,
+    b_cs: isize,
+    c: &mut [f32],
+    c_off: usize,
+    c_rs: usize,
+) {
+    for i in 0..m {
+        let a_row = at(a_off, i as isize * a_rs);
+        let c_row = c_off + i * c_rs;
+        if b_cs == 1 {
+            let crow = &mut c[c_row..c_row + n];
+            for p in 0..k {
+                let av = a[at(a_row, p as isize * a_cs)];
+                let b_row = at(b_off, p as isize * b_rs);
+                let brow = &b[b_row..b_row + n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        } else {
+            for p in 0..k {
+                let av = a[at(a_row, p as isize * a_cs)];
+                let b_row = at(b_off, p as isize * b_rs);
+                for j in 0..n {
+                    c[c_row + j] += av * b[at(b_row, j as isize * b_cs)];
+                }
+            }
+        }
+    }
+}
+
+/// Pack an `mc x kc` window of `A` into MR-row strips, k-major within
+/// each strip (`out[strip][p*MR + i]`), zero-padding the ragged last
+/// strip so the microkernel never branches on `m`.
+fn pack_a(mc: usize, kc: usize, a: &[f32], base: usize, rs: isize, cs: isize, out: &mut Vec<f32>) {
+    let strips = mc.div_ceil(MR);
+    out.clear();
+    out.resize(strips * kc * MR, 0.0);
+    for si in 0..strips {
+        let rows = MR.min(mc - si * MR);
+        let dst = &mut out[si * kc * MR..(si + 1) * kc * MR];
+        for p in 0..kc {
+            let col = at(base, p as isize * cs);
+            for i in 0..rows {
+                dst[p * MR + i] = a[at(col, (si * MR + i) as isize * rs)];
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` window of `B` into NR-column strips, k-major within
+/// each strip (`out[strip][p*NR + j]`), zero-padding the ragged last
+/// strip.
+fn pack_b(kc: usize, nc: usize, b: &[f32], base: usize, rs: isize, cs: isize, out: &mut Vec<f32>) {
+    let strips = nc.div_ceil(NR);
+    out.clear();
+    out.resize(strips * kc * NR, 0.0);
+    for sj in 0..strips {
+        let cols = NR.min(nc - sj * NR);
+        let dst = &mut out[sj * kc * NR..(sj + 1) * kc * NR];
+        for p in 0..kc {
+            let row = at(base, p as isize * rs);
+            for j in 0..cols {
+                dst[p * NR + j] = b[at(row, (sj * NR + j) as isize * cs)];
+            }
+        }
+    }
+}
+
+/// Multiply packed panels into `C`: one MR x NR register tile per strip
+/// pair, accumulated over the full `kc` depth, then masked-added into the
+/// (possibly partial) destination tile.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    c_base: usize,
+    c_rs: usize,
+) {
+    let m_strips = mc.div_ceil(MR);
+    let n_strips = nc.div_ceil(NR);
+    let mut acc = [0.0f32; MR * NR];
+    for jr in 0..n_strips {
+        let cols = NR.min(nc - jr * NR);
+        let bpanel = &pb[jr * kc * NR..(jr + 1) * kc * NR];
+        for ir in 0..m_strips {
+            let rows = MR.min(mc - ir * MR);
+            let apanel = &pa[ir * kc * MR..(ir + 1) * kc * MR];
+            acc.fill(0.0);
+            microkernel(apanel, bpanel, &mut acc);
+            for i in 0..rows {
+                let row = c_base + (ir * MR + i) * c_rs + jr * NR;
+                let crow = &mut c[row..row + cols];
+                for (cv, &av) in crow.iter_mut().zip(&acc[i * NR..i * NR + cols]) {
+                    *cv += av;
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[MR x NR] += strip_a^T x strip_b` over the
+/// full packed depth (`strip_a` is `kc x MR`, `strip_b` is `kc x NR`,
+/// both k-major).  `chunks_exact` gives the compiler constant-width
+/// slices with no per-iteration bounds checks, so the body unrolls into
+/// a SIMD FMA chain with `acc` held in vector registers.
+#[inline(always)]
+fn microkernel(pa: &[f32], pb: &[f32], acc: &mut [f32; MR * NR]) {
+    for (a, b) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (&ai, row) in a.iter().zip(acc.chunks_exact_mut(NR)) {
+            for (r, &bv) in row.iter_mut().zip(b) {
+                *r += ai * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    /// f64-accumulating oracle over the same strided addressing.
+    #[allow(clippy::too_many_arguments)]
+    fn oracle(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        a_off: usize,
+        a_rs: isize,
+        a_cs: isize,
+        b: &[f32],
+        b_off: usize,
+        b_rs: isize,
+        b_cs: isize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    let av = a[at(a_off, i as isize * a_rs + p as isize * a_cs)];
+                    let bv = b[at(b_off, p as isize * b_rs + j as isize * b_cs)];
+                    acc += av as f64 * bv as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn randv(n: usize, rng: &mut SplitMix64) -> Vec<f32> {
+        rng.normal_vec(n)
+    }
+
+    fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+        x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn blocked_matches_oracle_on_contiguous_shapes() {
+        let mut rng = SplitMix64::new(41);
+        // odd / prime / ragged-strip shapes on both sides of the small
+        // threshold, including ones that exercise every packing edge
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (8, 8, 8),
+            (9, 17, 11),
+            (31, 127, 63),
+            (65, 70, 66),
+            (127, 129, 65),
+            (130, 300, 70),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let want = oracle(m, n, k, &a, 0, k as isize, 1, &b, 0, n as isize, 1);
+            let mut got = vec![0.0f32; m * n];
+            gemm(m, n, k, &a, 0, k as isize, 1, &b, 0, n as isize, 1, &mut got, 0, n);
+            let diff = max_abs_diff(&got, &want);
+            assert!(diff <= 1e-3, "({m},{k},{n}): max|diff| = {diff}");
+        }
+    }
+
+    #[test]
+    fn strided_windows_match_oracle() {
+        let mut rng = SplitMix64::new(42);
+        // a window of a larger row-major matrix, and a transposed B
+        let (big_r, big_c) = (40usize, 50usize);
+        let buf_a = randv(big_r * big_c, &mut rng);
+        let buf_b = randv(big_r * big_c, &mut rng);
+        let (m, k, n) = (17usize, 23usize, 19usize);
+        // A window starting at (3, 4); B read transposed from (1, 2)
+        let a_off = 3 * big_c + 4;
+        let b_off = big_c + 2;
+        let want = oracle(
+            m, n, k, &buf_a, a_off, big_c as isize, 1, &buf_b, b_off, 1, big_c as isize,
+        );
+        let mut got = vec![0.0f32; m * n];
+        gemm(
+            m, n, k, &buf_a, a_off, big_c as isize, 1, &buf_b, b_off, 1, big_c as isize, &mut got,
+            0, n,
+        );
+        let diff = max_abs_diff(&got, &want);
+        assert!(diff <= 1e-3, "strided: max|diff| = {diff}");
+    }
+
+    #[test]
+    fn accumulates_instead_of_overwriting() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0];
+        let mut c = [10.0f32; 4];
+        gemm(2, 2, 2, &a, 0, 2, 1, &b, 0, 2, 1, &mut c, 0, 2);
+        assert_eq!(c, [11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn row_parallel_is_bit_identical_to_serial() {
+        let mut rng = SplitMix64::new(43);
+        let (m, k, n) = (70usize, 90usize, 50usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_rows_parallel(1, m, n, k, &a, 0, k as isize, 1, &b, 0, n as isize, 1, &mut serial);
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.0f32; m * n];
+            gemm_rows_parallel(
+                threads, m, n, k, &a, 0, k as isize, 1, &b, 0, n as isize, 1, &mut par,
+            );
+            assert_eq!(serial, par, "{threads}-way row split changed bits");
+        }
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let a = [1.0f32; 4];
+        let b = [1.0f32; 4];
+        let mut c = [7.0f32; 4];
+        gemm(0, 2, 2, &a, 0, 2, 1, &b, 0, 2, 1, &mut c, 0, 2);
+        gemm(2, 2, 0, &a, 0, 0, 1, &b, 0, 2, 1, &mut c, 0, 2);
+        assert_eq!(c, [7.0f32; 4]);
+    }
+}

@@ -10,7 +10,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::tile::{BinOp, ReduceOp, Tile, UnaryOp};
+use super::gemm::{gemm_rows_parallel, INTRA_PAR_MIN_MADDS};
+use super::tile::{naive_dot_forced, BinOp, ReduceOp, Tile, UnaryOp};
 use super::view::ParamView;
 use crate::runtime::HostTensor;
 
@@ -31,6 +32,13 @@ pub enum Instr {
     Reduce { dst: Reg, a: Reg, axis: Option<usize>, op: ReduceOp },
     /// 2-D matrix product.
     Dot { dst: Reg, a: Reg, b: Reg },
+    /// Fused multiply-accumulate: `acc += dot(a_param, b_param)` over the
+    /// current sub-tiles.  When both views lower to dense in-range
+    /// windows the blocked GEMM consumes the source tensors directly (no
+    /// materialized tiles); padded edge tiles fall back to gather.  This
+    /// is how the mm/bmm k-loop avoids the load-materialize-dot-add
+    /// round trip per iteration.
+    DotAcc { acc: Reg, a_param: usize, b_param: usize },
     /// Broadcast register `a` to the block shape of a parameter.
     Broadcast { dst: Reg, a: Reg, like_param: usize },
     /// Iterate the body once per sub-tile (the `for k in range(...)` of
@@ -68,6 +76,9 @@ impl TileProgram {
                     Instr::Binary { dst, a, b, .. } => (vec![*dst, *a, *b], vec![]),
                     Instr::Reduce { dst, a, .. } => (vec![*dst, *a], vec![]),
                     Instr::Dot { dst, a, b } => (vec![*dst, *a, *b], vec![]),
+                    Instr::DotAcc { acc, a_param, b_param } => {
+                        (vec![*acc], vec![*a_param, *b_param])
+                    }
                     Instr::Broadcast { dst, a, like_param } => {
                         (vec![*dst, *a], vec![*like_param])
                     }
@@ -115,12 +126,18 @@ pub enum ParamData<'a> {
 /// `write(param, flat_offset, value)` receives every in-range output
 /// element the cell produces.  Distinct cells produce distinct offsets
 /// (§3.2.1 non-overlap), which the scheduler relies on.
+///
+/// `intra_threads` is the worker budget heavy instructions (`DotAcc`)
+/// may split across *within* this cell — the scheduler hands the whole
+/// pool to each cell when the grid itself is too small to fill it, so a
+/// big single-tile GEMM still parallelizes.
 pub fn exec_cell(
     program: &TileProgram,
     views: &[ParamView],
     data: &[ParamData<'_>],
     cell: &[i64],
     loop_shape: &[usize],
+    intra_threads: usize,
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
     let mut regs: Vec<Option<Tile>> = vec![None; program.regs];
@@ -134,6 +151,7 @@ pub fn exec_cell(
         loop_shape,
         None,
         &no_sub,
+        intra_threads,
         write,
     )
 }
@@ -148,6 +166,7 @@ fn run_block(
     loop_shape: &[usize],
     sub: Option<&[usize]>,
     no_sub: &[usize],
+    intra_threads: usize,
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
     // register reads borrow — every op produces a fresh output tile, so
@@ -209,6 +228,54 @@ fn run_block(
                 let t = get(regs, *a)?.dot(get(regs, *b)?)?;
                 regs[*dst] = Some(t);
             }
+            Instr::DotAcc { acc, a_param, b_param } => {
+                let ta = match &data[*a_param] {
+                    ParamData::In(t) => *t,
+                    ParamData::Out => bail!("dot_acc reads output parameter {a_param}"),
+                };
+                let tb = match &data[*b_param] {
+                    ParamData::In(t) => *t,
+                    ParamData::Out => bail!("dot_acc reads output parameter {b_param}"),
+                };
+                // same "looped parameter used outside the loop sees
+                // sub-tile 0" rule as Load
+                let zeros_a;
+                let sub_a = {
+                    let v = &views[*a_param];
+                    let s = param_sub(views, *a_param, sub, no_sub);
+                    if !v.loop_shape.is_empty() && s.is_empty() {
+                        zeros_a = vec![0usize; v.loop_shape.len()];
+                        &zeros_a[..]
+                    } else {
+                        s
+                    }
+                };
+                let zeros_b;
+                let sub_b = {
+                    let v = &views[*b_param];
+                    let s = param_sub(views, *b_param, sub, no_sub);
+                    if !v.loop_shape.is_empty() && s.is_empty() {
+                        zeros_b = vec![0usize; v.loop_shape.len()];
+                        &zeros_b[..]
+                    } else {
+                        s
+                    }
+                };
+                let acc_tile = regs[*acc]
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("read of uninitialized register {acc}"))?;
+                dot_acc(
+                    acc_tile,
+                    &views[*a_param],
+                    ta,
+                    sub_a,
+                    &views[*b_param],
+                    tb,
+                    sub_b,
+                    cell,
+                    intra_threads,
+                )?;
+            }
             Instr::Broadcast { dst, a, like_param } => {
                 let t = get(regs, *a)?.broadcast_to(&views[*like_param].block_shape)?;
                 regs[*dst] = Some(t);
@@ -218,7 +285,16 @@ fn run_block(
                 let mut coords = vec![0usize; loop_shape.len()];
                 for _ in 0..n {
                     run_block(
-                        body, regs, views, data, cell, loop_shape, Some(&coords), no_sub, write,
+                        body,
+                        regs,
+                        views,
+                        data,
+                        cell,
+                        loop_shape,
+                        Some(&coords),
+                        no_sub,
+                        intra_threads,
+                        write,
                     )?;
                     for d in (0..loop_shape.len()).rev() {
                         coords[d] += 1;
@@ -234,6 +310,95 @@ fn run_block(
                 let s = param_sub(views, *param, sub, no_sub);
                 views[*param].scatter_with(tile, cell, s, |off, v| write(*param, off, v))?;
             }
+        }
+    }
+    Ok(())
+}
+
+/// `acc += A x B` for one (cell, sub) pair: direct strided reads through
+/// the blocked GEMM when both views expose dense in-range windows,
+/// gather fallback at padded edges (the pad value — 0 for matmul inputs
+/// — contributes nothing to the product).  `intra_threads > 1` splits
+/// the accumulator's rows across scoped workers when the product is big
+/// enough to amortize the spawns.
+#[allow(clippy::too_many_arguments)]
+fn dot_acc(
+    acc: &mut Tile,
+    va: &ParamView,
+    ta: &HostTensor,
+    sub_a: &[usize],
+    vb: &ParamView,
+    tb: &HostTensor,
+    sub_b: &[usize],
+    cell: &[i64],
+    intra_threads: usize,
+) -> Result<()> {
+    if va.block_shape.len() != 2 || vb.block_shape.len() != 2 {
+        bail!(
+            "dot_acc needs rank-2 blocks, got {:?} ({}) x {:?} ({})",
+            va.block_shape,
+            va.name,
+            vb.block_shape,
+            vb.name
+        );
+    }
+    let (m, k) = (va.block_shape[0], va.block_shape[1]);
+    let (kb, n) = (vb.block_shape[0], vb.block_shape[1]);
+    if k != kb || acc.shape != [m, n] {
+        bail!(
+            "dot_acc shape mismatch: acc {:?} += {:?} ({}) x {:?} ({})",
+            acc.shape,
+            va.block_shape,
+            va.name,
+            vb.block_shape,
+            vb.name
+        );
+    }
+    if naive_dot_forced() {
+        // oracle mode: the exact pre-microkernel gather + naive-dot + add
+        let t = va.gather(ta, cell, sub_a)?.dot_naive(&vb.gather(tb, cell, sub_b)?)?;
+        *acc = acc.binary(&t, BinOp::Add)?;
+        return Ok(());
+    }
+    let threads = if m * n * k >= INTRA_PAR_MIN_MADDS { intra_threads.max(1) } else { 1 };
+    let da = ta.as_f32()?;
+    let db = tb.as_f32()?;
+    match (va.dense_window(cell, sub_a), vb.dense_window(cell, sub_b)) {
+        (Some((ao, asr)), Some((bo, bsr))) => {
+            gemm_rows_parallel(
+                threads,
+                m,
+                n,
+                k,
+                da,
+                ao,
+                asr[0],
+                asr[1],
+                db,
+                bo,
+                bsr[0],
+                bsr[1],
+                &mut acc.data,
+            );
+        }
+        _ => {
+            let tile_a = va.gather(ta, cell, sub_a)?;
+            let tile_b = vb.gather(tb, cell, sub_b)?;
+            gemm_rows_parallel(
+                threads,
+                m,
+                n,
+                k,
+                &tile_a.data,
+                0,
+                k as isize,
+                1,
+                &tile_b.data,
+                0,
+                n as isize,
+                1,
+                &mut acc.data,
+            );
         }
     }
     Ok(())

@@ -226,6 +226,11 @@ fn spec_silu(inputs: &[HostTensor]) -> Result<Specialization> {
     build_spec(&tensors, &bindings, &[&a.shape, &a.shape], &[false, true], &[0.0, 0.0])
 }
 
+/// gelu shares silu's 1-D element-wise arrangement.
+fn spec_gelu(inputs: &[HostTensor]) -> Result<Specialization> {
+    spec_silu(inputs)
+}
+
 fn spec_rowwise(pad: f32, inputs: &[HostTensor]) -> Result<Specialization> {
     check_2d(inputs)?;
     let a = &inputs[0];
@@ -244,18 +249,34 @@ fn spec_rms_norm(inputs: &[HostTensor]) -> Result<Specialization> {
     spec_rowwise(0.0, inputs)
 }
 
+/// layer_norm shares the rowwise arrangement (one program per row; the
+/// block is the whole row, so no pad value ever participates).
+fn spec_layer_norm(inputs: &[HostTensor]) -> Result<Specialization> {
+    spec_rowwise(0.0, inputs)
+}
+
 const MM_BLOCK: i64 = 32;
+
+/// Matmul tiling for concrete `[m, k] x [k, n]` sizes.  Small problems
+/// keep the legacy 32-wide blocks (one gather per tile, no packing
+/// overhead); larger ones take 64x64 output tiles with K panels up to
+/// 256 deep, so the fused `DotAcc` GEMM amortizes packing while the grid
+/// still fans out across the worker pool (8x8 cells for a 512^3 mm).
+fn mm_blocks(m: usize, k: usize, n: usize) -> (i64, i64, i64) {
+    if m.max(n).max(k) <= 128 {
+        (MM_BLOCK, MM_BLOCK, MM_BLOCK)
+    } else {
+        (64, 64, k.min(256) as i64)
+    }
+}
 
 fn spec_mm(inputs: &[HostTensor]) -> Result<Specialization> {
     check_mm(inputs)?;
     let (a, b) = (&inputs[0], &inputs[1]);
     let out = vec![a.shape[0], b.shape[1]];
     let tensors = catalog::mm()?;
-    let mut bindings = bind(&[
-        ("BLOCK_SIZE_M", MM_BLOCK),
-        ("BLOCK_SIZE_N", MM_BLOCK),
-        ("BLOCK_SIZE_K", MM_BLOCK),
-    ]);
+    let (bm, bn, bk) = mm_blocks(a.shape[0], a.shape[1], b.shape[1]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
     bind_sizes(&mut bindings, "input", &a.shape);
     bind_sizes(&mut bindings, "other", &b.shape);
     bind_sizes(&mut bindings, "output", &out);
@@ -273,11 +294,8 @@ fn spec_bmm(inputs: &[HostTensor]) -> Result<Specialization> {
     let (a, b) = (&inputs[0], &inputs[1]);
     let out = vec![a.shape[0], a.shape[1], b.shape[2]];
     let tensors = catalog::bmm()?;
-    let mut bindings = bind(&[
-        ("BLOCK_SIZE_M", MM_BLOCK),
-        ("BLOCK_SIZE_N", MM_BLOCK),
-        ("BLOCK_SIZE_K", MM_BLOCK),
-    ]);
+    let (bm, bn, bk) = mm_blocks(a.shape[1], a.shape[2], b.shape[2]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
     bind_sizes(&mut bindings, "input", &a.shape);
     bind_sizes(&mut bindings, "other", &b.shape);
     bind_sizes(&mut bindings, "output", &out);
@@ -318,6 +336,33 @@ fn program_silu() -> TileProgram {
     }
 }
 
+/// tanh-approximated GELU via the identity `1 + tanh(y) = 2*sigmoid(2y)`:
+/// `gelu(x) = 0.5*x*(1 + tanh(sqrt(2/pi)*(x + 0.044715*x^3)))
+///          = x * sigmoid(2*sqrt(2/pi)*(x + 0.044715*x^3))`,
+/// which needs only the existing Mul/Add/Const/Sigmoid ops.
+fn program_gelu() -> TileProgram {
+    // 2 * sqrt(2 / pi)
+    const TWO_SQRT_2_OVER_PI: f32 = 1.595_769_1;
+    const CUBIC: f32 = 0.044_715;
+    TileProgram {
+        name: "gelu",
+        regs: 10,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
+            Instr::Binary { dst: 2, a: 1, b: 0, op: BinOp::Mul },
+            Instr::Const { dst: 3, value: CUBIC },
+            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Mul },
+            Instr::Binary { dst: 5, a: 0, b: 4, op: BinOp::Add },
+            Instr::Const { dst: 6, value: TWO_SQRT_2_OVER_PI },
+            Instr::Binary { dst: 7, a: 5, b: 6, op: BinOp::Mul },
+            Instr::Unary { dst: 8, a: 7, op: UnaryOp::Sigmoid },
+            Instr::Binary { dst: 9, a: 0, b: 8, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 9 },
+        ],
+    }
+}
+
 fn program_softmax() -> TileProgram {
     TileProgram {
         name: "softmax",
@@ -351,23 +396,40 @@ fn program_rms_norm() -> TileProgram {
     }
 }
 
+/// `layer_norm(x) = (x - mean(x)) * rsqrt(var(x) + eps)` over each row
+/// (no affine weight/bias, eps = 1e-6 — consistent with rms_norm).
+fn program_layer_norm() -> TileProgram {
+    TileProgram {
+        name: "layer_norm",
+        regs: 9,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Mean },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
+            Instr::Binary { dst: 3, a: 2, b: 2, op: BinOp::Mul },
+            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Mean },
+            Instr::Const { dst: 5, value: 1e-6 },
+            Instr::Binary { dst: 6, a: 4, b: 5, op: BinOp::Add },
+            Instr::Unary { dst: 7, a: 6, op: UnaryOp::Rsqrt },
+            Instr::Binary { dst: 8, a: 2, b: 7, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 8 },
+        ],
+    }
+}
+
 /// The mm/bmm application: `acc = zeros(output.shape); for k: acc +=
 /// dot(input[k], other[k]); output = acc` — identical for both kernels
 /// because the arrangements reduce both to the same tile-level view.
+/// The k-loop body is the fused `DotAcc`, which consumes the parameter
+/// views directly through the blocked GEMM (no materialized tiles on
+/// dense interior cells; gather fallback at padded edges).
 fn program_matmul(name: &'static str) -> TileProgram {
     TileProgram {
         name,
-        regs: 4,
+        regs: 1,
         instrs: vec![
             Instr::Zeros { dst: 0, like_param: 2 },
-            Instr::Loop {
-                body: vec![
-                    Instr::Load { dst: 1, param: 0 },
-                    Instr::Load { dst: 2, param: 1 },
-                    Instr::Dot { dst: 3, a: 1, b: 2 },
-                    Instr::Binary { dst: 0, a: 0, b: 3, op: BinOp::Add },
-                ],
-            },
+            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }] },
             Instr::Store { param: 2, src: 0 },
         ],
     }
@@ -390,6 +452,13 @@ fn build_catalog() -> Vec<NativeKernel> {
             specialize: spec_silu,
         },
         NativeKernel {
+            name: "gelu",
+            arity: 1,
+            program: program_gelu(),
+            shape_check: check_1d,
+            specialize: spec_gelu,
+        },
+        NativeKernel {
             name: "softmax",
             arity: 1,
             program: program_softmax(),
@@ -402,6 +471,13 @@ fn build_catalog() -> Vec<NativeKernel> {
             program: program_rms_norm(),
             shape_check: check_2d,
             specialize: spec_rms_norm,
+        },
+        NativeKernel {
+            name: "layer_norm",
+            arity: 1,
+            program: program_layer_norm(),
+            shape_check: check_2d,
+            specialize: spec_layer_norm,
         },
         NativeKernel {
             name: "mm",

@@ -25,6 +25,23 @@ pub fn silu(a: &HostTensor) -> Result<HostTensor> {
     )
 }
 
+/// tanh-approximated GELU (the same `x * sigmoid(2*sqrt(2/pi)*(x +
+/// 0.044715*x^3))` identity the tile program computes, evaluated in f64).
+pub fn gelu(a: &HostTensor) -> Result<HostTensor> {
+    let x = a.as_f32()?;
+    let c = 2.0f64 * (2.0f64 / std::f64::consts::PI).sqrt();
+    HostTensor::f32(
+        a.shape.clone(),
+        x.iter()
+            .map(|&v| {
+                let v = v as f64;
+                let arg = c * (v + 0.044715 * v * v * v);
+                (v / (1.0 + (-arg).exp())) as f32
+            })
+            .collect(),
+    )
+}
+
 pub fn softmax(a: &HostTensor) -> Result<HostTensor> {
     let x = a.as_f32()?;
     if a.shape.len() != 2 {
@@ -60,6 +77,28 @@ pub fn rms_norm(a: &HostTensor) -> Result<HostTensor> {
         let scale = 1.0 / (ms + EPS).sqrt();
         for (o, &v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
             *o = (v as f64 * scale) as f32;
+        }
+    }
+    HostTensor::f32(a.shape.clone(), out)
+}
+
+/// Row-wise layer normalization without affine weight/bias
+/// (`(x - mean) * rsqrt(var + 1e-6)`, eps consistent with [`rms_norm`]).
+pub fn layer_norm(a: &HostTensor) -> Result<HostTensor> {
+    const EPS: f64 = 1e-6;
+    let x = a.as_f32()?;
+    if a.shape.len() != 2 {
+        bail!("layer_norm expects a 2-D tensor, got {:?}", a.shape);
+    }
+    let (rows, cols) = (a.shape[0], a.shape[1]);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / cols as f64;
+        let var = row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / cols as f64;
+        let scale = 1.0 / (var + EPS).sqrt();
+        for (o, &v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *o = ((v as f64 - mean) * scale) as f32;
         }
     }
     HostTensor::f32(a.shape.clone(), out)
@@ -115,7 +154,8 @@ pub fn bmm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
 
 /// Kernels [`run`] can dispatch — the single source of truth the router
 /// and registry consult before admitting a `ref`-variant fallback.
-pub const SUPPORTED: &[&str] = &["add", "silu", "softmax", "rms_norm", "mm", "bmm"];
+pub const SUPPORTED: &[&str] =
+    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm"];
 
 /// True if a reference oracle exists for this kernel.
 pub fn supports(name: &str) -> bool {
@@ -140,6 +180,10 @@ pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
             need(1)?;
             silu(&inputs[0])?
         }
+        "gelu" => {
+            need(1)?;
+            gelu(&inputs[0])?
+        }
         "softmax" => {
             need(1)?;
             softmax(&inputs[0])?
@@ -147,6 +191,10 @@ pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         "rms_norm" => {
             need(1)?;
             rms_norm(&inputs[0])?
+        }
+        "layer_norm" => {
+            need(1)?;
+            layer_norm(&inputs[0])?
         }
         "mm" => {
             need(2)?;

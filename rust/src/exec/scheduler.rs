@@ -171,15 +171,18 @@ impl GridScheduler {
             }
         }
 
-        // below ~2 cells per worker the spawn/join cost dominates: run on
-        // the caller's thread instead
-        let threads = if (cells as usize) < self.threads.saturating_mul(2) {
-            1
+        // below ~2 cells per worker the spawn/join cost dominates: run
+        // the grid on the caller's thread and hand the whole pool to each
+        // cell instead — heavy intra-tile work (a `DotAcc` on a big
+        // single-tile GEMM) then row-splits across the pool, while cheap
+        // programs ignore the budget entirely
+        let (threads, intra) = if (cells as usize) < self.threads.saturating_mul(2) {
+            (1, self.threads)
         } else {
-            self.threads
+            (self.threads, 1)
         };
         if threads == 1 {
-            run_cells(program, views, &data, &grid, &loop_shape, 0, cells, &out_ptrs)?;
+            run_cells(program, views, &data, &grid, &loop_shape, 0, cells, intra, &out_ptrs)?;
         } else {
             let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
             let chunk = (cells + threads as i64 - 1) / threads as i64;
@@ -190,9 +193,9 @@ impl GridScheduler {
                     let lo = t as i64 * chunk;
                     let hi = (lo + chunk).min(cells);
                     scope.spawn(move || {
-                        if let Err(e) =
-                            run_cells(program, views, data, grid, loop_shape, lo, hi, out_ptrs)
-                        {
+                        if let Err(e) = run_cells(
+                            program, views, data, grid, loop_shape, lo, hi, intra, out_ptrs,
+                        ) {
                             *failure.lock().unwrap() = Some(e);
                         }
                     });
@@ -215,6 +218,7 @@ fn run_cells(
     loop_shape: &[usize],
     lo: i64,
     hi: i64,
+    intra_threads: usize,
     out_ptrs: &[SharedOut],
 ) -> Result<()> {
     let out_index: Vec<Option<usize>> = {
@@ -248,7 +252,7 @@ fn run_cells(
             cell[d] = rem % grid[d].max(1);
             rem /= grid[d].max(1);
         }
-        exec_cell(program, views, data, &cell, loop_shape, &mut write)?;
+        exec_cell(program, views, data, &cell, loop_shape, intra_threads, &mut write)?;
     }
     Ok(())
 }

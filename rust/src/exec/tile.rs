@@ -7,7 +7,34 @@
 //! is exactly what `ntl` expressions like `x - max(x)` need after a
 //! keep-dim reduction.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
 use anyhow::{bail, Result};
+
+use super::gemm;
+
+/// Programmatic override for [`naive_dot_forced`] — lets tests exercise
+/// the oracle path without touching the process environment (env writes
+/// race with concurrent `getenv` on glibc, which is why `set_var` is
+/// unsafe in newer editions).
+static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+/// Force (or stop forcing) the naive dot path from code.
+pub fn set_naive_dot_forced(forced: bool) {
+    FORCE_NAIVE.store(forced, Ordering::Relaxed);
+}
+
+/// True when `NT_NAIVE_DOT=1` (read once) or [`set_naive_dot_forced`]
+/// is active: every `dot` — including the fused `DotAcc` — takes the
+/// naive gather + i-k-j path.  The flag keeps the pre-microkernel path
+/// alive as the correctness oracle for property tests and as the
+/// baseline the bench gate measures the blocked kernel against.
+pub fn naive_dot_forced() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| std::env::var("NT_NAIVE_DOT").is_ok_and(|v| v == "1"))
+        || FORCE_NAIVE.load(Ordering::Relaxed)
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tile {
@@ -169,7 +196,7 @@ impl Tile {
                 bail!("reduce axis {d} out of range for shape {:?}", self.shape);
             }
         }
-        let reduced: Vec<bool> = (0..rank).map(|d| axis.map_or(true, |a| a == d)).collect();
+        let reduced: Vec<bool> = (0..rank).map(|d| axis.map(|a| a == d).unwrap_or(true)).collect();
         let out_shape: Vec<usize> = self
             .shape
             .iter()
@@ -220,15 +247,75 @@ impl Tile {
         })
     }
 
-    /// 2-D matrix product `[M, K] x [K, N] -> [M, N]` (f32 accumulate,
-    /// i-k-j loop order — the innermost loop walks both `b` and `out`
-    /// rows contiguously).
-    pub fn dot(&self, other: &Tile) -> Result<Tile> {
+    /// Validated `[M, K] x [K, N]` dimensions for a matrix product.
+    /// Rank and inner-dimension problems are reported here so every dot
+    /// variant fails with the same clean error instead of relying on
+    /// caller invariants.
+    fn dot_dims(&self, other: &Tile) -> Result<(usize, usize, usize)> {
         let (a, b) = (self, other);
-        if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
-            bail!("dot shape mismatch: {:?} x {:?}", a.shape, b.shape);
+        if a.shape.len() != 2 || b.shape.len() != 2 {
+            bail!(
+                "dot expects two rank-2 tiles, got rank {} ({:?}) x rank {} ({:?})",
+                a.shape.len(),
+                a.shape,
+                b.shape.len(),
+                b.shape
+            );
         }
-        let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+        if a.shape[1] != b.shape[0] {
+            bail!(
+                "dot inner-dimension mismatch: {:?} x {:?} (k = {} vs {})",
+                a.shape,
+                b.shape,
+                a.shape[1],
+                b.shape[0]
+            );
+        }
+        Ok((a.shape[0], a.shape[1], b.shape[1]))
+    }
+
+    /// 2-D matrix product `[M, K] x [K, N] -> [M, N]` (f32 accumulate).
+    /// Routes to the blocked microkernel ([`gemm`]) unless
+    /// `NT_NAIVE_DOT=1` forces the legacy naive loop.
+    pub fn dot(&self, other: &Tile) -> Result<Tile> {
+        if naive_dot_forced() {
+            self.dot_naive(other)
+        } else {
+            self.dot_blocked(other)
+        }
+    }
+
+    /// The blocked, cache-aware matrix product (packed panels + MR x NR
+    /// register tile; see [`gemm`]).
+    pub fn dot_blocked(&self, other: &Tile) -> Result<Tile> {
+        let (m, k, n) = self.dot_dims(other)?;
+        let mut out = vec![0.0f32; m * n];
+        gemm::gemm(
+            m,
+            n,
+            k,
+            &self.data,
+            0,
+            k as isize,
+            1,
+            &other.data,
+            0,
+            n as isize,
+            1,
+            &mut out,
+            0,
+            n,
+        );
+        Ok(Tile { shape: vec![m, n], data: out })
+    }
+
+    /// The original naive i-k-j loop — the innermost loop walks both `b`
+    /// and `out` rows contiguously.  Kept as the correctness oracle the
+    /// blocked path is property-tested against, and as the baseline the
+    /// bench gate measures.
+    pub fn dot_naive(&self, other: &Tile) -> Result<Tile> {
+        let (m, k, n) = self.dot_dims(other)?;
+        let (a, b) = (self, other);
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let arow = &a.data[i * k..(i + 1) * k];
@@ -297,5 +384,57 @@ mod tests {
         let a = Tile::zeros(vec![2, 3]);
         let b = Tile::zeros(vec![2, 4]);
         assert!(a.binary(&b, BinOp::Add).is_err());
+    }
+
+    #[test]
+    fn dot_rejects_non_rank2_operands() {
+        let vec1 = Tile::zeros(vec![4]);
+        let mat = Tile::zeros(vec![4, 4]);
+        let cube = Tile::zeros(vec![2, 2, 2]);
+        for (a, b) in [(&vec1, &mat), (&mat, &vec1), (&cube, &mat), (&mat, &cube)] {
+            for result in [a.dot(b), a.dot_naive(b), a.dot_blocked(b)] {
+                let msg = format!("{:#}", result.unwrap_err());
+                assert!(msg.contains("rank-2"), "unexpected error: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_rejects_inner_dimension_mismatch() {
+        let a = Tile::zeros(vec![2, 3]);
+        let b = Tile::zeros(vec![4, 2]);
+        for result in [a.dot(&b), a.dot_naive(&b), a.dot_blocked(&b)] {
+            let msg = format!("{:#}", result.unwrap_err());
+            assert!(msg.contains("inner-dimension"), "unexpected error: {msg}");
+        }
+    }
+
+    #[test]
+    fn blocked_dot_matches_naive_oracle() {
+        use crate::prng::SplitMix64;
+        let mut rng = SplitMix64::new(23);
+        // 1x1, odd/prime shapes, ragged strips, and a shape above the
+        // small-gemm threshold so the packed path runs too
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (13, 1, 9),
+            (31, 65, 33),
+            (127, 129, 65),
+            (96, 96, 96),
+        ] {
+            let a = Tile::new(vec![m, k], rng.normal_vec(m * k)).unwrap();
+            let b = Tile::new(vec![k, n], rng.normal_vec(k * n)).unwrap();
+            let fast = a.dot_blocked(&b).unwrap();
+            let slow = a.dot_naive(&b).unwrap();
+            assert_eq!(fast.shape, slow.shape);
+            let diff = fast
+                .data
+                .iter()
+                .zip(&slow.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff <= 1e-3, "({m},{k},{n}): blocked vs naive max|diff| = {diff}");
+        }
     }
 }

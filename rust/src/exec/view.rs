@@ -250,6 +250,44 @@ impl ParamView {
         })
     }
 
+    /// If the whole block at (cell, sub) maps to in-range source elements
+    /// — no pad reads, no dropped writes — return its flat base offset
+    /// plus one flat stride per block dimension.  The affine lowering
+    /// makes every element's flat offset `base + Σ block_coord[b] *
+    /// stride[b]`, so consumers (the fused `DotAcc` GEMM) can read the
+    /// source buffer directly instead of materializing a tile.  `None`
+    /// means some coordinate pads: callers fall back to `gather`.
+    pub fn dense_window(&self, cell: &[i64], sub: &[usize]) -> Option<(usize, Vec<isize>)> {
+        let starts = self.starts(cell, sub);
+        let mut base: i64 = 0;
+        for (d, (&start, aff)) in starts.iter().zip(&self.index).enumerate() {
+            // extreme coordinates this source dim reaches over the block
+            let (mut lo, mut hi) = (start, start);
+            for (&coeff, &dim) in aff.inner.iter().zip(&self.block_shape) {
+                let extent = coeff * (dim as i64 - 1).max(0);
+                if extent >= 0 {
+                    hi += extent;
+                } else {
+                    lo += extent;
+                }
+            }
+            if lo < 0 || hi >= self.src_shape[d] as i64 {
+                return None;
+            }
+            base += start * self.src_strides[d] as i64;
+        }
+        let flat = (0..self.block_shape.len())
+            .map(|b| {
+                self.index
+                    .iter()
+                    .zip(&self.src_strides)
+                    .map(|(aff, &stride)| aff.inner[b] as isize * stride as isize)
+                    .sum()
+            })
+            .collect();
+        Some((base as usize, flat))
+    }
+
     /// Per-source-dim start coordinate for a (cell, sub) pair.
     fn starts(&self, cell: &[i64], sub: &[usize]) -> Vec<i64> {
         self.index
@@ -385,6 +423,37 @@ mod tests {
         let mut writes = Vec::new();
         view.scatter_with(&tile, &[2], &[], |off, v| writes.push((off, v))).unwrap();
         assert_eq!(writes, vec![(8, 1.0), (9, 2.0)]);
+    }
+
+    #[test]
+    fn dense_window_matches_gather_and_detects_padding() {
+        // 10 elements tiled by 4: cells 0/1 are dense, cell 2 pads
+        let view = view_1d(10, 4);
+        let src = HostTensor::f32(vec![10], (0..10).map(|i| i as f32).collect()).unwrap();
+        for cell in [0i64, 1] {
+            let (off, strides) = view.dense_window(&[cell], &[]).expect("interior cell is dense");
+            assert_eq!(strides, vec![1]);
+            let tile = view.gather(&src, &[cell], &[]).unwrap();
+            let data = src.as_f32().unwrap();
+            for (i, &v) in tile.data.iter().enumerate() {
+                assert_eq!(data[(off as isize + i as isize * strides[0]) as usize], v);
+            }
+        }
+        assert!(view.dense_window(&[2], &[]).is_none(), "padded tail must not be dense");
+    }
+
+    #[test]
+    fn dense_window_reports_non_unit_strides() {
+        // [4, 6] matrix tiled into [2, 3] blocks: block dim 0 walks the
+        // source with stride 6 (a non-contiguous window of the flat buffer)
+        let t = SymTensor::new("x", 2)
+            .tile(&[Some(Expr::Const(2)), Some(Expr::Const(3))], None)
+            .unwrap();
+        let bindings = bind(&[("x_size_0", 4), ("x_size_1", 6)]);
+        let view = ParamView::specialize(&t, &bindings, &[4, 6], false, 0.0).unwrap();
+        let (off, strides) = view.dense_window(&[1, 1], &[]).unwrap();
+        assert_eq!(off, 2 * 6 + 3);
+        assert_eq!(strides, vec![6, 1]);
     }
 
     #[test]

@@ -55,8 +55,10 @@ pub fn native_task_inputs(name: &str, rng: &mut SplitMix64) -> Result<Vec<HostTe
             HostTensor::randn(vec![1000], rng),
         ],
         "silu" => vec![HostTensor::randn(vec![777], rng)],
+        "gelu" => vec![HostTensor::randn(vec![513], rng)],
         "softmax" => vec![HostTensor::randn(vec![7, 301], rng)],
         "rms_norm" => vec![HostTensor::randn(vec![5, 257], rng)],
+        "layer_norm" => vec![HostTensor::randn(vec![6, 259], rng)],
         "mm" => vec![
             HostTensor::randn(vec![70, 50], rng),
             HostTensor::randn(vec![50, 90], rng),

@@ -55,7 +55,7 @@ fn artifact_manifest(test: &str) -> Option<Arc<Manifest>> {
 fn native_goldens_pass_for_all_kernels() {
     // every native tile program vs its reference oracle, serial + pooled
     let cases = ninetoothed_repro::harness::golden::check_native().unwrap();
-    assert!(cases >= 12, "expected ≥ 6 kernels x 2 schedulers, got {cases}");
+    assert!(cases >= 16, "expected ≥ 8 kernels x 2 schedulers, got {cases}");
 }
 
 #[test]

@@ -1,0 +1,151 @@
+//! CI bench gate: compare `BENCH_native.json` (a fresh
+//! `cargo bench --bench native_backend` run) against the committed
+//! `BENCH_baseline.json` and fail on throughput regressions.
+//!
+//! Rows are matched by their `key` field.  For every metric named in
+//! [`METRICS`] that appears in both the baseline and the current row, the
+//! current value must be at least `baseline * (1 - tolerance)` —
+//! tolerance defaults to 25% and can be overridden with
+//! `NT_BENCH_TOLERANCE` (e.g. `0.4`).
+//!
+//! The committed baseline intentionally holds *conservative floors*
+//! (slow-CI-runner safe), not best-machine numbers: its job is to catch
+//! collapses — a blocked kernel silently reverting to the naive loop, a
+//! scheduler losing its parallel speedup — not single-digit noise.
+//! Regenerate it from a trusted machine with `--update`.
+//!
+//! Usage:
+//!   bench_check [--current BENCH_native.json] [--baseline BENCH_baseline.json]
+//!               [--update] [--strict]
+//!
+//! `--update` copies the current report over the baseline and exits.
+//! `--strict` also fails when a baseline key is missing from the current
+//! run (by default missing keys only warn, so the reduced CI smoke sweep
+//! can share a baseline with full local runs).
+
+use std::process::ExitCode;
+
+use ninetoothed_repro::json::Json;
+
+/// Metrics gated as "higher is better" when present in a baseline row.
+const METRICS: &[&str] = &["gflops", "naive_gflops", "gflops_serial", "gflops_pooled", "speedup"];
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn rows(report: &Json) -> Vec<&Json> {
+    report
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .map(|r| r.iter().collect())
+        .unwrap_or_default()
+}
+
+fn key_of(row: &Json) -> Option<&str> {
+    row.get("key").and_then(|k| k.as_str())
+}
+
+fn main() -> ExitCode {
+    let mut current_path = "BENCH_native.json".to_string();
+    let mut baseline_path = "BENCH_baseline.json".to_string();
+    let (mut update, mut strict) = (false, false);
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--current" => current_path = args.next().unwrap_or(current_path),
+            "--baseline" => baseline_path = args.next().unwrap_or(baseline_path),
+            "--update" => update = true,
+            "--strict" => strict = true,
+            other => {
+                eprintln!("unknown argument {other:?}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let tolerance: f64 = std::env::var("NT_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+
+    if update {
+        return match std::fs::copy(&current_path, &baseline_path) {
+            Ok(_) => {
+                println!("rebaselined: {current_path} -> {baseline_path}");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("rebaseline failed: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let (current, baseline) = match (load(&current_path), load(&baseline_path)) {
+        (Ok(c), Ok(b)) => (c, b),
+        (c, b) => {
+            for err in [c.err(), b.err()].into_iter().flatten() {
+                eprintln!("bench_check: {err}");
+            }
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let current_rows = rows(&current);
+    let mut failures = Vec::new();
+    let mut missing = Vec::new();
+    let mut checked = 0usize;
+    for base_row in rows(&baseline) {
+        let Some(key) = key_of(base_row) else { continue };
+        let Some(cur_row) = current_rows.iter().find(|r| key_of(r) == Some(key)) else {
+            missing.push(key.to_string());
+            continue;
+        };
+        for metric in METRICS {
+            let (Some(base), Some(cur)) = (
+                base_row.get(metric).and_then(|v| v.as_f64()),
+                cur_row.get(metric).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            checked += 1;
+            let floor = base * (1.0 - tolerance);
+            let verdict = if cur < floor { "FAIL" } else { "ok" };
+            println!(
+                "{verdict:>4}  {key:<24} {metric:<14} current {cur:>8.2} vs floor {floor:>8.2} \
+                 (baseline {base:.2}, tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+            if cur < floor {
+                failures.push(format!(
+                    "{key}/{metric}: {cur:.2} < {floor:.2} (baseline {base:.2})"
+                ));
+            }
+        }
+    }
+    for key in &missing {
+        println!("warn  {key:<24} missing from {current_path} (reduced sweep?)");
+    }
+
+    if checked == 0 {
+        eprintln!("bench_check: no overlapping gated metrics between the two reports");
+        return ExitCode::FAILURE;
+    }
+    if !failures.is_empty() || (strict && !missing.is_empty()) {
+        eprintln!(
+            "bench_check: {} regression(s) beyond the {:.0}% tolerance:",
+            failures.len(),
+            tolerance * 100.0
+        );
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        if strict && !missing.is_empty() {
+            eprintln!("  (strict) missing keys: {}", missing.join(", "));
+        }
+        return ExitCode::FAILURE;
+    }
+    println!("bench_check: {checked} metric(s) within {:.0}% of baseline", tolerance * 100.0);
+    ExitCode::SUCCESS
+}
