@@ -37,8 +37,14 @@ fn main() {
     for (label, fanin) in [("packing OFF (fanin=1)", 1), ("packing ON (fanin=16)", 16)] {
         let coordinator = Coordinator::start(
             manifest.clone(),
-            CoordinatorConfig { workers: 1, queue_capacity: 4096, max_fanin: fanin },
-        );
+            CoordinatorConfig {
+                workers: 1,
+                queue_capacity: 4096,
+                max_fanin: fanin,
+                ..Default::default()
+            },
+        )
+        .expect("start coordinator");
         let mut rng = SplitMix64::new(5);
         let warm = HostTensor::randn(vec![slot], &mut rng);
         coordinator

@@ -1,7 +1,7 @@
 //! `cargo bench --bench native_backend` — native tile-execution backend
 //! throughput.
 //!
-//! Three sections:
+//! Five sections:
 //!
 //! 1. **dot microkernel sweep** — naive i-k-j loop vs the blocked GEMM
 //!    on single tiles across sizes (the ISSUE 2 acceptance series: the
@@ -9,7 +9,12 @@
 //! 2. **kernel sweeps** — mm / bmm / softmax GFLOP/s across sizes,
 //!    serial vs pooled grid scheduler (grid-vs-intra-tile parallelism
 //!    evidence);
-//! 3. the **artifact path** for context, when AOT artifacts + a PJRT
+//! 3. **plan cache** — cold compile (specialize + lower + probe-verify)
+//!    vs warm `PlanCache::prepare` latency: the compile-once/execute-many
+//!    evidence, gated so a warm-path regression fails CI;
+//! 4. **coalescing** — N same-shape requests executed sequentially vs
+//!    stacked into one grid launch (requests/s both ways);
+//! 5. the **artifact path** for context, when AOT artifacts + a PJRT
 //!    runtime exist.
 //!
 //! Emits `BENCH_native.json` with one keyed row per measurement.
@@ -26,7 +31,8 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use ninetoothed_repro::benchkit::{bench_for, fmt_duration, Table};
-use ninetoothed_repro::exec::{self, GridScheduler, Tile};
+use ninetoothed_repro::coordinator::Coalescer;
+use ninetoothed_repro::exec::{self, GridScheduler, PlanCache, Tile};
 use ninetoothed_repro::json::Json;
 use ninetoothed_repro::prng::SplitMix64;
 use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
@@ -229,7 +235,92 @@ fn main() {
     }
     println!("{}", table.render());
 
-    // -- 3. artifact-path comparison, once per kernel, at the artifact's own
+    // -- 3. plan cache: cold compile vs warm prepare -------------------------
+    let mut plan_table =
+        Table::new(&["plan", "cold compile", "warm prepare", "speedup", "warm/s"]);
+    for case in [mm_case(256, 256, 256, &mut rng), softmax_case(256, 2048, &mut rng)] {
+        let kernel = exec::lookup(case.kernel).expect("native kernel");
+        let shapes: Vec<&[usize]> = case.inputs.iter().map(|t| t.shape.as_slice()).collect();
+        let cold = bench_for(1, min_time, || {
+            exec::compile(kernel, &shapes).expect("cold compile");
+        });
+        let cache = PlanCache::new(64);
+        cache.prepare(kernel, "nt", &shapes).expect("prime the cache");
+        let warm = bench_for(1, min_time, || {
+            cache.prepare(kernel, "nt", &shapes).expect("warm prepare");
+        });
+        let speedup = cold.mean_s / warm.mean_s;
+        let warm_per_s = 1.0 / warm.mean_s;
+        plan_table.row(vec![
+            case.key.clone(),
+            fmt_duration(cold.mean_s),
+            fmt_duration(warm.mean_s),
+            format!("{speedup:.1}x"),
+            format!("{warm_per_s:.0}"),
+        ]);
+        rows.push(obj(vec![
+            ("key", Json::Str(format!("plan_{}", case.key))),
+            ("kernel", Json::Str(case.kernel.to_string())),
+            ("cold_mean_s", Json::Num(cold.mean_s)),
+            ("warm_mean_s", Json::Num(warm.mean_s)),
+            ("speedup", Json::Num(speedup)),
+            ("warm_per_s", Json::Num(warm_per_s)),
+        ]));
+    }
+    println!("{}", plan_table.render());
+
+    // -- 4. coalescing: sequential same-shape requests vs one stacked launch --
+    {
+        // small per-request rows: a single request's grid cannot fill the
+        // pool (the scheduler runs it serially), while the stacked launch
+        // fans out — exactly the serving shapes coalescing exists for
+        let reqs = 8usize;
+        let (r, c) = (16usize, 256usize);
+        let kernel = exec::lookup("softmax").expect("softmax");
+        let per_request: Vec<Vec<HostTensor>> =
+            (0..reqs).map(|_| vec![HostTensor::randn(vec![r, c], &mut rng)]).collect();
+        let refs: Vec<Vec<&HostTensor>> =
+            per_request.iter().map(|inputs| inputs.iter().collect()).collect();
+        let stacked = Coalescer::stack(&refs).expect("stack");
+        let pooled = GridScheduler::pooled(threads);
+        // compile both shape signatures once; the measurement is pure
+        // execute, which is what the serving hot path pays
+        let cache = PlanCache::new(8);
+        let single_shapes: Vec<&[usize]> =
+            per_request[0].iter().map(|t| t.shape.as_slice()).collect();
+        let stacked_shapes: Vec<&[usize]> = stacked.iter().map(|t| t.shape.as_slice()).collect();
+        let single_plan = cache.prepare(kernel, "nt", &single_shapes).expect("plan");
+        let stacked_plan = cache.prepare(kernel, "nt", &stacked_shapes).expect("plan");
+        let sequential = bench_for(1, min_time, || {
+            for inputs in &per_request {
+                single_plan.execute(inputs, &pooled).expect("sequential run");
+            }
+        });
+        let coalesced = bench_for(1, min_time, || {
+            let outs = stacked_plan.execute(&stacked, &pooled).expect("coalesced run");
+            Coalescer::unstack(reqs, outs).expect("unstack");
+        });
+        let speedup = sequential.mean_s / coalesced.mean_s;
+        let (seq_per_s, coal_per_s) =
+            (reqs as f64 / sequential.mean_s, reqs as f64 / coalesced.mean_s);
+        println!(
+            "coalescing ({reqs} x softmax {r}x{c}): sequential {} ({seq_per_s:.0} req/s) vs \
+             stacked {} ({coal_per_s:.0} req/s) = {speedup:.2}x",
+            fmt_duration(sequential.mean_s),
+            fmt_duration(coalesced.mean_s),
+        );
+        rows.push(obj(vec![
+            ("key", Json::Str(format!("coalesce_softmax_{reqs}x{r}x{c}"))),
+            ("kernel", Json::Str("softmax".to_string())),
+            ("sequential_mean_s", Json::Num(sequential.mean_s)),
+            ("coalesced_mean_s", Json::Num(coalesced.mean_s)),
+            ("sequential_per_s", Json::Num(seq_per_s)),
+            ("coalesced_per_s", Json::Num(coal_per_s)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // -- 5. artifact-path comparison, once per kernel, at the artifact's own
     //       compiled shapes
     if let Some(registry) = &artifact_registry {
         for kernel in benched_kernels {

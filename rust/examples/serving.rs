@@ -29,8 +29,8 @@ fn main() -> Result<()> {
         .unwrap_or(65536);
     let coordinator = Arc::new(Coordinator::start(
         manifest.clone(),
-        CoordinatorConfig { workers, queue_capacity: 256, max_fanin: 16 },
-    ));
+        CoordinatorConfig { workers, queue_capacity: 256, max_fanin: 16, ..Default::default() },
+    )?);
 
     // warm the per-worker compile caches
     let mut rng = SplitMix64::new(0);

@@ -59,6 +59,28 @@ pub fn mm() -> Result<Vec<SymTensor>> {
     Ok(vec![input_arranged, other_arranged, output_arranged])
 }
 
+/// addmm (paper task 2): the mm arrangement plus a broadcast bias
+/// epilogue.  The bias is always arranged rank-2 (`[1, n]` for rank-1 /
+/// row-broadcast biases): with `row_bias` it is tiled `[1, BLOCK_SIZE_N]`
+/// and its row-grid dimension expanded across the output's row grid —
+/// every row of output tiles re-reads the same bias tile; otherwise it is
+/// tiled exactly like the output.  Returned order: `[bias, input, other,
+/// output]` (torch.addmm argument order, output last).
+pub fn addmm(row_bias: bool) -> Result<Vec<SymTensor>> {
+    let mm_tensors = mm()?;
+    let out_shape = mm_tensors[2].shape();
+    let bias = SymTensor::new("bias", 2);
+    let bias_arranged = if row_bias {
+        let tiled = bias.tile(&[c(1), s("BLOCK_SIZE_N")], None)?;
+        tiled.expand(&[Some(out_shape[0].clone()), None])?
+    } else {
+        bias.tile(&[s("BLOCK_SIZE_M"), s("BLOCK_SIZE_N")], None)?
+    };
+    let mut tensors = vec![bias_arranged];
+    tensors.extend(mm_tensors);
+    Ok(tensors)
+}
+
 /// 2D convolution via implicit GEMM (paper Listing 8): meta-operations map
 /// NCHW convolution onto the mm arrangement.
 pub fn conv2d() -> Result<Vec<SymTensor>> {

@@ -53,6 +53,24 @@ impl Args {
     pub fn opt_usize(&self, name: &str, default: usize) -> usize {
         self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Strict variant of [`Args::opt_usize`] for startup-validated knobs:
+    /// `Ok(None)` when absent, a clean error (instead of a silent default)
+    /// when the value is not a positive integer.
+    pub fn opt_positive(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(raw) => parse_positive(raw).map(Some).ok_or_else(|| {
+                anyhow::anyhow!("--{name} must be a positive integer, got {raw:?}")
+            }),
+        }
+    }
+}
+
+/// Strict positive-integer parse — the one rule shared by CLI flags
+/// ([`Args::opt_positive`]) and env knobs (`exec::pool::parse_env_usize`).
+pub fn parse_positive(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().filter(|&v| v > 0)
 }
 
 #[cfg(test)]
@@ -76,5 +94,16 @@ mod tests {
     fn parses_equals_form() {
         let a = parse(&["bench", "--iters=12"]);
         assert_eq!(a.opt_usize("iters", 0), 12);
+    }
+
+    #[test]
+    fn opt_positive_is_strict() {
+        let a = parse(&["serve", "--pool-threads", "4", "--coalesce-fanin", "zero"]);
+        assert_eq!(a.opt_positive("pool-threads").unwrap(), Some(4));
+        assert_eq!(a.opt_positive("absent").unwrap(), None);
+        let err = a.opt_positive("coalesce-fanin").unwrap_err();
+        assert!(format!("{err:#}").contains("positive integer"));
+        let zero = parse(&["serve", "--plan-cache-cap", "0"]);
+        assert!(zero.opt_positive("plan-cache-cap").is_err());
     }
 }

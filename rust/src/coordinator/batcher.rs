@@ -1,11 +1,23 @@
-//! Slot packing: dynamic batching under frozen AOT shapes.
+//! Dynamic batching: slot packing under frozen AOT shapes, and native
+//! request coalescing for shape-polymorphic routes.
 //!
-//! An element-wise artifact is compiled for a fixed vector length (the
-//! "slot", e.g. 65536 for `add`).  Requests carry arbitrary smaller
-//! lengths; the packer bin-packs consecutive compatible requests into one
-//! slot, executes once, and scatters the slices back to their owners.
-//! Padding tail elements are zeros — element-wise kernels map zeros to
-//! values the owners never see.
+//! **Slot packing** ([`Packer`]): an element-wise artifact is compiled for
+//! a fixed vector length (the "slot", e.g. 65536 for `add`).  Requests
+//! carry arbitrary smaller lengths; the packer bin-packs consecutive
+//! compatible requests into one slot, executes once, and scatters the
+//! slices back to their owners.  Padding tail elements are zeros —
+//! element-wise kernels map zeros to values the owners never see.
+//!
+//! **Native coalescing** ([`Coalescer`]): native routes have no frozen
+//! slot, but same-kernel same-shape requests can share a launch anyway —
+//! row-independent kernels (element-wise 1-D, rowwise 2-D) are stacked
+//! along dim 0 into one tensor, executed as a single grid launch against
+//! one cached compiled program, and split back on reply.  Because every
+//! row/element is computed by the same per-tile math regardless of how
+//! many rows the launch carries, coalesced execution is **bit-identical**
+//! to per-request execution (asserted in `exec`'s tests).
+
+use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
 
@@ -31,7 +43,20 @@ impl Packer {
 
     /// Greedy first-fit over the queue order: take requests while they fit.
     /// Returns how many of `lengths` were packed and the plan.
-    pub fn plan(&self, lengths: &[usize]) -> (usize, PackPlan) {
+    ///
+    /// An oversized *head* request (one that can never fit the slot) is a
+    /// clean error, not a silent zero-item plan — admission already
+    /// rejects these, so hitting this means a bug upstream, and the
+    /// caller fails the request with this message instead of looping.
+    pub fn plan(&self, lengths: &[usize]) -> Result<(usize, PackPlan)> {
+        if let Some(&head) = lengths.first() {
+            if head > self.slot {
+                bail!(
+                    "request of {head} elements can never fit the {}-element artifact slot",
+                    self.slot
+                );
+            }
+        }
         let mut offsets = Vec::new();
         let mut taken_lengths = Vec::new();
         let mut used = 0;
@@ -44,7 +69,7 @@ impl Packer {
             used += len;
         }
         let taken = offsets.len();
-        (taken, PackPlan { offsets, lengths: taken_lengths, used, slot: self.slot })
+        Ok((taken, PackPlan { offsets, lengths: taken_lengths, used, slot: self.slot }))
     }
 
     /// Gather the per-request vectors into one slot-sized buffer per input.
@@ -79,6 +104,84 @@ impl Packer {
     }
 }
 
+/// Native request coalescing: stack same-shape requests along dim 0 into
+/// one grid launch.  [`Coalescer::plan`] decides how many consecutive
+/// queued requests share the head's shapes; `stack`/`unstack` are the
+/// data movement.
+pub struct Coalescer {
+    /// max requests stacked into one launch
+    pub max_fanin: usize,
+}
+
+impl Coalescer {
+    pub fn new(max_fanin: usize) -> Coalescer {
+        Coalescer { max_fanin: max_fanin.max(1) }
+    }
+
+    /// How many leading requests (each described by its full input-shape
+    /// set) can coalesce with the head: consecutive, identical shape
+    /// sets, bounded by the fan-in.
+    pub fn plan(&self, shape_sets: &[Vec<&[usize]>]) -> usize {
+        let Some(head) = shape_sets.first() else { return 0 };
+        shape_sets.iter().take(self.max_fanin).take_while(|s| *s == head).count()
+    }
+
+    /// Concatenate per-request inputs along dim 0 (all requests carry
+    /// identical shapes, so this is a flat append per argument).
+    pub fn stack(per_request: &[Vec<&HostTensor>]) -> Result<Vec<HostTensor>> {
+        let Some(head) = per_request.first() else {
+            bail!("coalesce of zero requests");
+        };
+        let count = per_request.len();
+        let mut out = Vec::with_capacity(head.len());
+        for arg in 0..head.len() {
+            let proto = &head[arg];
+            let mut data = Vec::with_capacity(proto.len() * count);
+            for req in per_request {
+                if req.len() != head.len() || req[arg].shape != proto.shape {
+                    bail!(
+                        "coalesced requests disagree: {:?} vs {:?} for argument {arg}",
+                        req.get(arg).map(|t| &t.shape),
+                        proto.shape
+                    );
+                }
+                data.extend_from_slice(req[arg].as_f32()?);
+            }
+            let mut shape = proto.shape.clone();
+            shape[0] *= count;
+            out.push(HostTensor::f32(shape, data)?);
+        }
+        Ok(out)
+    }
+
+    /// Split stacked outputs back into `count` per-request output sets.
+    pub fn unstack(count: usize, outputs: Vec<HostTensor>) -> Result<Vec<Vec<HostTensor>>> {
+        if count == 0 {
+            bail!("unstack into zero requests");
+        }
+        let mut per_request: Vec<Vec<HostTensor>> = (0..count).map(|_| Vec::new()).collect();
+        for output in outputs {
+            if output.shape.is_empty() || output.shape[0] % count != 0 {
+                bail!(
+                    "coalesced output shape {:?} does not split into {count} requests",
+                    output.shape
+                );
+            }
+            let mut shape = output.shape.clone();
+            shape[0] /= count;
+            let chunk: usize = shape.iter().product();
+            let data = output.as_f32()?;
+            for (i, slot) in per_request.iter_mut().enumerate() {
+                slot.push(HostTensor::f32(
+                    shape.clone(),
+                    data[i * chunk..(i + 1) * chunk].to_vec(),
+                )?);
+            }
+        }
+        Ok(per_request)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,7 +189,7 @@ mod tests {
     #[test]
     fn plan_respects_slot() {
         let p = Packer::new(100, 8);
-        let (taken, plan) = p.plan(&[40, 40, 40]);
+        let (taken, plan) = p.plan(&[40, 40, 40]).unwrap();
         assert_eq!(taken, 2);
         assert_eq!(plan.offsets, vec![0, 40]);
         assert_eq!(plan.used, 80);
@@ -95,7 +198,7 @@ mod tests {
     #[test]
     fn plan_respects_fanin() {
         let p = Packer::new(100, 2);
-        let (taken, _) = p.plan(&[10, 10, 10]);
+        let (taken, _) = p.plan(&[10, 10, 10]).unwrap();
         assert_eq!(taken, 2);
     }
 
@@ -104,7 +207,7 @@ mod tests {
         let p = Packer::new(10, 8);
         let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
         let b = HostTensor::f32(vec![4], vec![4.0, 5.0, 6.0, 7.0]).unwrap();
-        let (taken, plan) = p.plan(&[3, 4]);
+        let (taken, plan) = p.plan(&[3, 4]).unwrap();
         assert_eq!(taken, 2);
         let packed = p.pack(&plan, &[vec![&a], vec![&b]]);
         assert_eq!(packed[0].as_f32().unwrap()[..7], [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
@@ -114,9 +217,49 @@ mod tests {
     }
 
     #[test]
-    fn oversized_first_request_takes_zero() {
+    fn oversized_head_is_a_clean_error_not_an_empty_plan() {
+        // regression: plan([11]) used to return taken = 0 silently, which
+        // made the drain loop rely on a downstream max(1) hack
         let p = Packer::new(10, 8);
-        let (taken, _) = p.plan(&[11]);
-        assert_eq!(taken, 0);
+        let err = p.plan(&[11]).unwrap_err();
+        assert!(format!("{err:#}").contains("can never fit"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_later_request_just_ends_the_pack() {
+        // only the head is terminal: a later oversized request stays
+        // queued and errors once it becomes the head
+        let p = Packer::new(10, 8);
+        let (taken, plan) = p.plan(&[6, 11, 3]).unwrap();
+        assert_eq!(taken, 1);
+        assert_eq!(plan.used, 6);
+    }
+
+    #[test]
+    fn coalescer_plans_consecutive_same_shape_runs() {
+        let c = Coalescer::new(8);
+        let s1: Vec<&[usize]> = vec![&[4, 8]];
+        let s2: Vec<&[usize]> = vec![&[4, 9]];
+        assert_eq!(c.plan(&[s1.clone(), s1.clone(), s2, s1.clone()]), 2);
+        assert_eq!(Coalescer::new(2).plan(&[s1.clone(), s1.clone(), s1]), 2);
+        assert_eq!(c.plan(&[]), 0);
+    }
+
+    #[test]
+    fn coalescer_stack_unstack_roundtrip() {
+        let a = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let b = HostTensor::f32(vec![2, 3], (6..12).map(|i| i as f32).collect()).unwrap();
+        let stacked = Coalescer::stack(&[vec![&a], vec![&b]]).unwrap();
+        assert_eq!(stacked[0].shape, vec![4, 3]);
+        let split = Coalescer::unstack(2, stacked).unwrap();
+        assert_eq!(split[0][0], a);
+        assert_eq!(split[1][0], b);
+    }
+
+    #[test]
+    fn coalescer_rejects_mismatched_shapes() {
+        let a = HostTensor::f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        let b = HostTensor::f32(vec![3, 3], vec![0.0; 9]).unwrap();
+        assert!(Coalescer::stack(&[vec![&a], vec![&b]]).is_err());
     }
 }

@@ -10,6 +10,9 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub batched: AtomicU64,
+    /// requests served through a coalesced native launch (stacked
+    /// same-shape requests, one grid execution)
+    pub coalesced: AtomicU64,
     pub executions: AtomicU64,
     pub exec_us_total: AtomicU64,
     pub queue_us_total: AtomicU64,
@@ -37,9 +40,12 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
             executions: self.executions.load(Ordering::Relaxed),
             exec_us_total: self.exec_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
+            plan_hits: 0,
+            plan_misses: 0,
             latency_hist: hist,
         }
     }
@@ -51,9 +57,14 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub batched: u64,
+    pub coalesced: u64,
     pub executions: u64,
     pub exec_us_total: u64,
     pub queue_us_total: u64,
+    /// plan-cache counters (filled in by `Coordinator::metrics`, which
+    /// owns the shared `exec::PlanCache`; zero for a bare snapshot)
+    pub plan_hits: u64,
+    pub plan_misses: u64,
     pub latency_hist: Vec<u64>,
 }
 
@@ -102,12 +113,16 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} executions={} batching={:.2}x \
-             mean_exec={:.0}µs mean_queue={:.0}µs p50={}µs p99={}µs",
+             coalesced={} plan_cache={}h/{}m mean_exec={:.0}µs mean_queue={:.0}µs \
+             p50={}µs p99={}µs",
             self.submitted,
             self.completed,
             self.rejected,
             self.executions,
             self.batching_factor(),
+            self.coalesced,
+            self.plan_hits,
+            self.plan_misses,
             self.mean_exec_us(),
             self.mean_queue_us(),
             self.latency_quantile_us(0.5),

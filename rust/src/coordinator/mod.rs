@@ -1,4 +1,4 @@
-//! L3 coordinator: a kernel-serving system over the AOT artifacts.
+//! L3 coordinator: a kernel-serving system over the compiled kernels.
 //!
 //! The paper's contribution lives at the DSL layer, so the coordinator is
 //! the serving shell a production deployment would put around the compiled
@@ -7,21 +7,26 @@
 //! * [`router`] — admission + routing: validates request shapes against the
 //!   manifest and the arrangement launch plans, picks the executable.
 //!   Kernels without AOT artifacts route to the native tile-execution
-//!   backend (`crate::exec`) — the coordinator serves them transparently.
-//! * [`batcher`] — **slot packing**: AOT artifacts have fixed shapes, so
-//!   variable-size element-wise requests are packed into the fixed vector
-//!   slot of one artifact execution and split back afterwards (the dynamic
-//!   batching strategy available when shapes are frozen ahead of time).
+//!   backend (`crate::exec`) — the coordinator serves them transparently,
+//!   resolving each request to a **cached compiled program** via the
+//!   registry's shared plan cache (hit/miss surfaced in [`metrics`]).
+//! * [`batcher`] — two fusion strategies: **slot packing** (variable-size
+//!   element-wise requests packed into an artifact's frozen vector slot)
+//!   and **native coalescing** (same-kernel, same-shape requests for
+//!   row-independent kernels stacked along dim 0 into one grid launch and
+//!   split back on reply — bit-identical to per-request execution).
 //! * [`server`] — worker-thread pool over an injector queue with bounded
-//!   capacity (backpressure) and graceful shutdown.
-//! * [`metrics`] — lock-free counters + log2 latency histogram.
+//!   capacity (backpressure), startup-validated config (pool size, plan
+//!   cache capacity, coalescing fan-in: env + flags) and graceful shutdown.
+//! * [`metrics`] — lock-free counters (incl. plan-cache hits/misses and
+//!   coalesced requests) + log2 latency histogram.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use batcher::{PackPlan, Packer};
+pub use batcher::{Coalescer, PackPlan, Packer};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Request, Response, Router};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -49,6 +49,10 @@ pub struct RouteKey {
     pub packable: bool,
     /// no artifact exists: execute through the native tile backend
     pub native: bool,
+    /// native route whose kernel is row-independent: the worker may stack
+    /// consecutive same-shape requests into one grid launch (the native
+    /// analogue of slot packing, bit-identical to per-request execution)
+    pub coalescible: bool,
 }
 
 pub struct Router {
@@ -136,29 +140,38 @@ impl Router {
                     variant: req.variant.clone(),
                     packable,
                     native: false,
+                    coalescible: false,
                 })
             }
             Err(no_artifact) => {
                 // native fallback: eligibility is decided by the same
                 // classifier Registry::resolve uses, then the inputs must
                 // pass the kernel's cheap shape checks
-                if let Err(e) = crate::runtime::native_fallback_kind(&req.kernel, &req.variant)
+                let kind = match crate::runtime::native_fallback_kind(&req.kernel, &req.variant)
                 {
-                    bail!(
+                    Ok(kind) => kind,
+                    Err(e) => bail!(
                         "kernel {}.{}: no AOT artifact ({no_artifact:#}); {e:#}",
                         req.kernel,
                         req.variant
-                    );
-                }
+                    ),
+                };
                 if let Some(kernel) = crate::exec::lookup(&req.kernel) {
                     kernel.check(&req.inputs)?;
                 }
                 // (a ref-only kernel with no tile program validates at run)
+                // coalescing's bit-identity contract is proven against the
+                // *tile programs*, so only routes that will resolve to the
+                // native backend coalesce — a `ref`-variant route executes
+                // through the reference oracle and stays per-request
+                let coalescible = kind == crate::runtime::BackendKind::Native
+                    && crate::exec::lookup(&req.kernel).map(|k| k.coalesce).unwrap_or(false);
                 Ok(RouteKey {
                     kernel: req.kernel.clone(),
                     variant: req.variant.clone(),
                     packable: false,
                     native: true,
+                    coalescible,
                 })
             }
         }

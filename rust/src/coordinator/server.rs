@@ -1,12 +1,15 @@
 //! The coordinator event loop: bounded injector queue, per-route pending
-//! queues, a worker-thread pool draining them with slot packing, and
-//! graceful shutdown.  (The PJRT execute call is blocking, so OS threads —
-//! not an async reactor — are the right concurrency primitive here.)
+//! queues, a worker-thread pool draining them with slot packing and native
+//! coalescing, and graceful shutdown.  (The PJRT execute call is blocking,
+//! so OS threads — not an async reactor — are the right concurrency
+//! primitive here.)
 //!
 //! The `xla` crate's handles are `Rc`-based (not `Send`), so executables
 //! cannot be shared across threads: **each worker owns its own PJRT client
-//! and executable cache**, built lazily from the shared manifest.  This is
-//! also what a multi-device deployment looks like (one client per device).
+//! and executable cache**, built lazily from the shared manifest.  The
+//! native **plan cache is shared** across all workers (compiled programs
+//! are `Send + Sync`): a shape compiled by any worker is a cache hit for
+//! every other, and the hit/miss counters surface in [`Coordinator::metrics`].
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -14,24 +17,69 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::batcher::Packer;
+use super::batcher::{Coalescer, Packer};
 use super::metrics::Metrics;
 use super::router::{Request, Response, RouteKey, Router};
-use crate::runtime::{Backend, Manifest, Registry};
+use crate::exec::{pool, PlanCache};
+use crate::runtime::{Backend, HostTensor, Manifest, Registry};
 
+#[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub workers: usize,
     /// injector queue capacity; submits beyond this are rejected (backpressure)
     pub queue_capacity: usize,
-    /// max requests fused into one slot-packed execution
+    /// max requests fused into one slot-packed execution (artifact routes)
     pub max_fanin: usize,
+    /// max same-shape requests stacked into one native launch
+    pub coalesce_fanin: usize,
+    /// compiled plans kept in the shared cache (LRU beyond this)
+    pub plan_cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, queue_capacity: 1024, max_fanin: 16 }
+        CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            max_fanin: 16,
+            coalesce_fanin: 16,
+            plan_cache_capacity: 256,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Apply environment overrides: `NT_COALESCE_FANIN`,
+    /// `NT_PLAN_CACHE_CAP` (both validated — garbage is a clean error,
+    /// not a silent default).  `NT_POOL_THREADS` is read by the shared
+    /// pool itself; [`Coordinator::start`] validates it too.
+    pub fn from_env(mut self) -> Result<CoordinatorConfig> {
+        if let Some(v) = pool::parse_env_usize("NT_COALESCE_FANIN")? {
+            self.coalesce_fanin = v;
+        }
+        if let Some(v) = pool::parse_env_usize("NT_PLAN_CACHE_CAP")? {
+            self.plan_cache_capacity = v;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Startup validation: every knob must be a positive integer.
+    pub fn validate(&self) -> Result<()> {
+        for (name, value) in [
+            ("workers", self.workers),
+            ("queue_capacity", self.queue_capacity),
+            ("max_fanin", self.max_fanin),
+            ("coalesce_fanin", self.coalesce_fanin),
+            ("plan_cache_capacity", self.plan_cache_capacity),
+        ] {
+            if value == 0 {
+                bail!("coordinator config: {name} must be >= 1, got 0");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -53,11 +101,19 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     router: Arc<Router>,
     config: CoordinatorConfig,
+    plan_cache: Arc<PlanCache>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    pub fn start(manifest: Arc<Manifest>, config: CoordinatorConfig) -> Coordinator {
+    /// Validate the config (and the pool's env knobs) and start the
+    /// worker threads.  Config errors surface here, before any thread
+    /// spawns or requests are accepted.
+    pub fn start(manifest: Arc<Manifest>, config: CoordinatorConfig) -> Result<Coordinator> {
+        config.validate()?;
+        // a malformed NT_POOL_THREADS should fail startup, not silently
+        // fall back when the pool is first touched mid-request
+        pool::configured_threads()?;
         let shared = Arc::new(Shared {
             queues: Mutex::new(State {
                 order: VecDeque::new(),
@@ -69,31 +125,35 @@ impl Coordinator {
             metrics: Metrics::new(),
         });
         let router = Arc::new(Router::new(manifest.clone()));
+        let plan_cache = Arc::new(PlanCache::new(config.plan_cache_capacity));
         let mut workers = Vec::new();
         let worker_count = config.workers.max(1);
         for worker_id in 0..worker_count {
             let shared = shared.clone();
             let manifest = manifest.clone();
-            let max_fanin = config.max_fanin;
+            let plan_cache = plan_cache.clone();
+            let (max_fanin, coalesce_fanin) = (config.max_fanin, config.coalesce_fanin);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("nt-worker-{worker_id}"))
                     .spawn(move || {
-                        // per-worker backend cache; PJRT client when one is
-                        // available, native-only otherwise.  Native grid
-                        // executions share the machine with the other
-                        // workers, so divide the cores among them.
+                        // per-worker backend cache (PJRT handles are not
+                        // Send) over the *shared* plan cache.  Native grid
+                        // launches all share the persistent pool; the
+                        // per-worker budget divides it so concurrent
+                        // workers don't each fan out the whole machine.
                         let cores = std::thread::available_parallelism()
                             .map(|n| n.get())
                             .unwrap_or(1);
                         let registry = Registry::auto(manifest)
-                            .with_native_threads((cores / worker_count).max(1));
-                        worker_loop(shared, registry, max_fanin)
+                            .with_native_threads((cores / worker_count).max(1))
+                            .with_plan_cache(plan_cache);
+                        worker_loop(shared, registry, max_fanin, coalesce_fanin)
                     })
                     .expect("spawn worker"),
             );
         }
-        Coordinator { shared, router, config, workers }
+        Ok(Coordinator { shared, router, config, plan_cache, workers })
     }
 
     /// Submit a request; the response arrives on the receiver.
@@ -136,8 +196,14 @@ impl Coordinator {
         Ok(rx)
     }
 
+    /// Serving metrics, including the shared plan cache's hit/miss
+    /// counters (cache-hit rate is how you observe that repeat shapes do
+    /// zero specialization work).
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut snapshot = self.shared.metrics.snapshot();
+        snapshot.plan_hits = self.plan_cache.hits();
+        snapshot.plan_misses = self.plan_cache.misses();
+        snapshot
     }
 
     pub fn shutdown(mut self) {
@@ -152,7 +218,7 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, registry: Registry, max_fanin: usize) {
+fn worker_loop(shared: Arc<Shared>, registry: Registry, max_fanin: usize, coalesce_fanin: usize) {
     loop {
         // take a batch of requests for one route
         let (route, batch) = {
@@ -160,7 +226,7 @@ fn worker_loop(shared: Arc<Shared>, registry: Registry, max_fanin: usize) {
             loop {
                 if let Some(route) = state.order.pop_front() {
                     let queue = state.pending.get_mut(&route).expect("queued route");
-                    let batch = drain_batch(queue, &route, &registry, max_fanin);
+                    let batch = drain_batch(queue, &route, &registry, max_fanin, coalesce_fanin);
                     let remaining = !queue.is_empty();
                     if !remaining {
                         state.pending.remove(&route);
@@ -180,26 +246,50 @@ fn worker_loop(shared: Arc<Shared>, registry: Registry, max_fanin: usize) {
     }
 }
 
-/// Pull up to one execution's worth of requests off a route queue.
+/// Pull up to one execution's worth of requests off a route queue:
+/// slot-packing fit for packable artifact routes, a consecutive
+/// same-shape run for coalescible native routes, a single request
+/// otherwise.
 fn drain_batch(
     queue: &mut VecDeque<Request>,
     route: &RouteKey,
     registry: &Registry,
     max_fanin: usize,
+    coalesce_fanin: usize,
 ) -> Vec<Request> {
-    if !route.packable {
-        return queue.pop_front().into_iter().collect();
+    if route.packable {
+        let slot = registry
+            .manifest()
+            .kernel(&route.kernel, &route.variant)
+            .map(|a| a.args[0].shape[0])
+            .unwrap_or(0);
+        let packer = Packer::new(slot, max_fanin);
+        // plan() takes at most max_fanin requests, so don't walk a deep
+        // backlog under the shared queues lock
+        let lengths: Vec<usize> =
+            queue.iter().take(max_fanin).map(|r| r.inputs[0].len()).collect();
+        let taken = match packer.plan(&lengths) {
+            Ok((taken, _)) => taken.min(queue.len()).max(1),
+            // oversized head (admission bug): take it alone so
+            // execute_batch fails it with the packer's clean error
+            Err(_) => 1,
+        };
+        return queue.drain(..taken).collect();
     }
-    let slot = registry
-        .manifest()
-        .kernel(&route.kernel, &route.variant)
-        .map(|a| a.args[0].shape[0])
-        .unwrap_or(0);
-    let packer = Packer::new(slot, max_fanin);
-    let lengths: Vec<usize> = queue.iter().map(|r| r.inputs[0].len()).collect();
-    let (taken, _) = packer.plan(&lengths);
-    let taken = taken.max(1).min(queue.len()); // oversized head: fail it downstream
-    queue.drain(..taken).collect()
+    if route.coalescible && coalesce_fanin > 1 {
+        let coalescer = Coalescer::new(coalesce_fanin);
+        // only the first fan-in's worth of shapes can matter, so don't
+        // materialize shape sets for a deep backlog (this runs under the
+        // shared queues lock)
+        let shape_sets: Vec<Vec<&[usize]>> = queue
+            .iter()
+            .take(coalesce_fanin)
+            .map(|r| r.inputs.iter().map(|t| t.shape.as_slice()).collect())
+            .collect();
+        let taken = coalescer.plan(&shape_sets).min(queue.len()).max(1);
+        return queue.drain(..taken).collect();
+    }
+    queue.pop_front().into_iter().collect()
 }
 
 fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: Vec<Request>) {
@@ -224,7 +314,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
         .collect();
 
     // slot dimension for packable (artifact) routes; native routes are
-    // shape-polymorphic and never packed
+    // shape-polymorphic and coalesced instead of packed
     let slot = if route.packable {
         registry
             .manifest()
@@ -236,29 +326,37 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
     };
 
     let t0 = Instant::now();
-    let result = if route.packable && (batch.len() > 1 || batch[0].inputs[0].len() != slot) {
+    let coalesced = !route.packable && route.coalescible && batch.len() > 1;
+    let result: Result<Vec<Vec<HostTensor>>> = if route.packable
+        && (batch.len() > 1 || batch[0].inputs[0].len() != slot)
+    {
         // slot-packed execution
         let packer = Packer::new(slot, batch.len());
         let lengths: Vec<usize> = batch.iter().map(|r| r.inputs[0].len()).collect();
-        let (taken, plan) = packer.plan(&lengths);
-        if taken != batch.len() {
-            for req in batch {
-                let _ = req
-                    .reply
-                    .send(Err(anyhow!("request does not fit the {slot}-element slot")));
+        match packer.plan(&lengths) {
+            Ok((taken, plan)) if taken == batch.len() => {
+                let per_request: Vec<Vec<&HostTensor>> =
+                    batch.iter().map(|r| r.inputs.iter().collect()).collect();
+                let packed = packer.pack(&plan, &per_request);
+                backend.run(&packed).map(|outs| {
+                    packer
+                        .unpack(&plan, &outs[0])
+                        .into_iter()
+                        .map(|t| vec![t])
+                        .collect::<Vec<_>>()
+                })
             }
-            return;
+            Ok(_) => Err(anyhow!("batch does not fit the {slot}-element slot")),
+            Err(e) => Err(e),
         }
-        let per_request: Vec<Vec<&crate::runtime::HostTensor>> =
+    } else if coalesced {
+        // coalesced native execution: one stacked grid launch through the
+        // plan cache, split back per request
+        let per_request: Vec<Vec<&HostTensor>> =
             batch.iter().map(|r| r.inputs.iter().collect()).collect();
-        let packed = packer.pack(&plan, &per_request);
-        backend.run(&packed).map(|outs| {
-            packer
-                .unpack(&plan, &outs[0])
-                .into_iter()
-                .map(|t| vec![t])
-                .collect::<Vec<_>>()
-        })
+        Coalescer::stack(&per_request)
+            .and_then(|stacked| backend.run(&stacked))
+            .and_then(|outs| Coalescer::unstack(batch.len(), outs))
     } else {
         backend.run(&batch[0].inputs).map(|outs| vec![outs])
     };
@@ -271,6 +369,9 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
             .metrics
             .batched
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    }
+    if coalesced && result.is_ok() {
+        shared.metrics.coalesced.fetch_add(batch.len() as u64, Ordering::Relaxed);
     }
 
     match result {
@@ -296,5 +397,108 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                 let _ = req.reply.send(Err(anyhow!("{msg}")));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    fn native_request(kernel: &str, inputs: Vec<HostTensor>) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // leak the receiver so sends do not error mid-test
+        std::mem::forget(_rx);
+        Request {
+            kernel: kernel.to_string(),
+            variant: "nt".to_string(),
+            inputs,
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn native_route(kernel: &str, coalescible: bool) -> RouteKey {
+        RouteKey {
+            kernel: kernel.to_string(),
+            variant: "nt".to_string(),
+            packable: false,
+            native: true,
+            coalescible,
+        }
+    }
+
+    #[test]
+    fn drain_coalesces_consecutive_same_shape_requests() {
+        let registry = Registry::native_only(Arc::new(Manifest::builtin()));
+        let mut rng = SplitMix64::new(7);
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        for _ in 0..3 {
+            queue.push_back(native_request(
+                "softmax",
+                vec![HostTensor::randn(vec![4, 16], &mut rng)],
+            ));
+        }
+        queue.push_back(native_request(
+            "softmax",
+            vec![HostTensor::randn(vec![5, 16], &mut rng)],
+        ));
+        let route = native_route("softmax", true);
+        let batch = drain_batch(&mut queue, &route, &registry, 16, 16);
+        assert_eq!(batch.len(), 3, "three same-shape heads must coalesce");
+        assert_eq!(queue.len(), 1, "the different-shape tail stays queued");
+        // next drain: the [5, 16] request runs alone
+        let batch = drain_batch(&mut queue, &route, &registry, 16, 16);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_respects_coalesce_fanin() {
+        let registry = Registry::native_only(Arc::new(Manifest::builtin()));
+        let mut rng = SplitMix64::new(8);
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        for _ in 0..5 {
+            queue.push_back(native_request(
+                "silu",
+                vec![HostTensor::randn(vec![64], &mut rng)],
+            ));
+        }
+        let route = native_route("silu", true);
+        let batch = drain_batch(&mut queue, &route, &registry, 16, 2);
+        assert_eq!(batch.len(), 2);
+        // fan-in 1 disables coalescing entirely
+        let batch = drain_batch(&mut queue, &route, &registry, 16, 1);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_never_coalesces_non_coalescible_routes() {
+        let registry = Registry::native_only(Arc::new(Manifest::builtin()));
+        let mut rng = SplitMix64::new(9);
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        for _ in 0..3 {
+            let a = HostTensor::randn(vec![8, 8], &mut rng);
+            let b = HostTensor::randn(vec![8, 8], &mut rng);
+            queue.push_back(native_request("mm", vec![a, b]));
+        }
+        let route = native_route("mm", false);
+        let batch = drain_batch(&mut queue, &route, &registry, 16, 16);
+        assert_eq!(batch.len(), 1, "mm must never stack");
+    }
+
+    #[test]
+    fn config_validation_rejects_zeroes() {
+        for bad in [
+            CoordinatorConfig { workers: 0, ..Default::default() },
+            CoordinatorConfig { queue_capacity: 0, ..Default::default() },
+            CoordinatorConfig { max_fanin: 0, ..Default::default() },
+            CoordinatorConfig { coalesce_fanin: 0, ..Default::default() },
+            CoordinatorConfig { plan_cache_capacity: 0, ..Default::default() },
+        ] {
+            let err = bad.validate().unwrap_err();
+            assert!(format!("{err:#}").contains("must be >= 1"), "{err:#}");
+            assert!(Coordinator::start(Arc::new(Manifest::builtin()), bad).is_err());
+        }
+        assert!(CoordinatorConfig::default().validate().is_ok());
     }
 }

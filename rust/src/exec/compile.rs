@@ -1,0 +1,320 @@
+//! The compile stage of the native backend's **compile → cache → execute**
+//! pipeline.
+//!
+//! The paper's code generator compiles an arrangement once and launches it
+//! many times; the original native backend instead re-specialized the
+//! arrangement, re-lowered every `ParamView` (affine probing included) and
+//! re-derived the tiling on **every** request.  This module makes the
+//! compiled artifact explicit:
+//!
+//! * [`compile`] turns `(kernel, input shapes)` into a
+//!   [`CompiledProgram`] — the specialized arrangement (grid + loop shape
+//!   + tiling decisions), the lowered and probe-verified view templates,
+//!   and the tile program — everything that depends only on *shapes*;
+//! * [`CompiledProgram::execute`] runs it over concrete tensors, doing only
+//!   cheap per-request validation (arity, dtype, exact shape match);
+//! * [`PlanCache`] memoizes compiled programs behind a concurrent map
+//!   keyed by `(kernel, variant, shape signature)` with LRU eviction and
+//!   hit/miss counters — the counters are what the coordinator surfaces
+//!   in its metrics, and what the tests use to prove a second same-shape
+//!   request does zero specialization work.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::native::{NativeKernel, Specialization};
+use super::scheduler::GridScheduler;
+use crate::runtime::HostTensor;
+
+/// Cache key: which kernel/variant, specialized for which input shapes.
+/// Kernel names are `&'static` and the known serving variants intern to
+/// statics, so a warm lookup only allocates the shape signature.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub kernel: &'static str,
+    pub variant: Cow<'static, str>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+/// Map a variant onto its static spelling when it is one of the known
+/// native-served variants (the only ones the registry creates backends
+/// for); anything else keeps an owned copy for key fidelity.
+fn intern_variant(variant: &str) -> Cow<'static, str> {
+    match crate::runtime::NATIVE_VARIANTS.iter().copied().find(|v| *v == variant) {
+        Some(v) => Cow::Borrowed(v),
+        None => Cow::Owned(variant.to_string()),
+    }
+}
+
+/// A fully compiled, reusable launch: everything the execute stage needs
+/// that depends only on the input shapes.  (The variant a plan was
+/// compiled under lives in its [`PlanKey`], not here — execution is
+/// identical across the native-served variants.)
+pub struct CompiledProgram {
+    pub kernel: &'static NativeKernel,
+    /// the input shapes this program was compiled for
+    pub shapes: Vec<Vec<usize>>,
+    /// specialized views + grid/loop geometry + output shapes
+    pub spec: Specialization,
+}
+
+impl CompiledProgram {
+    /// Execute over concrete tensors.  Per-request work is deliberately
+    /// minimal: validate that the inputs match the compiled signature,
+    /// then launch the grid — no specialization, no lowering.
+    pub fn execute(
+        &self,
+        inputs: &[HostTensor],
+        scheduler: &GridScheduler,
+    ) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.shapes.len() {
+            bail!(
+                "compiled {} expects {} inputs, got {}",
+                self.kernel.name,
+                self.shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.shapes).enumerate() {
+            if &t.shape != s {
+                bail!(
+                    "input {i} shape {:?} does not match the compiled shape {s:?} for {}",
+                    t.shape,
+                    self.kernel.name
+                );
+            }
+            t.as_f32().map_err(|_| {
+                anyhow::anyhow!("compiled {}: input {i} must be f32", self.kernel.name)
+            })?;
+        }
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        scheduler.run(&self.kernel.program, &self.spec.views, &refs, &self.spec.output_shapes)
+    }
+}
+
+/// Compile a kernel for concrete input shapes (the expensive stage:
+/// arrangement specialization + affine lowering + probe verification).
+pub fn compile(kernel: &'static NativeKernel, shapes: &[&[usize]]) -> Result<CompiledProgram> {
+    let spec = kernel.specialize_shapes(shapes)?;
+    Ok(CompiledProgram {
+        kernel,
+        shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        spec,
+    })
+}
+
+struct Entry {
+    program: Arc<CompiledProgram>,
+    /// logical timestamp of the last hit (LRU victim = smallest)
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<PlanKey, Entry>,
+    /// monotonic logical clock for `last_used`
+    tick: u64,
+}
+
+/// Concurrent memoization of compiled programs.  One instance is shared
+/// by every coordinator worker (the workers' registries are per-thread,
+/// the plan cache is not), so a shape seen by any worker is warm for all.
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Default number of cached plans (shape buckets x kernels).
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch (compiling on miss) the program for `(kernel, variant,
+    /// shapes)`.  Compilation happens under the cache lock, so concurrent
+    /// `prepare` calls for the same key specialize exactly once and every
+    /// caller receives a clone of the same `Arc`.  The tradeoff is
+    /// deliberate: a compile is tens of microseconds and — by this
+    /// cache's whole purpose — rare, so a hit briefly queueing behind an
+    /// in-flight compile is bounded, while the lock keeps the
+    /// exactly-once guarantee free of per-key in-flight bookkeeping.
+    /// Hits themselves are O(1) (hash lookup + timestamp bump).
+    pub fn prepare(
+        &self,
+        kernel: &'static NativeKernel,
+        variant: &str,
+        shapes: &[&[usize]],
+    ) -> Result<Arc<CompiledProgram>> {
+        let key = PlanKey {
+            kernel: kernel.name,
+            variant: intern_variant(variant),
+            shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let now = inner.tick;
+        if let Some(entry) = inner.map.get_mut(&key) {
+            entry.last_used = now;
+            let compiled = entry.program.clone();
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(compiled);
+        }
+        // miss: compile while holding the lock (errors are not cached)
+        let compiled = Arc::new(compile(kernel, shapes)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        inner.map.insert(key, Entry { program: compiled.clone(), last_used: now });
+        // evict the least-recently-used entries (O(n) scan, but only on
+        // insert past capacity — never on the hit path)
+        while inner.map.len() > self.capacity {
+            let Some(cold) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            inner.map.remove(&cold);
+        }
+        Ok(compiled)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::lookup;
+    use crate::prng::SplitMix64;
+
+    fn mm_shapes(m: usize, k: usize, n: usize) -> Vec<Vec<usize>> {
+        vec![vec![m, k], vec![k, n]]
+    }
+
+    fn refs(shapes: &[Vec<usize>]) -> Vec<&[usize]> {
+        shapes.iter().map(|s| s.as_slice()).collect()
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let cache = PlanCache::new(8);
+        let mm = lookup("mm").unwrap();
+        let shapes = mm_shapes(40, 30, 20);
+        let first = cache.prepare(mm, "nt", &refs(&shapes)).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let second = cache.prepare(mm, "nt", &refs(&shapes)).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&first, &second), "warm prepare must return the same program");
+    }
+
+    #[test]
+    fn shape_signature_collisions_get_distinct_plans() {
+        // same kernel, same rank, different dims — the signatures must
+        // not collide into one plan
+        let cache = PlanCache::new(8);
+        let mm = lookup("mm").unwrap();
+        let a = cache.prepare(mm, "nt", &refs(&mm_shapes(64, 64, 64))).unwrap();
+        let b = cache.prepare(mm, "nt", &refs(&mm_shapes(64, 64, 32))).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.spec.output_shapes, vec![vec![64, 64]]);
+        assert_eq!(b.spec.output_shapes, vec![vec![64, 32]]);
+        assert_eq!(cache.misses(), 2);
+        // variants key separately too
+        cache.prepare(mm, "baseline", &refs(&mm_shapes(64, 64, 64))).unwrap();
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn concurrent_prepare_returns_one_arc() {
+        let cache = Arc::new(PlanCache::new(8));
+        let mm = lookup("mm").unwrap();
+        let shapes = mm_shapes(48, 48, 48);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (cache, shapes) = (cache.clone(), shapes.clone());
+            handles.push(std::thread::spawn(move || {
+                cache.prepare(mm, "nt", &refs(&shapes)).unwrap()
+            }));
+        }
+        let plans: Vec<Arc<CompiledProgram>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(plans.iter().all(|p| Arc::ptr_eq(p, &plans[0])));
+        assert_eq!(cache.misses(), 1, "exactly one compilation across 8 threads");
+        assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let cache = PlanCache::new(2);
+        let mm = lookup("mm").unwrap();
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
+        // touch the first so the second is the LRU victim
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 24))).unwrap();
+        assert_eq!(cache.len(), 2);
+        let miss_before = cache.misses();
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        assert_eq!(cache.misses(), miss_before, "touched entry must have survived");
+        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
+        assert_eq!(cache.misses(), miss_before + 1, "LRU victim must recompile");
+    }
+
+    #[test]
+    fn compile_errors_are_not_cached() {
+        let cache = PlanCache::new(8);
+        let mm = lookup("mm").unwrap();
+        let bad = vec![vec![4usize, 3], vec![5usize, 4]]; // inner-dim mismatch
+        assert!(cache.prepare(mm, "nt", &refs(&bad)).is_err());
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 0, 0));
+    }
+
+    #[test]
+    fn compiled_program_rejects_mismatched_inputs() {
+        let mm = lookup("mm").unwrap();
+        let shapes = mm_shapes(16, 8, 12);
+        let compiled = compile(mm, &refs(&shapes)).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let good_a = HostTensor::randn(vec![16, 8], &mut rng);
+        let good_b = HostTensor::randn(vec![8, 12], &mut rng);
+        let sched = GridScheduler::serial();
+        assert!(compiled.execute(&[good_a.clone(), good_b.clone()], &sched).is_ok());
+        // wrong arity
+        assert!(compiled.execute(&[good_a.clone()], &sched).is_err());
+        // wrong shape
+        let wrong = HostTensor::randn(vec![16, 9], &mut rng);
+        let err = compiled.execute(&[wrong, good_b], &sched).unwrap_err();
+        assert!(format!("{err:#}").contains("compiled shape"), "{err:#}");
+    }
+}

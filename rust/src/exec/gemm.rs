@@ -147,7 +147,8 @@ fn gemm_path(
 }
 
 /// `C += A x B` with `C` exactly `m * n` contiguous row-major elements,
-/// rows split across up to `threads` scoped worker threads.  This is the
+/// rows split into up to `threads` chunks dispatched to the persistent
+/// worker pool (`super::pool` — no per-call thread spawns).  This is the
 /// intra-tile parallelism path the grid scheduler enables when the grid
 /// is too small to occupy the pool (a big single-tile GEMM).  Results are
 /// bit-identical for every thread count: the small-vs-blocked choice is
@@ -177,22 +178,20 @@ pub fn gemm_rows_parallel(
         return;
     }
     let rows_per = m.div_ceil(t);
-    std::thread::scope(|scope| {
-        let mut rest = c;
-        let mut row0 = 0usize;
-        while row0 < m {
-            let rows = rows_per.min(m - row0);
-            let (head, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            let a_base = at(a_off, row0 as isize * a_rs);
-            scope.spawn(move || {
-                gemm_path(
-                    small, rows, n, k, a, a_base, a_rs, a_cs, b, b_off, b_rs, b_cs, head, 0, n,
-                );
-            });
-            row0 += rows;
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(t);
+    let mut rest = c;
+    let mut row0 = 0usize;
+    while row0 < m {
+        let rows = rows_per.min(m - row0);
+        let (head, tail) = rest.split_at_mut(rows * n);
+        rest = tail;
+        let a_base = at(a_off, row0 as isize * a_rs);
+        tasks.push(Box::new(move || {
+            gemm_path(small, rows, n, k, a, a_base, a_rs, a_cs, b, b_off, b_rs, b_cs, head, 0, n);
+        }));
+        row0 += rows;
+    }
+    super::pool::global().run_scoped(tasks);
 }
 
 /// Strided i-k-j loop for shapes below the packing threshold.  The inner

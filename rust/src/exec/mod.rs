@@ -1,9 +1,27 @@
-//! Native tile-execution backend: run arrangements without AOT artifacts.
+//! Native tile-execution backend: a **compile → cache → execute** pipeline
+//! that runs arrangements without AOT artifacts.
 //!
 //! The paper separates *arrangement* (tiling geometry, §3.2) from
-//! *application* (per-tile compute, §3.3).  The rest of this crate mirrors
-//! the arrangement algebra symbolically; this subsystem closes the loop by
-//! actually **executing** applications over arranged tiles:
+//! *application* (per-tile compute, §3.3), and its code generator compiles
+//! an arrangement **once** and launches it many times.  This subsystem
+//! mirrors that lifecycle explicitly:
+//!
+//! 1. **compile** ([`compile`]) — specialize a kernel's catalog
+//!    arrangement for concrete input shapes: evaluate level sizes, lower
+//!    every index expression to affine gather/scatter strides (verified at
+//!    probe points), and fix the grid/loop/tiling decisions.  The result
+//!    is a [`CompiledProgram`]: the specialized views, the tile program,
+//!    and the launch geometry — everything that depends only on shapes.
+//! 2. **cache** ([`PlanCache`]) — memoize compiled programs under
+//!    `(kernel, variant, shape signature)` with LRU eviction and hit/miss
+//!    counters.  A second same-shape request does *zero* specialization or
+//!    lowering work; the counters prove it and the coordinator surfaces
+//!    them in its serving metrics.
+//! 3. **execute** ([`CompiledProgram::execute`]) — cheap per-request
+//!    validation (arity, dtype, exact shape), then one grid launch over
+//!    the persistent worker pool.
+//!
+//! The moving parts:
 //!
 //! * [`tile`] — dense f32 tiles with the `ntl` operation set (dot, exp,
 //!   max/sum reductions, broadcastable element-wise arithmetic);
@@ -11,35 +29,48 @@
 //!   `Tile::dot` and the fused `DotAcc` instruction: packed A/B panels,
 //!   an MR x NR register tile, strided-window inputs, and optional
 //!   intra-tile row parallelism;
-//! * [`ir`] — the tile-program IR (load/store/zeros/loop + compute ops)
-//!   and its interpreter: the serial per-program semantics of the paper;
+//! * [`ir`] — the tile-program IR (load/store/zeros/dot/exp/max/sum/
+//!   broadcast/elementwise + one loop construct) and its interpreter: the
+//!   serial per-program semantics of the paper;
 //! * [`view`] — strided [`view::ParamView`]s: an arrangement's index
-//!   expressions lowered (and verified) to affine gather/scatter over
-//!   [`crate::runtime::HostTensor`] buffers, with pad-value edge handling;
+//!   expressions lowered (and probe-verified) to affine gather/scatter
+//!   over [`crate::runtime::HostTensor`] buffers, with pad-value edges;
+//! * [`native`] — the kernel catalog (add, silu, gelu, softmax, rms_norm,
+//!   layer_norm, mm, bmm, addmm): shape-only arrangement specializers +
+//!   tile programs, plus the per-kernel coalescing eligibility flag;
+//! * [`compile`] — the compile stage and the concurrent [`PlanCache`];
+//! * [`pool`] — the **persistent worker pool** every parallel execution
+//!   shares: grid launches and `DotAcc`'s intra-tile row split dispatch
+//!   borrowed jobs to long-lived threads instead of spawning scoped
+//!   threads per run;
 //! * [`scheduler`] — the grid scheduler: one program instance per
-//!   outermost-level cell, auto-parallelized over a std-only worker pool
-//!   exactly as the code generator would launch the grid;
-//! * [`native`] — the kernel catalog (add, silu, gelu, softmax,
-//!   rms_norm, layer_norm, mm, bmm): arrangement specializers + tile
-//!   programs, shape-polymorphic per request;
+//!   outermost-level cell, chunked across the pool exactly as the code
+//!   generator would launch the grid;
 //! * [`reference`] — straightforward oracle implementations the tile
 //!   programs are cross-checked against in `cargo test`.
 //!
 //! The coordinator reaches this subsystem through the
-//! [`crate::runtime::Backend`] trait: when a (kernel, variant) has no AOT
-//! artifact — or no PJRT runtime exists at all, as in the offline build —
-//! the registry falls back to native execution transparently.
+//! [`crate::runtime::Backend`] trait's `prepare`/`execute` split: the
+//! router resolves a request to a backend, `prepare(shapes)` returns the
+//! cached [`CompiledProgram`] handle (hit or miss), and `execute` runs it.
+//! Same-shape requests for row-independent kernels are additionally
+//! *coalesced* by the batcher — stacked along dim 0 into one grid launch
+//! and split back on reply, bit-identically to per-request execution.
 
+pub mod compile;
 pub mod gemm;
 pub mod ir;
 pub mod native;
+pub mod pool;
 pub mod reference;
 pub mod scheduler;
 pub mod tile;
 pub mod view;
 
+pub use compile::{compile, CompiledProgram, PlanCache, PlanKey};
 pub use ir::{Instr, TileProgram};
 pub use native::{kernels, lookup, NativeKernel, Specialization};
+pub use pool::WorkerPool;
 pub use scheduler::GridScheduler;
 pub use tile::{BinOp, ReduceOp, Tile, UnaryOp};
 pub use view::ParamView;
@@ -48,7 +79,9 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::HostTensor;
 
-/// Convenience entry point: execute a native kernel by name.
+/// Convenience entry point: execute a native kernel by name
+/// (compile-and-execute, uncached — serving paths go through
+/// [`PlanCache`] via the registry's backends instead).
 pub fn run_native(
     name: &str,
     inputs: &[HostTensor],
@@ -65,6 +98,11 @@ mod tests {
     use crate::prng::SplitMix64;
 
     const TOL: f32 = 1e-4;
+
+    /// Serializes the tests that flip the process-global naive-dot
+    /// override — without it the two could interleave and observe each
+    /// other's flag state mid-assertion.
+    static NAIVE_FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     fn randn(shape: &[usize], rng: &mut SplitMix64) -> HostTensor {
         HostTensor::randn(shape.to_vec(), rng)
@@ -150,6 +188,38 @@ mod tests {
     }
 
     #[test]
+    fn native_addmm_matches_reference_for_all_bias_ranks() {
+        // the broadcast epilogue across every admitted bias shape: [n],
+        // [1, n] (row broadcast) and [m, n] (full), on ragged tile edges
+        let mut rng = SplitMix64::new(27);
+        for (m, k, n) in [(70, 50, 90), (3, 7, 5), (33, 127, 31)] {
+            let a = randn(&[m, k], &mut rng);
+            let b = randn(&[k, n], &mut rng);
+            for bias_shape in [vec![n], vec![1, n], vec![m, n]] {
+                let bias = randn(&bias_shape, &mut rng);
+                check("addmm", &[bias, a.clone(), b.clone()]);
+            }
+        }
+    }
+
+    #[test]
+    fn native_addmm_rejects_non_broadcastable_bias() {
+        let mut rng = SplitMix64::new(28);
+        let a = randn(&[8, 4], &mut rng);
+        let b = randn(&[4, 6], &mut rng);
+        for bad in [vec![5usize], vec![8, 5], vec![2, 6], vec![1, 1, 6]] {
+            let bias = randn(&bad, &mut rng);
+            let err = run_native(
+                "addmm",
+                &[bias, a.clone(), b.clone()],
+                &GridScheduler::serial(),
+            )
+            .unwrap_err();
+            assert!(format!("{err:#}").contains("broadcast"), "{bad:?}: {err:#}");
+        }
+    }
+
+    #[test]
     fn native_mm_exact_tiles() {
         // block-aligned case: no padding path at all
         let mut rng = SplitMix64::new(17);
@@ -215,6 +285,7 @@ mod tests {
         // branch — both compute the same function, so a concurrent test
         // momentarily seeing the naive path stays correct
         use super::tile::{naive_dot_forced, set_naive_dot_forced};
+        let _guard = NAIVE_FLAG_LOCK.lock().unwrap();
         let mut rng = SplitMix64::new(24);
         let a = randn(&[70, 130], &mut rng);
         let b = randn(&[130, 90], &mut rng);
@@ -230,6 +301,68 @@ mod tests {
         assert_eq!(via_flag, t.dot_naive(&u).unwrap());
         let diff = forced.unwrap()[0].max_abs_diff(&blocked[0]).unwrap();
         assert!(diff <= 1e-3, "oracle (forced naive) vs blocked mm: max|diff| = {diff}");
+    }
+
+    #[test]
+    fn naive_dot_override_bypasses_blocked_gemm_through_cached_program() {
+        // the flag is an *execution-time* decision: a program compiled and
+        // cached while the blocked path was active must still take the
+        // naive oracle branch once the flag flips — bit-identically to a
+        // freshly specialized run under the same flag
+        use super::tile::set_naive_dot_forced;
+        let _guard = NAIVE_FLAG_LOCK.lock().unwrap();
+        let mut rng = SplitMix64::new(29);
+        let a = randn(&[70, 130], &mut rng);
+        let b = randn(&[130, 90], &mut rng);
+        let cache = PlanCache::new(4);
+        let mm = lookup("mm").unwrap();
+        let shapes: Vec<&[usize]> = [&a, &b].iter().map(|t| t.shape.as_slice()).collect();
+        let compiled = cache.prepare(mm, "nt", &shapes).unwrap();
+        let sched = GridScheduler::serial();
+        let blocked = compiled.execute(&[a.clone(), b.clone()], &sched).unwrap();
+        set_naive_dot_forced(true);
+        let via_cache = compiled.execute(&[a.clone(), b.clone()], &sched).unwrap();
+        let fresh = run_native("mm", &[a.clone(), b.clone()], &sched).unwrap();
+        set_naive_dot_forced(false);
+        assert_eq!(
+            via_cache[0], fresh[0],
+            "cached program under the flag must equal a fresh naive-path run bitwise"
+        );
+        let diff = via_cache[0].max_abs_diff(&blocked[0]).unwrap();
+        assert!(diff <= 1e-3, "naive vs blocked through one cached program: {diff}");
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.misses(), 1, "no recompilation happened around the flag flip");
+    }
+
+    #[test]
+    fn coalesced_execution_is_bit_identical_for_stackable_kernels() {
+        // the batcher's native coalescing contract: stacking same-shape
+        // requests along dim 0 and splitting the outputs back must equal
+        // per-request execution *bitwise* for every coalescible kernel
+        use crate::coordinator::Coalescer;
+        let mut rng = SplitMix64::new(30);
+        let sched = GridScheduler::pooled(4);
+        for kernel in kernels().iter().filter(|k| k.coalesce) {
+            let per_request: Vec<Vec<HostTensor>> = (0..3)
+                .map(|_| {
+                    crate::harness::golden::native_task_inputs(kernel.name, &mut rng).unwrap()
+                })
+                .collect();
+            let singles: Vec<Vec<HostTensor>> = per_request
+                .iter()
+                .map(|inputs| kernel.run(inputs, &sched).unwrap())
+                .collect();
+            let refs: Vec<Vec<&HostTensor>> =
+                per_request.iter().map(|inputs| inputs.iter().collect()).collect();
+            let stacked = Coalescer::stack(&refs).unwrap();
+            let outs = kernel.run(&stacked, &sched).unwrap();
+            let unstacked = Coalescer::unstack(3, outs).unwrap();
+            for (got, want) in unstacked.iter().zip(&singles) {
+                for (g, w) in got.iter().zip(want) {
+                    assert_eq!(g, w, "{}: coalesced != per-request (bitwise)", kernel.name);
+                }
+            }
+        }
     }
 
     #[test]

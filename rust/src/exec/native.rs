@@ -5,8 +5,12 @@
 //! paper Listings re-derived against the Rust tensor mirror) with a tile
 //! program mirroring the Python application function.  Unlike artifacts,
 //! native kernels are *shape-polymorphic*: specialization happens per
-//! request from the concrete input shapes, exactly as the DSL would
-//! re-specialize for a new shape bucket.
+//! shape bucket, exactly as the DSL would re-specialize for a new shape.
+//!
+//! Specializers are functions of **shapes only** — no tensor data — which
+//! is what lets `exec::compile` memoize the result in the plan cache:
+//! a [`Specialization`] computed for `[m, k] x [k, n]` serves every later
+//! request with those shapes, without re-lowering a single view.
 
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
@@ -40,40 +44,69 @@ pub struct NativeKernel {
     /// number of input (non-output) parameters
     pub arity: usize,
     pub program: TileProgram,
+    /// same-shape requests may be stacked along dim 0 into one launch
+    /// (element-wise / row-independent kernels only): the batcher's native
+    /// coalescing path consults this
+    pub coalesce: bool,
     /// cheap shape preconditions (no lowering) — what admission runs
-    shape_check: fn(&[HostTensor]) -> Result<()>,
-    specialize: fn(&[HostTensor]) -> Result<Specialization>,
+    shape_check: fn(&[&[usize]]) -> Result<()>,
+    specialize: fn(&[&[usize]]) -> Result<Specialization>,
 }
 
 impl NativeKernel {
-    /// Cheap admission-time validation: arity, dtype, rank / zero-length
-    /// dims, and the kernel's shape preconditions.  No affine lowering —
-    /// the router calls this per request; the expensive specialization
-    /// happens once, on the worker.
+    /// Shape-only admission checks: arity, rank / zero-length dims, and
+    /// the kernel's shape preconditions.  No affine lowering.
+    pub fn check_shapes(&self, shapes: &[&[usize]]) -> Result<()> {
+        if shapes.len() != self.arity {
+            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, shapes.len());
+        }
+        for (i, s) in shapes.iter().enumerate() {
+            if s.is_empty() {
+                bail!(
+                    "kernel {}: input {i} is rank-0 (scalar tensors are not tileable)",
+                    self.name
+                );
+            }
+            if s.iter().any(|&d| d == 0) {
+                bail!("kernel {}: input {i} has a zero-length dimension {s:?}", self.name);
+            }
+        }
+        (self.shape_check)(shapes)
+    }
+
+    /// Cheap admission-time validation over concrete tensors: the shape
+    /// checks plus dtype.  The router calls this per request; the
+    /// expensive specialization happens once per shape, in the compile
+    /// stage.
     pub fn check(&self, inputs: &[HostTensor]) -> Result<()> {
         if inputs.len() != self.arity {
             bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, inputs.len());
         }
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        self.check_shapes(&shapes)?;
         for (i, t) in inputs.iter().enumerate() {
-            if t.shape.is_empty() {
-                bail!("kernel {}: input {i} is rank-0 (scalar tensors are not tileable)", self.name);
-            }
-            if t.shape.iter().any(|&d| d == 0) {
-                bail!("kernel {}: input {i} has a zero-length dimension {:?}", self.name, t.shape);
-            }
             t.as_f32()
                 .map_err(|_| anyhow::anyhow!("kernel {}: input {i} must be f32", self.name))?;
         }
-        (self.shape_check)(inputs)
+        Ok(())
+    }
+
+    /// Validate shapes and compute the concrete launch for them — the
+    /// expensive stage `exec::compile` runs once per shape signature.
+    pub fn specialize_shapes(&self, shapes: &[&[usize]]) -> Result<Specialization> {
+        self.check_shapes(shapes)?;
+        (self.specialize)(shapes)
     }
 
     /// Validate inputs and compute the concrete launch for them.
     pub fn specialize(&self, inputs: &[HostTensor]) -> Result<Specialization> {
         self.check(inputs)?;
-        (self.specialize)(inputs)
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        (self.specialize)(&shapes)
     }
 
-    /// Execute natively under the given scheduler.
+    /// Compile-and-execute in one step (uncached — callers that serve
+    /// repeated traffic go through `exec::PlanCache` instead).
     pub fn run(&self, inputs: &[HostTensor], scheduler: &GridScheduler) -> Result<Vec<HostTensor>> {
         let spec = self.specialize(inputs)?;
         let refs: Vec<&HostTensor> = inputs.iter().collect();
@@ -154,105 +187,115 @@ fn build_spec(
 
 // -- per-kernel shape preconditions -------------------------------------------
 
-fn check_add(inputs: &[HostTensor]) -> Result<()> {
-    let (a, b) = (&inputs[0], &inputs[1]);
-    if a.shape.len() != 1 || a.shape != b.shape {
-        bail!("add expects two equal 1-D tensors, got {:?} and {:?}", a.shape, b.shape);
+fn check_add(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 1 || a != b {
+        bail!("add expects two equal 1-D tensors, got {a:?} and {b:?}");
     }
     Ok(())
 }
 
-fn check_1d(inputs: &[HostTensor]) -> Result<()> {
-    if inputs[0].shape.len() != 1 {
-        bail!("expected a 1-D tensor, got {:?}", inputs[0].shape);
+fn check_1d(shapes: &[&[usize]]) -> Result<()> {
+    if shapes[0].len() != 1 {
+        bail!("expected a 1-D tensor, got {:?}", shapes[0]);
     }
     Ok(())
 }
 
-fn check_2d(inputs: &[HostTensor]) -> Result<()> {
-    if inputs[0].shape.len() != 2 {
-        bail!("expected a 2-D tensor, got {:?}", inputs[0].shape);
+fn check_2d(shapes: &[&[usize]]) -> Result<()> {
+    if shapes[0].len() != 2 {
+        bail!("expected a 2-D tensor, got {:?}", shapes[0]);
     }
     Ok(())
 }
 
-fn check_mm(inputs: &[HostTensor]) -> Result<()> {
-    let (a, b) = (&inputs[0], &inputs[1]);
-    if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
-        bail!("mm expects [m,k] x [k,n], got {:?} and {:?}", a.shape, b.shape);
+fn check_mm(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+        bail!("mm expects [m,k] x [k,n], got {a:?} and {b:?}");
     }
     Ok(())
 }
 
-fn check_bmm(inputs: &[HostTensor]) -> Result<()> {
-    let (a, b) = (&inputs[0], &inputs[1]);
-    if a.shape.len() != 3
-        || b.shape.len() != 3
-        || a.shape[0] != b.shape[0]
-        || a.shape[2] != b.shape[1]
-    {
-        bail!("bmm expects [b,m,k] x [b,k,n], got {:?} and {:?}", a.shape, b.shape);
+fn check_bmm(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 3 || b.len() != 3 || a[0] != b[0] || a[2] != b[1] {
+        bail!("bmm expects [b,m,k] x [b,k,n], got {a:?} and {b:?}");
+    }
+    Ok(())
+}
+
+fn check_addmm(shapes: &[&[usize]]) -> Result<()> {
+    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
+    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+        bail!("addmm expects mat1 [m,k] x mat2 [k,n], got {a:?} and {b:?}");
+    }
+    let (m, n) = (a[0], b[1]);
+    let broadcastable = match bias.len() {
+        1 => bias[0] == n,
+        2 => (bias[0] == 1 || bias[0] == m) && bias[1] == n,
+        _ => false,
+    };
+    if !broadcastable {
+        bail!(
+            "addmm bias {bias:?} does not broadcast to the [{m}, {n}] output \
+             (expected [{n}], [1, {n}], or [{m}, {n}])"
+        );
     }
     Ok(())
 }
 
 // -- per-kernel specializers --------------------------------------------------
 
-fn spec_add(inputs: &[HostTensor]) -> Result<Specialization> {
-    check_add(inputs)?;
-    let a = &inputs[0];
-    let n = a.shape[0];
+fn spec_add(shapes: &[&[usize]]) -> Result<Specialization> {
+    check_add(shapes)?;
+    let a = shapes[0];
+    let n = a[0];
     let tensors = catalog::add()?;
     let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(n))]);
     for name in ["input", "other", "output"] {
-        bind_sizes(&mut bindings, name, &a.shape);
+        bind_sizes(&mut bindings, name, a);
     }
-    build_spec(
-        &tensors,
-        &bindings,
-        &[&a.shape, &a.shape, &a.shape],
-        &[false, false, true],
-        &[0.0, 0.0, 0.0],
-    )
+    build_spec(&tensors, &bindings, &[a, a, a], &[false, false, true], &[0.0, 0.0, 0.0])
 }
 
-fn spec_silu(inputs: &[HostTensor]) -> Result<Specialization> {
-    check_1d(inputs)?;
-    let a = &inputs[0];
+fn spec_silu(shapes: &[&[usize]]) -> Result<Specialization> {
+    check_1d(shapes)?;
+    let a = shapes[0];
     let tensors = catalog::elementwise_1d(&["input", "output"])?;
-    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(a.shape[0]))]);
-    bind_sizes(&mut bindings, "input", &a.shape);
-    bind_sizes(&mut bindings, "output", &a.shape);
-    build_spec(&tensors, &bindings, &[&a.shape, &a.shape], &[false, true], &[0.0, 0.0])
+    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(a[0]))]);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "output", a);
+    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[0.0, 0.0])
 }
 
 /// gelu shares silu's 1-D element-wise arrangement.
-fn spec_gelu(inputs: &[HostTensor]) -> Result<Specialization> {
-    spec_silu(inputs)
+fn spec_gelu(shapes: &[&[usize]]) -> Result<Specialization> {
+    spec_silu(shapes)
 }
 
-fn spec_rowwise(pad: f32, inputs: &[HostTensor]) -> Result<Specialization> {
-    check_2d(inputs)?;
-    let a = &inputs[0];
+fn spec_rowwise(pad: f32, shapes: &[&[usize]]) -> Result<Specialization> {
+    check_2d(shapes)?;
+    let a = shapes[0];
     let tensors = catalog::rowwise()?;
     let mut bindings = BTreeMap::new();
-    bind_sizes(&mut bindings, "input", &a.shape);
-    bind_sizes(&mut bindings, "output", &a.shape);
-    build_spec(&tensors, &bindings, &[&a.shape, &a.shape], &[false, true], &[pad, 0.0])
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "output", a);
+    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[pad, 0.0])
 }
 
-fn spec_softmax(inputs: &[HostTensor]) -> Result<Specialization> {
-    spec_rowwise(f32::NEG_INFINITY, inputs)
+fn spec_softmax(shapes: &[&[usize]]) -> Result<Specialization> {
+    spec_rowwise(f32::NEG_INFINITY, shapes)
 }
 
-fn spec_rms_norm(inputs: &[HostTensor]) -> Result<Specialization> {
-    spec_rowwise(0.0, inputs)
+fn spec_rms_norm(shapes: &[&[usize]]) -> Result<Specialization> {
+    spec_rowwise(0.0, shapes)
 }
 
 /// layer_norm shares the rowwise arrangement (one program per row; the
 /// block is the whole row, so no pad value ever participates).
-fn spec_layer_norm(inputs: &[HostTensor]) -> Result<Specialization> {
-    spec_rowwise(0.0, inputs)
+fn spec_layer_norm(shapes: &[&[usize]]) -> Result<Specialization> {
+    spec_rowwise(0.0, shapes)
 }
 
 const MM_BLOCK: i64 = 32;
@@ -270,41 +313,55 @@ fn mm_blocks(m: usize, k: usize, n: usize) -> (i64, i64, i64) {
     }
 }
 
-fn spec_mm(inputs: &[HostTensor]) -> Result<Specialization> {
-    check_mm(inputs)?;
-    let (a, b) = (&inputs[0], &inputs[1]);
-    let out = vec![a.shape[0], b.shape[1]];
+fn spec_mm(shapes: &[&[usize]]) -> Result<Specialization> {
+    check_mm(shapes)?;
+    let (a, b) = (shapes[0], shapes[1]);
+    let out = vec![a[0], b[1]];
     let tensors = catalog::mm()?;
-    let (bm, bn, bk) = mm_blocks(a.shape[0], a.shape[1], b.shape[1]);
+    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
     let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
-    bind_sizes(&mut bindings, "input", &a.shape);
-    bind_sizes(&mut bindings, "other", &b.shape);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
     bind_sizes(&mut bindings, "output", &out);
-    build_spec(
-        &tensors,
-        &bindings,
-        &[&a.shape, &b.shape, &out],
-        &[false, false, true],
-        &[0.0, 0.0, 0.0],
-    )
+    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
 }
 
-fn spec_bmm(inputs: &[HostTensor]) -> Result<Specialization> {
-    check_bmm(inputs)?;
-    let (a, b) = (&inputs[0], &inputs[1]);
-    let out = vec![a.shape[0], a.shape[1], b.shape[2]];
+fn spec_bmm(shapes: &[&[usize]]) -> Result<Specialization> {
+    check_bmm(shapes)?;
+    let (a, b) = (shapes[0], shapes[1]);
+    let out = vec![a[0], a[1], b[2]];
     let tensors = catalog::bmm()?;
-    let (bm, bn, bk) = mm_blocks(a.shape[1], a.shape[2], b.shape[2]);
+    let (bm, bn, bk) = mm_blocks(a[1], a[2], b[2]);
     let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
-    bind_sizes(&mut bindings, "input", &a.shape);
-    bind_sizes(&mut bindings, "other", &b.shape);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
+}
+
+/// addmm = mm + broadcast bias epilogue.  A rank-1 (or `[1, n]`) bias
+/// lowers as a `[1, n]` view whose row-grid dimension is expanded —
+/// every output row tile loads the same bias tile; a full `[m, n]` bias
+/// is tiled exactly like the output.
+fn spec_addmm(shapes: &[&[usize]]) -> Result<Specialization> {
+    check_addmm(shapes)?;
+    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
+    let out = vec![a[0], b[1]];
+    let bias2d: Vec<usize> = if bias.len() == 1 { vec![1, bias[0]] } else { bias.to_vec() };
+    let row_bias = bias2d[0] == 1;
+    let tensors = catalog::addmm(row_bias)?;
+    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
+    bind_sizes(&mut bindings, "bias", &bias2d);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
     bind_sizes(&mut bindings, "output", &out);
     build_spec(
         &tensors,
         &bindings,
-        &[&a.shape, &b.shape, &out],
-        &[false, false, true],
-        &[0.0, 0.0, 0.0],
+        &[&bias2d, a, b, &out],
+        &[false, false, false, true],
+        &[0.0, 0.0, 0.0, 0.0],
     )
 }
 
@@ -435,12 +492,32 @@ fn program_matmul(name: &'static str) -> TileProgram {
     }
 }
 
+/// The addmm application: the mm k-loop followed by a broadcast bias add
+/// (`output = acc + bias`).  Parameters are `[bias, input, other, output]`
+/// (torch.addmm argument order, output last); the bias tile is `[1, BN]`
+/// for broadcast biases and `[BM, BN]` for full ones — the element-wise
+/// add broadcasts either onto the accumulator.
+fn program_addmm() -> TileProgram {
+    TileProgram {
+        name: "addmm",
+        regs: 3,
+        instrs: vec![
+            Instr::Zeros { dst: 0, like_param: 3 },
+            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 1, b_param: 2 }] },
+            Instr::Load { dst: 1, param: 0 },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
+            Instr::Store { param: 3, src: 2 },
+        ],
+    }
+}
+
 fn build_catalog() -> Vec<NativeKernel> {
     vec![
         NativeKernel {
             name: "add",
             arity: 2,
             program: program_add(),
+            coalesce: true,
             shape_check: check_add,
             specialize: spec_add,
         },
@@ -448,6 +525,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "silu",
             arity: 1,
             program: program_silu(),
+            coalesce: true,
             shape_check: check_1d,
             specialize: spec_silu,
         },
@@ -455,6 +533,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "gelu",
             arity: 1,
             program: program_gelu(),
+            coalesce: true,
             shape_check: check_1d,
             specialize: spec_gelu,
         },
@@ -462,6 +541,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "softmax",
             arity: 1,
             program: program_softmax(),
+            coalesce: true,
             shape_check: check_2d,
             specialize: spec_softmax,
         },
@@ -469,6 +549,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "rms_norm",
             arity: 1,
             program: program_rms_norm(),
+            coalesce: true,
             shape_check: check_2d,
             specialize: spec_rms_norm,
         },
@@ -476,6 +557,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "layer_norm",
             arity: 1,
             program: program_layer_norm(),
+            coalesce: true,
             shape_check: check_2d,
             specialize: spec_layer_norm,
         },
@@ -483,6 +565,7 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "mm",
             arity: 2,
             program: program_matmul("mm"),
+            coalesce: false,
             shape_check: check_mm,
             specialize: spec_mm,
         },
@@ -490,8 +573,17 @@ fn build_catalog() -> Vec<NativeKernel> {
             name: "bmm",
             arity: 2,
             program: program_matmul("bmm"),
+            coalesce: false,
             shape_check: check_bmm,
             specialize: spec_bmm,
+        },
+        NativeKernel {
+            name: "addmm",
+            arity: 3,
+            program: program_addmm(),
+            coalesce: false,
+            shape_check: check_addmm,
+            specialize: spec_addmm,
         },
     ]
 }

@@ -1,0 +1,307 @@
+//! Persistent worker pool: the one set of OS threads every parallel
+//! execution in the crate shares.
+//!
+//! Before this module, the grid scheduler and `DotAcc`'s intra-tile row
+//! split each spawned *scoped* threads per run — every request paid
+//! thread creation on the hot path, and concurrent requests oversubscribed
+//! the machine with transient threads.  The pool inverts that: `NT`
+//! worker threads are spawned once (lazily, on first parallel execution)
+//! and live for the process; a run hands them a batch of borrowed jobs
+//! through [`WorkerPool::run_scoped`] and blocks until all of them finish.
+//!
+//! Work-stealing-ish: jobs go into one shared injector queue, idle workers
+//! pull from it, and the *submitting* thread helps drain the queue while
+//! its own scope is unfinished instead of just blocking.  That last part
+//! is what makes nested scopes safe (a job that itself calls `run_scoped`
+//! keeps making progress by executing queued jobs, including its own) and
+//! what keeps a `threads = N` pool delivering N+1-way parallelism.
+//!
+//! # Safety
+//!
+//! `run_scoped` accepts jobs borrowing the caller's stack (`'scope`
+//! lifetimes) and erases the lifetime to move them through the `'static`
+//! queue.  This is sound for the same reason `std::thread::scope` is:
+//! the function does not return until every submitted job has completed
+//! (panicked jobs included — panics are caught, counted, and re-thrown in
+//! the caller), so no borrow outlives the data it references.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+/// A lifetime-erased job (see module docs for why `'static` is sound).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// signaled when work arrives or shutdown begins
+    work: Condvar,
+}
+
+/// One scope of jobs submitted together: a countdown latch plus the first
+/// caught panic, re-thrown by the submitting thread.
+struct ScopeState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads (0 = everything runs inline on
+    /// the submitting thread).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("nt-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Number of persistent worker threads (the submitting thread adds one
+    /// more runner on top during `run_scoped`).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every job to completion, in parallel across the pool plus the
+    /// calling thread.  Returns only when all jobs have finished; if any
+    /// job panicked, the first payload is re-thrown here.
+    pub fn run_scoped<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.len() <= 1 || self.workers.is_empty() {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let scope = Arc::new(ScopeState {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            for task in tasks {
+                // SAFETY: the job is only a queue entry until some thread
+                // runs it, and this function blocks on the scope latch
+                // until every job has run — the `'scope` borrows cannot
+                // outlive the caller's frame (same argument as
+                // `std::thread::scope`).
+                let task: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(task)
+                };
+                let scope = scope.clone();
+                state.queue.push_back(Box::new(move || {
+                    if let Err(payload) =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(task))
+                    {
+                        let mut slot = scope.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                    let mut remaining = scope.remaining.lock().unwrap();
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        scope.done.notify_all();
+                    }
+                }));
+            }
+            self.shared.work.notify_all();
+        }
+        // help: drain queued jobs (ours or another scope's) while this
+        // scope is unfinished, then wait out the stragglers workers hold
+        loop {
+            if *scope.remaining.lock().unwrap() == 0 {
+                break;
+            }
+            let job = self.shared.state.lock().unwrap().queue.pop_front();
+            match job {
+                Some(job) => job(),
+                None => {
+                    let mut remaining = scope.remaining.lock().unwrap();
+                    while *remaining > 0 {
+                        remaining = scope.done.wait(remaining).unwrap();
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(payload) = scope.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = state.queue.pop_front() {
+                    break Some(job);
+                }
+                if state.shutdown {
+                    break None;
+                }
+                state = shared.work.wait(state).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+// -- the process-global pool --------------------------------------------------
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+static GLOBAL_SIZE: OnceLock<usize> = OnceLock::new();
+
+/// Default pool width: one worker per hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a positive-integer environment variable; `Ok(None)` when unset.
+/// The clean-error half of the config satellite: garbage values fail
+/// loudly at startup instead of being silently replaced by a default.
+pub fn parse_env_usize(name: &str) -> Result<Option<usize>> {
+    match std::env::var(name) {
+        Err(_) => Ok(None),
+        Ok(raw) => crate::cli::parse_positive(&raw)
+            .map(Some)
+            .ok_or_else(|| anyhow!("{name} must be a positive integer, got {raw:?}")),
+    }
+}
+
+/// The pool width the global pool will use: `NT_POOL_THREADS` when set
+/// (validated), [`default_threads`] otherwise.  The coordinator calls
+/// this at startup so a malformed value is a clean startup error.
+pub fn configured_threads() -> Result<usize> {
+    Ok(parse_env_usize("NT_POOL_THREADS")?.unwrap_or_else(default_threads))
+}
+
+/// Pin the global pool's width before first use (server `--pool-threads`
+/// flag).  Returns false when the width was already fixed — by an earlier
+/// call or because the pool is already running.
+pub fn init_global(workers: usize) -> bool {
+    GLOBAL_SIZE.set(workers.max(1)).is_ok() && GLOBAL.get().is_none()
+}
+
+/// The process-global pool, created on first use.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        // fail loud on a malformed NT_POOL_THREADS even on paths that
+        // never pass through `Coordinator::start` (benches, bare
+        // `run_native` callers): this knob is documented as never being
+        // silently defaulted
+        let size = GLOBAL_SIZE.get().copied().unwrap_or_else(|| match configured_threads() {
+            Ok(size) => size,
+            Err(e) => panic!("{e:#}"),
+        });
+        WorkerPool::new(size)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_and_supports_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 64];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, slot) in out.iter_mut().enumerate() {
+                tasks.push(Box::new(move || *slot = i + 1));
+            }
+            pool.run_scoped(tasks);
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let (pool, hits) = (pool.clone(), &hits);
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            Box::new(|| {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            pool.run_scoped(tasks);
+        }));
+        assert!(result.is_err(), "worker panic must surface in run_scoped");
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 5);
+    }
+}

@@ -123,6 +123,29 @@ pub fn mm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
     HostTensor::f32(vec![m, n], out)
 }
 
+/// `addmm(bias, mat1, mat2) = bias + mat1 @ mat2` (torch.addmm with
+/// alpha = beta = 1), the bias broadcast over rows when it is `[n]` or
+/// `[1, n]`.
+pub fn addmm(bias: &HostTensor, a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+    let prod = mm(a, b)?;
+    let (m, n) = (prod.shape[0], prod.shape[1]);
+    let row_bias = match bias.shape.as_slice() {
+        [len] if *len == n => true,
+        [1, len] if *len == n => true,
+        [rows, len] if *rows == m && *len == n => false,
+        other => bail!("addmm bias {other:?} does not broadcast to [{m}, {n}]"),
+    };
+    let (p, bv) = (prod.as_f32()?, bias.as_f32()?);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let add = if row_bias { bv[j] } else { bv[i * n + j] };
+            out[i * n + j] = p[i * n + j] + add;
+        }
+    }
+    HostTensor::f32(vec![m, n], out)
+}
+
 pub fn bmm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
     if a.shape.len() != 3
         || b.shape.len() != 3
@@ -155,7 +178,7 @@ pub fn bmm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
 /// Kernels [`run`] can dispatch — the single source of truth the router
 /// and registry consult before admitting a `ref`-variant fallback.
 pub const SUPPORTED: &[&str] =
-    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm"];
+    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm"];
 
 /// True if a reference oracle exists for this kernel.
 pub fn supports(name: &str) -> bool {
@@ -203,6 +226,10 @@ pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         "bmm" => {
             need(2)?;
             bmm(&inputs[0], &inputs[1])?
+        }
+        "addmm" => {
+            need(3)?;
+            addmm(&inputs[0], &inputs[1], &inputs[2])?
         }
         other => bail!("no reference implementation for kernel {other:?}"),
     };

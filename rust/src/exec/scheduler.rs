@@ -1,11 +1,14 @@
 //! Parallel grid scheduler: run a tile program once per grid cell across
-//! a std-only worker pool.
+//! the persistent worker pool.
 //!
 //! The paper's execution model is serial per program instance and
 //! embarrassingly parallel across the grid — the code generator emits one
 //! Triton program per outermost-level cell.  This scheduler reproduces
-//! that: grid cells are distributed over OS threads in contiguous chunks,
-//! and every thread writes the shared output buffers directly.
+//! that: grid cells are split into contiguous chunks and dispatched to
+//! [`super::pool`] (no per-run thread spawns), and every chunk writes the
+//! shared output buffers directly.  `threads` is a *budget*, not a thread
+//! count: it bounds how many chunks one launch fans out, so concurrent
+//! launches share the pool instead of oversubscribing the machine.
 //!
 //! # Safety
 //!
@@ -35,7 +38,8 @@ unsafe impl Sync for SharedOut {}
 
 #[derive(Debug, Clone)]
 pub struct GridScheduler {
-    /// worker threads; 1 = serial execution on the caller's thread
+    /// parallelism budget (chunks dispatched to the persistent pool);
+    /// 1 = serial execution on the caller's thread
     pub threads: usize,
 }
 
@@ -186,21 +190,24 @@ impl GridScheduler {
         } else {
             let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
             let chunk = (cells + threads as i64 - 1) / threads as i64;
-            std::thread::scope(|scope| {
-                for t in 0..threads {
-                    let (data, failure) = (&data, &failure);
-                    let (grid, loop_shape, out_ptrs) = (&grid, &loop_shape, &out_ptrs);
-                    let lo = t as i64 * chunk;
-                    let hi = (lo + chunk).min(cells);
-                    scope.spawn(move || {
-                        if let Err(e) = run_cells(
-                            program, views, data, grid, loop_shape, lo, hi, intra, out_ptrs,
-                        ) {
-                            *failure.lock().unwrap() = Some(e);
-                        }
-                    });
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+            for t in 0..threads {
+                let (data, failure) = (&data, &failure);
+                let (grid, loop_shape, out_ptrs) = (&grid, &loop_shape, &out_ptrs);
+                let lo = t as i64 * chunk;
+                let hi = (lo + chunk).min(cells);
+                if lo >= hi {
+                    continue;
                 }
-            });
+                tasks.push(Box::new(move || {
+                    if let Err(e) =
+                        run_cells(program, views, data, grid, loop_shape, lo, hi, intra, out_ptrs)
+                    {
+                        *failure.lock().unwrap() = Some(e);
+                    }
+                }));
+            }
+            super::pool::global().run_scoped(tasks);
             if let Some(e) = failure.into_inner().unwrap() {
                 return Err(e);
             }

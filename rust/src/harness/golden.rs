@@ -67,6 +67,11 @@ pub fn native_task_inputs(name: &str, rng: &mut SplitMix64) -> Result<Vec<HostTe
             HostTensor::randn(vec![3, 33, 17], rng),
             HostTensor::randn(vec![3, 17, 29], rng),
         ],
+        "addmm" => vec![
+            HostTensor::randn(vec![90], rng), // rank-1 bias: broadcast over rows
+            HostTensor::randn(vec![70, 50], rng),
+            HostTensor::randn(vec![50, 90], rng),
+        ],
         other => bail!("no native task inputs for kernel {other:?}"),
     })
 }

@@ -1,6 +1,11 @@
 //! `repro serve` — drive the kernel-serving coordinator with a synthetic
 //! mixed workload and print the serving metrics (latency percentiles,
-//! batching factor, rejection count).
+//! batching factor, plan-cache hit rate, coalesced requests, rejections).
+//!
+//! Flags (all validated at startup; env fallbacks in parentheses):
+//! `--workers N`, `--requests N`, `--pool-threads N` (`NT_POOL_THREADS`),
+//! `--coalesce-fanin N` (`NT_COALESCE_FANIN`), `--plan-cache-cap N`
+//! (`NT_PLAN_CACHE_CAP`).
 
 use std::sync::Arc;
 
@@ -9,19 +14,35 @@ use anyhow::Result;
 use crate::artifacts_dir;
 use crate::cli::Args;
 use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::exec::pool;
 use crate::prng::SplitMix64;
 use crate::runtime::{HostTensor, Manifest};
 
 pub fn run(args: &Args) -> Result<()> {
     let manifest = Arc::new(Manifest::load_or_builtin(&artifacts_dir()));
-    let workers = args.opt_usize("workers", 2);
     let requests = args.opt_usize("requests", 64);
-    let config = CoordinatorConfig { workers, ..Default::default() };
+    let mut config = CoordinatorConfig::default().from_env()?;
+    config.workers = args.opt_positive("workers")?.unwrap_or(2);
+    if let Some(v) = args.opt_positive("coalesce-fanin")? {
+        config.coalesce_fanin = v;
+    }
+    if let Some(v) = args.opt_positive("plan-cache-cap")? {
+        config.plan_cache_capacity = v;
+    }
+    if let Some(v) = args.opt_positive("pool-threads")? {
+        if !pool::init_global(v) {
+            println!("(pool already initialized; --pool-threads {v} ignored)");
+        }
+    }
     println!(
-        "starting coordinator: {workers} workers, {requests} requests ({})",
+        "starting coordinator: {} workers, {requests} requests, coalesce fan-in {}, \
+         plan cache {} ({})",
+        config.workers,
+        config.coalesce_fanin,
+        config.plan_cache_capacity,
         if manifest.kernels.is_empty() { "native backend" } else { "AOT artifacts" }
     );
-    let coordinator = Coordinator::start(manifest.clone(), config);
+    let coordinator = Coordinator::start(manifest.clone(), config.clone())?;
 
     // artifact slot when present; natively any shape works
     let slot = manifest
@@ -36,7 +57,7 @@ pub fn run(args: &Args) -> Result<()> {
     // warm each worker's lazy compile cache before the measured burst
     let mut rng0 = SplitMix64::new(1);
     let warm = HostTensor::randn(vec![slot], &mut rng0);
-    for _ in 0..workers {
+    for _ in 0..config.workers {
         let rx = coordinator.submit("add", "nt", vec![warm.clone(), warm.clone()])?;
         rx.recv()??;
     }
@@ -58,6 +79,8 @@ pub fn run(args: &Args) -> Result<()> {
                 receivers.push(("silu", coordinator.submit("silu", "nt", vec![x])?));
             }
             _ => {
+                // same-shape softmaxes: natively these coalesce into
+                // stacked launches AND hit one cached plan after the first
                 let x = HostTensor::randn(softmax_shape.clone(), &mut rng);
                 receivers.push(("softmax", coordinator.submit("softmax", "nt", vec![x])?));
             }

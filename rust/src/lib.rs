@@ -8,18 +8,20 @@
 //! * [`symbolic`] / [`tensor`] / [`arrange`] — a full Rust mirror of the
 //!   DSL's tensor-oriented metaprogramming algebra, used to validate
 //!   arrangements and compute launch plans at serve time;
-//! * [`exec`] — the **native tile-execution backend**: a tile-program IR
-//!   mirroring the `ntl` operation set, strided tile views materialized
-//!   from specialized launch plans (pad-value edge handling included),
-//!   and a parallel grid scheduler — the first path by which the Rust
-//!   system computes kernel results end-to-end on its own;
+//! * [`exec`] — the **native tile-execution backend**, an explicit
+//!   compile → cache → execute pipeline: a tile-program IR mirroring the
+//!   `ntl` operation set, strided tile views lowered once per shape
+//!   signature into plan-cached [`exec::CompiledProgram`]s, and a grid
+//!   scheduler dispatching onto one persistent worker pool;
 //! * [`runtime`] — execution backends behind the
-//!   [`runtime::Backend`] trait: PJRT/AOT artifact loading plus the
-//!   native fallback, unified in the executable [`runtime::Registry`]
-//!   (artifact when present, native tile program otherwise);
-//! * [`coordinator`] — the kernel-serving system: router, dynamic batcher,
-//!   worker pool, metrics.  Requests for kernels without artifacts are
-//!   routed to the native backend transparently;
+//!   [`runtime::Backend`] trait's `prepare`/`execute` split: PJRT/AOT
+//!   artifact loading plus the native fallback, unified in the executable
+//!   [`runtime::Registry`] (artifact when present, native tile program
+//!   otherwise) over a shared plan cache;
+//! * [`coordinator`] — the kernel-serving system: router, dynamic batcher
+//!   (slot packing + native same-shape coalescing), worker pool, metrics.
+//!   Requests for kernels without artifacts are routed to the native
+//!   backend transparently;
 //! * [`inference`] — the end-to-end autoregressive engine of Fig 7;
 //! * [`codemetrics`] — the Table 2 metric suite (raw, cyclomatic, Halstead,
 //!   maintainability index) over Python kernel sources;

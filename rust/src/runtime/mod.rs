@@ -7,10 +7,15 @@
 //!   HLO *text* is the interchange format (see python/compile/aot.py).
 //!   Shape-specialized, fast, but only available when the AOT step ran
 //!   and a PJRT plugin exists.
-//! * **native tile programs** — `crate::exec`: the arrangement executed
-//!   directly over host buffers by the grid scheduler.  Shape-polymorphic
-//!   and always available; the [`Registry`] falls back to it when an
-//!   artifact is missing.
+//! * **native tile programs** — `crate::exec`: the arrangement compiled
+//!   per shape signature (memoized in the registry's shared
+//!   [`crate::exec::PlanCache`]) and executed over host buffers by the
+//!   grid scheduler.  Shape-polymorphic and always available; the
+//!   [`Registry`] falls back to it when an artifact is missing.
+//!
+//! Both meet behind [`Backend`]'s `prepare(shapes) -> Prepared` /
+//! `execute(prepared, inputs)` split, so the coordinator drives one
+//! compile-once/execute-many lifecycle regardless of the path.
 
 mod host;
 mod manifest;
@@ -129,14 +134,43 @@ impl BackendKind {
     }
 }
 
+/// The reusable execution handle [`Backend::prepare`] resolves shapes to
+/// — the uniform compile-once/execute-many lifecycle across all backends.
+/// For the native path it is the plan-cached [`crate::exec::CompiledProgram`];
+/// artifacts are compiled ahead of time, so their handle is the
+/// executable itself; reference oracles need no preparation at all.
+pub enum Prepared {
+    /// an AOT artifact (already shape-specialized at compile time)
+    Artifact(Arc<Executable>),
+    /// a native compiled program out of the plan cache
+    Native(Arc<crate::exec::CompiledProgram>),
+    /// reference oracles are interpreted directly
+    Reference,
+}
+
 /// Something that can execute one kernel: an AOT artifact or a native
 /// tile program.  Not `Send` — artifact executables hold `Rc`-based PJRT
 /// handles, so each coordinator worker owns its own registry, exactly as
-/// before.
+/// before (the plan cache *is* shared across workers).
+///
+/// The lifecycle is split in two so callers can amortize the expensive
+/// half: [`Backend::prepare`] resolves input *shapes* to a reusable
+/// [`Prepared`] handle (cache hit on the native path when the shape was
+/// seen before), and [`Backend::execute`] runs the handle over concrete
+/// tensors.  [`Backend::run`] is the one-shot convenience composition.
 pub trait Backend {
     fn name(&self) -> &str;
     fn kind(&self) -> BackendKind;
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+    /// Resolve concrete input shapes to a reusable execution handle.
+    fn prepare(&self, shapes: &[&[usize]]) -> Result<Prepared>;
+    /// Execute a prepared handle over concrete inputs.
+    fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+    /// prepare + execute in one step.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        let prepared = self.prepare(&shapes)?;
+        self.execute(&prepared, inputs)
+    }
 }
 
 /// [`Backend`] over a compiled AOT artifact.
@@ -153,23 +187,43 @@ impl Backend for ArtifactBackend {
         BackendKind::Artifact
     }
 
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.exe.run(inputs)
+    fn prepare(&self, _shapes: &[&[usize]]) -> Result<Prepared> {
+        // artifacts are compiled ahead of time for fixed shapes; shape
+        // agreement is enforced at admission and by PJRT itself
+        Ok(Prepared::Artifact(self.exe.clone()))
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match prepared {
+            Prepared::Artifact(exe) => exe.run(inputs),
+            _ => anyhow::bail!("artifact backend {} handed a non-artifact handle", self.exe.name),
+        }
     }
 }
 
-/// [`Backend`] over a native tile program.
+/// [`Backend`] over a native tile program: `prepare` consults the shared
+/// plan cache (specializing + lowering only on a miss), `execute` launches
+/// the cached program over the persistent pool.
 pub struct NativeBackend {
     kernel: &'static crate::exec::NativeKernel,
+    variant: String,
     scheduler: crate::exec::GridScheduler,
+    plans: Arc<crate::exec::PlanCache>,
     label: String,
 }
 
 impl NativeBackend {
-    pub fn new(kernel: &'static crate::exec::NativeKernel, threads: usize) -> NativeBackend {
+    pub fn new(
+        kernel: &'static crate::exec::NativeKernel,
+        variant: &str,
+        threads: usize,
+        plans: Arc<crate::exec::PlanCache>,
+    ) -> NativeBackend {
         NativeBackend {
             kernel,
+            variant: variant.to_string(),
             scheduler: crate::exec::GridScheduler::pooled(threads),
+            plans,
             label: format!("{}.native", kernel.name),
         }
     }
@@ -184,8 +238,15 @@ impl Backend for NativeBackend {
         BackendKind::Native
     }
 
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.kernel.run(inputs, &self.scheduler)
+    fn prepare(&self, shapes: &[&[usize]]) -> Result<Prepared> {
+        Ok(Prepared::Native(self.plans.prepare(self.kernel, &self.variant, shapes)?))
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match prepared {
+            Prepared::Native(compiled) => compiled.execute(inputs, &self.scheduler),
+            _ => anyhow::bail!("native backend {} handed a non-native handle", self.label),
+        }
     }
 }
 
@@ -211,8 +272,15 @@ impl Backend for RefBackend {
         BackendKind::Reference
     }
 
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        crate::exec::reference::run(&self.kernel, inputs)
+    fn prepare(&self, _shapes: &[&[usize]]) -> Result<Prepared> {
+        Ok(Prepared::Reference)
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match prepared {
+            Prepared::Reference => crate::exec::reference::run(&self.kernel, inputs),
+            _ => anyhow::bail!("reference backend {} handed a non-reference handle", self.label),
+        }
     }
 }
 

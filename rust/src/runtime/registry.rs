@@ -31,8 +31,12 @@ pub struct Registry {
     manifest: Arc<Manifest>,
     cache: Mutex<HashMap<ExecKey, Arc<Executable>>>,
     backends: Mutex<HashMap<ExecKey, Arc<dyn Backend>>>,
-    /// worker threads per native grid execution
+    /// parallelism budget per native grid execution
     native_threads: usize,
+    /// compiled-plan cache the native backends share; `Send + Sync`, so
+    /// one instance can (and in the coordinator does) span every worker's
+    /// registry — a shape warmed by any worker is warm for all
+    plan_cache: Arc<crate::exec::PlanCache>,
 }
 
 impl Registry {
@@ -43,6 +47,9 @@ impl Registry {
             cache: Mutex::new(HashMap::new()),
             backends: Mutex::new(HashMap::new()),
             native_threads: default_native_threads(),
+            plan_cache: Arc::new(crate::exec::PlanCache::new(
+                crate::exec::PlanCache::DEFAULT_CAPACITY,
+            )),
         }
     }
 
@@ -54,6 +61,9 @@ impl Registry {
             cache: Mutex::new(HashMap::new()),
             backends: Mutex::new(HashMap::new()),
             native_threads: default_native_threads(),
+            plan_cache: Arc::new(crate::exec::PlanCache::new(
+                crate::exec::PlanCache::DEFAULT_CAPACITY,
+            )),
         }
     }
 
@@ -70,6 +80,19 @@ impl Registry {
     pub fn with_native_threads(mut self, threads: usize) -> Registry {
         self.native_threads = threads.max(1);
         self
+    }
+
+    /// Share a plan cache with other registries (the coordinator hands
+    /// every worker's registry one cache, so compiled programs are
+    /// process-wide).
+    pub fn with_plan_cache(mut self, plan_cache: Arc<crate::exec::PlanCache>) -> Registry {
+        self.plan_cache = plan_cache;
+        self
+    }
+
+    /// The compiled-plan cache native backends resolve through.
+    pub fn plan_cache(&self) -> &Arc<crate::exec::PlanCache> {
+        &self.plan_cache
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -98,7 +121,12 @@ impl Registry {
                 Ok(_) => {
                     let kernel = crate::exec::lookup(name)
                         .expect("classifier only returns Native when a tile program exists");
-                    Arc::new(NativeBackend::new(kernel, self.native_threads))
+                    Arc::new(NativeBackend::new(
+                        kernel,
+                        variant,
+                        self.native_threads,
+                        self.plan_cache.clone(),
+                    ))
                 }
                 Err(fallback_err) => {
                     return Err(anyhow!(

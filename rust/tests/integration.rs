@@ -84,8 +84,9 @@ fn coordinator_serves_artifactless_kernels_natively() {
     let manifest = Arc::new(Manifest::builtin());
     let coordinator = Coordinator::start(
         manifest,
-        CoordinatorConfig { workers: 2, queue_capacity: 128, max_fanin: 8 },
-    );
+        CoordinatorConfig { workers: 2, queue_capacity: 128, max_fanin: 8, ..Default::default() },
+    )
+    .unwrap();
     let mut rng = SplitMix64::new(21);
 
     // mixed workload: variable-length adds, an mm, a softmax
@@ -120,7 +121,7 @@ fn coordinator_serves_artifactless_kernels_natively() {
 
 #[test]
 fn coordinator_rejects_malformed_requests() {
-    let coordinator = Coordinator::start(manifest(), CoordinatorConfig::default());
+    let coordinator = Coordinator::start(manifest(), CoordinatorConfig::default()).unwrap();
     let mut rng = SplitMix64::new(1);
     let x = HostTensor::randn(vec![16], &mut rng);
     // wrong arity
@@ -155,8 +156,9 @@ fn coordinator_backpressure() {
     let manifest = manifest();
     let coordinator = Coordinator::start(
         manifest.clone(),
-        CoordinatorConfig { workers: 1, queue_capacity: 2, max_fanin: 1 },
-    );
+        CoordinatorConfig { workers: 1, queue_capacity: 2, max_fanin: 1, ..Default::default() },
+    )
+    .unwrap();
     let mut rng = SplitMix64::new(2);
     // artifact runs must use the compiled shape (requests of any other
     // shape are rejected at admission, which would make this test
@@ -180,6 +182,113 @@ fn coordinator_backpressure() {
     for rx in rxs {
         rx.recv().unwrap().unwrap();
     }
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_serves_addmm_natively() {
+    let manifest = Arc::new(Manifest::builtin());
+    let coordinator =
+        Coordinator::start(manifest, CoordinatorConfig::default()).unwrap();
+    let mut rng = SplitMix64::new(41);
+    let bias = HostTensor::randn(vec![31], &mut rng);
+    let a = HostTensor::randn(vec![45, 20], &mut rng);
+    let b = HostTensor::randn(vec![20, 31], &mut rng);
+    let inputs = vec![bias, a, b];
+    let rx = coordinator.submit("addmm", "nt", inputs.clone()).unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.backend, "native");
+    let expected = exec::reference::run("addmm", &inputs).unwrap();
+    let diff = resp.outputs[0].max_abs_diff(&expected[0]).unwrap();
+    assert!(diff <= 1e-4, "addmm served natively: max|diff| = {diff}");
+    // non-broadcastable bias is rejected at admission, not mid-pipeline
+    let mut rng = SplitMix64::new(42);
+    let bad = HostTensor::randn(vec![7], &mut rng);
+    let a = HostTensor::randn(vec![5, 4], &mut rng);
+    let b = HostTensor::randn(vec![4, 6], &mut rng);
+    assert!(coordinator.submit("addmm", "nt", vec![bad, a, b]).is_err());
+    coordinator.shutdown();
+}
+
+#[test]
+fn second_same_shape_request_hits_the_plan_cache() {
+    // the compile-once/execute-many acceptance: request #1 misses (one
+    // specialization), request #2 with the same shapes performs zero
+    // specialization work — proven by the shared cache's counters
+    let manifest = Arc::new(Manifest::builtin());
+    let coordinator =
+        Coordinator::start(manifest, CoordinatorConfig::default()).unwrap();
+    let mut rng = SplitMix64::new(51);
+    let a = HostTensor::randn(vec![33, 21], &mut rng);
+    let b = HostTensor::randn(vec![21, 17], &mut rng);
+    // sequential submits: each response is awaited before the next goes in
+    let first = coordinator
+        .submit("mm", "nt", vec![a.clone(), b.clone()])
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    let m1 = coordinator.metrics();
+    assert_eq!((m1.plan_misses, m1.plan_hits), (1, 0), "first request compiles");
+    let second = coordinator
+        .submit("mm", "nt", vec![a.clone(), b.clone()])
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    let m2 = coordinator.metrics();
+    assert_eq!(m2.plan_misses, 1, "second same-shape request must not recompile");
+    assert_eq!(m2.plan_hits, 1, "second same-shape request must hit the cache");
+    assert_eq!(first.outputs[0], second.outputs[0], "same inputs, bit-identical outputs");
+    // a different shape signature (same rank) compiles its own plan —
+    // even when served by the *other* worker, the cache is shared
+    let c = HostTensor::randn(vec![21, 19], &mut rng);
+    coordinator
+        .submit("mm", "nt", vec![a, c])
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert_eq!(coordinator.metrics().plan_misses, 2);
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_coalesces_same_shape_native_requests() {
+    // one worker; the head-of-line mm (~2 * 192^3 FLOPs, milliseconds)
+    // keeps it busy while the same-shape softmax burst queues behind it —
+    // the next drain stacks the whole run into one grid launch
+    let manifest = Arc::new(Manifest::builtin());
+    let coordinator = Coordinator::start(
+        manifest,
+        CoordinatorConfig { workers: 1, queue_capacity: 128, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(61);
+    let a = HostTensor::randn(vec![192, 192], &mut rng);
+    let b = HostTensor::randn(vec![192, 192], &mut rng);
+    let mm_rx = coordinator.submit("mm", "nt", vec![a, b]).unwrap();
+    let mut cases = Vec::new();
+    for _ in 0..6 {
+        let x = HostTensor::randn(vec![9, 65], &mut rng);
+        let rx = coordinator.submit("softmax", "nt", vec![x.clone()]).unwrap();
+        cases.push((x, rx));
+    }
+    mm_rx.recv().unwrap().unwrap();
+    for (x, rx) in cases {
+        let resp = rx.recv().unwrap().unwrap();
+        let expected = exec::reference::run("softmax", &[x]).unwrap();
+        let diff = resp.outputs[0].max_abs_diff(&expected[0]).unwrap();
+        assert!(diff <= 1e-4, "coalesced softmax: max|diff| = {diff}");
+    }
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.completed, 7);
+    assert!(
+        metrics.coalesced >= 2,
+        "expected the queued softmax burst to coalesce, metrics: {}",
+        metrics.render()
+    );
+    assert!(metrics.executions < 7, "coalescing must fuse executions");
     coordinator.shutdown();
 }
 
@@ -310,8 +419,9 @@ fn coordinator_packs_and_verifies() {
     };
     let coordinator = Coordinator::start(
         manifest.clone(),
-        CoordinatorConfig { workers: 1, queue_capacity: 128, max_fanin: 8 },
-    );
+        CoordinatorConfig { workers: 1, queue_capacity: 128, max_fanin: 8, ..Default::default() },
+    )
+    .unwrap();
     let mut rng = SplitMix64::new(9);
     let mut expected = Vec::new();
     let mut rxs = Vec::new();

@@ -28,7 +28,18 @@ use std::process::ExitCode;
 use ninetoothed_repro::json::Json;
 
 /// Metrics gated as "higher is better" when present in a baseline row.
-const METRICS: &[&str] = &["gflops", "naive_gflops", "gflops_serial", "gflops_pooled", "speedup"];
+/// `warm_per_s` is the plan-cache warm-path gate (a >25% regression in
+/// warm `prepare` throughput fails CI); `coalesced_per_s` gates the
+/// stacked-launch serving path the same way.
+const METRICS: &[&str] = &[
+    "gflops",
+    "naive_gflops",
+    "gflops_serial",
+    "gflops_pooled",
+    "speedup",
+    "warm_per_s",
+    "coalesced_per_s",
+];
 
 fn load(path: &str) -> Result<Json, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
