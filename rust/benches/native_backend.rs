@@ -74,6 +74,21 @@ fn softmax_case(r: usize, c: usize, rng: &mut SplitMix64) -> Case {
     }
 }
 
+/// rope is defined *only* through `kernel::make` — its plan row gates the
+/// API indirection (warm prepare must stay effectively free per request).
+fn rope_case(b: usize, s: usize, h: usize, d: usize, rng: &mut SplitMix64) -> Case {
+    Case {
+        key: format!("rope_{b}x{s}x{h}x{d}"),
+        kernel: "rope",
+        inputs: vec![
+            HostTensor::randn(vec![b, s, h, d], rng),
+            HostTensor::randn(vec![s, d / 2], rng),
+            HostTensor::randn(vec![s, d / 2], rng),
+        ],
+        flops: 6.0 * (b * s * h * d) as f64,
+    }
+}
+
 fn kernel_cases(smoke: bool, rng: &mut SplitMix64) -> Vec<Case> {
     let mut cases = vec![
         mm_case(128, 128, 128, rng),
@@ -196,7 +211,7 @@ fn main() {
         }
     }
     for case in &cases {
-        let kernel = exec::lookup(case.kernel).expect("native kernel");
+        let kernel = exec::lookup(case.kernel).expect("registered kernel");
         let spec = kernel.specialize(&case.inputs).expect("specialize");
         let serial = GridScheduler::serial();
         let pooled = GridScheduler::pooled(threads);
@@ -238,16 +253,20 @@ fn main() {
     // -- 3. plan cache: cold compile vs warm prepare -------------------------
     let mut plan_table =
         Table::new(&["plan", "cold compile", "warm prepare", "speedup", "warm/s"]);
-    for case in [mm_case(256, 256, 256, &mut rng), softmax_case(256, 2048, &mut rng)] {
-        let kernel = exec::lookup(case.kernel).expect("native kernel");
+    for case in [
+        mm_case(256, 256, 256, &mut rng),
+        softmax_case(256, 2048, &mut rng),
+        rope_case(2, 64, 8, 64, &mut rng),
+    ] {
+        let kernel = exec::lookup(case.kernel).expect("registered kernel");
         let shapes: Vec<&[usize]> = case.inputs.iter().map(|t| t.shape.as_slice()).collect();
         let cold = bench_for(1, min_time, || {
-            exec::compile(kernel, &shapes).expect("cold compile");
+            exec::compile(&kernel, &shapes).expect("cold compile");
         });
         let cache = PlanCache::new(64);
-        cache.prepare(kernel, "nt", &shapes).expect("prime the cache");
+        cache.prepare(&kernel, "nt", &shapes).expect("prime the cache");
         let warm = bench_for(1, min_time, || {
-            cache.prepare(kernel, "nt", &shapes).expect("warm prepare");
+            cache.prepare(&kernel, "nt", &shapes).expect("warm prepare");
         });
         let speedup = cold.mean_s / warm.mean_s;
         let warm_per_s = 1.0 / warm.mean_s;
@@ -269,6 +288,22 @@ fn main() {
     }
     println!("{}", plan_table.render());
 
+    // -- 3b. the kernel::make registry: resolve-by-name throughput -----------
+    // the API redesign's only per-request indirection is a hash-registry
+    // lookup — gate it so it provably stays free on the serving path
+    {
+        let resolve = bench_for(1, min_time, || {
+            assert!(exec::lookup("rope").is_some());
+        });
+        let resolves_per_s = 1.0 / resolve.mean_s;
+        println!("kernel registry resolve (rope): {resolves_per_s:.0}/s");
+        rows.push(obj(vec![
+            ("key", Json::Str("registry_resolve_rope".to_string())),
+            ("kernel", Json::Str("rope".to_string())),
+            ("resolves_per_s", Json::Num(resolves_per_s)),
+        ]));
+    }
+
     // -- 4. coalescing: sequential same-shape requests vs one stacked launch --
     {
         // small per-request rows: a single request's grid cannot fill the
@@ -289,8 +324,8 @@ fn main() {
         let single_shapes: Vec<&[usize]> =
             per_request[0].iter().map(|t| t.shape.as_slice()).collect();
         let stacked_shapes: Vec<&[usize]> = stacked.iter().map(|t| t.shape.as_slice()).collect();
-        let single_plan = cache.prepare(kernel, "nt", &single_shapes).expect("plan");
-        let stacked_plan = cache.prepare(kernel, "nt", &stacked_shapes).expect("plan");
+        let single_plan = cache.prepare(&kernel, "nt", &single_shapes).expect("plan");
+        let stacked_plan = cache.prepare(&kernel, "nt", &stacked_shapes).expect("plan");
         let sequential = bench_for(1, min_time, || {
             for inputs in &per_request {
                 single_plan.execute(inputs, &pooled).expect("sequential run");

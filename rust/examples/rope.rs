@@ -1,0 +1,58 @@
+//! Rope, end to end, through the `kernel::make` API: the kernel exists
+//! only as a declaration (arrangement + application + symbolic tensors),
+//! yet admission, output inference, plan caching and execution all come
+//! derived — no per-kernel wiring anywhere in the serving stack.
+//!
+//! ```bash
+//! cargo run --release --example rope
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::exec::{self, GridScheduler};
+use ninetoothed_repro::kernel;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest};
+
+fn main() -> Result<()> {
+    let rope = kernel::lookup("rope").expect("rope is registered via kernel::make");
+    println!(
+        "rope: arity={} coalesce={} native={} — {}",
+        rope.arity,
+        rope.coalesce,
+        rope.executable(),
+        rope.arrangement.summary
+    );
+
+    // (batch, seq, heads, head_dim) activations + [seq, head_dim/2] tables
+    let mut rng = SplitMix64::new(7);
+    let input = HostTensor::randn(vec![2, 16, 4, 64], &mut rng);
+    let cos = HostTensor::randn(vec![16, 32], &mut rng);
+    let sin = HostTensor::randn(vec![16, 32], &mut rng);
+    let inputs = vec![input, cos, sin];
+
+    // direct execution: output shapes are inferred, never passed
+    let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+    println!("inferred output shapes: {:?}", rope.output_shapes(&shapes)?);
+    let direct = rope.run(&inputs, &GridScheduler::pooled(4))?;
+    let oracle = exec::reference::run("rope", &inputs)?;
+    println!("direct vs f64 oracle: max|diff| = {:.3e}", direct[0].max_abs_diff(&oracle[0])?);
+
+    // served execution: same request twice — the second hits the plan cache
+    let manifest = Arc::new(Manifest::load_or_builtin(&ninetoothed_repro::artifacts_dir()));
+    let coordinator = Coordinator::start(manifest, CoordinatorConfig::default())?;
+    let first = coordinator.submit("rope", "nt", inputs.clone())?.recv()??;
+    let second = coordinator.submit("rope", "nt", inputs.clone())?.recv()??;
+    let metrics = coordinator.metrics();
+    println!(
+        "served twice via {} backend: plan misses={} hits={} (compile-once/execute-many)",
+        first.backend, metrics.plan_misses, metrics.plan_hits
+    );
+    assert_eq!(first.outputs[0], second.outputs[0], "bit-identical across the cache hit");
+    assert!(first.outputs[0].max_abs_diff(&oracle[0])? <= 1e-4);
+    coordinator.shutdown();
+    println!("rope OK");
+    Ok(())
+}

@@ -199,6 +199,41 @@ pub fn sdpa() -> Result<Vec<SymTensor>> {
     Ok(vec![q, k, v2, o])
 }
 
+/// Rotary position embedding (paper task 7, half-rotation convention;
+/// mirrors `python/compile/kernels/nt/rope.py`).  `input`/`output` are
+/// `[B, S, H, D]`, one program per `(batch, seq, head)` row; the cos/sin
+/// tables are `[S, D/2]`, broadcast over batch and heads by
+/// `unsqueeze` + `expand` exactly as the Python arrangement does.
+pub fn rope() -> Result<Vec<SymTensor>> {
+    let input = SymTensor::new("input", 4);
+    let cos = SymTensor::new("cos", 2);
+    let sin = SymTensor::new("sin", 2);
+    let output = SymTensor::new("output", 4);
+
+    let arrange_rows = |t: SymTensor| -> Result<SymTensor> {
+        let mut a = t.tile(&[c(1), c(1), c(1), None], None)?;
+        let v = a.dtype().squeeze(&[0, 1, 2])?;
+        a.set_dtype(v);
+        Ok(a)
+    };
+    let input_arranged = arrange_rows(input)?;
+    let in_shape = input_arranged.shape(); // [B, S, H, 1]
+
+    let arrange_table = |t: SymTensor| -> Result<SymTensor> {
+        let mut a = t.tile(&[c(1), None], None)?;
+        a = a.unsqueeze(0)?;
+        a = a.unsqueeze(2)?;
+        a = a.expand(&[Some(in_shape[0].clone()), None, Some(in_shape[2].clone()), None])?;
+        let v = a.dtype().squeeze(&[0])?;
+        a.set_dtype(v);
+        Ok(a)
+    };
+    let cos_arranged = arrange_table(cos)?;
+    let sin_arranged = arrange_table(sin)?;
+    let output_arranged = arrange_rows(output)?;
+    Ok(vec![input_arranged, cos_arranged, sin_arranged, output_arranged])
+}
+
 /// Grid / extent agreement check between a catalog arrangement and the
 /// manifest metadata, under concrete bindings.  Variable names differ
 /// between the two derivations, so agreement is judged on evaluated

@@ -156,16 +156,19 @@ impl Router {
                         req.variant
                     ),
                 };
-                if let Some(kernel) = crate::exec::lookup(&req.kernel) {
+                let def = crate::kernel::lookup(&req.kernel);
+                if let Some(kernel) = &def {
                     kernel.check(&req.inputs)?;
                 }
-                // (a ref-only kernel with no tile program validates at run)
+                // (a ref-only kernel with no definition validates at run)
                 // coalescing's bit-identity contract is proven against the
                 // *tile programs*, so only routes that will resolve to the
                 // native backend coalesce — a `ref`-variant route executes
-                // through the reference oracle and stays per-request
+                // through the reference oracle and stays per-request.  The
+                // flag itself is derived from the arrangement by
+                // `kernel::make` (row-independence), never set by hand.
                 let coalescible = kind == crate::runtime::BackendKind::Native
-                    && crate::exec::lookup(&req.kernel).map(|k| k.coalesce).unwrap_or(false);
+                    && def.map(|k| k.coalesce).unwrap_or(false);
                 Ok(RouteKey {
                     kernel: req.kernel.clone(),
                     variant: req.variant.clone(),

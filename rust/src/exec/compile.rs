@@ -26,16 +26,16 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::native::{NativeKernel, Specialization};
+use super::native::{KernelDef, Specialization};
 use super::scheduler::GridScheduler;
 use crate::runtime::HostTensor;
 
 /// Cache key: which kernel/variant, specialized for which input shapes.
-/// Kernel names are `&'static` and the known serving variants intern to
-/// statics, so a warm lookup only allocates the shape signature.
+/// The known serving variants intern to statics, so a warm lookup only
+/// allocates the kernel name and the shape signature.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
-    pub kernel: &'static str,
+    pub kernel: String,
     pub variant: Cow<'static, str>,
     pub shapes: Vec<Vec<usize>>,
 }
@@ -55,7 +55,7 @@ fn intern_variant(variant: &str) -> Cow<'static, str> {
 /// compiled under lives in its [`PlanKey`], not here — execution is
 /// identical across the native-served variants.)
 pub struct CompiledProgram {
-    pub kernel: &'static NativeKernel,
+    pub kernel: Arc<KernelDef>,
     /// the input shapes this program was compiled for
     pub shapes: Vec<Vec<usize>>,
     /// specialized views + grid/loop geometry + output shapes
@@ -98,10 +98,10 @@ impl CompiledProgram {
 
 /// Compile a kernel for concrete input shapes (the expensive stage:
 /// arrangement specialization + affine lowering + probe verification).
-pub fn compile(kernel: &'static NativeKernel, shapes: &[&[usize]]) -> Result<CompiledProgram> {
+pub fn compile(kernel: &Arc<KernelDef>, shapes: &[&[usize]]) -> Result<CompiledProgram> {
     let spec = kernel.specialize_shapes(shapes)?;
     Ok(CompiledProgram {
-        kernel,
+        kernel: kernel.clone(),
         shapes: shapes.iter().map(|s| s.to_vec()).collect(),
         spec,
     })
@@ -153,12 +153,12 @@ impl PlanCache {
     /// Hits themselves are O(1) (hash lookup + timestamp bump).
     pub fn prepare(
         &self,
-        kernel: &'static NativeKernel,
+        kernel: &Arc<KernelDef>,
         variant: &str,
         shapes: &[&[usize]],
     ) -> Result<Arc<CompiledProgram>> {
         let key = PlanKey {
-            kernel: kernel.name,
+            kernel: kernel.name.clone(),
             variant: intern_variant(variant),
             shapes: shapes.iter().map(|s| s.to_vec()).collect(),
         };
@@ -231,9 +231,9 @@ mod tests {
         let cache = PlanCache::new(8);
         let mm = lookup("mm").unwrap();
         let shapes = mm_shapes(40, 30, 20);
-        let first = cache.prepare(mm, "nt", &refs(&shapes)).unwrap();
+        let first = cache.prepare(&mm, "nt", &refs(&shapes)).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
-        let second = cache.prepare(mm, "nt", &refs(&shapes)).unwrap();
+        let second = cache.prepare(&mm, "nt", &refs(&shapes)).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert!(Arc::ptr_eq(&first, &second), "warm prepare must return the same program");
     }
@@ -244,14 +244,14 @@ mod tests {
         // not collide into one plan
         let cache = PlanCache::new(8);
         let mm = lookup("mm").unwrap();
-        let a = cache.prepare(mm, "nt", &refs(&mm_shapes(64, 64, 64))).unwrap();
-        let b = cache.prepare(mm, "nt", &refs(&mm_shapes(64, 64, 32))).unwrap();
+        let a = cache.prepare(&mm, "nt", &refs(&mm_shapes(64, 64, 64))).unwrap();
+        let b = cache.prepare(&mm, "nt", &refs(&mm_shapes(64, 64, 32))).unwrap();
         assert!(!Arc::ptr_eq(&a, &b));
         assert_eq!(a.spec.output_shapes, vec![vec![64, 64]]);
         assert_eq!(b.spec.output_shapes, vec![vec![64, 32]]);
         assert_eq!(cache.misses(), 2);
         // variants key separately too
-        cache.prepare(mm, "baseline", &refs(&mm_shapes(64, 64, 64))).unwrap();
+        cache.prepare(&mm, "baseline", &refs(&mm_shapes(64, 64, 64))).unwrap();
         assert_eq!(cache.misses(), 3);
     }
 
@@ -262,9 +262,9 @@ mod tests {
         let shapes = mm_shapes(48, 48, 48);
         let mut handles = Vec::new();
         for _ in 0..8 {
-            let (cache, shapes) = (cache.clone(), shapes.clone());
+            let (cache, shapes, mm) = (cache.clone(), shapes.clone(), mm.clone());
             handles.push(std::thread::spawn(move || {
-                cache.prepare(mm, "nt", &refs(&shapes)).unwrap()
+                cache.prepare(&mm, "nt", &refs(&shapes)).unwrap()
             }));
         }
         let plans: Vec<Arc<CompiledProgram>> =
@@ -278,16 +278,16 @@ mod tests {
     fn lru_eviction_respects_capacity() {
         let cache = PlanCache::new(2);
         let mm = lookup("mm").unwrap();
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
         // touch the first so the second is the LRU victim
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 24))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 24))).unwrap();
         assert_eq!(cache.len(), 2);
         let miss_before = cache.misses();
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
         assert_eq!(cache.misses(), miss_before, "touched entry must have survived");
-        cache.prepare(mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
         assert_eq!(cache.misses(), miss_before + 1, "LRU victim must recompile");
     }
 
@@ -296,7 +296,7 @@ mod tests {
         let cache = PlanCache::new(8);
         let mm = lookup("mm").unwrap();
         let bad = vec![vec![4usize, 3], vec![5usize, 4]]; // inner-dim mismatch
-        assert!(cache.prepare(mm, "nt", &refs(&bad)).is_err());
+        assert!(cache.prepare(&mm, "nt", &refs(&bad)).is_err());
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 0, 0));
     }
 
@@ -304,7 +304,7 @@ mod tests {
     fn compiled_program_rejects_mismatched_inputs() {
         let mm = lookup("mm").unwrap();
         let shapes = mm_shapes(16, 8, 12);
-        let compiled = compile(mm, &refs(&shapes)).unwrap();
+        let compiled = compile(&mm, &refs(&shapes)).unwrap();
         let mut rng = SplitMix64::new(5);
         let good_a = HostTensor::randn(vec![16, 8], &mut rng);
         let good_b = HostTensor::randn(vec![8, 12], &mut rng);

@@ -41,6 +41,11 @@ pub enum Instr {
     DotAcc { acc: Reg, a_param: usize, b_param: usize },
     /// Broadcast register `a` to the block shape of a parameter.
     Broadcast { dst: Reg, a: Reg, like_param: usize },
+    /// Split a tile into two equal halves along `axis` (the `x[:half]` /
+    /// `x[half:]` idiom of the rope application; extent must be even).
+    SplitHalf { lo: Reg, hi: Reg, a: Reg, axis: usize },
+    /// Concatenate two tiles along `axis` (`ntl.cat`).
+    Concat { dst: Reg, a: Reg, b: Reg, axis: usize },
     /// Iterate the body once per sub-tile (the `for k in range(...)` of
     /// the mm application).  Loops do not nest.
     Loop { body: Vec<Instr> },
@@ -82,6 +87,8 @@ impl TileProgram {
                     Instr::Broadcast { dst, a, like_param } => {
                         (vec![*dst, *a], vec![*like_param])
                     }
+                    Instr::SplitHalf { lo, hi, a, .. } => (vec![*lo, *hi, *a], vec![]),
+                    Instr::Concat { dst, a, b, .. } => (vec![*dst, *a, *b], vec![]),
                     Instr::Loop { body } => {
                         if in_loop {
                             bail!("tile programs do not support nested loops");
@@ -278,6 +285,15 @@ fn run_block(
             }
             Instr::Broadcast { dst, a, like_param } => {
                 let t = get(regs, *a)?.broadcast_to(&views[*like_param].block_shape)?;
+                regs[*dst] = Some(t);
+            }
+            Instr::SplitHalf { lo, hi, a, axis } => {
+                let (first, second) = get(regs, *a)?.split_half(*axis)?;
+                regs[*lo] = Some(first);
+                regs[*hi] = Some(second);
+            }
+            Instr::Concat { dst, a, b, axis } => {
+                let t = get(regs, *a)?.concat(get(regs, *b)?, *axis)?;
                 regs[*dst] = Some(t);
             }
             Instr::Loop { body } => {

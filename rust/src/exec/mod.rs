@@ -35,9 +35,12 @@
 //! * [`view`] — strided [`view::ParamView`]s: an arrangement's index
 //!   expressions lowered (and probe-verified) to affine gather/scatter
 //!   over [`crate::runtime::HostTensor`] buffers, with pad-value edges;
-//! * [`native`] — the kernel catalog (add, silu, gelu, softmax, rms_norm,
-//!   layer_norm, mm, bmm, addmm): shape-only arrangement specializers +
-//!   tile programs, plus the per-kernel coalescing eligibility flag;
+//! * [`native`] — resolution façade over [`crate::kernel`]: kernels are
+//!   *declared* through `kernel::make(arrangement, application, tensors)`
+//!   (the paper's §3.1 API) and registered in the global
+//!   `kernel::KernelRegistry`; shape checks, output inference, the
+//!   per-shape specializer and the coalescing eligibility flag are all
+//!   derived from the declaration;
 //! * [`compile`] — the compile stage and the concurrent [`PlanCache`];
 //! * [`pool`] — the **persistent worker pool** every parallel execution
 //!   shares: grid launches and `DotAcc`'s intra-tile row split dispatch
@@ -69,7 +72,7 @@ pub mod view;
 
 pub use compile::{compile, CompiledProgram, PlanCache, PlanKey};
 pub use ir::{Instr, TileProgram};
-pub use native::{kernels, lookup, NativeKernel, Specialization};
+pub use native::{kernels, lookup, KernelDef, Specialization};
 pub use pool::WorkerPool;
 pub use scheduler::GridScheduler;
 pub use tile::{BinOp, ReduceOp, Tile, UnaryOp};
@@ -207,6 +210,9 @@ mod tests {
         let mut rng = SplitMix64::new(28);
         let a = randn(&[8, 4], &mut rng);
         let b = randn(&[4, 6], &mut rng);
+        // [5]/[8, 5] fail size-symbol unification, [2, 6] fails the
+        // broadcast constraint, [1, 1, 6] fails the rank check — all are
+        // derived preconditions, all clean admission errors
         for bad in [vec![5usize], vec![8, 5], vec![2, 6], vec![1, 1, 6]] {
             let bias = randn(&bad, &mut rng);
             let err = run_native(
@@ -215,8 +221,11 @@ mod tests {
                 &GridScheduler::serial(),
             )
             .unwrap_err();
-            assert!(format!("{err:#}").contains("broadcast"), "{bad:?}: {err:#}");
+            assert!(format!("{err:#}").contains("addmm"), "{bad:?}: {err:#}");
         }
+        let bias = randn(&[2, 6], &mut rng);
+        let err = run_native("addmm", &[bias, a, b], &GridScheduler::serial()).unwrap_err();
+        assert!(format!("{err:#}").contains("broadcast"), "{err:#}");
     }
 
     #[test]
@@ -317,7 +326,7 @@ mod tests {
         let cache = PlanCache::new(4);
         let mm = lookup("mm").unwrap();
         let shapes: Vec<&[usize]> = [&a, &b].iter().map(|t| t.shape.as_slice()).collect();
-        let compiled = cache.prepare(mm, "nt", &shapes).unwrap();
+        let compiled = cache.prepare(&mm, "nt", &shapes).unwrap();
         let sched = GridScheduler::serial();
         let blocked = compiled.execute(&[a.clone(), b.clone()], &sched).unwrap();
         set_naive_dot_forced(true);
@@ -345,7 +354,7 @@ mod tests {
         for kernel in kernels().iter().filter(|k| k.coalesce) {
             let per_request: Vec<Vec<HostTensor>> = (0..3)
                 .map(|_| {
-                    crate::harness::golden::native_task_inputs(kernel.name, &mut rng).unwrap()
+                    crate::harness::golden::native_task_inputs(&kernel.name, &mut rng).unwrap()
                 })
                 .collect();
             let singles: Vec<Vec<HostTensor>> = per_request

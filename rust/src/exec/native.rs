@@ -1,589 +1,12 @@
-//! The native kernel catalog: tile programs + arrangement specializers
-//! for the kernels the exec backend can compute without AOT artifacts.
+//! Native kernel resolution — now a thin façade over [`crate::kernel`].
 //!
-//! Each entry pairs a catalog arrangement (`crate::arrange::catalog`, the
-//! paper Listings re-derived against the Rust tensor mirror) with a tile
-//! program mirroring the Python application function.  Unlike artifacts,
-//! native kernels are *shape-polymorphic*: specialization happens per
-//! shape bucket, exactly as the DSL would re-specialize for a new shape.
-//!
-//! Specializers are functions of **shapes only** — no tensor data — which
-//! is what lets `exec::compile` memoize the result in the plan cache:
-//! a [`Specialization`] computed for `[m, k] x [k, n]` serves every later
-//! request with those shapes, without re-lowering a single view.
+//! The hardcoded catalog that used to live here (a static slice of
+//! hand-wired entries, each with bespoke arity, shape-check, specializer
+//! and coalesce-flag code) was replaced by the first-class
+//! `kernel::make(arrangement, application, tensors)` API: every builtin
+//! is declared in [`crate::kernel::builtins`] and everything that was
+//! hand-written here is derived by [`crate::kernel::make`].  This module
+//! keeps the execution-side names (`lookup`, `kernels`,
+//! [`Specialization`]) stable for the rest of the crate.
 
-use std::collections::BTreeMap;
-use std::sync::OnceLock;
-
-use anyhow::{bail, Result};
-
-use super::ir::{Instr, TileProgram};
-use super::scheduler::GridScheduler;
-use super::tile::{BinOp, ReduceOp, UnaryOp};
-use super::view::ParamView;
-use crate::arrange::catalog;
-use crate::runtime::HostTensor;
-use crate::tensor::SymTensor;
-
-/// A fully specialized launch: concrete views + output shapes.
-pub struct Specialization {
-    pub grid: Vec<i64>,
-    pub loop_shape: Vec<usize>,
-    pub views: Vec<ParamView>,
-    pub output_shapes: Vec<Vec<usize>>,
-}
-
-impl Specialization {
-    pub fn programs(&self) -> i64 {
-        self.grid.iter().product::<i64>().max(1)
-    }
-}
-
-pub struct NativeKernel {
-    pub name: &'static str,
-    /// number of input (non-output) parameters
-    pub arity: usize,
-    pub program: TileProgram,
-    /// same-shape requests may be stacked along dim 0 into one launch
-    /// (element-wise / row-independent kernels only): the batcher's native
-    /// coalescing path consults this
-    pub coalesce: bool,
-    /// cheap shape preconditions (no lowering) — what admission runs
-    shape_check: fn(&[&[usize]]) -> Result<()>,
-    specialize: fn(&[&[usize]]) -> Result<Specialization>,
-}
-
-impl NativeKernel {
-    /// Shape-only admission checks: arity, rank / zero-length dims, and
-    /// the kernel's shape preconditions.  No affine lowering.
-    pub fn check_shapes(&self, shapes: &[&[usize]]) -> Result<()> {
-        if shapes.len() != self.arity {
-            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, shapes.len());
-        }
-        for (i, s) in shapes.iter().enumerate() {
-            if s.is_empty() {
-                bail!(
-                    "kernel {}: input {i} is rank-0 (scalar tensors are not tileable)",
-                    self.name
-                );
-            }
-            if s.iter().any(|&d| d == 0) {
-                bail!("kernel {}: input {i} has a zero-length dimension {s:?}", self.name);
-            }
-        }
-        (self.shape_check)(shapes)
-    }
-
-    /// Cheap admission-time validation over concrete tensors: the shape
-    /// checks plus dtype.  The router calls this per request; the
-    /// expensive specialization happens once per shape, in the compile
-    /// stage.
-    pub fn check(&self, inputs: &[HostTensor]) -> Result<()> {
-        if inputs.len() != self.arity {
-            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, inputs.len());
-        }
-        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
-        self.check_shapes(&shapes)?;
-        for (i, t) in inputs.iter().enumerate() {
-            t.as_f32()
-                .map_err(|_| anyhow::anyhow!("kernel {}: input {i} must be f32", self.name))?;
-        }
-        Ok(())
-    }
-
-    /// Validate shapes and compute the concrete launch for them — the
-    /// expensive stage `exec::compile` runs once per shape signature.
-    pub fn specialize_shapes(&self, shapes: &[&[usize]]) -> Result<Specialization> {
-        self.check_shapes(shapes)?;
-        (self.specialize)(shapes)
-    }
-
-    /// Validate inputs and compute the concrete launch for them.
-    pub fn specialize(&self, inputs: &[HostTensor]) -> Result<Specialization> {
-        self.check(inputs)?;
-        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
-        (self.specialize)(&shapes)
-    }
-
-    /// Compile-and-execute in one step (uncached — callers that serve
-    /// repeated traffic go through `exec::PlanCache` instead).
-    pub fn run(&self, inputs: &[HostTensor], scheduler: &GridScheduler) -> Result<Vec<HostTensor>> {
-        let spec = self.specialize(inputs)?;
-        let refs: Vec<&HostTensor> = inputs.iter().collect();
-        scheduler.run(&self.program, &spec.views, &refs, &spec.output_shapes)
-    }
-}
-
-/// Look up a native kernel by name.
-pub fn lookup(name: &str) -> Option<&'static NativeKernel> {
-    kernels().iter().find(|k| k.name == name)
-}
-
-/// All native kernels.
-pub fn kernels() -> &'static [NativeKernel] {
-    static CATALOG: OnceLock<Vec<NativeKernel>> = OnceLock::new();
-    CATALOG.get_or_init(build_catalog)
-}
-
-// -- specialization helpers ---------------------------------------------------
-
-fn bind(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
-    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
-}
-
-/// Size bindings `<name>_size_<d>` for one parameter.
-fn bind_sizes(bindings: &mut BTreeMap<String, i64>, name: &str, shape: &[usize]) {
-    for (d, &s) in shape.iter().enumerate() {
-        bindings.insert(format!("{name}_size_{d}"), s as i64);
-    }
-}
-
-/// Element-wise block size: a power of two covering small inputs exactly.
-fn elementwise_block(n: usize) -> i64 {
-    (n.next_power_of_two() as i64).min(4096)
-}
-
-fn build_spec(
-    tensors: &[SymTensor],
-    bindings: &BTreeMap<String, i64>,
-    shapes: &[&[usize]],
-    is_output: &[bool],
-    pad_values: &[f32],
-) -> Result<Specialization> {
-    let mut views = Vec::new();
-    for (((t, shape), &out), &pad) in
-        tensors.iter().zip(shapes).zip(is_output).zip(pad_values)
-    {
-        views.push(ParamView::specialize(t, bindings, shape, out, pad)?);
-    }
-    let grid = views[0].grid.clone();
-    for v in &views {
-        if v.grid != grid {
-            bail!(
-                "outermost-level shapes disagree: {:?} ({}) vs {grid:?} (paper §3.2.1)",
-                v.grid,
-                v.name
-            );
-        }
-    }
-    let mut loop_shape = Vec::new();
-    for v in &views {
-        if !v.loop_shape.is_empty() {
-            if loop_shape.is_empty() {
-                loop_shape = v.loop_shape.clone();
-            } else if loop_shape != v.loop_shape {
-                bail!("loop-level shapes disagree: {:?} ({})", v.loop_shape, v.name);
-            }
-        }
-    }
-    let output_shapes = views
-        .iter()
-        .zip(shapes)
-        .filter(|(v, _)| v.is_output)
-        .map(|(_, s)| s.to_vec())
-        .collect();
-    Ok(Specialization { grid, loop_shape, views, output_shapes })
-}
-
-// -- per-kernel shape preconditions -------------------------------------------
-
-fn check_add(shapes: &[&[usize]]) -> Result<()> {
-    let (a, b) = (shapes[0], shapes[1]);
-    if a.len() != 1 || a != b {
-        bail!("add expects two equal 1-D tensors, got {a:?} and {b:?}");
-    }
-    Ok(())
-}
-
-fn check_1d(shapes: &[&[usize]]) -> Result<()> {
-    if shapes[0].len() != 1 {
-        bail!("expected a 1-D tensor, got {:?}", shapes[0]);
-    }
-    Ok(())
-}
-
-fn check_2d(shapes: &[&[usize]]) -> Result<()> {
-    if shapes[0].len() != 2 {
-        bail!("expected a 2-D tensor, got {:?}", shapes[0]);
-    }
-    Ok(())
-}
-
-fn check_mm(shapes: &[&[usize]]) -> Result<()> {
-    let (a, b) = (shapes[0], shapes[1]);
-    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
-        bail!("mm expects [m,k] x [k,n], got {a:?} and {b:?}");
-    }
-    Ok(())
-}
-
-fn check_bmm(shapes: &[&[usize]]) -> Result<()> {
-    let (a, b) = (shapes[0], shapes[1]);
-    if a.len() != 3 || b.len() != 3 || a[0] != b[0] || a[2] != b[1] {
-        bail!("bmm expects [b,m,k] x [b,k,n], got {a:?} and {b:?}");
-    }
-    Ok(())
-}
-
-fn check_addmm(shapes: &[&[usize]]) -> Result<()> {
-    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
-    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
-        bail!("addmm expects mat1 [m,k] x mat2 [k,n], got {a:?} and {b:?}");
-    }
-    let (m, n) = (a[0], b[1]);
-    let broadcastable = match bias.len() {
-        1 => bias[0] == n,
-        2 => (bias[0] == 1 || bias[0] == m) && bias[1] == n,
-        _ => false,
-    };
-    if !broadcastable {
-        bail!(
-            "addmm bias {bias:?} does not broadcast to the [{m}, {n}] output \
-             (expected [{n}], [1, {n}], or [{m}, {n}])"
-        );
-    }
-    Ok(())
-}
-
-// -- per-kernel specializers --------------------------------------------------
-
-fn spec_add(shapes: &[&[usize]]) -> Result<Specialization> {
-    check_add(shapes)?;
-    let a = shapes[0];
-    let n = a[0];
-    let tensors = catalog::add()?;
-    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(n))]);
-    for name in ["input", "other", "output"] {
-        bind_sizes(&mut bindings, name, a);
-    }
-    build_spec(&tensors, &bindings, &[a, a, a], &[false, false, true], &[0.0, 0.0, 0.0])
-}
-
-fn spec_silu(shapes: &[&[usize]]) -> Result<Specialization> {
-    check_1d(shapes)?;
-    let a = shapes[0];
-    let tensors = catalog::elementwise_1d(&["input", "output"])?;
-    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(a[0]))]);
-    bind_sizes(&mut bindings, "input", a);
-    bind_sizes(&mut bindings, "output", a);
-    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[0.0, 0.0])
-}
-
-/// gelu shares silu's 1-D element-wise arrangement.
-fn spec_gelu(shapes: &[&[usize]]) -> Result<Specialization> {
-    spec_silu(shapes)
-}
-
-fn spec_rowwise(pad: f32, shapes: &[&[usize]]) -> Result<Specialization> {
-    check_2d(shapes)?;
-    let a = shapes[0];
-    let tensors = catalog::rowwise()?;
-    let mut bindings = BTreeMap::new();
-    bind_sizes(&mut bindings, "input", a);
-    bind_sizes(&mut bindings, "output", a);
-    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[pad, 0.0])
-}
-
-fn spec_softmax(shapes: &[&[usize]]) -> Result<Specialization> {
-    spec_rowwise(f32::NEG_INFINITY, shapes)
-}
-
-fn spec_rms_norm(shapes: &[&[usize]]) -> Result<Specialization> {
-    spec_rowwise(0.0, shapes)
-}
-
-/// layer_norm shares the rowwise arrangement (one program per row; the
-/// block is the whole row, so no pad value ever participates).
-fn spec_layer_norm(shapes: &[&[usize]]) -> Result<Specialization> {
-    spec_rowwise(0.0, shapes)
-}
-
-const MM_BLOCK: i64 = 32;
-
-/// Matmul tiling for concrete `[m, k] x [k, n]` sizes.  Small problems
-/// keep the legacy 32-wide blocks (one gather per tile, no packing
-/// overhead); larger ones take 64x64 output tiles with K panels up to
-/// 256 deep, so the fused `DotAcc` GEMM amortizes packing while the grid
-/// still fans out across the worker pool (8x8 cells for a 512^3 mm).
-fn mm_blocks(m: usize, k: usize, n: usize) -> (i64, i64, i64) {
-    if m.max(n).max(k) <= 128 {
-        (MM_BLOCK, MM_BLOCK, MM_BLOCK)
-    } else {
-        (64, 64, k.min(256) as i64)
-    }
-}
-
-fn spec_mm(shapes: &[&[usize]]) -> Result<Specialization> {
-    check_mm(shapes)?;
-    let (a, b) = (shapes[0], shapes[1]);
-    let out = vec![a[0], b[1]];
-    let tensors = catalog::mm()?;
-    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
-    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
-    bind_sizes(&mut bindings, "input", a);
-    bind_sizes(&mut bindings, "other", b);
-    bind_sizes(&mut bindings, "output", &out);
-    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
-}
-
-fn spec_bmm(shapes: &[&[usize]]) -> Result<Specialization> {
-    check_bmm(shapes)?;
-    let (a, b) = (shapes[0], shapes[1]);
-    let out = vec![a[0], a[1], b[2]];
-    let tensors = catalog::bmm()?;
-    let (bm, bn, bk) = mm_blocks(a[1], a[2], b[2]);
-    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
-    bind_sizes(&mut bindings, "input", a);
-    bind_sizes(&mut bindings, "other", b);
-    bind_sizes(&mut bindings, "output", &out);
-    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
-}
-
-/// addmm = mm + broadcast bias epilogue.  A rank-1 (or `[1, n]`) bias
-/// lowers as a `[1, n]` view whose row-grid dimension is expanded —
-/// every output row tile loads the same bias tile; a full `[m, n]` bias
-/// is tiled exactly like the output.
-fn spec_addmm(shapes: &[&[usize]]) -> Result<Specialization> {
-    check_addmm(shapes)?;
-    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
-    let out = vec![a[0], b[1]];
-    let bias2d: Vec<usize> = if bias.len() == 1 { vec![1, bias[0]] } else { bias.to_vec() };
-    let row_bias = bias2d[0] == 1;
-    let tensors = catalog::addmm(row_bias)?;
-    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
-    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
-    bind_sizes(&mut bindings, "bias", &bias2d);
-    bind_sizes(&mut bindings, "input", a);
-    bind_sizes(&mut bindings, "other", b);
-    bind_sizes(&mut bindings, "output", &out);
-    build_spec(
-        &tensors,
-        &bindings,
-        &[&bias2d, a, b, &out],
-        &[false, false, false, true],
-        &[0.0, 0.0, 0.0, 0.0],
-    )
-}
-
-// -- tile programs ------------------------------------------------------------
-
-fn program_add() -> TileProgram {
-    TileProgram {
-        name: "add",
-        regs: 3,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Load { dst: 1, param: 1 },
-            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
-            Instr::Store { param: 2, src: 2 },
-        ],
-    }
-}
-
-fn program_silu() -> TileProgram {
-    TileProgram {
-        name: "silu",
-        regs: 3,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Unary { dst: 1, a: 0, op: UnaryOp::Sigmoid },
-            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Mul },
-            Instr::Store { param: 1, src: 2 },
-        ],
-    }
-}
-
-/// tanh-approximated GELU via the identity `1 + tanh(y) = 2*sigmoid(2y)`:
-/// `gelu(x) = 0.5*x*(1 + tanh(sqrt(2/pi)*(x + 0.044715*x^3)))
-///          = x * sigmoid(2*sqrt(2/pi)*(x + 0.044715*x^3))`,
-/// which needs only the existing Mul/Add/Const/Sigmoid ops.
-fn program_gelu() -> TileProgram {
-    // 2 * sqrt(2 / pi)
-    const TWO_SQRT_2_OVER_PI: f32 = 1.595_769_1;
-    const CUBIC: f32 = 0.044_715;
-    TileProgram {
-        name: "gelu",
-        regs: 10,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
-            Instr::Binary { dst: 2, a: 1, b: 0, op: BinOp::Mul },
-            Instr::Const { dst: 3, value: CUBIC },
-            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Mul },
-            Instr::Binary { dst: 5, a: 0, b: 4, op: BinOp::Add },
-            Instr::Const { dst: 6, value: TWO_SQRT_2_OVER_PI },
-            Instr::Binary { dst: 7, a: 5, b: 6, op: BinOp::Mul },
-            Instr::Unary { dst: 8, a: 7, op: UnaryOp::Sigmoid },
-            Instr::Binary { dst: 9, a: 0, b: 8, op: BinOp::Mul },
-            Instr::Store { param: 1, src: 9 },
-        ],
-    }
-}
-
-fn program_softmax() -> TileProgram {
-    TileProgram {
-        name: "softmax",
-        regs: 6,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Max },
-            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
-            Instr::Unary { dst: 3, a: 2, op: UnaryOp::Exp },
-            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Sum },
-            Instr::Binary { dst: 5, a: 3, b: 4, op: BinOp::Div },
-            Instr::Store { param: 1, src: 5 },
-        ],
-    }
-}
-
-fn program_rms_norm() -> TileProgram {
-    TileProgram {
-        name: "rms_norm",
-        regs: 7,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
-            Instr::Reduce { dst: 2, a: 1, axis: None, op: ReduceOp::Mean },
-            Instr::Const { dst: 3, value: 1e-6 },
-            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Add },
-            Instr::Unary { dst: 5, a: 4, op: UnaryOp::Rsqrt },
-            Instr::Binary { dst: 6, a: 0, b: 5, op: BinOp::Mul },
-            Instr::Store { param: 1, src: 6 },
-        ],
-    }
-}
-
-/// `layer_norm(x) = (x - mean(x)) * rsqrt(var(x) + eps)` over each row
-/// (no affine weight/bias, eps = 1e-6 — consistent with rms_norm).
-fn program_layer_norm() -> TileProgram {
-    TileProgram {
-        name: "layer_norm",
-        regs: 9,
-        instrs: vec![
-            Instr::Load { dst: 0, param: 0 },
-            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Mean },
-            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
-            Instr::Binary { dst: 3, a: 2, b: 2, op: BinOp::Mul },
-            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Mean },
-            Instr::Const { dst: 5, value: 1e-6 },
-            Instr::Binary { dst: 6, a: 4, b: 5, op: BinOp::Add },
-            Instr::Unary { dst: 7, a: 6, op: UnaryOp::Rsqrt },
-            Instr::Binary { dst: 8, a: 2, b: 7, op: BinOp::Mul },
-            Instr::Store { param: 1, src: 8 },
-        ],
-    }
-}
-
-/// The mm/bmm application: `acc = zeros(output.shape); for k: acc +=
-/// dot(input[k], other[k]); output = acc` — identical for both kernels
-/// because the arrangements reduce both to the same tile-level view.
-/// The k-loop body is the fused `DotAcc`, which consumes the parameter
-/// views directly through the blocked GEMM (no materialized tiles on
-/// dense interior cells; gather fallback at padded edges).
-fn program_matmul(name: &'static str) -> TileProgram {
-    TileProgram {
-        name,
-        regs: 1,
-        instrs: vec![
-            Instr::Zeros { dst: 0, like_param: 2 },
-            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }] },
-            Instr::Store { param: 2, src: 0 },
-        ],
-    }
-}
-
-/// The addmm application: the mm k-loop followed by a broadcast bias add
-/// (`output = acc + bias`).  Parameters are `[bias, input, other, output]`
-/// (torch.addmm argument order, output last); the bias tile is `[1, BN]`
-/// for broadcast biases and `[BM, BN]` for full ones — the element-wise
-/// add broadcasts either onto the accumulator.
-fn program_addmm() -> TileProgram {
-    TileProgram {
-        name: "addmm",
-        regs: 3,
-        instrs: vec![
-            Instr::Zeros { dst: 0, like_param: 3 },
-            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 1, b_param: 2 }] },
-            Instr::Load { dst: 1, param: 0 },
-            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
-            Instr::Store { param: 3, src: 2 },
-        ],
-    }
-}
-
-fn build_catalog() -> Vec<NativeKernel> {
-    vec![
-        NativeKernel {
-            name: "add",
-            arity: 2,
-            program: program_add(),
-            coalesce: true,
-            shape_check: check_add,
-            specialize: spec_add,
-        },
-        NativeKernel {
-            name: "silu",
-            arity: 1,
-            program: program_silu(),
-            coalesce: true,
-            shape_check: check_1d,
-            specialize: spec_silu,
-        },
-        NativeKernel {
-            name: "gelu",
-            arity: 1,
-            program: program_gelu(),
-            coalesce: true,
-            shape_check: check_1d,
-            specialize: spec_gelu,
-        },
-        NativeKernel {
-            name: "softmax",
-            arity: 1,
-            program: program_softmax(),
-            coalesce: true,
-            shape_check: check_2d,
-            specialize: spec_softmax,
-        },
-        NativeKernel {
-            name: "rms_norm",
-            arity: 1,
-            program: program_rms_norm(),
-            coalesce: true,
-            shape_check: check_2d,
-            specialize: spec_rms_norm,
-        },
-        NativeKernel {
-            name: "layer_norm",
-            arity: 1,
-            program: program_layer_norm(),
-            coalesce: true,
-            shape_check: check_2d,
-            specialize: spec_layer_norm,
-        },
-        NativeKernel {
-            name: "mm",
-            arity: 2,
-            program: program_matmul("mm"),
-            coalesce: false,
-            shape_check: check_mm,
-            specialize: spec_mm,
-        },
-        NativeKernel {
-            name: "bmm",
-            arity: 2,
-            program: program_matmul("bmm"),
-            coalesce: false,
-            shape_check: check_bmm,
-            specialize: spec_bmm,
-        },
-        NativeKernel {
-            name: "addmm",
-            arity: 3,
-            program: program_addmm(),
-            coalesce: false,
-            shape_check: check_addmm,
-            specialize: spec_addmm,
-        },
-    ]
-}
+pub use crate::kernel::{kernels, lookup, KernelDef, Specialization};

@@ -175,10 +175,51 @@ pub fn bmm(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
     HostTensor::f32(vec![batch, m, n], out)
 }
 
+/// Rotary position embedding, half-rotation (Llama) convention.
+/// `input` is `[B, S, H, D]`; `cos`/`sin` are `[S, D/2]` tables applied
+/// per position, broadcast over batch and heads (f64 arithmetic).
+pub fn rope(input: &HostTensor, cos: &HostTensor, sin: &HostTensor) -> Result<HostTensor> {
+    let x = input.as_f32()?;
+    if input.shape.len() != 4 {
+        bail!("rope expects a 4-D input, got {:?}", input.shape);
+    }
+    let (b, s, h, d) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    if d % 2 != 0 {
+        bail!("rope needs an even head dimension, got {d}");
+    }
+    let half = d / 2;
+    let want = vec![s, half];
+    if cos.shape != want || sin.shape != want {
+        bail!(
+            "rope cos/sin tables must be {want:?}, got {:?} and {:?}",
+            cos.shape,
+            sin.shape
+        );
+    }
+    let (c, sn) = (cos.as_f32()?, sin.as_f32()?);
+    let mut out = vec![0.0f32; b * s * h * d];
+    for bi in 0..b {
+        for si in 0..s {
+            for hi in 0..h {
+                let row = ((bi * s + si) * h + hi) * d;
+                for i in 0..half {
+                    let x1 = x[row + i] as f64;
+                    let x2 = x[row + half + i] as f64;
+                    let cv = c[si * half + i] as f64;
+                    let sv = sn[si * half + i] as f64;
+                    out[row + i] = (x1 * cv - x2 * sv) as f32;
+                    out[row + half + i] = (x2 * cv + x1 * sv) as f32;
+                }
+            }
+        }
+    }
+    HostTensor::f32(input.shape.clone(), out)
+}
+
 /// Kernels [`run`] can dispatch — the single source of truth the router
 /// and registry consult before admitting a `ref`-variant fallback.
 pub const SUPPORTED: &[&str] =
-    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm"];
+    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm", "rope"];
 
 /// True if a reference oracle exists for this kernel.
 pub fn supports(name: &str) -> bool {
@@ -230,6 +271,10 @@ pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         "addmm" => {
             need(3)?;
             addmm(&inputs[0], &inputs[1], &inputs[2])?
+        }
+        "rope" => {
+            need(3)?;
+            rope(&inputs[0], &inputs[1], &inputs[2])?
         }
         other => bail!("no reference implementation for kernel {other:?}"),
     };

@@ -247,6 +247,66 @@ impl Tile {
         })
     }
 
+    /// Split the tile into two equal halves along `axis` (the `x[:half]` /
+    /// `x[half:]` idiom of rotary-embedding application functions).  The
+    /// axis extent must be even.
+    pub fn split_half(&self, axis: usize) -> Result<(Tile, Tile)> {
+        let rank = self.shape.len();
+        if axis >= rank {
+            bail!("split_half axis {axis} out of range for shape {:?}", self.shape);
+        }
+        let len = self.shape[axis];
+        if len == 0 || len % 2 != 0 {
+            bail!("split_half needs an even extent along axis {axis}, got {:?}", self.shape);
+        }
+        let half = len / 2;
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let outer: usize = self.shape[..axis].iter().product();
+        let mut shape = self.shape.clone();
+        shape[axis] = half;
+        let mut lo = Vec::with_capacity(outer * half * inner);
+        let mut hi = Vec::with_capacity(outer * half * inner);
+        for o in 0..outer {
+            let base = o * len * inner;
+            lo.extend_from_slice(&self.data[base..base + half * inner]);
+            hi.extend_from_slice(&self.data[base + half * inner..base + len * inner]);
+        }
+        Ok((Tile { shape: shape.clone(), data: lo }, Tile { shape, data: hi }))
+    }
+
+    /// Concatenate two tiles along `axis` (the `ntl.cat` of the rope
+    /// application); all other extents must agree.
+    pub fn concat(&self, other: &Tile, axis: usize) -> Result<Tile> {
+        let rank = self.shape.len();
+        if other.shape.len() != rank || axis >= rank {
+            bail!(
+                "concat along axis {axis} needs equal-rank tiles, got {:?} and {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        for d in 0..rank {
+            if d != axis && self.shape[d] != other.shape[d] {
+                bail!(
+                    "concat along axis {axis}: extents disagree off-axis ({:?} vs {:?})",
+                    self.shape,
+                    other.shape
+                );
+            }
+        }
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let outer: usize = self.shape[..axis].iter().product();
+        let (la, lb) = (self.shape[axis], other.shape[axis]);
+        let mut shape = self.shape.clone();
+        shape[axis] = la + lb;
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        for o in 0..outer {
+            data.extend_from_slice(&self.data[o * la * inner..(o + 1) * la * inner]);
+            data.extend_from_slice(&other.data[o * lb * inner..(o + 1) * lb * inner]);
+        }
+        Ok(Tile { shape, data })
+    }
+
     /// Validated `[M, K] x [K, N]` dimensions for a matrix product.
     /// Rank and inner-dimension problems are reported here so every dot
     /// variant fails with the same clean error instead of relying on
@@ -397,6 +457,23 @@ mod tests {
                 assert!(msg.contains("rank-2"), "unexpected error: {msg}");
             }
         }
+    }
+
+    #[test]
+    fn split_half_and_concat_roundtrip() {
+        let t = Tile::new(vec![2, 4], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]).unwrap();
+        let (lo, hi) = t.split_half(1).unwrap();
+        assert_eq!(lo.shape, vec![2, 2]);
+        assert_eq!(lo.data, vec![0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(hi.data, vec![2.0, 3.0, 6.0, 7.0]);
+        assert_eq!(lo.concat(&hi, 1).unwrap(), t);
+        let (top, bottom) = t.split_half(0).unwrap();
+        assert_eq!(top.shape, vec![1, 4]);
+        assert_eq!(top.concat(&bottom, 0).unwrap(), t);
+        // odd extents and bad axes are clean errors
+        assert!(Tile::zeros(vec![3]).split_half(0).is_err());
+        assert!(t.split_half(2).is_err());
+        assert!(lo.concat(&Tile::zeros(vec![3, 2]), 1).is_err());
     }
 
     #[test]

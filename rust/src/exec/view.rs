@@ -250,6 +250,27 @@ impl ParamView {
         })
     }
 
+    /// Affine profile of source dimension `d` for structural analyses
+    /// (`kernel::make`'s row-independence derivation): the per-grid-axis
+    /// cell coefficients plus the widest spans the loop and block
+    /// variables sweep along that dim within one program instance.
+    pub(crate) fn dim_profile(&self, d: usize) -> (Vec<i64>, i64, i64) {
+        let aff = &self.index[d];
+        let sub_span: i64 = aff
+            .sub
+            .iter()
+            .zip(&self.loop_shape)
+            .map(|(coeff, &dim)| coeff.abs() * (dim as i64 - 1).max(0))
+            .sum();
+        let inner_span: i64 = aff
+            .inner
+            .iter()
+            .zip(&self.block_shape)
+            .map(|(coeff, &dim)| coeff.abs() * (dim as i64 - 1).max(0))
+            .sum();
+        (aff.cell.clone(), sub_span, inner_span)
+    }
+
     /// If the whole block at (cell, sub) maps to in-range source elements
     /// — no pad reads, no dropped writes — return its flat base offset
     /// plus one flat stride per block dimension.  The affine lowering

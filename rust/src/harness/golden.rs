@@ -19,12 +19,30 @@ const NATIVE_TOL: f32 = 1e-4;
 
 /// Cross-check every native tile program against its reference oracle,
 /// serial and pooled.  Returns the number of (kernel, scheduler) cases.
+/// The builtin kernels `check_native` must always cover — a builtin
+/// missing from the sweep (dropped fixtures, failed registration, or a
+/// regression to non-executable) is a loud failure, while fixture-less
+/// extras (conv2d until it is lowerable; runtime-registered custom
+/// kernels) are skipped.
+const GOLDEN_BUILTINS: &[&str] =
+    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm", "rope"];
+
 pub fn check_native() -> Result<usize> {
     let mut rng = SplitMix64::new(2025);
     let mut cases = 0;
+    let mut covered: Vec<String> = Vec::new();
     for kernel in exec::kernels() {
-        let inputs = native_task_inputs(kernel.name, &mut rng)?;
-        let expected = exec::reference::run(kernel.name, &inputs)?;
+        let Ok(inputs) = native_task_inputs(&kernel.name, &mut rng) else {
+            continue;
+        };
+        if !kernel.executable() {
+            bail!(
+                "kernel {} has smoke inputs but derived non-executable: {}",
+                kernel.name,
+                kernel.probe_error().unwrap_or("unknown probe failure")
+            );
+        }
+        let expected = exec::reference::run(&kernel.name, &inputs)?;
         for scheduler in [GridScheduler::serial(), GridScheduler::pooled(4)] {
             let got = kernel.run(&inputs, &scheduler)?;
             for (g, e) in got.iter().zip(&expected) {
@@ -33,7 +51,7 @@ pub fn check_native() -> Result<usize> {
                     bail!(
                         "native {} ({} threads): max|diff| = {diff} > {NATIVE_TOL}",
                         kernel.name,
-                        scheduler.threads
+                        scheduler.threads,
                     );
                 }
                 println!(
@@ -42,6 +60,12 @@ pub fn check_native() -> Result<usize> {
                 );
             }
             cases += 1;
+        }
+        covered.push(kernel.name.clone());
+    }
+    for name in GOLDEN_BUILTINS {
+        if !covered.iter().any(|c| c == name) {
+            bail!("builtin kernel {name} was not golden-checked (missing or not registered)");
         }
     }
     Ok(cases)
@@ -71,6 +95,11 @@ pub fn native_task_inputs(name: &str, rng: &mut SplitMix64) -> Result<Vec<HostTe
             HostTensor::randn(vec![90], rng), // rank-1 bias: broadcast over rows
             HostTensor::randn(vec![70, 50], rng),
             HostTensor::randn(vec![50, 90], rng),
+        ],
+        "rope" => vec![
+            HostTensor::randn(vec![2, 7, 3, 16], rng),
+            HostTensor::randn(vec![7, 8], rng),
+            HostTensor::randn(vec![7, 8], rng),
         ],
         other => bail!("no native task inputs for kernel {other:?}"),
     })

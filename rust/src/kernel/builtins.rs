@@ -1,0 +1,367 @@
+//! The builtin kernel catalog, declared **only** through [`make`]: each
+//! entry pairs a catalog arrangement (`crate::arrange::catalog`, the
+//! paper Listings re-derived against the Rust tensor mirror) with an
+//! application authored through [`AppBuilder`] and the kernel's symbolic
+//! tensors.  Arity, shape preconditions, output inference, the per-shape
+//! specializer and the coalescibility flag are all derived by `make` —
+//! nothing here is hand-wired per kernel beyond the declaration itself.
+//!
+//! `rope` is the proof of the API: a new kernel shipped with zero edits
+//! to the execution subsystem.  `conv2d` declares the paper's
+//! implicit-GEMM arrangement (Listing 8); its `%`/`//` index mapping is
+//! not affine, so `make` derives it as non-executable and admission
+//! rejects it cleanly until the view layer learns non-affine lowering.
+
+use anyhow::Result;
+
+use super::{
+    derived, dim, make, AppBuilder, Arrangement, DimBindings, KernelDef, Meta, TensorSpec,
+};
+use crate::arrange::catalog;
+use crate::exec::ir::TileProgram;
+use crate::exec::tile::{BinOp, ReduceOp, UnaryOp};
+use crate::symbolic::Expr;
+use crate::tensor::SymTensor;
+
+// -- arrangement build fns (the catalog entries as `Arrangement` values) ------
+
+fn arr_add(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::add()
+}
+
+fn arr_elementwise(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::elementwise_1d(&["input", "output"])
+}
+
+fn arr_rowwise(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::rowwise()
+}
+
+fn arr_mm(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::mm()
+}
+
+fn arr_bmm(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::bmm()
+}
+
+/// addmm picks its bias variant from the unified dims: a `[1, n]` bias is
+/// tiled `[1, BLOCK_SIZE_N]` and expanded across the output's row grid, a
+/// full `[m, n]` bias is tiled exactly like the output.
+fn arr_addmm(dims: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::addmm(dims.get("bias_rows").copied() == Some(1))
+}
+
+fn arr_conv2d(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::conv2d()
+}
+
+fn arr_rope(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::rope()
+}
+
+// -- application programs (authored through the typed builder) ----------------
+
+fn app_add() -> TileProgram {
+    let mut b = AppBuilder::new("add");
+    let x = b.load(0);
+    let y = b.load(1);
+    let sum = b.binary(x, y, BinOp::Add);
+    b.store(2, sum);
+    b.build()
+}
+
+fn app_silu() -> TileProgram {
+    let mut b = AppBuilder::new("silu");
+    let x = b.load(0);
+    let sig = b.unary(x, UnaryOp::Sigmoid);
+    let y = b.binary(x, sig, BinOp::Mul);
+    b.store(1, y);
+    b.build()
+}
+
+/// tanh-approximated GELU via the identity `1 + tanh(y) = 2*sigmoid(2y)`:
+/// `gelu(x) = 0.5*x*(1 + tanh(sqrt(2/pi)*(x + 0.044715*x^3)))
+///          = x * sigmoid(2*sqrt(2/pi)*(x + 0.044715*x^3))`,
+/// which needs only Mul/Add/Const/Sigmoid.
+fn app_gelu() -> TileProgram {
+    // 2 * sqrt(2 / pi)
+    const TWO_SQRT_2_OVER_PI: f32 = 1.595_769_1;
+    const CUBIC: f32 = 0.044_715;
+    let mut b = AppBuilder::new("gelu");
+    let x = b.load(0);
+    let x2 = b.binary(x, x, BinOp::Mul);
+    let x3 = b.binary(x2, x, BinOp::Mul);
+    let c_cubic = b.constant(CUBIC);
+    let scaled = b.binary(x3, c_cubic, BinOp::Mul);
+    let inner = b.binary(x, scaled, BinOp::Add);
+    let c_coef = b.constant(TWO_SQRT_2_OVER_PI);
+    let arg = b.binary(inner, c_coef, BinOp::Mul);
+    let sig = b.unary(arg, UnaryOp::Sigmoid);
+    let y = b.binary(x, sig, BinOp::Mul);
+    b.store(1, y);
+    b.build()
+}
+
+fn app_softmax() -> TileProgram {
+    let mut b = AppBuilder::new("softmax");
+    let x = b.load(0);
+    let row_max = b.reduce(x, None, ReduceOp::Max);
+    let centered = b.binary(x, row_max, BinOp::Sub);
+    let e = b.unary(centered, UnaryOp::Exp);
+    let denom = b.reduce(e, None, ReduceOp::Sum);
+    let y = b.binary(e, denom, BinOp::Div);
+    b.store(1, y);
+    b.build()
+}
+
+fn app_rms_norm() -> TileProgram {
+    let mut b = AppBuilder::new("rms_norm");
+    let x = b.load(0);
+    let sq = b.binary(x, x, BinOp::Mul);
+    let ms = b.reduce(sq, None, ReduceOp::Mean);
+    let eps = b.constant(1e-6);
+    let stabilized = b.binary(ms, eps, BinOp::Add);
+    let scale = b.unary(stabilized, UnaryOp::Rsqrt);
+    let y = b.binary(x, scale, BinOp::Mul);
+    b.store(1, y);
+    b.build()
+}
+
+/// `layer_norm(x) = (x - mean(x)) * rsqrt(var(x) + eps)` over each row
+/// (no affine weight/bias, eps = 1e-6 — consistent with rms_norm).
+fn app_layer_norm() -> TileProgram {
+    let mut b = AppBuilder::new("layer_norm");
+    let x = b.load(0);
+    let mean = b.reduce(x, None, ReduceOp::Mean);
+    let centered = b.binary(x, mean, BinOp::Sub);
+    let sq = b.binary(centered, centered, BinOp::Mul);
+    let var = b.reduce(sq, None, ReduceOp::Mean);
+    let eps = b.constant(1e-6);
+    let stabilized = b.binary(var, eps, BinOp::Add);
+    let scale = b.unary(stabilized, UnaryOp::Rsqrt);
+    let y = b.binary(centered, scale, BinOp::Mul);
+    b.store(1, y);
+    b.build()
+}
+
+/// The mm/bmm/conv2d application: `acc = zeros(output.shape); for k: acc
+/// += dot(input[k], other[k]); output = acc`.  The k-loop body is the
+/// fused `DotAcc` (blocked GEMM over the parameter views directly).
+fn app_matmul(name: &'static str) -> TileProgram {
+    let mut b = AppBuilder::new(name);
+    let acc = b.zeros_like(2);
+    b.k_loop(|b| b.dot_acc(acc, 0, 1));
+    b.store(2, acc);
+    b.build()
+}
+
+/// The addmm application: the mm k-loop followed by a broadcast bias add
+/// (`output = acc + bias`).  Parameters are `[bias, input, other,
+/// output]` (torch.addmm argument order, output last); the bias tile is
+/// `[1, BN]` for broadcast biases and `[BM, BN]` for full ones — the
+/// element-wise add broadcasts either onto the accumulator.
+fn app_addmm() -> TileProgram {
+    let mut b = AppBuilder::new("addmm");
+    let acc = b.zeros_like(3);
+    b.k_loop(|b| b.dot_acc(acc, 1, 2));
+    let bias = b.load(0);
+    let y = b.binary(acc, bias, BinOp::Add);
+    b.store(3, y);
+    b.build()
+}
+
+/// Rotary position embedding, half-rotation (Llama) convention: split
+/// the head dim in half, rotate by the per-position cos/sin tables, and
+/// concatenate (`python/compile/kernels/nt/rope.py`'s application).
+fn app_rope() -> TileProgram {
+    let mut b = AppBuilder::new("rope");
+    let x = b.load(0);
+    let cos = b.load(1);
+    let sin = b.load(2);
+    let (x1, x2) = b.split_half(x, 0);
+    let x1c = b.binary(x1, cos, BinOp::Mul);
+    let x2s = b.binary(x2, sin, BinOp::Mul);
+    let lo = b.binary(x1c, x2s, BinOp::Sub);
+    let x2c = b.binary(x2, cos, BinOp::Mul);
+    let x1s = b.binary(x1, sin, BinOp::Mul);
+    let hi = b.binary(x2c, x1s, BinOp::Add);
+    let y = b.concat(lo, hi, 0);
+    b.store(3, y);
+    b.build()
+}
+
+// -- the catalog --------------------------------------------------------------
+
+/// Every builtin definition, in registration order.
+pub fn defaults() -> Result<Vec<KernelDef>> {
+    type BuildFn = fn(&DimBindings) -> Result<Vec<SymTensor>>;
+    let elementwise = |build: BuildFn| {
+        Arrangement::new("1-D element-wise: BLOCK_SIZE tiles (Listing 3)", build)
+            .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" })
+    };
+    let rowwise = Arrangement::new("row-wise: one program per row", arr_rowwise);
+    let matmul = |summary: &'static str, build: BuildFn| {
+        Arrangement::new(summary, build).with_meta(Meta::MatmulBlocks { m: "m", k: "k", n: "n" })
+    };
+    Ok(vec![
+        make(
+            elementwise(arr_add),
+            app_add(),
+            vec![
+                TensorSpec::input("input", vec![dim("n", 1000)]),
+                TensorSpec::input("other", vec![dim("n", 1000)]),
+                TensorSpec::output("output", vec![dim("n", 1000)]),
+            ],
+        )?,
+        make(
+            elementwise(arr_elementwise),
+            app_silu(),
+            vec![
+                TensorSpec::input("input", vec![dim("n", 777)]),
+                TensorSpec::output("output", vec![dim("n", 777)]),
+            ],
+        )?,
+        make(
+            elementwise(arr_elementwise),
+            app_gelu(),
+            vec![
+                TensorSpec::input("input", vec![dim("n", 513)]),
+                TensorSpec::output("output", vec![dim("n", 513)]),
+            ],
+        )?,
+        make(
+            rowwise.clone(),
+            app_softmax(),
+            vec![
+                TensorSpec::input("input", vec![dim("rows", 7), dim("cols", 301)])
+                    .with_pad(f32::NEG_INFINITY),
+                TensorSpec::output("output", vec![dim("rows", 7), dim("cols", 301)]),
+            ],
+        )?,
+        make(
+            rowwise.clone(),
+            app_rms_norm(),
+            vec![
+                TensorSpec::input("input", vec![dim("rows", 5), dim("cols", 257)]),
+                TensorSpec::output("output", vec![dim("rows", 5), dim("cols", 257)]),
+            ],
+        )?,
+        make(
+            rowwise,
+            app_layer_norm(),
+            vec![
+                TensorSpec::input("input", vec![dim("rows", 6), dim("cols", 259)]),
+                TensorSpec::output("output", vec![dim("rows", 6), dim("cols", 259)]),
+            ],
+        )?,
+        make(
+            matmul("output [BM, BN] tiles; k-loop over A/B panels (Listing 5)", arr_mm),
+            app_matmul("mm"),
+            vec![
+                TensorSpec::input("input", vec![dim("m", 70), dim("k", 50)]),
+                TensorSpec::input("other", vec![dim("k", 50), dim("n", 90)]),
+                TensorSpec::output("output", vec![dim("m", 70), dim("n", 90)]),
+            ],
+        )?,
+        make(
+            matmul("mm with a leading batch grid dimension", arr_bmm),
+            app_matmul("bmm"),
+            vec![
+                TensorSpec::input("input", vec![dim("b", 3), dim("m", 33), dim("k", 17)]),
+                TensorSpec::input("other", vec![dim("b", 3), dim("k", 17), dim("n", 29)]),
+                TensorSpec::output("output", vec![dim("b", 3), dim("m", 33), dim("n", 29)]),
+            ],
+        )?,
+        make(
+            matmul("mm + broadcast bias epilogue", arr_addmm),
+            app_addmm(),
+            vec![
+                TensorSpec::input("bias", vec![dim("bias_rows", 1), dim("n", 90)])
+                    .with_implied_leading(),
+                TensorSpec::input("input", vec![dim("m", 70), dim("k", 50)]),
+                TensorSpec::input("other", vec![dim("k", 50), dim("n", 90)]),
+                TensorSpec::output("output", vec![dim("m", 70), dim("n", 90)]),
+            ],
+        )?
+        .with_constraint(
+            Expr::mul(
+                Expr::sub(Expr::sym("bias_rows"), Expr::Const(1)),
+                Expr::sub(Expr::sym("bias_rows"), Expr::sym("m")),
+            ),
+            "bias does not broadcast to the output (rows must be 1 or m)",
+        )?,
+        make(
+            Arrangement::new(
+                "implicit GEMM over NCHW (Listing 8; non-affine %// lowering pending)",
+                arr_conv2d,
+            )
+            .with_meta(Meta::Fixed(&[
+                ("BLOCK_SIZE_M", 32),
+                ("BLOCK_SIZE_N", 32),
+                ("BLOCK_SIZE_K", 32),
+            ])),
+            app_matmul("conv2d"),
+            vec![
+                TensorSpec::input(
+                    "input",
+                    vec![dim("batch", 2), dim("c", 3), dim("h", 10), dim("w", 10)],
+                ),
+                TensorSpec::input(
+                    "filter",
+                    vec![dim("f", 4), dim("c", 3), dim("r", 3), dim("s", 3)],
+                ),
+                TensorSpec::output(
+                    "output",
+                    vec![
+                        dim("batch", 2),
+                        dim("f", 4),
+                        derived(Expr::add(
+                            Expr::sub(Expr::sym("h"), Expr::sym("r")),
+                            Expr::Const(1),
+                        )),
+                        derived(Expr::add(
+                            Expr::sub(Expr::sym("w"), Expr::sym("s")),
+                            Expr::Const(1),
+                        )),
+                    ],
+                ),
+            ],
+        )?,
+        make(
+            Arrangement::new(
+                "one program per (batch, seq, head) row; cos/sin broadcast over batch+heads",
+                arr_rope,
+            ),
+            app_rope(),
+            vec![
+                TensorSpec::input(
+                    "input",
+                    vec![dim("b", 2), dim("s", 6), dim("h", 3), dim("d", 8)],
+                ),
+                TensorSpec::input(
+                    "cos",
+                    vec![
+                        dim("s", 6),
+                        derived(Expr::floordiv(Expr::sym("d"), Expr::Const(2))),
+                    ],
+                ),
+                TensorSpec::input(
+                    "sin",
+                    vec![
+                        dim("s", 6),
+                        derived(Expr::floordiv(Expr::sym("d"), Expr::Const(2))),
+                    ],
+                ),
+                TensorSpec::output(
+                    "output",
+                    vec![dim("b", 2), dim("s", 6), dim("h", 3), dim("d", 8)],
+                ),
+            ],
+        )?
+        .with_constraint(
+            Expr::modulo(Expr::sym("d"), Expr::Const(2)),
+            "rope needs an even head dimension",
+        )?,
+    ])
+}

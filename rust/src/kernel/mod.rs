@@ -1,0 +1,1233 @@
+//! `kernel::make` — the first-class kernel-definition API.
+//!
+//! The paper's core contribution is the **arrange-and-apply** paradigm: a
+//! kernel is *declared* by composing an [`Arrangement`] (tiling geometry,
+//! §3.2), an application (per-tile compute, §3.3) and symbolic tensors,
+//! and `ninetoothed.make` derives everything else.  This module is the
+//! Rust rendering of that API: [`make`] takes
+//!
+//! 1. an [`Arrangement`] — a composable function over symbolic tensors
+//!    (the `arrange::catalog` entries rehomed as values of this type),
+//!    plus its meta-parameter policy ([`Meta`]: block-size choices);
+//! 2. an application — a serial tile program authored through the typed
+//!    [`AppBuilder`] over `exec::ir` (loads/stores/dot/reductions/
+//!    element-wise ops, written as if for one tile);
+//! 3. the kernel's [`TensorSpec`]s — each parameter's symbolic shape,
+//!    role (input/output) and pad value;
+//!
+//! and derives the whole serving contract that used to be hand-written
+//! per kernel in `exec/native.rs`:
+//!
+//! * **arity** and **shape preconditions** — by unifying the declared
+//!   size symbols against request shapes (conflicting bindings, rank
+//!   mismatches and failed [`DimSpec::Expr`] checks reject at admission);
+//! * **output shape inference** — output dims evaluated under the
+//!   unified bindings (callers never pass output tensors);
+//! * the **per-shape specializer** consumed by `exec::compile` — meta
+//!   bindings from the arrangement's [`Meta`] policy, size bindings from
+//!   the request, then `ParamView` lowering with §3.2.1 agreement checks;
+//! * the **coalescibility flag** — row-independence *detected from the
+//!   arrangement* (see `KernelDef::coalesce`), not asserted by hand.
+//!
+//! Definitions register in the global [`KernelRegistry`] (name →
+//! `Arc<KernelDef>`, hash lookup), which the runtime registry, the plan
+//! cache, the batcher's coalescer and the coordinator all resolve
+//! through — a kernel registered at startup flows through compile /
+//! cache / coalesce / serving with zero additional wiring.  The builtin
+//! catalog (and `rope`, which is defined *only* through this API) lives
+//! in [`builtins`].
+
+pub mod builtins;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::exec::ir::{Instr, TileProgram};
+use crate::exec::scheduler::GridScheduler;
+use crate::exec::tile::{BinOp, ReduceOp, UnaryOp};
+use crate::exec::view::ParamView;
+use crate::runtime::HostTensor;
+use crate::symbolic::Expr;
+use crate::tensor::SymTensor;
+
+/// Concrete values for a kernel's size symbols, produced by unification.
+pub type DimBindings = BTreeMap<String, i64>;
+
+/// A fully specialized launch: concrete views + output shapes (what the
+/// compile stage caches per shape signature).
+pub struct Specialization {
+    /// outermost-level (grid) shape, identical across parameters
+    pub grid: Vec<i64>,
+    /// flattened middle-level (loop) shape shared by looped parameters
+    pub loop_shape: Vec<usize>,
+    /// one lowered view per parameter, in declaration order
+    pub views: Vec<ParamView>,
+    /// inferred concrete shapes of the output parameters
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl Specialization {
+    /// Number of program instances one launch runs.
+    pub fn programs(&self) -> i64 {
+        self.grid.iter().product::<i64>().max(1)
+    }
+}
+
+/// One dimension of a kernel parameter's symbolic shape.
+#[derive(Debug, Clone)]
+pub enum DimSpec {
+    /// A size symbol, bound by unification against request shapes.  The
+    /// `probe` value is used for the registration-time structural
+    /// analyses (lowerability, row-independence) and must satisfy the
+    /// kernel's constraints.
+    Sym {
+        /// symbol name, e.g. `"m"`
+        name: &'static str,
+        /// representative size for registration-time probing
+        probe: i64,
+    },
+    /// A derived size: an expression over previously declared symbols
+    /// (checked on inputs, inferred on outputs) — e.g. rope's cos table
+    /// is `[s, d // 2]`.
+    Expr(Expr),
+}
+
+/// A size symbol with a probe value — shorthand for [`DimSpec::Sym`].
+pub fn dim(name: &'static str, probe: i64) -> DimSpec {
+    DimSpec::Sym { name, probe }
+}
+
+/// A derived size — shorthand for [`DimSpec::Expr`].
+pub fn derived(expr: Expr) -> DimSpec {
+    DimSpec::Expr(expr)
+}
+
+impl DimSpec {
+    fn eval(&self, dims: &DimBindings) -> Result<i64> {
+        match self {
+            DimSpec::Sym { name, .. } => dims
+                .get(*name)
+                .copied()
+                .ok_or_else(|| anyhow!("size symbol {name} is unbound")),
+            DimSpec::Expr(e) => Ok(e.eval(dims)?),
+        }
+    }
+}
+
+impl std::fmt::Display for DimSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DimSpec::Sym { name, .. } => write!(f, "{name}"),
+            DimSpec::Expr(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// One kernel parameter: symbolic shape, role, and pad value.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    /// parameter name — must match the arrangement's `SymTensor` name
+    pub name: &'static str,
+    /// symbolic shape, one [`DimSpec`] per dimension
+    pub dims: Vec<DimSpec>,
+    /// outputs are allocated by the executor, never passed by callers
+    pub is_output: bool,
+    /// value out-of-range (padded) reads observe
+    pub pad: f32,
+    /// accept rank `n-1` inputs by implying a leading size-1 dim
+    /// (addmm's rank-1 bias broadcasting as `[1, n]`)
+    pub implied_leading: bool,
+}
+
+impl TensorSpec {
+    /// An input parameter (pad value 0).
+    pub fn input(name: &'static str, dims: Vec<DimSpec>) -> TensorSpec {
+        TensorSpec { name, dims, is_output: false, pad: 0.0, implied_leading: false }
+    }
+
+    /// An output parameter.
+    pub fn output(name: &'static str, dims: Vec<DimSpec>) -> TensorSpec {
+        TensorSpec { name, dims, is_output: true, pad: 0.0, implied_leading: false }
+    }
+
+    /// Set the pad value out-of-range reads observe (softmax loads pad
+    /// with `-inf` so padded lanes never win the row max).
+    pub fn with_pad(mut self, pad: f32) -> TensorSpec {
+        self.pad = pad;
+        self
+    }
+
+    /// Accept rank `n-1` request tensors by implying a leading 1.
+    pub fn with_implied_leading(mut self) -> TensorSpec {
+        self.implied_leading = true;
+        self
+    }
+}
+
+/// Meta-parameter policy: how an [`Arrangement`]'s block-size symbols are
+/// chosen for concrete dims.  Tuning only — never correctness.
+#[derive(Debug, Clone)]
+pub enum Meta {
+    /// the arrangement uses no meta symbols
+    None,
+    /// one power-of-two block covering dim `of` (≤ 4096), bound to `sym`
+    ElementwiseBlock {
+        /// block symbol, e.g. `"BLOCK_SIZE"`
+        sym: &'static str,
+        /// the dim symbol the block covers
+        of: &'static str,
+    },
+    /// the adaptive mm tiling: `BLOCK_SIZE_M/N/K` from dims `(m, k, n)`
+    MatmulBlocks {
+        /// output-rows dim symbol
+        m: &'static str,
+        /// reduction dim symbol
+        k: &'static str,
+        /// output-cols dim symbol
+        n: &'static str,
+    },
+    /// fixed bindings, independent of the request shapes
+    Fixed(&'static [(&'static str, i64)]),
+}
+
+impl Meta {
+    fn bindings(&self, dims: &DimBindings) -> Result<Vec<(String, i64)>> {
+        let get = |name: &str| -> Result<i64> {
+            dims.get(name)
+                .copied()
+                .ok_or_else(|| anyhow!("meta policy references unbound dim {name}"))
+        };
+        Ok(match self {
+            Meta::None => Vec::new(),
+            Meta::ElementwiseBlock { sym, of } => {
+                vec![((*sym).to_string(), elementwise_block(get(of)? as usize))]
+            }
+            Meta::MatmulBlocks { m, k, n } => {
+                let (bm, bn, bk) =
+                    mm_blocks(get(m)? as usize, get(k)? as usize, get(n)? as usize);
+                vec![
+                    ("BLOCK_SIZE_M".to_string(), bm),
+                    ("BLOCK_SIZE_N".to_string(), bn),
+                    ("BLOCK_SIZE_K".to_string(), bk),
+                ]
+            }
+            Meta::Fixed(pairs) => {
+                pairs.iter().map(|(s, v)| ((*s).to_string(), *v)).collect()
+            }
+        })
+    }
+}
+
+/// Element-wise block size: a power of two covering small inputs exactly.
+fn elementwise_block(n: usize) -> i64 {
+    (n.next_power_of_two() as i64).min(4096)
+}
+
+const MM_BLOCK: i64 = 32;
+
+/// Matmul tiling for concrete `[m, k] x [k, n]` sizes.  Small problems
+/// keep the legacy 32-wide blocks (one gather per tile, no packing
+/// overhead); larger ones take 64x64 output tiles with K panels up to
+/// 256 deep, so the fused `DotAcc` GEMM amortizes packing while the grid
+/// still fans out across the worker pool (8x8 cells for a 512^3 mm).
+fn mm_blocks(m: usize, k: usize, n: usize) -> (i64, i64, i64) {
+    if m.max(n).max(k) <= 128 {
+        (MM_BLOCK, MM_BLOCK, MM_BLOCK)
+    } else {
+        (64, 64, k.min(256) as i64)
+    }
+}
+
+/// A composable tiling strategy over symbolic tensors — the
+/// `arrange::catalog` entries rehomed as first-class values.
+///
+/// The build function receives the unified dim bindings, so a kernel may
+/// pick an arrangement *variant* from concrete sizes (addmm arranges a
+/// `[1, n]` bias differently from an `[m, n]` one); most arrangements
+/// ignore the bindings entirely.
+///
+/// **Contract:** variants selected from the bindings must preserve the
+/// arrangement's *access structure* — in particular its row-independence
+/// (which source dims are driven by which grid axes).  [`make`] derives
+/// the coalescibility flag from one probe-shape specialization; a build
+/// function that is row-independent at small sizes but row-coupled at
+/// large ones would make the batcher stack requests it must not.  The
+/// builtin variants (addmm's bias rows) only change *which* broadcast
+/// view is built, never the stacking structure.
+///
+/// ```
+/// use ninetoothed_repro::arrange::catalog;
+/// use ninetoothed_repro::kernel::Arrangement;
+///
+/// let rowwise = Arrangement::new("one program per row", |_| catalog::rowwise());
+/// assert_eq!(rowwise.summary, "one program per row");
+/// ```
+#[derive(Clone)]
+pub struct Arrangement {
+    /// one-line human description (shown by `repro kernels`)
+    pub summary: &'static str,
+    /// builds the arranged symbolic tensors, in parameter order
+    pub build: fn(&DimBindings) -> Result<Vec<SymTensor>>,
+    /// block-size policy for the arrangement's meta symbols
+    pub meta: Meta,
+}
+
+impl Arrangement {
+    /// A new arrangement with no meta symbols.
+    pub fn new(
+        summary: &'static str,
+        build: fn(&DimBindings) -> Result<Vec<SymTensor>>,
+    ) -> Arrangement {
+        Arrangement { summary, build, meta: Meta::None }
+    }
+
+    /// Attach a meta-parameter (block-size) policy.
+    pub fn with_meta(mut self, meta: Meta) -> Arrangement {
+        self.meta = meta;
+        self
+    }
+}
+
+/// SSA-style handle to a tile-program register, issued by [`AppBuilder`].
+#[derive(Debug, Clone, Copy)]
+pub struct Val(usize);
+
+/// Typed builder for application functions: a serial tile program written
+/// as if for one tile (paper §3.3), lowered to the `exec::ir` register
+/// machine with automatic register allocation.
+///
+/// ```
+/// use ninetoothed_repro::exec::{BinOp, ReduceOp, UnaryOp};
+/// use ninetoothed_repro::kernel::AppBuilder;
+///
+/// // softmax over one row: y = exp(x - max(x)) / sum(exp(x - max(x)))
+/// let mut app = AppBuilder::new("softmax");
+/// let x = app.load(0);
+/// let m = app.reduce(x, None, ReduceOp::Max);
+/// let centered = app.binary(x, m, BinOp::Sub);
+/// let e = app.unary(centered, UnaryOp::Exp);
+/// let denom = app.reduce(e, None, ReduceOp::Sum);
+/// let y = app.binary(e, denom, BinOp::Div);
+/// app.store(1, y);
+/// let program = app.build();
+/// program.validate(2, &[false, true]).unwrap();
+/// assert_eq!(program.instrs.len(), 7);
+/// ```
+pub struct AppBuilder {
+    name: &'static str,
+    regs: usize,
+    instrs: Vec<Instr>,
+}
+
+impl AppBuilder {
+    /// Start a program; `name` becomes the kernel name in [`make`].
+    ///
+    /// Names are `&'static` because `TileProgram` embeds one (kernel
+    /// definitions live for the process).  A caller composing kernels
+    /// with runtime-computed names can intern them via `Box::leak`.
+    pub fn new(name: &'static str) -> AppBuilder {
+        AppBuilder { name, regs: 0, instrs: Vec::new() }
+    }
+
+    fn fresh(&mut self) -> usize {
+        let r = self.regs;
+        self.regs += 1;
+        r
+    }
+
+    /// Load the current sub-tile of a parameter.
+    pub fn load(&mut self, param: usize) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Load { dst, param });
+        Val(dst)
+    }
+
+    /// A zero tile shaped like a parameter's application block
+    /// (`ntl.zeros(output.shape)`).
+    pub fn zeros_like(&mut self, param: usize) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Zeros { dst, like_param: param });
+        Val(dst)
+    }
+
+    /// A scalar constant tile.
+    pub fn constant(&mut self, value: f32) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Const { dst, value });
+        Val(dst)
+    }
+
+    /// Element-wise unary operation.
+    pub fn unary(&mut self, a: Val, op: UnaryOp) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Unary { dst, a: a.0, op });
+        Val(dst)
+    }
+
+    /// Element-wise (broadcasting) binary operation.
+    pub fn binary(&mut self, a: Val, b: Val, op: BinOp) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Binary { dst, a: a.0, b: b.0, op });
+        Val(dst)
+    }
+
+    /// Keep-dims reduction; `axis: None` reduces all axes.
+    pub fn reduce(&mut self, a: Val, axis: Option<usize>, op: ReduceOp) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Reduce { dst, a: a.0, axis, op });
+        Val(dst)
+    }
+
+    /// Fused `acc += dot(param_a, param_b)` over the current sub-tiles
+    /// (the mm-family k-loop body; routes through the blocked GEMM).
+    pub fn dot_acc(&mut self, acc: Val, a_param: usize, b_param: usize) {
+        self.instrs.push(Instr::DotAcc { acc: acc.0, a_param, b_param });
+    }
+
+    /// Iterate `body` once per sub-tile (the `for k in range(...)` of the
+    /// mm application).  Loops do not nest.
+    pub fn k_loop(&mut self, body: impl FnOnce(&mut AppBuilder)) {
+        let mark = self.instrs.len();
+        body(self);
+        let body_instrs = self.instrs.split_off(mark);
+        self.instrs.push(Instr::Loop { body: body_instrs });
+    }
+
+    /// Split a tile into equal halves along `axis` (rope's `x[:half]` /
+    /// `x[half:]`).
+    pub fn split_half(&mut self, a: Val, axis: usize) -> (Val, Val) {
+        let lo = self.fresh();
+        let hi = self.fresh();
+        self.instrs.push(Instr::SplitHalf { lo, hi, a: a.0, axis });
+        (Val(lo), Val(hi))
+    }
+
+    /// Concatenate two tiles along `axis` (`ntl.cat`).
+    pub fn concat(&mut self, a: Val, b: Val, axis: usize) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Concat { dst, a: a.0, b: b.0, axis });
+        Val(dst)
+    }
+
+    /// Store a register into the current sub-tile of an output parameter.
+    pub fn store(&mut self, param: usize, src: Val) {
+        self.instrs.push(Instr::Store { param, src: src.0 });
+    }
+
+    /// Finish: the serial tile program [`make`] pairs with an arrangement.
+    pub fn build(self) -> TileProgram {
+        TileProgram { name: self.name, regs: self.regs, instrs: self.instrs }
+    }
+}
+
+/// A complete kernel definition, produced by [`make`]: everything the
+/// serving stack needs — admission checks, output inference, the
+/// per-shape specializer, and the derived coalescibility flag.
+///
+/// ```
+/// use ninetoothed_repro::kernel;
+///
+/// let mm = kernel::lookup("mm").unwrap();
+/// assert_eq!((mm.arity, mm.coalesce, mm.executable()), (2, false, true));
+/// let spec = mm.specialize_shapes(&[&[70, 50], &[50, 90]]).unwrap();
+/// assert_eq!(spec.output_shapes, vec![vec![70, 90]]);
+/// assert_eq!(spec.grid, vec![3, 3]);
+/// ```
+pub struct KernelDef {
+    /// kernel name (from the application program)
+    pub name: String,
+    /// number of input (non-output) parameters
+    pub arity: usize,
+    /// parameter declarations, in arrangement order
+    pub tensors: Vec<TensorSpec>,
+    /// the tiling strategy + meta policy
+    pub arrangement: Arrangement,
+    /// the serial per-tile application program
+    pub program: TileProgram,
+    /// same-shape requests may be stacked along dim 0 into one launch.
+    /// **Derived** from the arrangement (row-independence: every
+    /// parameter stacks along one shared size symbol that maps to a
+    /// single common grid axis, partitioned without loop-carried or
+    /// cross-row access), never asserted by hand.
+    pub coalesce: bool,
+    /// extra admission predicates over the unified dims: each expression
+    /// must evaluate to 0
+    constraints: Vec<(Expr, &'static str)>,
+    /// the arrangement lowers to affine views at the probe shapes
+    executable: bool,
+    /// why the probe specialization failed, when it did — surfaced by
+    /// admission errors and `repro kernels` so a broken arrangement is
+    /// diagnosable instead of a silent "not lowerable"
+    probe_error: Option<String>,
+}
+
+/// Declare a kernel from an arrangement, an application and its symbolic
+/// tensors — the paper's `ninetoothed.make` (§3.1).
+///
+/// ```
+/// use ninetoothed_repro::arrange::catalog;
+/// use ninetoothed_repro::exec::{BinOp, GridScheduler};
+/// use ninetoothed_repro::kernel::{dim, make, AppBuilder, Arrangement, Meta, TensorSpec};
+/// use ninetoothed_repro::runtime::HostTensor;
+///
+/// // arrangement: every parameter in BLOCK_SIZE tiles (paper Listing 3)
+/// let arrangement = Arrangement::new(
+///     "1-D element-wise",
+///     |_| catalog::elementwise_1d(&["input", "output"]),
+/// )
+/// .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" });
+///
+/// // application: y = x * 2, written as if for one tile
+/// let mut app = AppBuilder::new("double");
+/// let x = app.load(0);
+/// let two = app.constant(2.0);
+/// let y = app.binary(x, two, BinOp::Mul);
+/// app.store(1, y);
+///
+/// let double = make(
+///     arrangement,
+///     app.build(),
+///     vec![
+///         TensorSpec::input("input", vec![dim("n", 17)]),
+///         TensorSpec::output("output", vec![dim("n", 17)]),
+///     ],
+/// )
+/// .unwrap();
+/// assert_eq!(double.arity, 1);
+/// assert!(double.coalesce, "element-wise kernels derive as row-independent");
+///
+/// let x = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+/// let out = double.run(&[x], &GridScheduler::serial()).unwrap();
+/// assert_eq!(out[0].as_f32().unwrap()[..], [2.0, 4.0, 6.0]);
+/// ```
+pub fn make(
+    arrangement: Arrangement,
+    application: TileProgram,
+    tensors: Vec<TensorSpec>,
+) -> Result<KernelDef> {
+    if tensors.is_empty() {
+        bail!("make: kernel {} declares no tensors", application.name);
+    }
+    let is_output: Vec<bool> = tensors.iter().map(|t| t.is_output).collect();
+    if !is_output.iter().any(|&o| o) {
+        bail!("make: kernel {} declares no output tensor", application.name);
+    }
+    application
+        .validate(tensors.len(), &is_output)
+        .with_context(|| format!("make: application {} is malformed", application.name))?;
+    // every size symbol an output (or a derived dim) references must be
+    // bound by some input's bare symbol — otherwise the kernel would
+    // register cleanly but fail output inference on every request
+    let bound: std::collections::BTreeSet<&str> = tensors
+        .iter()
+        .filter(|t| !t.is_output)
+        .flat_map(|t| t.dims.iter())
+        .filter_map(|ds| match ds {
+            DimSpec::Sym { name, .. } => Some(*name),
+            DimSpec::Expr(_) => None,
+        })
+        .collect();
+    for spec in &tensors {
+        for (d, ds) in spec.dims.iter().enumerate() {
+            let free: Vec<String> = match ds {
+                DimSpec::Sym { name, .. } if spec.is_output => vec![(*name).to_string()],
+                DimSpec::Sym { .. } => Vec::new(),
+                DimSpec::Expr(e) => e.free_symbols().into_iter().collect(),
+            };
+            for sym in free {
+                if !bound.contains(sym.as_str()) {
+                    bail!(
+                        "make: kernel {}: {} dim {d} references size symbol {sym}, which \
+                         no input binds — outputs and derived dims must be inferable \
+                         from the inputs",
+                        application.name,
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+    let arity = tensors.iter().filter(|t| !t.is_output).count();
+    let mut def = KernelDef {
+        name: application.name.to_string(),
+        arity,
+        tensors,
+        arrangement,
+        program: application,
+        coalesce: false,
+        constraints: Vec::new(),
+        executable: false,
+        probe_error: None,
+    };
+    let probe = def.probe_dims()?;
+    def.derive(&probe);
+    Ok(def)
+}
+
+impl KernelDef {
+    /// Add an admission predicate over the unified dims: `expr` must
+    /// evaluate to 0 (e.g. rope's even head dimension).  The declared
+    /// probe sizes are checked against the constraint immediately, so a
+    /// self-contradictory declaration (or a constraint referencing an
+    /// undeclared dim) errors at definition time, not per request.
+    pub fn with_constraint(mut self, expr: Expr, msg: &'static str) -> Result<KernelDef> {
+        let probe = self.probe_dims()?;
+        let v = expr.eval(&probe).with_context(|| {
+            format!("kernel {}: constraint {expr} references undeclared dims", self.name)
+        })?;
+        if v != 0 {
+            bail!(
+                "kernel {}: the declared probe sizes violate constraint {expr} ({msg}; \
+                 got {v}, expected 0)",
+                self.name
+            );
+        }
+        self.constraints.push((expr, msg));
+        Ok(self)
+    }
+
+    /// True when the arrangement lowers to affine views (probed at
+    /// definition time).  A registered but non-executable kernel (the
+    /// conv2d implicit-GEMM arrangement needs non-affine `%`/`//` index
+    /// lowering) is rejected at admission instead of mid-pipeline.
+    pub fn executable(&self) -> bool {
+        self.executable
+    }
+
+    /// The probe-specialization failure for a non-executable kernel.
+    pub fn probe_error(&self) -> Option<&str> {
+        self.probe_error.as_deref()
+    }
+
+    fn inputs(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(|t| !t.is_output)
+    }
+
+    /// Canonical (declared-rank) shapes for the request's input tensors.
+    fn canonical_input_shapes(&self, shapes: &[&[usize]]) -> Result<Vec<Vec<usize>>> {
+        let mut canon = Vec::with_capacity(shapes.len());
+        for (i, (spec, shape)) in self.inputs().zip(shapes).enumerate() {
+            if shape.is_empty() {
+                bail!(
+                    "kernel {}: input {i} is rank-0 (scalar tensors are not tileable)",
+                    self.name
+                );
+            }
+            if shape.iter().any(|&d| d == 0) {
+                bail!("kernel {}: input {i} has a zero-length dimension {shape:?}", self.name);
+            }
+            let declared = spec.dims.len();
+            if shape.len() == declared {
+                canon.push(shape.to_vec());
+            } else if spec.implied_leading && shape.len() + 1 == declared {
+                let mut s = Vec::with_capacity(declared);
+                s.push(1);
+                s.extend_from_slice(shape);
+                canon.push(s);
+            } else {
+                bail!(
+                    "kernel {}: {} expects rank {declared}{}, got shape {shape:?}",
+                    self.name,
+                    spec.name,
+                    if spec.implied_leading { " (or one less, with an implied leading 1)" } else { "" }
+                );
+            }
+        }
+        Ok(canon)
+    }
+
+    /// Unify the declared size symbols against request shapes — the
+    /// derived shape preconditions.  Returns the dim bindings plus the
+    /// canonical input shapes.
+    fn bind(&self, shapes: &[&[usize]]) -> Result<(DimBindings, Vec<Vec<usize>>)> {
+        if shapes.len() != self.arity {
+            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, shapes.len());
+        }
+        let canon = self.canonical_input_shapes(shapes)?;
+        let mut dims = DimBindings::new();
+        // pass 1: bind bare size symbols, rejecting conflicts
+        for (spec, shape) in self.inputs().zip(&canon) {
+            for (d, ds) in spec.dims.iter().enumerate() {
+                if let DimSpec::Sym { name, .. } = ds {
+                    let v = shape[d] as i64;
+                    let prev = dims.get(*name).copied();
+                    match prev {
+                        None => {
+                            dims.insert((*name).to_string(), v);
+                        }
+                        Some(prev) if prev != v => bail!(
+                            "kernel {}: size {name} is {prev} from an earlier argument, \
+                             but {} has {v} at dim {d} (shape {shape:?})",
+                            self.name,
+                            spec.name
+                        ),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        // pass 2: derived dims must match
+        for (spec, shape) in self.inputs().zip(&canon) {
+            for (d, ds) in spec.dims.iter().enumerate() {
+                if let DimSpec::Expr(e) = ds {
+                    let want = e.eval(&dims).with_context(|| {
+                        format!("kernel {}: evaluating {} dim {d} ({e})", self.name, spec.name)
+                    })?;
+                    if want != shape[d] as i64 {
+                        bail!(
+                            "kernel {}: {} dim {d} must be {e} = {want}, got {} \
+                             (shape {shape:?})",
+                            self.name,
+                            spec.name,
+                            shape[d]
+                        );
+                    }
+                }
+            }
+        }
+        // declared constraints
+        for (expr, msg) in &self.constraints {
+            let v = expr.eval(&dims).with_context(|| {
+                format!("kernel {}: evaluating constraint {expr}", self.name)
+            })?;
+            if v != 0 {
+                bail!("kernel {}: {msg} ({expr} = {v}, expected 0)", self.name);
+            }
+        }
+        Ok((dims, canon))
+    }
+
+    /// Canonical shapes for **all** parameters: inputs as given (rank
+    /// canonicalized), outputs inferred from the unified dims.
+    fn all_shapes(
+        &self,
+        dims: &DimBindings,
+        canon_inputs: &[Vec<usize>],
+    ) -> Result<Vec<Vec<usize>>> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut next_input = 0usize;
+        for spec in &self.tensors {
+            if spec.is_output {
+                let mut shape = Vec::with_capacity(spec.dims.len());
+                for (d, ds) in spec.dims.iter().enumerate() {
+                    let v = ds.eval(dims).with_context(|| {
+                        format!("kernel {}: inferring output {} dim {d}", self.name, spec.name)
+                    })?;
+                    if v <= 0 {
+                        bail!(
+                            "kernel {}: inferred non-positive size {v} for output {} dim {d}",
+                            self.name,
+                            spec.name
+                        );
+                    }
+                    shape.push(v as usize);
+                }
+                out.push(shape);
+            } else {
+                out.push(canon_inputs[next_input].clone());
+                next_input += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shape-only admission checks (arity, ranks, unification, derived
+    /// dims, constraints, output inference).  No affine lowering.
+    pub fn check_shapes(&self, shapes: &[&[usize]]) -> Result<()> {
+        let (dims, canon) = self.bind(shapes)?;
+        self.all_shapes(&dims, &canon).map(|_| ())
+    }
+
+    /// Cheap admission-time validation over concrete tensors: the shape
+    /// checks plus dtype.  The router calls this per request; the
+    /// expensive specialization happens once per shape, in the compile
+    /// stage.
+    pub fn check(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.arity {
+            bail!("kernel {} expects {} inputs, got {}", self.name, self.arity, inputs.len());
+        }
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        self.check_shapes(&shapes)?;
+        for (i, t) in inputs.iter().enumerate() {
+            t.as_f32()
+                .map_err(|_| anyhow!("kernel {}: input {i} must be f32", self.name))?;
+        }
+        Ok(())
+    }
+
+    /// The inferred output shapes for given input shapes.
+    pub fn output_shapes(&self, shapes: &[&[usize]]) -> Result<Vec<Vec<usize>>> {
+        let (dims, canon) = self.bind(shapes)?;
+        let all = self.all_shapes(&dims, &canon)?;
+        Ok(self
+            .tensors
+            .iter()
+            .zip(all)
+            .filter(|(t, _)| t.is_output)
+            .map(|(_, s)| s)
+            .collect())
+    }
+
+    /// Validate shapes and compute the concrete launch for them — the
+    /// derived per-shape specializer `exec::compile` runs once per shape
+    /// signature.  A function of **shapes only** (no tensor data), which
+    /// is what lets the plan cache memoize the result.
+    pub fn specialize_shapes(&self, shapes: &[&[usize]]) -> Result<Specialization> {
+        let (dims, canon) = self.bind(shapes)?;
+        let all = self.all_shapes(&dims, &canon)?;
+        self.specialize_with(&dims, &all)
+    }
+
+    /// Validate inputs and compute the concrete launch for them.
+    pub fn specialize(&self, inputs: &[HostTensor]) -> Result<Specialization> {
+        self.check(inputs)?;
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        self.specialize_shapes(&shapes)
+    }
+
+    /// Compile-and-execute in one step (uncached — callers that serve
+    /// repeated traffic go through `exec::PlanCache` instead).
+    pub fn run(&self, inputs: &[HostTensor], scheduler: &GridScheduler) -> Result<Vec<HostTensor>> {
+        let spec = self.specialize(inputs)?;
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        scheduler.run(&self.program, &spec.views, &refs, &spec.output_shapes)
+    }
+
+    /// The specializer core: meta + size bindings, arrangement build,
+    /// view lowering, §3.2.1 agreement.  `shapes` covers all parameters
+    /// (outputs included), in declaration order.
+    fn specialize_with(&self, dims: &DimBindings, shapes: &[Vec<usize>]) -> Result<Specialization> {
+        let mut bindings: BTreeMap<String, i64> = BTreeMap::new();
+        for (sym, v) in self.arrangement.meta.bindings(dims)? {
+            bindings.insert(sym, v);
+        }
+        for (spec, shape) in self.tensors.iter().zip(shapes) {
+            for (d, &s) in shape.iter().enumerate() {
+                bindings.insert(format!("{}_size_{d}", spec.name), s as i64);
+            }
+        }
+        let arranged = (self.arrangement.build)(dims)?;
+        if arranged.len() != self.tensors.len() {
+            bail!(
+                "kernel {}: arrangement produced {} parameters for {} declared tensors",
+                self.name,
+                arranged.len(),
+                self.tensors.len()
+            );
+        }
+        let mut views = Vec::with_capacity(arranged.len());
+        for ((sym_t, spec), shape) in arranged.iter().zip(&self.tensors).zip(shapes) {
+            if sym_t.name != spec.name {
+                bail!(
+                    "kernel {}: arrangement parameter {:?} does not match declared tensor \
+                     {:?} (orders must agree)",
+                    self.name,
+                    sym_t.name,
+                    spec.name
+                );
+            }
+            views.push(ParamView::specialize(sym_t, &bindings, shape, spec.is_output, spec.pad)?);
+        }
+        let grid = views[0].grid.clone();
+        for v in &views {
+            if v.grid != grid {
+                bail!(
+                    "outermost-level shapes disagree: {:?} ({}) vs {grid:?} (paper §3.2.1)",
+                    v.grid,
+                    v.name
+                );
+            }
+        }
+        let mut loop_shape = Vec::new();
+        for v in &views {
+            if !v.loop_shape.is_empty() {
+                if loop_shape.is_empty() {
+                    loop_shape = v.loop_shape.clone();
+                } else if loop_shape != v.loop_shape {
+                    bail!("loop-level shapes disagree: {:?} ({})", v.loop_shape, v.name);
+                }
+            }
+        }
+        let output_shapes = self
+            .tensors
+            .iter()
+            .zip(shapes)
+            .filter(|(t, _)| t.is_output)
+            .map(|(_, s)| s.clone())
+            .collect();
+        Ok(Specialization { grid, loop_shape, views, output_shapes })
+    }
+
+    // -- registration-time derivations ---------------------------------------
+
+    /// Probe bindings: every size symbol at its declared probe value.
+    fn probe_dims(&self) -> Result<DimBindings> {
+        let mut dims = DimBindings::new();
+        for spec in &self.tensors {
+            for ds in &spec.dims {
+                if let DimSpec::Sym { name, probe } = ds {
+                    let prev = dims.get(*name).copied();
+                    match prev {
+                        None => {
+                            dims.insert((*name).to_string(), *probe);
+                        }
+                        Some(prev) if prev != *probe => bail!(
+                            "kernel {}: dim {name} declared with conflicting probe sizes \
+                             {prev} and {probe}",
+                            self.name
+                        ),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        Ok(dims)
+    }
+
+    /// Derive `executable` and `coalesce` by specializing at the probe
+    /// shapes and analyzing the lowered views.
+    fn derive(&mut self, probe: &DimBindings) {
+        self.executable = false;
+        self.coalesce = false;
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.tensors.len());
+        for spec in &self.tensors {
+            let mut s = Vec::with_capacity(spec.dims.len());
+            for ds in &spec.dims {
+                match ds.eval(probe) {
+                    Ok(v) if v > 0 => s.push(v as usize),
+                    Ok(v) => {
+                        self.probe_error = Some(format!(
+                            "probe shape for {} has non-positive size {v}",
+                            spec.name
+                        ));
+                        return;
+                    }
+                    Err(e) => {
+                        self.probe_error = Some(format!("{e:#}"));
+                        return;
+                    }
+                }
+            }
+            shapes.push(s);
+        }
+        match self.specialize_with(probe, &shapes) {
+            Ok(spec) => {
+                self.executable = true;
+                self.coalesce = self.derive_stackable(&spec);
+            }
+            Err(e) => self.probe_error = Some(format!("{e:#}")),
+        }
+    }
+
+    /// Row-independence, detected from the arrangement.  Stacking all
+    /// arguments along dim 0 is bit-identical to per-request execution
+    /// iff:
+    ///
+    /// 1. every parameter's dim 0 is the *same* bare size symbol, which
+    ///    appears in no other dimension (the batcher stacks every
+    ///    argument, so all of them must share the stacking dim);
+    /// 2. at the probe specialization, every parameter's dim-0 access is
+    ///    driven by exactly one common grid axis — no loop-carried
+    ///    motion, cells partition dim 0 (cell stride covers the block's
+    ///    dim-0 span), and no *other* source dim depends on that axis;
+    /// 3. if any block extends along dim 0 (1-D element-wise tiles), the
+    ///    application must be lane-wise (no reductions / dots that could
+    ///    mix rows regrouped by stacking).
+    fn derive_stackable(&self, spec: &Specialization) -> bool {
+        let stack_sym = match self.tensors.iter().find(|t| t.is_output).and_then(|t| t.dims.first())
+        {
+            Some(DimSpec::Sym { name, .. }) => *name,
+            _ => return false,
+        };
+        for t in &self.tensors {
+            if t.implied_leading {
+                return false;
+            }
+            match t.dims.first() {
+                Some(DimSpec::Sym { name, .. }) if *name == stack_sym => {}
+                _ => return false,
+            }
+            for ds in &t.dims[1..] {
+                let mentions = match ds {
+                    DimSpec::Sym { name, .. } => *name == stack_sym,
+                    DimSpec::Expr(e) => e.free_symbols().contains(stack_sym),
+                };
+                if mentions {
+                    return false;
+                }
+            }
+        }
+        let mut g_star: Option<usize> = None;
+        let mut any_inner = false;
+        for view in &spec.views {
+            let (cell, sub_span, inner_span) = view.dim_profile(0);
+            if sub_span != 0 {
+                return false;
+            }
+            let axes: Vec<usize> = cell
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != 0)
+                .map(|(g, _)| g)
+                .collect();
+            if axes.len() != 1 {
+                return false;
+            }
+            let g = axes[0];
+            match g_star {
+                None => g_star = Some(g),
+                Some(prev) if prev != g => return false,
+                _ => {}
+            }
+            if cell[g].abs() < 1 + inner_span {
+                return false;
+            }
+            if inner_span > 0 {
+                any_inner = true;
+            }
+            for d in 1..view.src_shape.len() {
+                let (cell_d, _, _) = view.dim_profile(d);
+                if cell_d.get(g).copied().unwrap_or(0) != 0 {
+                    return false;
+                }
+            }
+        }
+        if g_star.is_none() {
+            return false;
+        }
+        if any_inner && !lanewise(&self.program.instrs) {
+            return false;
+        }
+        true
+    }
+}
+
+/// True if every instruction computes each output lane from the same
+/// lane of its operands (no reductions, dots or loops).
+fn lanewise(instrs: &[Instr]) -> bool {
+    instrs.iter().all(|i| {
+        matches!(
+            i,
+            Instr::Load { .. }
+                | Instr::Const { .. }
+                | Instr::Unary { .. }
+                | Instr::Binary { .. }
+                | Instr::Store { .. }
+        )
+    })
+}
+
+/// The mutable kernel registry: name → `Arc<KernelDef>` behind a hash
+/// lookup.  One process-global instance ([`registry`]) is what the
+/// runtime registry, router and plan cache resolve through.
+pub struct KernelRegistry {
+    map: RwLock<HashMap<String, Arc<KernelDef>>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (tests; production code uses [`registry`]).
+    pub fn new() -> KernelRegistry {
+        KernelRegistry { map: RwLock::new(HashMap::new()) }
+    }
+
+    /// Register (or replace) a definition under its name.
+    ///
+    /// Replacing an existing name does **not** invalidate backends or
+    /// compiled plans already resolved from the old definition (the
+    /// runtime registry memoizes per `(kernel, variant)` and the plan
+    /// cache per shape signature), so redefinition mid-serving can leave
+    /// old and new programs serving different shapes.  Register new
+    /// kernels under fresh names; replacement is for startup composition.
+    pub fn register(&self, def: KernelDef) -> Arc<KernelDef> {
+        let def = Arc::new(def);
+        self.map.write().unwrap().insert(def.name.clone(), def.clone());
+        def
+    }
+
+    /// Hash lookup by kernel name.
+    pub fn lookup(&self, name: &str) -> Option<Arc<KernelDef>> {
+        self.map.read().unwrap().get(name).cloned()
+    }
+
+    /// All registered definitions, sorted by name.
+    pub fn snapshot(&self) -> Vec<Arc<KernelDef>> {
+        let mut defs: Vec<Arc<KernelDef>> = self.map.read().unwrap().values().cloned().collect();
+        defs.sort_by(|a, b| a.name.cmp(&b.name));
+        defs
+    }
+
+    /// Number of registered kernels.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        KernelRegistry::new()
+    }
+}
+
+/// The process-global registry, seeded with the builtin catalog (and
+/// rope) on first use.
+pub fn registry() -> &'static KernelRegistry {
+    static GLOBAL: OnceLock<KernelRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let reg = KernelRegistry::new();
+        for def in builtins::defaults().expect("builtin kernel definitions are valid") {
+            reg.register(def);
+        }
+        reg
+    })
+}
+
+/// All registered kernels (sorted by name).
+pub fn kernels() -> Vec<Arc<KernelDef>> {
+    registry().snapshot()
+}
+
+/// Look up a registered kernel by name.
+pub fn lookup(name: &str) -> Option<Arc<KernelDef>> {
+    registry().lookup(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn def(name: &str) -> Arc<KernelDef> {
+        lookup(name).unwrap_or_else(|| panic!("{name} must be registered"))
+    }
+
+    #[test]
+    fn registry_serves_all_builtins() {
+        let names: Vec<String> = kernels().iter().map(|k| k.name.clone()).collect();
+        for want in [
+            "add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm",
+            "conv2d", "rope",
+        ] {
+            assert!(names.iter().any(|n| n == want), "{want} missing from {names:?}");
+        }
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn coalescibility_is_derived_from_the_arrangement() {
+        // row-independent: element-wise 1-D, rowwise 2-D, and batch-led bmm
+        for name in ["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "bmm"] {
+            assert!(def(name).coalesce, "{name} must derive as coalescible");
+        }
+        // not row-independent: mm/addmm read other rows via the k loop;
+        // rope's cos/sin tables lack the batch (stacking) dim
+        for name in ["mm", "addmm", "rope", "conv2d"] {
+            assert!(!def(name).coalesce, "{name} must never derive as coalescible");
+        }
+    }
+
+    #[test]
+    fn conv2d_is_registered_but_not_lowerable() {
+        let conv = def("conv2d");
+        assert!(!conv.executable(), "implicit GEMM needs non-affine lowering");
+        // the executable flag is what keeps it out of the serving path
+        assert!(crate::runtime::native_fallback_kind("conv2d", "nt").is_err());
+    }
+
+    #[test]
+    fn unification_binds_and_rejects() {
+        let mm = def("mm");
+        assert!(mm.check_shapes(&[&[4, 3], &[3, 5]]).is_ok());
+        // inner-dim conflict: k bound to 3 by input, 7 by other
+        let err = mm.check_shapes(&[&[4, 3], &[7, 5]]).unwrap_err();
+        assert!(format!("{err:#}").contains("size k"), "{err:#}");
+        // rank mismatch
+        assert!(mm.check_shapes(&[&[4, 3, 1], &[3, 5]]).is_err());
+        // arity
+        assert!(mm.check_shapes(&[&[4, 3]]).is_err());
+        assert_eq!(mm.output_shapes(&[&[4, 3], &[3, 5]]).unwrap(), vec![vec![4, 5]]);
+    }
+
+    #[test]
+    fn constraints_and_derived_dims_check() {
+        let rope = def("rope");
+        assert!(rope.check_shapes(&[&[2, 5, 3, 8], &[5, 4], &[5, 4]]).is_ok());
+        // odd head dim violates the evenness constraint
+        let err = rope.check_shapes(&[&[2, 5, 3, 7], &[5, 3], &[5, 3]]).unwrap_err();
+        assert!(format!("{err:#}").contains("even"), "{err:#}");
+        // cos table must be [s, d/2]
+        assert!(rope.check_shapes(&[&[2, 5, 3, 8], &[5, 3], &[5, 3]]).is_err());
+        assert!(rope.check_shapes(&[&[2, 4, 3, 8], &[5, 4], &[5, 4]]).is_err());
+    }
+
+    #[test]
+    fn implied_leading_canonicalizes_rank() {
+        let addmm = def("addmm");
+        // rank-1 bias [n] admits as [1, n]
+        assert!(addmm.check_shapes(&[&[5], &[4, 3], &[3, 5]]).is_ok());
+        assert!(addmm.check_shapes(&[&[1, 5], &[4, 3], &[3, 5]]).is_ok());
+        assert!(addmm.check_shapes(&[&[4, 5], &[4, 3], &[3, 5]]).is_ok());
+        // rows must be 1 or m
+        let err = addmm.check_shapes(&[&[2, 5], &[4, 3], &[3, 5]]).unwrap_err();
+        assert!(format!("{err:#}").contains("broadcast"), "{err:#}");
+    }
+
+    #[test]
+    fn make_rejects_malformed_applications() {
+        use crate::arrange::catalog;
+        // store to a non-output parameter fails validation inside make
+        let mut app = AppBuilder::new("bad");
+        let x = app.load(0);
+        app.store(0, x);
+        let err = make(
+            Arrangement::new("1-D element-wise", |_| catalog::elementwise_1d(&["input", "output"])),
+            app.build(),
+            vec![
+                TensorSpec::input("input", vec![dim("n", 8)]),
+                TensorSpec::output("output", vec![dim("n", 8)]),
+            ],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("non-output"), "{err:#}");
+        // no outputs at all
+        let app = AppBuilder::new("bad2");
+        let err = make(
+            Arrangement::new("1-D element-wise", |_| catalog::elementwise_1d(&["input"])),
+            app.build(),
+            vec![TensorSpec::input("input", vec![dim("n", 8)])],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no output"), "{err:#}");
+    }
+
+    #[test]
+    fn registry_accepts_runtime_registration() {
+        let reg = KernelRegistry::new();
+        assert!(reg.is_empty());
+        let mut app = AppBuilder::new("copy");
+        let x = app.load(0);
+        app.store(1, x);
+        let def = make(
+            Arrangement::new(
+                "1-D element-wise",
+                |_| crate::arrange::catalog::elementwise_1d(&["input", "output"]),
+            )
+            .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" }),
+            app.build(),
+            vec![
+                TensorSpec::input("input", vec![dim("n", 9)]),
+                TensorSpec::output("output", vec![dim("n", 9)]),
+            ],
+        )
+        .unwrap();
+        let arc = reg.register(def);
+        assert_eq!(reg.len(), 1);
+        assert!(arc.executable() && arc.coalesce);
+        assert!(Arc::ptr_eq(&reg.lookup("copy").unwrap(), &arc));
+    }
+}

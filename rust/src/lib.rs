@@ -8,6 +8,13 @@
 //! * [`symbolic`] / [`tensor`] / [`arrange`] — a full Rust mirror of the
 //!   DSL's tensor-oriented metaprogramming algebra, used to validate
 //!   arrangements and compute launch plans at serve time;
+//! * [`kernel`] — the paper's `make(arrangement, application, tensors)`
+//!   API as a first-class Rust surface: kernels are *declared* (symbolic
+//!   tensors + catalog arrangement + a tile program authored through a
+//!   typed builder), and arity, shape preconditions, output inference,
+//!   the per-shape specializer and coalescibility are all **derived**;
+//!   definitions live in the global [`kernel::KernelRegistry`] the whole
+//!   serving stack resolves through;
 //! * [`exec`] — the **native tile-execution backend**, an explicit
 //!   compile → cache → execute pipeline: a tile-program IR mirroring the
 //!   `ntl` operation set, strided tile views lowered once per shape
@@ -40,6 +47,7 @@ pub mod exec;
 pub mod harness;
 pub mod inference;
 pub mod json;
+pub mod kernel;
 pub mod prng;
 pub mod runtime;
 pub mod symbolic;

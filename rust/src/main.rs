@@ -7,6 +7,7 @@
 //!   bench-kernels regenerate Fig 6 (single-kernel tasks)
 //!   bench-e2e     regenerate Fig 7 (end-to-end inference)
 //!   serve         run the kernel-serving coordinator demo workload
+//!   kernels       list the kernel registry (serving-deployment debugging)
 //!   inspect       print manifest + launch-plan details
 
 use std::sync::Arc;
@@ -26,6 +27,7 @@ fn main() -> Result<()> {
         Some("bench-kernels") => harness::fig6::run(&args),
         Some("bench-e2e") => harness::fig7::run(&args),
         Some("serve") => harness::serve::run(&args),
+        Some("kernels") => kernels_cmd(),
         Some("inspect") => inspect(),
         other => {
             if let Some(cmd) = other {
@@ -41,6 +43,8 @@ fn main() -> Result<()> {
                  \x20 bench-kernels  regenerate Fig 6 (single-kernel performance)\n\
                  \x20 bench-e2e      regenerate Fig 7 (end-to-end inference throughput)\n\
                  \x20 serve          run the kernel-serving coordinator demo\n\
+                 \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
+                 \x20                coalescible, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"
             );
             Ok(())
@@ -98,6 +102,37 @@ fn validate() -> Result<()> {
     Ok(())
 }
 
+/// `repro kernels` — the registry as a serving-deployment debugging view:
+/// every `kernel::make`-declared definition with its derived contract,
+/// plus whether an AOT artifact could shadow the native path.
+fn kernels_cmd() -> Result<()> {
+    let manifest = Manifest::load_or_builtin(&artifacts_dir());
+    let defs = ninetoothed_repro::kernel::kernels();
+    let yn = |b: bool| if b { "yes" } else { "no" };
+    println!("kernel registry ({} definitions):", defs.len());
+    println!(
+        "  {:<11} {:>5}  {:<10} {:<6} {:<8} arrangement",
+        "name", "arity", "coalesce", "native", "artifact"
+    );
+    for def in &defs {
+        let artifact = manifest.kernels.iter().any(|k| k.name == def.name);
+        println!(
+            "  {:<11} {:>5}  {:<10} {:<6} {:<8} {}",
+            def.name,
+            def.arity,
+            yn(def.coalesce),
+            yn(def.executable()),
+            yn(artifact),
+            def.arrangement.summary
+        );
+    }
+    println!(
+        "\n(coalesce and native availability are derived by kernel::make from the \
+         arrangement — nothing is asserted by hand)"
+    );
+    Ok(())
+}
+
 fn inspect() -> Result<()> {
     let manifest = Manifest::load_or_builtin(&artifacts_dir());
     println!("artifacts: {}", manifest.dir.display());
@@ -115,9 +150,14 @@ fn inspect() -> Result<()> {
         );
     }
     let native = ninetoothed_repro::exec::kernels();
-    println!("native tile programs ({}):", native.len());
+    println!("registered kernel definitions ({}):", native.len());
     for k in native {
-        println!("  {:<10} arity={} (shape-polymorphic)", k.name, k.arity);
+        println!(
+            "  {:<10} arity={} ({})",
+            k.name,
+            k.arity,
+            if k.executable() { "shape-polymorphic" } else { "declared; not natively lowerable" }
+        );
     }
     Ok(())
 }

@@ -107,10 +107,14 @@ pub fn native_fallback_kind(name: &str, variant: &str) -> Result<BackendKind> {
     if variant == "ref" && crate::exec::reference::supports(name) {
         return Ok(BackendKind::Reference);
     }
-    if crate::exec::lookup(name).is_some() {
-        return Ok(BackendKind::Native);
+    match crate::kernel::lookup(name) {
+        Some(def) if def.executable() => Ok(BackendKind::Native),
+        Some(def) => anyhow::bail!(
+            "kernel {name} is registered but its arrangement cannot be lowered natively: {}",
+            def.probe_error().unwrap_or("unknown probe failure")
+        ),
+        None => anyhow::bail!("kernel {name} has no native tile program or reference oracle"),
     }
-    anyhow::bail!("kernel {name} has no native tile program or reference oracle")
 }
 
 /// Which execution path a resolved backend uses.
@@ -205,7 +209,7 @@ impl Backend for ArtifactBackend {
 /// plan cache (specializing + lowering only on a miss), `execute` launches
 /// the cached program over the persistent pool.
 pub struct NativeBackend {
-    kernel: &'static crate::exec::NativeKernel,
+    kernel: Arc<crate::kernel::KernelDef>,
     variant: String,
     scheduler: crate::exec::GridScheduler,
     plans: Arc<crate::exec::PlanCache>,
@@ -214,17 +218,18 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new(
-        kernel: &'static crate::exec::NativeKernel,
+        kernel: Arc<crate::kernel::KernelDef>,
         variant: &str,
         threads: usize,
         plans: Arc<crate::exec::PlanCache>,
     ) -> NativeBackend {
+        let label = format!("{}.native", kernel.name);
         NativeBackend {
             kernel,
             variant: variant.to_string(),
             scheduler: crate::exec::GridScheduler::pooled(threads),
             plans,
-            label: format!("{}.native", kernel.name),
+            label,
         }
     }
 }
@@ -239,7 +244,7 @@ impl Backend for NativeBackend {
     }
 
     fn prepare(&self, shapes: &[&[usize]]) -> Result<Prepared> {
-        Ok(Prepared::Native(self.plans.prepare(self.kernel, &self.variant, shapes)?))
+        Ok(Prepared::Native(self.plans.prepare(&self.kernel, &self.variant, shapes)?))
     }
 
     fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {

@@ -119,8 +119,8 @@ impl Registry {
             Err(artifact_err) => match super::native_fallback_kind(name, variant) {
                 Ok(super::BackendKind::Reference) => Arc::new(RefBackend::new(name)),
                 Ok(_) => {
-                    let kernel = crate::exec::lookup(name)
-                        .expect("classifier only returns Native when a tile program exists");
+                    let kernel = crate::kernel::lookup(name)
+                        .expect("classifier only returns Native when a definition exists");
                     Arc::new(NativeBackend::new(
                         kernel,
                         variant,

@@ -4,7 +4,11 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
-use std::rc::Rc;
+// Atomically refcounted nodes: expressions are built/cloned at
+// specialization time only (never in the execute hot path), and making
+// them `Send + Sync` lets `kernel::KernelDef` — which stores symbolic
+// shape specs — be shared across coordinator workers behind one `Arc`.
+use std::sync::Arc;
 
 #[derive(Debug)]
 pub enum ExprError {
@@ -27,21 +31,21 @@ impl fmt::Display for ExprError {
 
 impl std::error::Error for ExprError {}
 
-/// A symbolic integer expression.  Cheap to clone (`Rc` nodes).
+/// A symbolic integer expression.  Cheap to clone (`Arc` nodes).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Expr {
     Const(i64),
-    Sym(Rc<str>),
-    Add(Rc<Expr>, Rc<Expr>),
-    Sub(Rc<Expr>, Rc<Expr>),
-    Mul(Rc<Expr>, Rc<Expr>),
-    FloorDiv(Rc<Expr>, Rc<Expr>),
-    Mod(Rc<Expr>, Rc<Expr>),
+    Sym(Arc<str>),
+    Add(Arc<Expr>, Arc<Expr>),
+    Sub(Arc<Expr>, Arc<Expr>),
+    Mul(Arc<Expr>, Arc<Expr>),
+    FloorDiv(Arc<Expr>, Arc<Expr>),
+    Mod(Arc<Expr>, Arc<Expr>),
     /// ceiling division — `cdiv(a, b)` in the manifest
-    CeilDiv(Rc<Expr>, Rc<Expr>),
-    Min(Rc<Expr>, Rc<Expr>),
-    Max(Rc<Expr>, Rc<Expr>),
-    Neg(Rc<Expr>),
+    CeilDiv(Arc<Expr>, Arc<Expr>),
+    Min(Arc<Expr>, Arc<Expr>),
+    Max(Arc<Expr>, Arc<Expr>),
+    Neg(Arc<Expr>),
 }
 
 /// Python floor division (rounds toward negative infinity).
@@ -72,7 +76,7 @@ pub fn py_cdiv(a: i64, b: i64) -> i64 {
 
 impl Expr {
     pub fn sym(name: &str) -> Expr {
-        Expr::Sym(Rc::from(name))
+        Expr::Sym(Arc::from(name))
     }
 
     pub fn constant(&self) -> Option<i64> {
@@ -89,7 +93,7 @@ impl Expr {
             (Some(x), Some(y)) => Expr::Const(x + y),
             (Some(0), _) => b,
             (_, Some(0)) => a,
-            _ => Expr::Add(Rc::new(a), Rc::new(b)),
+            _ => Expr::Add(Arc::new(a), Arc::new(b)),
         }
     }
 
@@ -97,7 +101,7 @@ impl Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) => Expr::Const(x - y),
             (_, Some(0)) => a,
-            _ => Expr::Sub(Rc::new(a), Rc::new(b)),
+            _ => Expr::Sub(Arc::new(a), Arc::new(b)),
         }
     }
 
@@ -107,7 +111,7 @@ impl Expr {
             (Some(0), _) | (_, Some(0)) => Expr::Const(0),
             (Some(1), _) => b,
             (_, Some(1)) => a,
-            _ => Expr::Mul(Rc::new(a), Rc::new(b)),
+            _ => Expr::Mul(Arc::new(a), Arc::new(b)),
         }
     }
 
@@ -115,7 +119,7 @@ impl Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) if y != 0 => Expr::Const(py_floordiv(x, y)),
             (_, Some(1)) => a,
-            _ => Expr::FloorDiv(Rc::new(a), Rc::new(b)),
+            _ => Expr::FloorDiv(Arc::new(a), Arc::new(b)),
         }
     }
 
@@ -123,7 +127,7 @@ impl Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) if y != 0 => Expr::Const(py_mod(x, y)),
             (_, Some(1)) => Expr::Const(0),
-            _ => Expr::Mod(Rc::new(a), Rc::new(b)),
+            _ => Expr::Mod(Arc::new(a), Arc::new(b)),
         }
     }
 
@@ -131,28 +135,28 @@ impl Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) if y != 0 => Expr::Const(py_cdiv(x, y)),
             _ if a == b => Expr::Const(1), // structural identity, sizes are positive
-            _ => Expr::CeilDiv(Rc::new(a), Rc::new(b)),
+            _ => Expr::CeilDiv(Arc::new(a), Arc::new(b)),
         }
     }
 
     pub fn min2(a: Expr, b: Expr) -> Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) => Expr::Const(x.min(y)),
-            _ => Expr::Min(Rc::new(a), Rc::new(b)),
+            _ => Expr::Min(Arc::new(a), Arc::new(b)),
         }
     }
 
     pub fn max2(a: Expr, b: Expr) -> Expr {
         match (a.constant(), b.constant()) {
             (Some(x), Some(y)) => Expr::Const(x.max(y)),
-            _ => Expr::Max(Rc::new(a), Rc::new(b)),
+            _ => Expr::Max(Arc::new(a), Arc::new(b)),
         }
     }
 
     pub fn neg(a: Expr) -> Expr {
         match a.constant() {
             Some(x) => Expr::Const(-x),
-            None => Expr::Neg(Rc::new(a)),
+            None => Expr::Neg(Arc::new(a)),
         }
     }
 

@@ -1,0 +1,614 @@
+//! Migration acceptance for the `kernel::make` API redesign.
+//!
+//! Before this redesign every native kernel was a hand-wired entry in a
+//! static slice: bespoke shape-check, specializer, arity and coalesce
+//! code per kernel.  These tests pin the migration:
+//!
+//! * the **pre-migration specializers** are ported verbatim below as an
+//!   oracle, and every migrated builtin must produce **bit-identical**
+//!   outputs through the `make`-derived path;
+//! * the **derived shape preconditions** must accept/reject exactly the
+//!   same shape sets as the old hand-written checks (property sweep);
+//! * the **derived coalescibility** must keep non-row-independent
+//!   kernels (mm, addmm, rope) out of the batcher's stacking path;
+//! * **rope** — defined only through `make` — must serve end-to-end
+//!   through the coordinator with plan-cache hits and golden-verified
+//!   outputs, and a kernel registered at runtime must serve with zero
+//!   additional wiring.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use ninetoothed_repro::arrange::catalog;
+use ninetoothed_repro::coordinator::router::RouteKey;
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig, Request, Router};
+use ninetoothed_repro::exec::{
+    self, BinOp, GridScheduler, Instr, ParamView, ReduceOp, TileProgram, UnaryOp,
+};
+use ninetoothed_repro::harness::golden::native_task_inputs;
+use ninetoothed_repro::kernel::{self, dim, make, AppBuilder, Arrangement, Meta, TensorSpec};
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest};
+use ninetoothed_repro::tensor::SymTensor;
+
+// ===========================================================================
+// The pre-migration native catalog, ported verbatim from the hand-wired
+// `exec/native.rs` that `kernel::make` replaced.  This is the oracle the
+// migrated definitions are pinned against — do not "improve" it.
+// ===========================================================================
+
+struct OldSpec {
+    views: Vec<ParamView>,
+    output_shapes: Vec<Vec<usize>>,
+}
+
+fn bind(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+fn bind_sizes(bindings: &mut BTreeMap<String, i64>, name: &str, shape: &[usize]) {
+    for (d, &s) in shape.iter().enumerate() {
+        bindings.insert(format!("{name}_size_{d}"), s as i64);
+    }
+}
+
+fn elementwise_block(n: usize) -> i64 {
+    (n.next_power_of_two() as i64).min(4096)
+}
+
+const MM_BLOCK: i64 = 32;
+
+fn mm_blocks(m: usize, k: usize, n: usize) -> (i64, i64, i64) {
+    if m.max(n).max(k) <= 128 {
+        (MM_BLOCK, MM_BLOCK, MM_BLOCK)
+    } else {
+        (64, 64, k.min(256) as i64)
+    }
+}
+
+fn build_spec(
+    tensors: &[SymTensor],
+    bindings: &BTreeMap<String, i64>,
+    shapes: &[&[usize]],
+    is_output: &[bool],
+    pad_values: &[f32],
+) -> Result<OldSpec> {
+    let mut views = Vec::new();
+    for (((t, shape), &out), &pad) in tensors.iter().zip(shapes).zip(is_output).zip(pad_values) {
+        views.push(ParamView::specialize(t, bindings, shape, out, pad)?);
+    }
+    let output_shapes = views
+        .iter()
+        .zip(shapes)
+        .filter(|(v, _)| v.is_output)
+        .map(|(_, s)| s.to_vec())
+        .collect();
+    Ok(OldSpec { views, output_shapes })
+}
+
+fn check_add(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 1 || a != b {
+        bail!("add expects two equal 1-D tensors, got {a:?} and {b:?}");
+    }
+    Ok(())
+}
+
+fn check_1d(shapes: &[&[usize]]) -> Result<()> {
+    if shapes[0].len() != 1 {
+        bail!("expected a 1-D tensor, got {:?}", shapes[0]);
+    }
+    Ok(())
+}
+
+fn check_2d(shapes: &[&[usize]]) -> Result<()> {
+    if shapes[0].len() != 2 {
+        bail!("expected a 2-D tensor, got {:?}", shapes[0]);
+    }
+    Ok(())
+}
+
+fn check_mm(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+        bail!("mm expects [m,k] x [k,n], got {a:?} and {b:?}");
+    }
+    Ok(())
+}
+
+fn check_bmm(shapes: &[&[usize]]) -> Result<()> {
+    let (a, b) = (shapes[0], shapes[1]);
+    if a.len() != 3 || b.len() != 3 || a[0] != b[0] || a[2] != b[1] {
+        bail!("bmm expects [b,m,k] x [b,k,n], got {a:?} and {b:?}");
+    }
+    Ok(())
+}
+
+fn check_addmm(shapes: &[&[usize]]) -> Result<()> {
+    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
+    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+        bail!("addmm expects mat1 [m,k] x mat2 [k,n], got {a:?} and {b:?}");
+    }
+    let (m, n) = (a[0], b[1]);
+    let broadcastable = match bias.len() {
+        1 => bias[0] == n,
+        2 => (bias[0] == 1 || bias[0] == m) && bias[1] == n,
+        _ => false,
+    };
+    if !broadcastable {
+        bail!("addmm bias {bias:?} does not broadcast to the [{m}, {n}] output");
+    }
+    Ok(())
+}
+
+fn spec_add(shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_add(shapes)?;
+    let a = shapes[0];
+    let n = a[0];
+    let tensors = catalog::add()?;
+    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(n))]);
+    for name in ["input", "other", "output"] {
+        bind_sizes(&mut bindings, name, a);
+    }
+    build_spec(&tensors, &bindings, &[a, a, a], &[false, false, true], &[0.0, 0.0, 0.0])
+}
+
+fn spec_silu(shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_1d(shapes)?;
+    let a = shapes[0];
+    let tensors = catalog::elementwise_1d(&["input", "output"])?;
+    let mut bindings = bind(&[("BLOCK_SIZE", elementwise_block(a[0]))]);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "output", a);
+    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[0.0, 0.0])
+}
+
+fn spec_rowwise(pad: f32, shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_2d(shapes)?;
+    let a = shapes[0];
+    let tensors = catalog::rowwise()?;
+    let mut bindings = BTreeMap::new();
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "output", a);
+    build_spec(&tensors, &bindings, &[a, a], &[false, true], &[pad, 0.0])
+}
+
+fn spec_mm(shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_mm(shapes)?;
+    let (a, b) = (shapes[0], shapes[1]);
+    let out = vec![a[0], b[1]];
+    let tensors = catalog::mm()?;
+    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
+}
+
+fn spec_bmm(shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_bmm(shapes)?;
+    let (a, b) = (shapes[0], shapes[1]);
+    let out = vec![a[0], a[1], b[2]];
+    let tensors = catalog::bmm()?;
+    let (bm, bn, bk) = mm_blocks(a[1], a[2], b[2]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(&tensors, &bindings, &[a, b, &out], &[false, false, true], &[0.0, 0.0, 0.0])
+}
+
+fn spec_addmm(shapes: &[&[usize]]) -> Result<OldSpec> {
+    check_addmm(shapes)?;
+    let (bias, a, b) = (shapes[0], shapes[1], shapes[2]);
+    let out = vec![a[0], b[1]];
+    let bias2d: Vec<usize> = if bias.len() == 1 { vec![1, bias[0]] } else { bias.to_vec() };
+    let row_bias = bias2d[0] == 1;
+    let tensors = catalog::addmm(row_bias)?;
+    let (bm, bn, bk) = mm_blocks(a[0], a[1], b[1]);
+    let mut bindings = bind(&[("BLOCK_SIZE_M", bm), ("BLOCK_SIZE_N", bn), ("BLOCK_SIZE_K", bk)]);
+    bind_sizes(&mut bindings, "bias", &bias2d);
+    bind_sizes(&mut bindings, "input", a);
+    bind_sizes(&mut bindings, "other", b);
+    bind_sizes(&mut bindings, "output", &out);
+    build_spec(
+        &tensors,
+        &bindings,
+        &[&bias2d, a, b, &out],
+        &[false, false, false, true],
+        &[0.0, 0.0, 0.0, 0.0],
+    )
+}
+
+fn program_add() -> TileProgram {
+    TileProgram {
+        name: "add",
+        regs: 3,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Load { dst: 1, param: 1 },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
+            Instr::Store { param: 2, src: 2 },
+        ],
+    }
+}
+
+fn program_silu() -> TileProgram {
+    TileProgram {
+        name: "silu",
+        regs: 3,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Unary { dst: 1, a: 0, op: UnaryOp::Sigmoid },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 2 },
+        ],
+    }
+}
+
+fn program_gelu() -> TileProgram {
+    const TWO_SQRT_2_OVER_PI: f32 = 1.595_769_1;
+    const CUBIC: f32 = 0.044_715;
+    TileProgram {
+        name: "gelu",
+        regs: 10,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
+            Instr::Binary { dst: 2, a: 1, b: 0, op: BinOp::Mul },
+            Instr::Const { dst: 3, value: CUBIC },
+            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Mul },
+            Instr::Binary { dst: 5, a: 0, b: 4, op: BinOp::Add },
+            Instr::Const { dst: 6, value: TWO_SQRT_2_OVER_PI },
+            Instr::Binary { dst: 7, a: 5, b: 6, op: BinOp::Mul },
+            Instr::Unary { dst: 8, a: 7, op: UnaryOp::Sigmoid },
+            Instr::Binary { dst: 9, a: 0, b: 8, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 9 },
+        ],
+    }
+}
+
+fn program_softmax() -> TileProgram {
+    TileProgram {
+        name: "softmax",
+        regs: 6,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Max },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
+            Instr::Unary { dst: 3, a: 2, op: UnaryOp::Exp },
+            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Sum },
+            Instr::Binary { dst: 5, a: 3, b: 4, op: BinOp::Div },
+            Instr::Store { param: 1, src: 5 },
+        ],
+    }
+}
+
+fn program_rms_norm() -> TileProgram {
+    TileProgram {
+        name: "rms_norm",
+        regs: 7,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Binary { dst: 1, a: 0, b: 0, op: BinOp::Mul },
+            Instr::Reduce { dst: 2, a: 1, axis: None, op: ReduceOp::Mean },
+            Instr::Const { dst: 3, value: 1e-6 },
+            Instr::Binary { dst: 4, a: 2, b: 3, op: BinOp::Add },
+            Instr::Unary { dst: 5, a: 4, op: UnaryOp::Rsqrt },
+            Instr::Binary { dst: 6, a: 0, b: 5, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 6 },
+        ],
+    }
+}
+
+fn program_layer_norm() -> TileProgram {
+    TileProgram {
+        name: "layer_norm",
+        regs: 9,
+        instrs: vec![
+            Instr::Load { dst: 0, param: 0 },
+            Instr::Reduce { dst: 1, a: 0, axis: None, op: ReduceOp::Mean },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Sub },
+            Instr::Binary { dst: 3, a: 2, b: 2, op: BinOp::Mul },
+            Instr::Reduce { dst: 4, a: 3, axis: None, op: ReduceOp::Mean },
+            Instr::Const { dst: 5, value: 1e-6 },
+            Instr::Binary { dst: 6, a: 4, b: 5, op: BinOp::Add },
+            Instr::Unary { dst: 7, a: 6, op: UnaryOp::Rsqrt },
+            Instr::Binary { dst: 8, a: 2, b: 7, op: BinOp::Mul },
+            Instr::Store { param: 1, src: 8 },
+        ],
+    }
+}
+
+fn program_matmul(name: &'static str) -> TileProgram {
+    TileProgram {
+        name,
+        regs: 1,
+        instrs: vec![
+            Instr::Zeros { dst: 0, like_param: 2 },
+            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }] },
+            Instr::Store { param: 2, src: 0 },
+        ],
+    }
+}
+
+fn program_addmm() -> TileProgram {
+    TileProgram {
+        name: "addmm",
+        regs: 3,
+        instrs: vec![
+            Instr::Zeros { dst: 0, like_param: 3 },
+            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 1, b_param: 2 }] },
+            Instr::Load { dst: 1, param: 0 },
+            Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
+            Instr::Store { param: 3, src: 2 },
+        ],
+    }
+}
+
+/// The nine pre-migration builtins.
+const OLD_KERNELS: &[&str] =
+    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm"];
+
+fn old_compile(name: &str, shapes: &[&[usize]]) -> Result<(TileProgram, OldSpec)> {
+    Ok(match name {
+        "add" => (program_add(), spec_add(shapes)?),
+        "silu" => (program_silu(), spec_silu(shapes)?),
+        "gelu" => (program_gelu(), spec_silu(shapes)?),
+        "softmax" => (program_softmax(), spec_rowwise(f32::NEG_INFINITY, shapes)?),
+        "rms_norm" => (program_rms_norm(), spec_rowwise(0.0, shapes)?),
+        "layer_norm" => (program_layer_norm(), spec_rowwise(0.0, shapes)?),
+        "mm" => (program_matmul("mm"), spec_mm(shapes)?),
+        "bmm" => (program_matmul("bmm"), spec_bmm(shapes)?),
+        "addmm" => (program_addmm(), spec_addmm(shapes)?),
+        other => bail!("no pre-migration oracle for {other}"),
+    })
+}
+
+/// Execute through the ported pre-migration path (serial, like-for-like
+/// with the bit-deterministic scheduler).
+fn old_run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+    let (program, spec) = old_compile(name, &shapes)?;
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    GridScheduler::serial().run(&program, &spec.views, &refs, &spec.output_shapes)
+}
+
+/// The old `NativeKernel::check_shapes`: arity, rank-0 / zero-length, and
+/// the hand-written per-kernel precondition.
+fn old_check_shapes(name: &str, shapes: &[&[usize]]) -> Result<()> {
+    let (arity, check): (usize, fn(&[&[usize]]) -> Result<()>) = match name {
+        "add" => (2, check_add),
+        "silu" | "gelu" => (1, check_1d),
+        "softmax" | "rms_norm" | "layer_norm" => (1, check_2d),
+        "mm" => (2, check_mm),
+        "bmm" => (2, check_bmm),
+        "addmm" => (3, check_addmm),
+        other => bail!("no pre-migration checks for {other}"),
+    };
+    if shapes.len() != arity {
+        bail!("expected {arity} inputs, got {}", shapes.len());
+    }
+    for s in shapes {
+        if s.is_empty() {
+            bail!("rank-0 input");
+        }
+        if s.iter().any(|&d| d == 0) {
+            bail!("zero-length dimension");
+        }
+    }
+    check(shapes)
+}
+
+// ===========================================================================
+// the acceptance tests
+// ===========================================================================
+
+#[test]
+fn migrated_builtins_are_bit_identical_to_the_pre_migration_specializers() {
+    let mut rng = SplitMix64::new(2025);
+    let sched = GridScheduler::serial();
+    for name in OLD_KERNELS {
+        let inputs = native_task_inputs(name, &mut rng).unwrap();
+        let old = old_run(name, &inputs).unwrap();
+        let new = kernel::lookup(name).unwrap().run(&inputs, &sched).unwrap();
+        assert_eq!(old.len(), new.len());
+        for (o, n) in old.iter().zip(&new) {
+            assert_eq!(o, n, "{name}: make-derived path must match pre-migration bitwise");
+        }
+    }
+    // addmm across every admitted bias rank (the arrangement-variant path)
+    let addmm = kernel::lookup("addmm").unwrap();
+    let a = HostTensor::randn(vec![33, 21], &mut rng);
+    let b = HostTensor::randn(vec![21, 17], &mut rng);
+    for bias_shape in [vec![17usize], vec![1, 17], vec![33, 17]] {
+        let bias = HostTensor::randn(bias_shape.clone(), &mut rng);
+        let inputs = vec![bias, a.clone(), b.clone()];
+        let old = old_run("addmm", &inputs).unwrap();
+        let new = addmm.run(&inputs, &sched).unwrap();
+        assert_eq!(old[0], new[0], "addmm bias {bias_shape:?}: bitwise mismatch");
+    }
+}
+
+fn random_shape(rng: &mut SplitMix64, max_rank: usize) -> Vec<usize> {
+    let rank = rng.below(max_rank as u64 + 1) as usize;
+    (0..rank).map(|_| rng.below(6) as usize).collect()
+}
+
+#[test]
+fn derived_preconditions_match_the_old_hand_written_checks() {
+    let mut rng = SplitMix64::new(7);
+    for name in OLD_KERNELS {
+        let def = kernel::lookup(name).unwrap();
+        // adversarial sweep: random ranks (0..=4), random dims (0..=5,
+        // zero-length included), arity-1 ..= arity+1 argument counts
+        for _ in 0..400 {
+            let count = (def.arity + rng.below(3) as usize).saturating_sub(1);
+            let shapes: Vec<Vec<usize>> = (0..count).map(|_| random_shape(&mut rng, 4)).collect();
+            let refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
+            let old_ok = old_check_shapes(name, &refs).is_ok();
+            let new_ok = def.check_shapes(&refs).is_ok();
+            assert_eq!(old_ok, new_ok, "{name}: precondition divergence on {shapes:?}");
+        }
+        // and the known-good shapes are accepted by both
+        let inputs = native_task_inputs(name, &mut rng).unwrap();
+        let refs: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        assert!(old_check_shapes(name, &refs).is_ok());
+        assert!(def.check_shapes(&refs).is_ok(), "{name}: valid shapes rejected");
+    }
+}
+
+fn admit(router: &Router, name: &str, inputs: Vec<HostTensor>) -> RouteKey {
+    let (tx, _rx) = mpsc::channel();
+    std::mem::forget(_rx);
+    let req = Request {
+        kernel: name.to_string(),
+        variant: "nt".to_string(),
+        inputs,
+        submitted: Instant::now(),
+        reply: tx,
+    };
+    router.admit(&req).unwrap()
+}
+
+#[test]
+fn non_row_independent_kernels_are_never_coalesced() {
+    // the flag is derived at definition time, not asserted by hand
+    for (name, want) in [
+        ("add", true),
+        ("silu", true),
+        ("gelu", true),
+        ("softmax", true),
+        ("rms_norm", true),
+        ("layer_norm", true),
+        // bmm stacks along its batch dim: every parameter shares it and
+        // batches are independent — the derivation discovers this
+        ("bmm", true),
+        // mm/addmm read `other` rows via the k loop; rope's cos/sin
+        // tables lack the stacking dim entirely
+        ("mm", false),
+        ("addmm", false),
+        ("rope", false),
+    ] {
+        assert_eq!(kernel::lookup(name).unwrap().coalesce, want, "{name}");
+    }
+    // and the router routes straight off the derived flag
+    let router = Router::new(Arc::new(Manifest::builtin()));
+    let mut rng = SplitMix64::new(5);
+    for (name, want) in [("softmax", true), ("bmm", true), ("mm", false), ("rope", false)] {
+        let inputs = native_task_inputs(name, &mut rng).unwrap();
+        let route = admit(&router, name, inputs);
+        assert!(route.native, "{name} must route natively");
+        assert_eq!(route.coalescible, want, "{name} route coalescibility");
+    }
+}
+
+#[test]
+fn rope_burst_is_never_fused_into_one_launch() {
+    // regression for the satellite: a queued same-shape burst of a
+    // non-row-independent kernel must execute one launch per request
+    let coordinator = Coordinator::start(
+        Arc::new(Manifest::builtin()),
+        CoordinatorConfig { workers: 1, queue_capacity: 128, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(61);
+    let a = HostTensor::randn(vec![192, 192], &mut rng);
+    let b = HostTensor::randn(vec![192, 192], &mut rng);
+    // head-of-line mm keeps the single worker busy so the rope burst queues
+    let mm_rx = coordinator.submit("mm", "nt", vec![a, b]).unwrap();
+    let cos = HostTensor::randn(vec![9, 8], &mut rng);
+    let sin = HostTensor::randn(vec![9, 8], &mut rng);
+    let mut rxs = Vec::new();
+    for _ in 0..5 {
+        let x = HostTensor::randn(vec![2, 9, 3, 16], &mut rng);
+        rxs.push(coordinator.submit("rope", "nt", vec![x, cos.clone(), sin.clone()]).unwrap());
+    }
+    mm_rx.recv().unwrap().unwrap();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.coalesced, 0, "rope must never stack: {}", metrics.render());
+    assert_eq!(metrics.executions, 6, "every rope request executes alone");
+    coordinator.shutdown();
+}
+
+#[test]
+fn rope_serves_end_to_end_through_the_coordinator() {
+    // the API's proof: rope exists only as a `make` declaration, yet it
+    // serves through admission, the plan cache and the native backend
+    let coordinator =
+        Coordinator::start(Arc::new(Manifest::builtin()), CoordinatorConfig::default()).unwrap();
+    let mut rng = SplitMix64::new(71);
+    let input = HostTensor::randn(vec![2, 9, 4, 32], &mut rng);
+    let cos = HostTensor::randn(vec![9, 16], &mut rng);
+    let sin = HostTensor::randn(vec![9, 16], &mut rng);
+    let inputs = vec![input, cos, sin];
+    let first =
+        coordinator.submit("rope", "nt", inputs.clone()).unwrap().recv().unwrap().unwrap();
+    assert_eq!(first.backend, "native");
+    let expected = exec::reference::run("rope", &inputs).unwrap();
+    let diff = first.outputs[0].max_abs_diff(&expected[0]).unwrap();
+    assert!(diff <= 1e-4, "rope vs oracle: max|diff| = {diff}");
+    let m1 = coordinator.metrics();
+    assert_eq!((m1.plan_misses, m1.plan_hits), (1, 0), "first rope request compiles");
+    let second =
+        coordinator.submit("rope", "nt", inputs.clone()).unwrap().recv().unwrap().unwrap();
+    let m2 = coordinator.metrics();
+    assert_eq!((m2.plan_misses, m2.plan_hits), (1, 1), "same-shape rope request must hit");
+    assert_eq!(first.outputs[0], second.outputs[0], "bit-identical across cache hit");
+    // derived preconditions reject at admission: odd head dim, wrong table
+    let odd = HostTensor::randn(vec![2, 9, 4, 31], &mut rng);
+    assert!(coordinator
+        .submit("rope", "nt", vec![odd, inputs[1].clone(), inputs[2].clone()])
+        .is_err());
+    let bad_cos = HostTensor::randn(vec![9, 15], &mut rng);
+    assert!(coordinator
+        .submit("rope", "nt", vec![inputs[0].clone(), bad_cos, inputs[2].clone()])
+        .is_err());
+    coordinator.shutdown();
+}
+
+#[test]
+fn runtime_registered_kernel_serves_with_zero_additional_wiring() {
+    // declare y = 3x through the public API, register it, and serve it
+    // through a coordinator that has no special knowledge of it
+    let arrangement = Arrangement::new(
+        "1-D element-wise: BLOCK_SIZE tiles",
+        |_| catalog::elementwise_1d(&["input", "output"]),
+    )
+    .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" });
+    let mut app = AppBuilder::new("scale3");
+    let x = app.load(0);
+    let three = app.constant(3.0);
+    let y = app.binary(x, three, BinOp::Mul);
+    app.store(1, y);
+    let def = make(
+        arrangement,
+        app.build(),
+        vec![
+            TensorSpec::input("input", vec![dim("n", 11)]),
+            TensorSpec::output("output", vec![dim("n", 11)]),
+        ],
+    )
+    .unwrap();
+    assert!(def.coalesce, "element-wise kernels derive as coalescible");
+    kernel::registry().register(def);
+
+    let coordinator =
+        Coordinator::start(Arc::new(Manifest::builtin()), CoordinatorConfig::default()).unwrap();
+    let mut rng = SplitMix64::new(81);
+    let x = HostTensor::randn(vec![1234], &mut rng);
+    let rx = coordinator.submit("scale3", "nt", vec![x.clone()]).unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.backend, "native");
+    let got = resp.outputs[0].as_f32().unwrap();
+    for (g, w) in got.iter().zip(x.as_f32().unwrap()) {
+        assert!((g - 3.0 * w).abs() < 1e-6);
+    }
+    coordinator.shutdown();
+}

@@ -30,7 +30,9 @@ use ninetoothed_repro::json::Json;
 /// Metrics gated as "higher is better" when present in a baseline row.
 /// `warm_per_s` is the plan-cache warm-path gate (a >25% regression in
 /// warm `prepare` throughput fails CI); `coalesced_per_s` gates the
-/// stacked-launch serving path the same way.
+/// stacked-launch serving path the same way; `resolves_per_s` gates the
+/// `kernel::make` registry indirection (hash lookup + Arc clone — the
+/// API redesign must stay free on the per-request path).
 const METRICS: &[&str] = &[
     "gflops",
     "naive_gflops",
@@ -39,6 +41,7 @@ const METRICS: &[&str] = &[
     "speedup",
     "warm_per_s",
     "coalesced_per_s",
+    "resolves_per_s",
 ];
 
 fn load(path: &str) -> Result<Json, String> {
