@@ -6,9 +6,10 @@
 //! 1. **dot microkernel sweep** — naive i-k-j loop vs the blocked GEMM
 //!    on single tiles across sizes (the ISSUE 2 acceptance series: the
 //!    512^3 row must show >= 4x GFLOP/s over naive);
-//! 2. **kernel sweeps** — mm / bmm / softmax GFLOP/s across sizes,
-//!    serial vs pooled grid scheduler (grid-vs-intra-tile parallelism
-//!    evidence);
+//! 2. **kernel sweeps** — mm / bmm / softmax / sdpa GFLOP/s across
+//!    sizes, serial vs pooled grid scheduler (grid-vs-intra-tile
+//!    parallelism evidence; sdpa is the loop-carried flash-attention
+//!    kernel, declared only through `kernel::make`);
 //! 3. **plan cache** — cold compile (specialize + lower + probe-verify)
 //!    vs warm `PlanCache::prepare` latency: the compile-once/execute-many
 //!    evidence, gated so a warm-path regression fails CI;
@@ -89,17 +90,30 @@ fn rope_case(b: usize, s: usize, h: usize, d: usize, rng: &mut SplitMix64) -> Ca
     }
 }
 
+/// Flash-style attention — the loop-carried proof kernel.  FLOPs count
+/// the two GEMMs (`QK^T` and `PV`): `4 * b * h * s^2 * d`.
+fn sdpa_case(b: usize, h: usize, s: usize, d: usize, rng: &mut SplitMix64) -> Case {
+    Case {
+        key: format!("sdpa_{b}x{h}x{s}x{d}"),
+        kernel: "sdpa",
+        inputs: (0..3).map(|_| HostTensor::randn(vec![b, h, s, d], rng)).collect(),
+        flops: 4.0 * (b * h * s * s * d) as f64,
+    }
+}
+
 fn kernel_cases(smoke: bool, rng: &mut SplitMix64) -> Vec<Case> {
     let mut cases = vec![
         mm_case(128, 128, 128, rng),
         mm_case(256, 256, 256, rng),
         bmm_case(4, 64, 64, 64, rng),
         softmax_case(256, 2048, rng),
+        sdpa_case(1, 4, 256, 64, rng),
     ];
     if !smoke {
         cases.push(mm_case(512, 512, 512, rng));
         cases.push(bmm_case(8, 128, 128, 128, rng));
         cases.push(softmax_case(1024, 4096, rng));
+        cases.push(sdpa_case(2, 8, 512, 64, rng));
     }
     cases
 }
@@ -257,6 +271,7 @@ fn main() {
         mm_case(256, 256, 256, &mut rng),
         softmax_case(256, 2048, &mut rng),
         rope_case(2, 64, 8, 64, &mut rng),
+        sdpa_case(1, 4, 256, 64, &mut rng),
     ] {
         let kernel = exec::lookup(case.kernel).expect("registered kernel");
         let shapes: Vec<&[usize]> = case.inputs.iter().map(|t| t.shape.as_slice()).collect();

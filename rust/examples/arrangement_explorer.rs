@@ -108,7 +108,7 @@ fn main() -> Result<()> {
                     bindings.insert(format!("{t}_size_{i}"), *v);
                 }
             }
-            catalog::sdpa()?
+            catalog::sdpa(false)?
         }
         other => bail!("unknown arrangement {other:?} (try add, mm, bmm, conv2d, sdpa)"),
     };

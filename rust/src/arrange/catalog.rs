@@ -168,8 +168,20 @@ pub fn rowwise() -> Result<Vec<SymTensor>> {
     Ok(out)
 }
 
-/// FlashAttention-2-style sdpa (paper task 8).
-pub fn sdpa() -> Result<Vec<SymTensor>> {
+/// FlashAttention-2-style sdpa (paper task 8; mirrors
+/// `python/compile/kernels/nt/sdpa.py` / `sdpa_bias.py`).
+///
+/// Each program owns one `[BLOCK_SIZE_M, d]` query row-block; the
+/// key/value `[BLOCK_SIZE_N, d]` column-blocks are grouped into the
+/// per-program loop level the application's online softmax iterates —
+/// the canonical loop-carried tiled computation.  With `with_bias`, an
+/// `[s, s]` additive score-bias tensor is arranged exactly like mm's
+/// input — tiled `[BLOCK_SIZE_M, BLOCK_SIZE_N]`, its column-blocks
+/// grouped into the same loop level, and broadcast over batch and heads
+/// with `unsqueeze` + `expand` — expressing causal masking (and any
+/// other attention mask) through the arrangement algebra rather than a
+/// bespoke kernel.  Returned order: `[query, key, value, (bias,) output]`.
+pub fn sdpa(with_bias: bool) -> Result<Vec<SymTensor>> {
     let query = SymTensor::new("query", 4);
     let key = SymTensor::new("key", 4);
     let value = SymTensor::new("value", 4);
@@ -196,7 +208,21 @@ pub fn sdpa() -> Result<Vec<SymTensor>> {
     let mut o = output.tile(&[c(1), c(1), s("BLOCK_SIZE_M"), None], None)?;
     let v_ = o.dtype().squeeze(&[0, 1])?;
     o.set_dtype(v_);
-    Ok(vec![q, k, v2, o])
+
+    let mut tensors = vec![q, k, v2];
+    if with_bias {
+        let bias = SymTensor::new("bias", 2);
+        let mut b = bias.tile(&[s("BLOCK_SIZE_M"), s("BLOCK_SIZE_N")], None)?;
+        b = b.tile(&[c(1), None], None)?;
+        let v_ = b.dtype().squeeze(&[0])?;
+        b.set_dtype(v_);
+        b = b.unsqueeze(0)?;
+        b = b.unsqueeze(0)?;
+        b = b.expand(&[Some(q_shape[0].clone()), Some(q_shape[1].clone()), None, None])?;
+        tensors.push(b);
+    }
+    tensors.push(o);
+    Ok(tensors)
 }
 
 /// Rotary position embedding (paper task 7, half-rotation convention;

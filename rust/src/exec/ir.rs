@@ -1,12 +1,27 @@
 //! The tile-program IR: a register machine over [`Tile`]s mirroring the
 //! `ntl` operations the catalog application functions use (paper §3.3) —
 //! load/store, zeros, dot, exp, max, sum, broadcast, element-wise
-//! arithmetic — plus a single loop construct for the sub-tile sequences
-//! that arrangements like mm/bmm hand to the application function.
+//! arithmetic — plus a single **loop-carried** loop construct for the
+//! sub-tile sequences that arrangements like mm/bmm/sdpa hand to the
+//! application function.
 //!
 //! A [`TileProgram`] expresses the *serial* per-program semantics of the
 //! paper; the grid scheduler (`super::scheduler`) runs it once per grid
 //! cell, exactly as generated Triton code would be launched.
+//!
+//! # Loop-carried registers
+//!
+//! [`Instr::Loop`] declares which registers carry state across its
+//! iterations (`carried`).  Everything else assigned inside the body is
+//! **iteration-local**: the interpreter clears those registers after
+//! every pass, and [`TileProgram::validate`] statically rejects programs
+//! that rely on undeclared persistence (reading a body-local before it is
+//! rewritten, or overwriting a pre-loop register without carrying it).
+//! This is what lets an application express the online-softmax recurrence
+//! of flash attention — running maximum, running denominator, rescaled
+//! accumulator — as explicit carries, and what lets structural analyses
+//! (coalescibility, `repro kernels`) see exactly which state crosses
+//! iterations.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -41,16 +56,79 @@ pub enum Instr {
     DotAcc { acc: Reg, a_param: usize, b_param: usize },
     /// Broadcast register `a` to the block shape of a parameter.
     Broadcast { dst: Reg, a: Reg, like_param: usize },
+    /// 2-D matrix transpose (`ntl.trans`) — flash attention's
+    /// `dot(q, trans(k))` score product.
+    Transpose { dst: Reg, a: Reg },
+    /// A tile shaped like a parameter's block holding `0.0` where the
+    /// current sub-tile reads in-range source elements and `value` where
+    /// it reads padding.  Applications add it (with a large negative
+    /// `value`) to attention scores so padded key rows can never win the
+    /// online softmax — the IR analogue of the `mask ? score : -inf`
+    /// select a hand-written Triton kernel performs.
+    PadMask { dst: Reg, like_param: usize, value: f32 },
+    /// The concrete extent of a parameter's application block along
+    /// `axis`, as a scalar tile (the `query.shape[-1]` of the Python
+    /// sdpa application — resolved per specialization, so one program
+    /// serves every head dimension).
+    BlockDim { dst: Reg, param: usize, axis: usize },
     /// Split a tile into two equal halves along `axis` (the `x[:half]` /
     /// `x[half:]` idiom of the rope application; extent must be even).
     SplitHalf { lo: Reg, hi: Reg, a: Reg, axis: usize },
     /// Concatenate two tiles along `axis` (`ntl.cat`).
     Concat { dst: Reg, a: Reg, b: Reg, axis: usize },
+    /// Copy `src` into `dst` — how a loop body updates its carried
+    /// registers (`m = m_new` at the end of an online-softmax step).
+    Assign { dst: Reg, src: Reg },
     /// Iterate the body once per sub-tile (the `for k in range(...)` of
-    /// the mm application).  Loops do not nest.
-    Loop { body: Vec<Instr> },
+    /// the mm and sdpa applications).  Loops do not nest.
+    ///
+    /// `carried` registers keep their value across iterations (the mm
+    /// accumulator, sdpa's running max / running sum / accumulator);
+    /// every other register assigned in the body is cleared after each
+    /// pass, so undeclared cross-iteration state is an execution error
+    /// (and a validation error) instead of silent implicit persistence.
+    Loop { carried: Vec<Reg>, body: Vec<Instr> },
     /// Store a register into the current sub-tile of a parameter.
     Store { param: usize, src: Reg },
+}
+
+impl Instr {
+    /// Registers this instruction reads / writes, and parameters it
+    /// references (loops report none; their body is walked separately).
+    fn effects(&self) -> (Vec<Reg>, Vec<Reg>, Vec<usize>) {
+        match self {
+            Instr::Load { dst, param } => (vec![], vec![*dst], vec![*param]),
+            Instr::Zeros { dst, like_param } => (vec![], vec![*dst], vec![*like_param]),
+            Instr::Const { dst, .. } => (vec![], vec![*dst], vec![]),
+            Instr::Unary { dst, a, .. } => (vec![*a], vec![*dst], vec![]),
+            Instr::Binary { dst, a, b, .. } => (vec![*a, *b], vec![*dst], vec![]),
+            Instr::Reduce { dst, a, .. } => (vec![*a], vec![*dst], vec![]),
+            Instr::Dot { dst, a, b } => (vec![*a, *b], vec![*dst], vec![]),
+            Instr::DotAcc { acc, a_param, b_param } => {
+                (vec![*acc], vec![*acc], vec![*a_param, *b_param])
+            }
+            Instr::Broadcast { dst, a, like_param } => (vec![*a], vec![*dst], vec![*like_param]),
+            Instr::Transpose { dst, a } => (vec![*a], vec![*dst], vec![]),
+            Instr::PadMask { dst, like_param, .. } => (vec![], vec![*dst], vec![*like_param]),
+            Instr::BlockDim { dst, param, .. } => (vec![], vec![*dst], vec![*param]),
+            Instr::SplitHalf { lo, hi, a, .. } => (vec![*a], vec![*lo, *hi], vec![]),
+            Instr::Concat { dst, a, b, .. } => (vec![*a, *b], vec![*dst], vec![]),
+            Instr::Assign { dst, src } => (vec![*src], vec![*dst], vec![]),
+            Instr::Loop { .. } => (vec![], vec![], vec![]),
+            Instr::Store { param, src } => (vec![*src], vec![], vec![*param]),
+        }
+    }
+}
+
+/// Every register assigned anywhere in `instrs` (loop bodies included).
+fn written_regs(instrs: &[Instr], out: &mut Vec<Reg>) {
+    for instr in instrs {
+        if let Instr::Loop { body, .. } = instr {
+            written_regs(body, out);
+        } else {
+            out.extend(instr.effects().1);
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -62,61 +140,115 @@ pub struct TileProgram {
 }
 
 impl TileProgram {
-    /// Static sanity checks: register bounds, parameter bounds, loop
-    /// nesting, stores target outputs only.
+    /// Static sanity checks: register/parameter bounds, loop nesting,
+    /// stores target outputs only, and the loop-carry discipline — every
+    /// register must be assigned before it is read, carried registers
+    /// must be initialized before their loop, and a loop body may only
+    /// overwrite a pre-loop register by declaring it as a carry (the old
+    /// implicit-persistence behaviour is rejected, not silently honored).
     pub fn validate(&self, n_params: usize, is_output: &[bool]) -> Result<()> {
+        use std::collections::BTreeSet;
+
+        struct LoopScope<'a> {
+            carried: &'a BTreeSet<Reg>,
+            /// registers initialized before the loop was entered
+            pre: &'a BTreeSet<Reg>,
+        }
+
         fn walk(
             instrs: &[Instr],
             regs: usize,
             n_params: usize,
             is_output: &[bool],
-            in_loop: bool,
+            init: &mut BTreeSet<Reg>,
+            scope: Option<&LoopScope<'_>>,
         ) -> Result<()> {
             for instr in instrs {
-                let (rs, ps): (Vec<Reg>, Vec<usize>) = match instr {
-                    Instr::Load { dst, param } => (vec![*dst], vec![*param]),
-                    Instr::Zeros { dst, like_param } => (vec![*dst], vec![*like_param]),
-                    Instr::Const { dst, .. } => (vec![*dst], vec![]),
-                    Instr::Unary { dst, a, .. } => (vec![*dst, *a], vec![]),
-                    Instr::Binary { dst, a, b, .. } => (vec![*dst, *a, *b], vec![]),
-                    Instr::Reduce { dst, a, .. } => (vec![*dst, *a], vec![]),
-                    Instr::Dot { dst, a, b } => (vec![*dst, *a, *b], vec![]),
-                    Instr::DotAcc { acc, a_param, b_param } => {
-                        (vec![*acc], vec![*a_param, *b_param])
+                if let Instr::Loop { carried, body } = instr {
+                    if scope.is_some() {
+                        bail!("tile programs do not support nested loops");
                     }
-                    Instr::Broadcast { dst, a, like_param } => {
-                        (vec![*dst, *a], vec![*like_param])
-                    }
-                    Instr::SplitHalf { lo, hi, a, .. } => (vec![*lo, *hi, *a], vec![]),
-                    Instr::Concat { dst, a, b, .. } => (vec![*dst, *a, *b], vec![]),
-                    Instr::Loop { body } => {
-                        if in_loop {
-                            bail!("tile programs do not support nested loops");
+                    let carried_set: BTreeSet<Reg> = carried.iter().copied().collect();
+                    for &c in carried {
+                        if c >= regs {
+                            bail!("register {c} out of range (program has {regs})");
                         }
-                        walk(body, regs, n_params, is_output, true)?;
-                        (vec![], vec![])
-                    }
-                    Instr::Store { param, src } => {
-                        if !is_output.get(*param).copied().unwrap_or(false) {
-                            bail!("store to non-output parameter {param}");
+                        if !init.contains(&c) {
+                            bail!("loop-carried register {c} must be initialized before the loop");
                         }
-                        (vec![*src], vec![*param])
                     }
-                };
-                for r in rs {
+                    let pre = init.clone();
+                    let mut body_init = init.clone();
+                    let body_scope = LoopScope { carried: &carried_set, pre: &pre };
+                    walk(body, regs, n_params, is_output, &mut body_init, Some(&body_scope))?;
+                    // only the declared carries survive the loop (they were
+                    // initialized before it, so `init` is already correct);
+                    // body-locals are cleared by the interpreter
+                    continue;
+                }
+                let (reads, writes, params) = instr.effects();
+                for r in reads {
                     if r >= regs {
                         bail!("register {r} out of range (program has {regs})");
                     }
+                    if !init.contains(&r) {
+                        bail!(
+                            "register {r} is read before it is assigned{}",
+                            if scope.is_some() {
+                                " (iteration-local values do not persist across loop \
+                                 iterations — declare a loop carry)"
+                            } else {
+                                ""
+                            }
+                        );
+                    }
                 }
-                for p in ps {
+                for p in params {
                     if p >= n_params {
                         bail!("parameter {p} out of range (program has {n_params})");
                     }
                 }
+                if let Instr::Store { param, .. } = instr {
+                    if !is_output.get(*param).copied().unwrap_or(false) {
+                        bail!("store to non-output parameter {param}");
+                    }
+                }
+                for w in writes {
+                    if w >= regs {
+                        bail!("register {w} out of range (program has {regs})");
+                    }
+                    if let Some(s) = scope {
+                        if s.pre.contains(&w) && !s.carried.contains(&w) {
+                            bail!(
+                                "register {w} is assigned inside the loop but initialized \
+                                 outside it — declare it as a loop carry"
+                            );
+                        }
+                    }
+                    init.insert(w);
+                }
             }
             Ok(())
         }
-        walk(&self.instrs, self.regs, n_params, is_output, false)
+        let mut init = BTreeSet::new();
+        walk(&self.instrs, self.regs, n_params, is_output, &mut init, None)
+    }
+
+    /// Total number of loop-carried registers across the program's loops
+    /// (`Some(0)` = loops with no carries, `None` = straight-line —
+    /// sequential non-nested loops are legal, so the counts add).
+    /// Surfaced by `repro kernels` so the carried capability of a served
+    /// kernel is inspectable.
+    pub fn loop_carries(&self) -> Option<usize> {
+        let mut any = false;
+        let mut total = 0;
+        for instr in &self.instrs {
+            if let Instr::Loop { carried, .. } = instr {
+                any = true;
+                total += carried.len();
+            }
+        }
+        any.then_some(total)
     }
 }
 
@@ -148,19 +280,7 @@ pub fn exec_cell(
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
     let mut regs: Vec<Option<Tile>> = vec![None; program.regs];
-    let no_sub: Vec<usize> = Vec::new();
-    run_block(
-        &program.instrs,
-        &mut regs,
-        views,
-        data,
-        cell,
-        loop_shape,
-        None,
-        &no_sub,
-        intra_threads,
-        write,
-    )
+    run_block(&program.instrs, &mut regs, views, data, cell, loop_shape, None, intra_threads, write)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -172,7 +292,6 @@ fn run_block(
     cell: &[i64],
     loop_shape: &[usize],
     sub: Option<&[usize]>,
-    no_sub: &[usize],
     intra_threads: usize,
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
@@ -183,18 +302,22 @@ fn run_block(
             .as_ref()
             .ok_or_else(|| anyhow!("read of uninitialized register {r}"))
     }
-    // sub-tile coordinates for a parameter: parameters without loop levels
-    // always see sub-tile 0
+    // effective sub-tile coordinates for a parameter: parameters without
+    // loop levels see none, and a looped parameter accessed *outside*
+    // the loop sees sub-tile 0
     fn param_sub<'a>(
         views: &[ParamView],
         param: usize,
         sub: Option<&'a [usize]>,
-        no_sub: &'a [usize],
-    ) -> &'a [usize] {
-        if views[param].loop_shape.is_empty() {
-            no_sub
-        } else {
-            sub.unwrap_or(no_sub)
+    ) -> std::borrow::Cow<'a, [usize]> {
+        use std::borrow::Cow;
+        let v = &views[param];
+        if v.loop_shape.is_empty() {
+            return Cow::Borrowed(&[]);
+        }
+        match sub {
+            Some(s) if !s.is_empty() => Cow::Borrowed(s),
+            _ => Cow::Owned(vec![0usize; v.loop_shape.len()]),
         }
     }
     for instr in instrs {
@@ -204,14 +327,8 @@ fn run_block(
                     ParamData::In(t) => *t,
                     ParamData::Out => bail!("load from output parameter {param}"),
                 };
-                let s = param_sub(views, *param, sub, no_sub);
-                if !views[*param].loop_shape.is_empty() && s.is_empty() {
-                    // a looped parameter loaded outside the loop: sub-tile 0
-                    let zeros = vec![0usize; views[*param].loop_shape.len()];
-                    regs[*dst] = Some(views[*param].gather(tensor, cell, &zeros)?);
-                } else {
-                    regs[*dst] = Some(views[*param].gather(tensor, cell, s)?);
-                }
+                let s = param_sub(views, *param, sub);
+                regs[*dst] = Some(views[*param].gather(tensor, cell, &s)?);
             }
             Instr::Zeros { dst, like_param } => {
                 regs[*dst] = Some(Tile::zeros(views[*like_param].block_shape.clone()));
@@ -244,30 +361,8 @@ fn run_block(
                     ParamData::In(t) => *t,
                     ParamData::Out => bail!("dot_acc reads output parameter {b_param}"),
                 };
-                // same "looped parameter used outside the loop sees
-                // sub-tile 0" rule as Load
-                let zeros_a;
-                let sub_a = {
-                    let v = &views[*a_param];
-                    let s = param_sub(views, *a_param, sub, no_sub);
-                    if !v.loop_shape.is_empty() && s.is_empty() {
-                        zeros_a = vec![0usize; v.loop_shape.len()];
-                        &zeros_a[..]
-                    } else {
-                        s
-                    }
-                };
-                let zeros_b;
-                let sub_b = {
-                    let v = &views[*b_param];
-                    let s = param_sub(views, *b_param, sub, no_sub);
-                    if !v.loop_shape.is_empty() && s.is_empty() {
-                        zeros_b = vec![0usize; v.loop_shape.len()];
-                        &zeros_b[..]
-                    } else {
-                        s
-                    }
-                };
+                let sub_a = param_sub(views, *a_param, sub);
+                let sub_b = param_sub(views, *b_param, sub);
                 let acc_tile = regs[*acc]
                     .as_mut()
                     .ok_or_else(|| anyhow!("read of uninitialized register {acc}"))?;
@@ -275,10 +370,10 @@ fn run_block(
                     acc_tile,
                     &views[*a_param],
                     ta,
-                    sub_a,
+                    &sub_a,
                     &views[*b_param],
                     tb,
-                    sub_b,
+                    &sub_b,
                     cell,
                     intra_threads,
                 )?;
@@ -286,6 +381,25 @@ fn run_block(
             Instr::Broadcast { dst, a, like_param } => {
                 let t = get(regs, *a)?.broadcast_to(&views[*like_param].block_shape)?;
                 regs[*dst] = Some(t);
+            }
+            Instr::Transpose { dst, a } => {
+                let t = get(regs, *a)?.transpose()?;
+                regs[*dst] = Some(t);
+            }
+            Instr::PadMask { dst, like_param, value } => {
+                let s = param_sub(views, *like_param, sub);
+                regs[*dst] = Some(views[*like_param].pad_mask(cell, &s, *value));
+            }
+            Instr::BlockDim { dst, param, axis } => {
+                let v = &views[*param];
+                let Some(&extent) = v.block_shape.get(*axis) else {
+                    bail!(
+                        "block_dim axis {axis} out of range for parameter {} (block {:?})",
+                        v.name,
+                        v.block_shape
+                    );
+                };
+                regs[*dst] = Some(Tile::scalar(extent as f32));
             }
             Instr::SplitHalf { lo, hi, a, axis } => {
                 let (first, second) = get(regs, *a)?.split_half(*axis)?;
@@ -296,7 +410,19 @@ fn run_block(
                 let t = get(regs, *a)?.concat(get(regs, *b)?, *axis)?;
                 regs[*dst] = Some(t);
             }
-            Instr::Loop { body } => {
+            Instr::Assign { dst, src } => {
+                let t = get(regs, *src)?.clone();
+                regs[*dst] = Some(t);
+            }
+            Instr::Loop { carried, body } => {
+                // iteration-local registers: assigned in the body, not
+                // declared as carries — cleared after every pass so state
+                // can only flow across iterations through the carries
+                let mut locals: Vec<Reg> = Vec::new();
+                written_regs(body, &mut locals);
+                locals.sort_unstable();
+                locals.dedup();
+                locals.retain(|r| !carried.contains(r));
                 let n: usize = loop_shape.iter().product::<usize>().max(1);
                 let mut coords = vec![0usize; loop_shape.len()];
                 for _ in 0..n {
@@ -308,10 +434,12 @@ fn run_block(
                         cell,
                         loop_shape,
                         Some(&coords),
-                        no_sub,
                         intra_threads,
                         write,
                     )?;
+                    for &r in &locals {
+                        regs[r] = None;
+                    }
                     for d in (0..loop_shape.len()).rev() {
                         coords[d] += 1;
                         if coords[d] < loop_shape[d] {
@@ -323,8 +451,8 @@ fn run_block(
             }
             Instr::Store { param, src } => {
                 let tile = get(regs, *src)?;
-                let s = param_sub(views, *param, sub, no_sub);
-                views[*param].scatter_with(tile, cell, s, |off, v| write(*param, off, v))?;
+                let s = param_sub(views, *param, sub);
+                views[*param].scatter_with(tile, cell, &s, |off, v| write(*param, off, v))?;
             }
         }
     }
@@ -418,4 +546,128 @@ fn dot_acc(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn program(regs: usize, instrs: Vec<Instr>) -> TileProgram {
+        TileProgram { name: "test", regs, instrs }
+    }
+
+    #[test]
+    fn validate_accepts_carried_accumulator() {
+        // the migrated mm form: acc is declared as a carry
+        let p = program(
+            1,
+            vec![
+                Instr::Zeros { dst: 0, like_param: 2 },
+                Instr::Loop {
+                    carried: vec![0],
+                    body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+                },
+                Instr::Store { param: 2, src: 0 },
+            ],
+        );
+        p.validate(3, &[false, false, true]).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_undeclared_carry() {
+        // the pre-migration implicit-persistence form: acc updated in the
+        // body without being declared — must be rejected, not honored
+        let p = program(
+            1,
+            vec![
+                Instr::Zeros { dst: 0, like_param: 2 },
+                Instr::Loop {
+                    carried: vec![],
+                    body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+                },
+                Instr::Store { param: 2, src: 0 },
+            ],
+        );
+        let err = p.validate(3, &[false, false, true]).unwrap_err();
+        assert!(format!("{err:#}").contains("loop carry"), "{err:#}");
+    }
+
+    #[test]
+    fn validate_rejects_uninitialized_carry_and_reads() {
+        // carry never initialized before the loop
+        let p = program(
+            1,
+            vec![Instr::Loop {
+                carried: vec![0],
+                body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+            }],
+        );
+        let err = p.validate(3, &[false, false, true]).unwrap_err();
+        assert!(format!("{err:#}").contains("initialized before the loop"), "{err:#}");
+        // straight-line read-before-assign
+        let p = program(2, vec![Instr::Unary { dst: 1, a: 0, op: UnaryOp::Exp }]);
+        let err = p.validate(1, &[true]).unwrap_err();
+        assert!(format!("{err:#}").contains("before it is assigned"), "{err:#}");
+    }
+
+    #[test]
+    fn validate_rejects_cross_iteration_body_local() {
+        // reg 1 is written by the body and read at the top of the next
+        // iteration — under carried-loop semantics that read sees a
+        // cleared register, and validation catches it statically
+        let p = program(
+            3,
+            vec![
+                Instr::Zeros { dst: 0, like_param: 1 },
+                Instr::Loop {
+                    carried: vec![0],
+                    body: vec![
+                        Instr::Unary { dst: 2, a: 1, op: UnaryOp::Exp },
+                        Instr::Load { dst: 1, param: 0 },
+                    ],
+                },
+                Instr::Store { param: 1, src: 0 },
+            ],
+        );
+        let err = p.validate(2, &[false, true]).unwrap_err();
+        assert!(format!("{err:#}").contains("before it is assigned"), "{err:#}");
+    }
+
+    #[test]
+    fn validate_still_rejects_nested_loops_and_bad_stores() {
+        let p = program(
+            1,
+            vec![
+                Instr::Zeros { dst: 0, like_param: 0 },
+                Instr::Loop {
+                    carried: vec![0],
+                    body: vec![Instr::Loop { carried: vec![], body: vec![] }],
+                },
+            ],
+        );
+        assert!(format!("{:#}", p.validate(1, &[true]).unwrap_err()).contains("nested"));
+        let p = program(
+            1,
+            vec![Instr::Zeros { dst: 0, like_param: 0 }, Instr::Store { param: 0, src: 0 }],
+        );
+        assert!(format!("{:#}", p.validate(1, &[false]).unwrap_err()).contains("non-output"));
+    }
+
+    #[test]
+    fn loop_carries_reports_the_carried_count() {
+        let p = program(
+            1,
+            vec![
+                Instr::Zeros { dst: 0, like_param: 2 },
+                Instr::Loop {
+                    carried: vec![0],
+                    body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+                },
+                Instr::Store { param: 2, src: 0 },
+            ],
+        );
+        assert_eq!(p.loop_carries(), Some(1));
+        let p = program(0, vec![]);
+        assert_eq!(p.loop_carries(), None);
+    }
 }

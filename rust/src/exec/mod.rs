@@ -30,8 +30,10 @@
 //!   an MR x NR register tile, strided-window inputs, and optional
 //!   intra-tile row parallelism;
 //! * [`ir`] — the tile-program IR (load/store/zeros/dot/exp/max/sum/
-//!   broadcast/elementwise + one loop construct) and its interpreter: the
-//!   serial per-program semantics of the paper;
+//!   broadcast/elementwise/transpose/pad-mask + one **loop-carried**
+//!   loop construct: declared carry registers persist across sub-tile
+//!   iterations, everything else is iteration-local) and its
+//!   interpreter: the serial per-program semantics of the paper;
 //! * [`view`] — strided [`view::ParamView`]s: an arrangement's index
 //!   expressions lowered (and probe-verified) to affine gather/scatter
 //!   over [`crate::runtime::HostTensor`] buffers, with pad-value edges;

@@ -216,10 +216,108 @@ pub fn rope(input: &HostTensor, cos: &HostTensor, sin: &HostTensor) -> Result<Ho
     HostTensor::f32(input.shape.clone(), out)
 }
 
+/// Scaled dot-product attention, `softmax(Q K^T / sqrt(d)) V` over
+/// `[b, h, s, d]` tensors, computed naively in f64 (two-pass row
+/// softmax) — the oracle the flash-style native sdpa is checked against.
+pub fn sdpa(query: &HostTensor, key: &HostTensor, value: &HostTensor) -> Result<HostTensor> {
+    sdpa_with_bias(query, key, value, None)
+}
+
+/// [`sdpa`] with an `[s, s]` additive score bias applied before the
+/// softmax (`-1e30` entries express causal/attention masks), broadcast
+/// over batch and heads.
+pub fn sdpa_bias(
+    query: &HostTensor,
+    key: &HostTensor,
+    value: &HostTensor,
+    bias: &HostTensor,
+) -> Result<HostTensor> {
+    sdpa_with_bias(query, key, value, Some(bias))
+}
+
+fn sdpa_with_bias(
+    query: &HostTensor,
+    key: &HostTensor,
+    value: &HostTensor,
+    bias: Option<&HostTensor>,
+) -> Result<HostTensor> {
+    if query.shape.len() != 4 || query.shape != key.shape || query.shape != value.shape {
+        bail!(
+            "sdpa expects equal-shape [b, h, s, d] query/key/value, got {:?} / {:?} / {:?}",
+            query.shape,
+            key.shape,
+            value.shape
+        );
+    }
+    let (b, h, s, d) = (query.shape[0], query.shape[1], query.shape[2], query.shape[3]);
+    let bias_data = match bias {
+        Some(t) => {
+            if t.shape != [s, s] {
+                bail!("sdpa bias must be [{s}, {s}], got {:?}", t.shape);
+            }
+            Some(t.as_f32()?)
+        }
+        None => None,
+    };
+    let (q, k, v) = (query.as_f32()?, key.as_f32()?, value.as_f32()?);
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0.0f32; b * h * s * d];
+    let mut scores = vec![0.0f64; s];
+    let mut acc = vec![0.0f64; d];
+    for bh in 0..b * h {
+        let base = bh * s * d;
+        for i in 0..s {
+            let qrow = &q[base + i * d..base + (i + 1) * d];
+            for j in 0..s {
+                let krow = &k[base + j * d..base + (j + 1) * d];
+                let mut dot = 0.0f64;
+                for (qa, kb) in qrow.iter().zip(krow) {
+                    dot += *qa as f64 * *kb as f64;
+                }
+                scores[j] = dot * scale;
+                if let Some(bias) = bias_data {
+                    scores[j] += bias[i * s + j] as f64;
+                }
+            }
+            let max = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let mut denom = 0.0f64;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            acc.fill(0.0);
+            for (j, &p) in scores.iter().enumerate() {
+                let w = p / denom;
+                let vrow = &v[base + j * d..base + (j + 1) * d];
+                for (a, &vv) in acc.iter_mut().zip(vrow) {
+                    *a += w * vv as f64;
+                }
+            }
+            let orow = &mut out[base + i * d..base + (i + 1) * d];
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    }
+    HostTensor::f32(query.shape.clone(), out)
+}
+
 /// Kernels [`run`] can dispatch — the single source of truth the router
 /// and registry consult before admitting a `ref`-variant fallback.
-pub const SUPPORTED: &[&str] =
-    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm", "rope"];
+pub const SUPPORTED: &[&str] = &[
+    "add",
+    "silu",
+    "gelu",
+    "softmax",
+    "rms_norm",
+    "layer_norm",
+    "mm",
+    "bmm",
+    "addmm",
+    "rope",
+    "sdpa",
+    "sdpa_bias",
+];
 
 /// True if a reference oracle exists for this kernel.
 pub fn supports(name: &str) -> bool {
@@ -275,6 +373,14 @@ pub fn run(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         "rope" => {
             need(3)?;
             rope(&inputs[0], &inputs[1], &inputs[2])?
+        }
+        "sdpa" => {
+            need(3)?;
+            sdpa(&inputs[0], &inputs[1], &inputs[2])?
+        }
+        "sdpa_bias" => {
+            need(4)?;
+            sdpa_bias(&inputs[0], &inputs[1], &inputs[2], &inputs[3])?
         }
         other => bail!("no reference implementation for kernel {other:?}"),
     };

@@ -394,6 +394,23 @@ impl Tile {
     pub fn broadcast_to(&self, like: &[usize]) -> Result<Tile> {
         self.binary(&Tile::zeros(like.to_vec()), BinOp::Add)
     }
+
+    /// 2-D matrix transpose (`ntl.trans`): `[M, N] -> [N, M]`.  The
+    /// flash-attention application transposes the key block before the
+    /// `dot(q, trans(k))` score product.
+    pub fn transpose(&self) -> Result<Tile> {
+        if self.shape.len() != 2 {
+            bail!("transpose expects a rank-2 tile, got {:?}", self.shape);
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut data = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for (j, &v) in self.data[i * cols..(i + 1) * cols].iter().enumerate() {
+                data[j * rows + i] = v;
+            }
+        }
+        Ok(Tile { shape: vec![cols, rows], data })
+    }
 }
 
 #[cfg(test)]
@@ -474,6 +491,54 @@ mod tests {
         assert!(Tile::zeros(vec![3]).split_half(0).is_err());
         assert!(t.split_half(2).is_err());
         assert!(lo.concat(&Tile::zeros(vec![3, 2]), 1).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrips_and_rejects_bad_ranks() {
+        let t = Tile::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let tt = t.transpose().unwrap();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(tt.transpose().unwrap(), t);
+        // row/column vectors stay rank-2
+        let row = Tile::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(row.transpose().unwrap().shape, vec![4, 1]);
+        for bad in [Tile::zeros(vec![4]), Tile::zeros(vec![2, 2, 2])] {
+            let msg = format!("{:#}", bad.transpose().unwrap_err());
+            assert!(msg.contains("rank-2"), "unexpected error: {msg}");
+        }
+    }
+
+    #[test]
+    fn split_half_and_concat_reject_bad_inputs_cleanly() {
+        // regression sweep: axis-out-of-range, odd/zero extents, rank and
+        // off-axis mismatches are all Err — never a panic or slice OOB
+        let t = Tile::new(vec![2, 4], (0..8).map(|i| i as f32).collect()).unwrap();
+        for bad_axis in [2usize, 7, usize::MAX] {
+            let msg = format!("{:#}", t.split_half(bad_axis).unwrap_err());
+            assert!(msg.contains("out of range"), "unexpected error: {msg}");
+            let msg = format!("{:#}", t.concat(&t, bad_axis).unwrap_err());
+            assert!(msg.contains("equal-rank"), "unexpected error: {msg}");
+        }
+        // odd and zero extents along the split axis
+        for odd in [Tile::zeros(vec![3, 2]), Tile::zeros(vec![0, 2])] {
+            let msg = format!("{:#}", odd.split_half(0).unwrap_err());
+            assert!(msg.contains("even extent"), "unexpected error: {msg}");
+        }
+        // rank-0 tiles: every axis is out of range
+        let scalarish = Tile::new(vec![], vec![1.0]).unwrap();
+        assert!(scalarish.split_half(0).is_err());
+        assert!(scalarish.concat(&scalarish, 0).is_err());
+        // concat rank mismatch and off-axis extent mismatch
+        let other_rank = Tile::zeros(vec![2, 4, 1]);
+        let msg = format!("{:#}", t.concat(&other_rank, 0).unwrap_err());
+        assert!(msg.contains("equal-rank"), "unexpected error: {msg}");
+        let off_axis = Tile::zeros(vec![3, 4]);
+        let msg = format!("{:#}", t.concat(&off_axis, 1).unwrap_err());
+        assert!(msg.contains("off-axis"), "unexpected error: {msg}");
+        // and the happy path still works after all that
+        let (lo, hi) = t.split_half(1).unwrap();
+        assert_eq!(lo.concat(&hi, 1).unwrap(), t);
     }
 
     #[test]

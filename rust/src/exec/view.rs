@@ -380,6 +380,21 @@ impl ParamView {
         Tile::new(self.block_shape.clone(), out)
     }
 
+    /// The padding mask of the block at (cell, sub): a block-shaped tile
+    /// holding `0.0` where the source coordinate is in range and `value`
+    /// where a gather would read the pad value.  Applications add it
+    /// (with a large negative `value`) to attention scores so padded key
+    /// rows can never win an online softmax — the data-free analogue of
+    /// the `mask ? score : -inf` select in hand-written Triton kernels.
+    pub fn pad_mask(&self, cell: &[i64], sub: &[usize], value: f32) -> Tile {
+        let n: usize = self.block_shape.iter().product::<usize>().max(1);
+        let mut out = Vec::with_capacity(n);
+        self.for_each_coord(cell, sub, |off| {
+            out.push(if off.is_some() { 0.0 } else { value });
+        });
+        Tile { shape: self.block_shape.clone(), data: out }
+    }
+
     /// Scatter a computed block back, dropping out-of-range elements.
     /// `write(flat_offset, value)` receives only in-range destinations —
     /// the §3.2.1 non-overlap property guarantees distinct grid cells hit
@@ -461,6 +476,17 @@ mod tests {
             }
         }
         assert!(view.dense_window(&[2], &[]).is_none(), "padded tail must not be dense");
+    }
+
+    #[test]
+    fn pad_mask_marks_exactly_the_padded_lanes() {
+        // 10 elements tiled by 4: cell 1 is interior, cell 2 pads 2 lanes
+        let view = view_1d(10, 4);
+        let interior = view.pad_mask(&[1], &[], -1e30);
+        assert_eq!(interior.shape, vec![4]);
+        assert_eq!(interior.data, vec![0.0; 4]);
+        let tail = view.pad_mask(&[2], &[], -1e30);
+        assert_eq!(tail.data, vec![0.0, 0.0, -1e30, -1e30]);
     }
 
     #[test]

@@ -24,8 +24,20 @@ const NATIVE_TOL: f32 = 1e-4;
 /// regression to non-executable) is a loud failure, while fixture-less
 /// extras (conv2d until it is lowerable; runtime-registered custom
 /// kernels) are skipped.
-const GOLDEN_BUILTINS: &[&str] =
-    &["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm", "rope"];
+const GOLDEN_BUILTINS: &[&str] = &[
+    "add",
+    "silu",
+    "gelu",
+    "softmax",
+    "rms_norm",
+    "layer_norm",
+    "mm",
+    "bmm",
+    "addmm",
+    "rope",
+    "sdpa",
+    "sdpa_bias",
+];
 
 pub fn check_native() -> Result<usize> {
     let mut rng = SplitMix64::new(2025);
@@ -100,6 +112,19 @@ pub fn native_task_inputs(name: &str, rng: &mut SplitMix64) -> Result<Vec<HostTe
             HostTensor::randn(vec![2, 7, 3, 16], rng),
             HostTensor::randn(vec![7, 8], rng),
             HostTensor::randn(vec![7, 8], rng),
+        ],
+        // seq 100 is deliberately not a multiple of the 64-wide attention
+        // blocks: two key/value loop steps, the second one padded
+        "sdpa" => vec![
+            HostTensor::randn(vec![2, 2, 100, 16], rng),
+            HostTensor::randn(vec![2, 2, 100, 16], rng),
+            HostTensor::randn(vec![2, 2, 100, 16], rng),
+        ],
+        "sdpa_bias" => vec![
+            HostTensor::randn(vec![2, 2, 75, 8], rng),
+            HostTensor::randn(vec![2, 2, 75, 8], rng),
+            HostTensor::randn(vec![2, 2, 75, 8], rng),
+            HostTensor::randn(vec![75, 75], rng),
         ],
         other => bail!("no native task inputs for kernel {other:?}"),
     })

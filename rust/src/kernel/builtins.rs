@@ -7,7 +7,11 @@
 //! nothing here is hand-wired per kernel beyond the declaration itself.
 //!
 //! `rope` is the proof of the API: a new kernel shipped with zero edits
-//! to the execution subsystem.  `conv2d` declares the paper's
+//! to the execution subsystem.  `sdpa` / `sdpa_bias` are the proof of the
+//! **loop-carried reduction** subsystem: flash-style attention declared
+//! purely as an arrangement plus an online-softmax application whose
+//! running max / running denominator / accumulator are explicit loop
+//! carries ([`AppBuilder::loop_over`]).  `conv2d` declares the paper's
 //! implicit-GEMM arrangement (Listing 8); its `%`/`//` index mapping is
 //! not affine, so `make` derives it as non-executable and admission
 //! rejects it cleanly until the view layer learns non-affine lowering.
@@ -58,6 +62,14 @@ fn arr_conv2d(_: &DimBindings) -> Result<Vec<SymTensor>> {
 
 fn arr_rope(_: &DimBindings) -> Result<Vec<SymTensor>> {
     catalog::rope()
+}
+
+fn arr_sdpa(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::sdpa(false)
+}
+
+fn arr_sdpa_bias(_: &DimBindings) -> Result<Vec<SymTensor>> {
+    catalog::sdpa(true)
 }
 
 // -- application programs (authored through the typed builder) ----------------
@@ -146,28 +158,113 @@ fn app_layer_norm() -> TileProgram {
 }
 
 /// The mm/bmm/conv2d application: `acc = zeros(output.shape); for k: acc
-/// += dot(input[k], other[k]); output = acc`.  The k-loop body is the
-/// fused `DotAcc` (blocked GEMM over the parameter views directly).
+/// += dot(input[k], other[k]); output = acc`.  The accumulator is an
+/// explicit loop carry; the k-loop body is the fused `DotAcc` (blocked
+/// GEMM over the parameter views directly).
 fn app_matmul(name: &'static str) -> TileProgram {
     let mut b = AppBuilder::new(name);
     let acc = b.zeros_like(2);
-    b.k_loop(|b| b.dot_acc(acc, 0, 1));
+    b.loop_over(&[acc], |b| b.dot_acc(acc, 0, 1));
     b.store(2, acc);
     b.build()
 }
 
-/// The addmm application: the mm k-loop followed by a broadcast bias add
-/// (`output = acc + bias`).  Parameters are `[bias, input, other,
-/// output]` (torch.addmm argument order, output last); the bias tile is
-/// `[1, BN]` for broadcast biases and `[BM, BN]` for full ones — the
-/// element-wise add broadcasts either onto the accumulator.
+/// The addmm application: the mm k-loop (accumulator carried) followed
+/// by a broadcast bias add (`output = acc + bias`).  Parameters are
+/// `[bias, input, other, output]` (torch.addmm argument order, output
+/// last); the bias tile is `[1, BN]` for broadcast biases and `[BM, BN]`
+/// for full ones — the element-wise add broadcasts either onto the
+/// accumulator.
 fn app_addmm() -> TileProgram {
     let mut b = AppBuilder::new("addmm");
     let acc = b.zeros_like(3);
-    b.k_loop(|b| b.dot_acc(acc, 1, 2));
+    b.loop_over(&[acc], |b| b.dot_acc(acc, 1, 2));
     let bias = b.load(0);
     let y = b.binary(acc, bias, BinOp::Add);
     b.store(3, y);
+    b.build()
+}
+
+/// Additive score-bias value padded key rows / bias lanes observe: large
+/// and negative but finite, so the online softmax never computes
+/// `-inf - -inf` (the same `-1e30` the Python `sdpa_bias` kernel pads
+/// with).  A masked lane's probability is `exp(-1e30 - m) == 0` exactly.
+const SDPA_MASK: f32 = -1e30;
+
+/// The flash-attention application (FA2 single pass, mirroring
+/// `python/compile/kernels/nt/sdpa.py` / `sdpa_bias.py`): one query
+/// row-block per program, with the key/value column-blocks visited in a
+/// loop that carries the online-softmax state — running maximum `m`,
+/// running denominator `l`, and the rescaled accumulator.
+///
+/// Per iteration over key/value block `j`:
+///
+/// ```text
+/// scores = dot(q * rsqrt(d), trans(k[j])) + mask_j
+/// m_new  = max(m, rowmax(scores))
+/// p      = exp(scores - m_new)
+/// alpha  = exp(m - m_new)            // rescales history to the new max
+/// l      = l * alpha + rowsum(p)
+/// acc    = acc * alpha + dot(p, v[j])
+/// m      = m_new
+/// ```
+///
+/// `mask_j` is the declared `[s, s]` bias block when `with_bias` (its
+/// `-1e30` pad value also masks padded key columns), and otherwise the
+/// key block's derived pad mask — so sequence lengths that are not
+/// multiples of the block size stay exact.  After the loop, `output =
+/// acc / max(l, 1e-20)`.  A bias row that masks *every* key is a
+/// degenerate input (softmax over constant `-1e30` scores): the result
+/// is finite but unspecified — the blockwise weighting differs from the
+/// naive oracle's uniform average, exactly as in the Python `sdpa_bias`
+/// kernel.  Any row with at least one unmasked key (every causal row)
+/// is exact.
+fn app_sdpa(name: &'static str, with_bias: bool) -> TileProgram {
+    let out_param = if with_bias { 4 } else { 3 };
+    let mut b = AppBuilder::new(name);
+    let q = b.load(0);
+    let head_dim = b.block_dim(0, 1);
+    let scale = b.unary(head_dim, UnaryOp::Rsqrt);
+    let q_scaled = b.binary(q, scale, BinOp::Mul);
+    // online-softmax carries: running max, running denominator, accumulator
+    let m = b.constant(f32::NEG_INFINITY);
+    let l = b.constant(0.0);
+    let acc = b.zeros_like(out_param);
+    b.loop_over(&[m, l, acc], |b| {
+        let k = b.load(1);
+        let k_t = b.transpose(k);
+        let raw = b.dot(q_scaled, k_t);
+        let scores = if with_bias {
+            let bias = b.load(3);
+            b.binary(raw, bias, BinOp::Add)
+        } else {
+            // mask padded key rows: [BN, d] pad mask -> [1, BN] column mask
+            let k_mask = b.pad_mask(1, SDPA_MASK);
+            let row_valid = b.reduce(k_mask, Some(1), ReduceOp::Max);
+            let col_mask = b.transpose(row_valid);
+            b.binary(raw, col_mask, BinOp::Add)
+        };
+        let row_max = b.reduce(scores, Some(1), ReduceOp::Max);
+        let m_new = b.binary(m, row_max, BinOp::Max);
+        let centered = b.binary(scores, m_new, BinOp::Sub);
+        let p = b.unary(centered, UnaryOp::Exp);
+        let m_shift = b.binary(m, m_new, BinOp::Sub);
+        let alpha = b.unary(m_shift, UnaryOp::Exp);
+        let l_scaled = b.binary(l, alpha, BinOp::Mul);
+        let p_sum = b.reduce(p, Some(1), ReduceOp::Sum);
+        let l_new = b.binary(l_scaled, p_sum, BinOp::Add);
+        let v = b.load(2);
+        let pv = b.dot(p, v);
+        let acc_scaled = b.binary(acc, alpha, BinOp::Mul);
+        let acc_new = b.binary(acc_scaled, pv, BinOp::Add);
+        b.assign(m, m_new);
+        b.assign(l, l_new);
+        b.assign(acc, acc_new);
+    });
+    let floor = b.constant(1e-20);
+    let l_safe = b.binary(l, floor, BinOp::Max);
+    let out = b.binary(acc, l_safe, BinOp::Div);
+    b.store(out_param, out);
     b.build()
 }
 
@@ -362,6 +459,61 @@ pub fn defaults() -> Result<Vec<KernelDef>> {
         .with_constraint(
             Expr::modulo(Expr::sym("d"), Expr::Const(2)),
             "rope needs an even head dimension",
+        )?,
+        make(
+            Arrangement::new(
+                "FA2: one program per query row-block; K/V column-blocks form the \
+                 online-softmax loop",
+                arr_sdpa,
+            )
+            .with_meta(Meta::AttentionBlocks { seq: "s" }),
+            app_sdpa("sdpa", false),
+            vec![
+                TensorSpec::input(
+                    "query",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::input(
+                    "key",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::input(
+                    "value",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::output(
+                    "output",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+            ],
+        )?,
+        make(
+            Arrangement::new(
+                "sdpa with an [s, s] additive score bias (causal/attention masks), \
+                 broadcast over batch and heads",
+                arr_sdpa_bias,
+            )
+            .with_meta(Meta::AttentionBlocks { seq: "s" }),
+            app_sdpa("sdpa_bias", true),
+            vec![
+                TensorSpec::input(
+                    "query",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::input(
+                    "key",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::input(
+                    "value",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+                TensorSpec::input("bias", vec![dim("s", 5), dim("s", 5)]).with_pad(SDPA_MASK),
+                TensorSpec::output(
+                    "output",
+                    vec![dim("b", 2), dim("h", 2), dim("s", 5), dim("d", 4)],
+                ),
+            ],
         )?,
     ])
 }

@@ -11,7 +11,11 @@
 //!    plus its meta-parameter policy ([`Meta`]: block-size choices);
 //! 2. an application — a serial tile program authored through the typed
 //!    [`AppBuilder`] over `exec::ir` (loads/stores/dot/reductions/
-//!    element-wise ops, written as if for one tile);
+//!    element-wise ops, written as if for one tile), including
+//!    **loop-carried reductions** via [`AppBuilder::loop_over`]: declared
+//!    carry registers persist across the arrangement's sub-tile loop,
+//!    which is what lets flash-style sdpa express its online softmax
+//!    (running max, running denominator, rescaled accumulator) serially;
 //! 3. the kernel's [`TensorSpec`]s — each parameter's symbolic shape,
 //!    role (input/output) and pad value;
 //!
@@ -188,6 +192,14 @@ pub enum Meta {
         /// output-cols dim symbol
         n: &'static str,
     },
+    /// the flash-attention tiling: `BLOCK_SIZE_M` (query rows per
+    /// program) and `BLOCK_SIZE_N` (key/value rows per online-softmax
+    /// step) — one power-of-two block covering short sequences exactly,
+    /// capped at 64 (the Python sdpa kernel's `block_size(64)` default)
+    AttentionBlocks {
+        /// the sequence-length dim symbol
+        seq: &'static str,
+    },
     /// fixed bindings, independent of the request shapes
     Fixed(&'static [(&'static str, i64)]),
 }
@@ -213,6 +225,13 @@ impl Meta {
                     ("BLOCK_SIZE_K".to_string(), bk),
                 ]
             }
+            Meta::AttentionBlocks { seq } => {
+                let block = attention_block(get(seq)? as usize);
+                vec![
+                    ("BLOCK_SIZE_M".to_string(), block),
+                    ("BLOCK_SIZE_N".to_string(), block),
+                ]
+            }
             Meta::Fixed(pairs) => {
                 pairs.iter().map(|(s, v)| ((*s).to_string(), *v)).collect()
             }
@@ -223,6 +242,11 @@ impl Meta {
 /// Element-wise block size: a power of two covering small inputs exactly.
 fn elementwise_block(n: usize) -> i64 {
     (n.next_power_of_two() as i64).min(4096)
+}
+
+/// Attention block size: covers short sequences in one block, caps at 64.
+fn attention_block(seq: usize) -> i64 {
+    (seq.next_power_of_two() as i64).min(64)
 }
 
 const MM_BLOCK: i64 = 32;
@@ -382,17 +406,89 @@ impl AppBuilder {
 
     /// Fused `acc += dot(param_a, param_b)` over the current sub-tiles
     /// (the mm-family k-loop body; routes through the blocked GEMM).
+    /// `acc` must be a declared carry of the enclosing [`loop_over`].
+    ///
+    /// [`loop_over`]: AppBuilder::loop_over
     pub fn dot_acc(&mut self, acc: Val, a_param: usize, b_param: usize) {
         self.instrs.push(Instr::DotAcc { acc: acc.0, a_param, b_param });
     }
 
-    /// Iterate `body` once per sub-tile (the `for k in range(...)` of the
-    /// mm application).  Loops do not nest.
-    pub fn k_loop(&mut self, body: impl FnOnce(&mut AppBuilder)) {
+    /// 2-D matrix transpose (`ntl.trans`), e.g. flash attention's
+    /// `dot(q, trans(k))` score product.
+    pub fn transpose(&mut self, a: Val) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Transpose { dst, a: a.0 });
+        Val(dst)
+    }
+
+    /// The padding mask of a parameter's current sub-tile: `0.0` on
+    /// in-range lanes, `value` on padded ones.  Adding it (with a large
+    /// negative `value`) to attention scores keeps padded key rows out of
+    /// an online softmax — how sdpa stays correct on sequence lengths
+    /// that are not multiples of the block size.
+    pub fn pad_mask(&mut self, param: usize, value: f32) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::PadMask { dst, like_param: param, value });
+        Val(dst)
+    }
+
+    /// The concrete extent of a parameter's application block along
+    /// `axis`, as a scalar (the `query.shape[-1]` the Python sdpa
+    /// application scales by — resolved per specialization).
+    pub fn block_dim(&mut self, param: usize, axis: usize) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::BlockDim { dst, param, axis });
+        Val(dst)
+    }
+
+    /// Copy `src` into an existing register — how a [`loop_over`] body
+    /// updates its carried registers (`m = m_new`).
+    ///
+    /// [`loop_over`]: AppBuilder::loop_over
+    pub fn assign(&mut self, dst: Val, src: Val) {
+        self.instrs.push(Instr::Assign { dst: dst.0, src: src.0 });
+    }
+
+    /// Iterate `body` once per sub-tile of the arrangement's loop
+    /// (middle) level — the `for k in range(...)` of the mm application,
+    /// the key/value-block loop of sdpa.  Loops do not nest.
+    ///
+    /// `carries` declares the registers whose values persist across
+    /// iterations; everything else assigned inside `body` is
+    /// iteration-local (cleared after every pass).  Carries must be
+    /// initialized before the loop and are updated in the body with
+    /// [`assign`] (or in place by [`dot_acc`]); relying on undeclared
+    /// persistence is rejected by program validation inside [`make`].
+    ///
+    /// ```
+    /// use ninetoothed_repro::exec::BinOp;
+    /// use ninetoothed_repro::kernel::AppBuilder;
+    ///
+    /// // running sum across the k sub-tiles: `acc` is the declared carry,
+    /// // the loaded tile is iteration-local
+    /// let mut app = AppBuilder::new("k_sum");
+    /// let acc = app.zeros_like(1);
+    /// app.loop_over(&[acc], |b| {
+    ///     let x = b.load(0);
+    ///     let next = b.binary(acc, x, BinOp::Add);
+    ///     b.assign(acc, next);
+    /// });
+    /// app.store(1, acc);
+    /// let program = app.build();
+    /// program.validate(2, &[false, true]).unwrap();
+    /// assert_eq!(program.loop_carries(), Some(1));
+    /// ```
+    ///
+    /// [`assign`]: AppBuilder::assign
+    /// [`dot_acc`]: AppBuilder::dot_acc
+    pub fn loop_over(&mut self, carries: &[Val], body: impl FnOnce(&mut AppBuilder)) {
         let mark = self.instrs.len();
         body(self);
         let body_instrs = self.instrs.split_off(mark);
-        self.instrs.push(Instr::Loop { body: body_instrs });
+        self.instrs.push(Instr::Loop {
+            carried: carries.iter().map(|v| v.0).collect(),
+            body: body_instrs,
+        });
     }
 
     /// Split a tile into equal halves along `axis` (rope's `x[:half]` /
@@ -599,6 +695,15 @@ impl KernelDef {
     /// The probe-specialization failure for a non-executable kernel.
     pub fn probe_error(&self) -> Option<&str> {
         self.probe_error.as_deref()
+    }
+
+    /// Number of loop-carried registers in the application program
+    /// (`None` for straight-line programs).  `repro kernels` surfaces
+    /// this so carried-reduction kernels (mm's accumulator, sdpa's
+    /// running max / running sum / accumulator) are inspectable at serve
+    /// time.
+    pub fn loop_carries(&self) -> Option<usize> {
+        self.program.loop_carries()
     }
 
     fn inputs(&self) -> impl Iterator<Item = &TensorSpec> {
@@ -1005,7 +1110,8 @@ impl KernelDef {
 }
 
 /// True if every instruction computes each output lane from the same
-/// lane of its operands (no reductions, dots or loops).
+/// lane of its operands (no reductions, dots, loops, transposes, or
+/// position-dependent masks).
 fn lanewise(instrs: &[Instr]) -> bool {
     instrs.iter().all(|i| {
         matches!(
@@ -1014,6 +1120,7 @@ fn lanewise(instrs: &[Instr]) -> bool {
                 | Instr::Const { .. }
                 | Instr::Unary { .. }
                 | Instr::Binary { .. }
+                | Instr::Assign { .. }
                 | Instr::Store { .. }
         )
     })
@@ -1111,7 +1218,7 @@ mod tests {
         let names: Vec<String> = kernels().iter().map(|k| k.name.clone()).collect();
         for want in [
             "add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "mm", "bmm", "addmm",
-            "conv2d", "rope",
+            "conv2d", "rope", "sdpa", "sdpa_bias",
         ] {
             assert!(names.iter().any(|n| n == want), "{want} missing from {names:?}");
         }
@@ -1120,14 +1227,36 @@ mod tests {
 
     #[test]
     fn coalescibility_is_derived_from_the_arrangement() {
-        // row-independent: element-wise 1-D, rowwise 2-D, and batch-led bmm
-        for name in ["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "bmm"] {
+        // row-independent: element-wise 1-D, rowwise 2-D, batch-led bmm,
+        // and batch-led sdpa (the online-softmax loop walks the sequence
+        // dim, never the batch dim — carried state is per program)
+        for name in ["add", "silu", "gelu", "softmax", "rms_norm", "layer_norm", "bmm", "sdpa"] {
             assert!(def(name).coalesce, "{name} must derive as coalescible");
         }
         // not row-independent: mm/addmm read other rows via the k loop;
-        // rope's cos/sin tables lack the batch (stacking) dim
-        for name in ["mm", "addmm", "rope", "conv2d"] {
+        // rope's cos/sin tables and sdpa_bias's [s, s] bias lack the
+        // batch (stacking) dim
+        for name in ["mm", "addmm", "rope", "conv2d", "sdpa_bias"] {
             assert!(!def(name).coalesce, "{name} must never derive as coalescible");
+        }
+    }
+
+    #[test]
+    fn loop_carries_are_reported_per_kernel() {
+        // mm-family: the accumulator is the single declared carry; sdpa
+        // carries the full online-softmax state; element-wise kernels
+        // have no loop at all
+        for (name, want) in [
+            ("mm", Some(1)),
+            ("bmm", Some(1)),
+            ("addmm", Some(1)),
+            ("sdpa", Some(3)),
+            ("sdpa_bias", Some(3)),
+            ("add", None),
+            ("softmax", None),
+            ("rope", None),
+        ] {
+            assert_eq!(def(name).loop_carries(), want, "{name}");
         }
     }
 

@@ -44,7 +44,7 @@ fn main() -> Result<()> {
                  \x20 bench-e2e      regenerate Fig 7 (end-to-end inference throughput)\n\
                  \x20 serve          run the kernel-serving coordinator demo\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
-                 \x20                coalescible, native/artifact availability)\n\
+                 \x20                coalescible, loop-carried, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"
             );
             Ok(())
@@ -111,24 +111,29 @@ fn kernels_cmd() -> Result<()> {
     let yn = |b: bool| if b { "yes" } else { "no" };
     println!("kernel registry ({} definitions):", defs.len());
     println!(
-        "  {:<11} {:>5}  {:<10} {:<6} {:<8} arrangement",
-        "name", "arity", "coalesce", "native", "artifact"
+        "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} arrangement",
+        "name", "arity", "coalesce", "native", "artifact", "loop-carried"
     );
     for def in &defs {
         let artifact = manifest.kernels.iter().any(|k| k.name == def.name);
+        let carries = match def.loop_carries() {
+            Some(n) => format!("{n} carries"),
+            None => "none".to_string(),
+        };
         println!(
-            "  {:<11} {:>5}  {:<10} {:<6} {:<8} {}",
+            "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} {}",
             def.name,
             def.arity,
             yn(def.coalesce),
             yn(def.executable()),
             yn(artifact),
+            carries,
             def.arrangement.summary
         );
     }
     println!(
-        "\n(coalesce and native availability are derived by kernel::make from the \
-         arrangement — nothing is asserted by hand)"
+        "\n(coalesce, native availability and the loop-carried register count are \
+         derived by kernel::make from the declaration — nothing is asserted by hand)"
     );
     Ok(())
 }

@@ -323,13 +323,20 @@ fn program_layer_norm() -> TileProgram {
     }
 }
 
+// NOTE: the IR's `Loop` now requires its carried registers to be declared
+// (the implicit-persistence special case was deleted); the accumulator
+// carry below is the only change from the pre-migration originals — the
+// executed computation is identical, which the bitwise assertions prove.
 fn program_matmul(name: &'static str) -> TileProgram {
     TileProgram {
         name,
         regs: 1,
         instrs: vec![
             Instr::Zeros { dst: 0, like_param: 2 },
-            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }] },
+            Instr::Loop {
+                carried: vec![0],
+                body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+            },
             Instr::Store { param: 2, src: 0 },
         ],
     }
@@ -341,7 +348,10 @@ fn program_addmm() -> TileProgram {
         regs: 3,
         instrs: vec![
             Instr::Zeros { dst: 0, like_param: 3 },
-            Instr::Loop { body: vec![Instr::DotAcc { acc: 0, a_param: 1, b_param: 2 }] },
+            Instr::Loop {
+                carried: vec![0],
+                body: vec![Instr::DotAcc { acc: 0, a_param: 1, b_param: 2 }],
+            },
             Instr::Load { dst: 1, param: 0 },
             Instr::Binary { dst: 2, a: 0, b: 1, op: BinOp::Add },
             Instr::Store { param: 3, src: 2 },
@@ -487,18 +497,29 @@ fn non_row_independent_kernels_are_never_coalesced() {
         // bmm stacks along its batch dim: every parameter shares it and
         // batches are independent — the derivation discovers this
         ("bmm", true),
+        // ...and so does loop-carried sdpa: the online-softmax loop walks
+        // the sequence dim, the carries live per program instance
+        ("sdpa", true),
         // mm/addmm read `other` rows via the k loop; rope's cos/sin
-        // tables lack the stacking dim entirely
+        // tables and sdpa_bias's [s, s] score bias lack the stacking dim
         ("mm", false),
         ("addmm", false),
         ("rope", false),
+        ("sdpa_bias", false),
     ] {
         assert_eq!(kernel::lookup(name).unwrap().coalesce, want, "{name}");
     }
     // and the router routes straight off the derived flag
     let router = Router::new(Arc::new(Manifest::builtin()));
     let mut rng = SplitMix64::new(5);
-    for (name, want) in [("softmax", true), ("bmm", true), ("mm", false), ("rope", false)] {
+    for (name, want) in [
+        ("softmax", true),
+        ("bmm", true),
+        ("sdpa", true),
+        ("mm", false),
+        ("rope", false),
+        ("sdpa_bias", false),
+    ] {
         let inputs = native_task_inputs(name, &mut rng).unwrap();
         let route = admit(&router, name, inputs);
         assert!(route.native, "{name} must route natively");

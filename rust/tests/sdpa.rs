@@ -1,0 +1,228 @@
+//! Acceptance for the loop-carried reduction subsystem and its proof
+//! kernel: flash-style scaled dot-product attention, declared **only**
+//! through `kernel::make` (no hand-written specializer anywhere).
+//!
+//! * property sweep: the online-softmax tile program vs the naive
+//!   `softmax(QK^T / sqrt(d)) V` f64 oracle over ragged sequence lengths
+//!   (including seq not divisible by the block size), head_dim 1 and
+//!   single-row inputs — within 1e-3 everywhere, serial and pooled;
+//! * causal masking through the `sdpa_bias` variant's `[s, s]` additive
+//!   score bias;
+//! * coalesce derivation: `sdpa` *is* batch-stackable (and stacking is
+//!   bit-identical), `sdpa_bias` is not (its bias lacks the batch dim)
+//!   and the router/coordinator never stack it;
+//! * end-to-end serving: plan-cache miss then hit, bit-identical outputs
+//!   across the hit.
+
+use std::sync::Arc;
+
+use ninetoothed_repro::coordinator::{Coalescer, Coordinator, CoordinatorConfig};
+use ninetoothed_repro::exec::{self, GridScheduler};
+use ninetoothed_repro::kernel;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest};
+
+/// ISSUE acceptance tolerance: flash-style f32 vs the naive f64 oracle.
+const TOL: f32 = 1e-3;
+
+/// The additive-mask value the kernels use (finite, so the online
+/// softmax never computes `-inf - -inf`).
+const MASK: f32 = -1e30;
+
+fn qkv(b: usize, h: usize, s: usize, d: usize, rng: &mut SplitMix64) -> Vec<HostTensor> {
+    (0..3).map(|_| HostTensor::randn(vec![b, h, s, d], rng)).collect()
+}
+
+/// `[s, s]` causal mask: 0 at or below the diagonal, -1e30 above it.
+fn causal_bias(s: usize) -> HostTensor {
+    let mut data = vec![0.0f32; s * s];
+    for i in 0..s {
+        for (j, v) in data[i * s..(i + 1) * s].iter_mut().enumerate() {
+            if j > i {
+                *v = MASK;
+            }
+        }
+    }
+    HostTensor::f32(vec![s, s], data).unwrap()
+}
+
+/// The sweep shapes: block-aligned, ragged, multi-block, head_dim 1,
+/// single-row, and single-element.  The attention blocks are
+/// `min(64, next_pow2(s))`, so s = 65/100/130 exercise padded key tails
+/// and multi-step online-softmax loops.
+const SWEEP: &[(usize, usize, usize, usize)] = &[
+    (1, 1, 1, 1),
+    (1, 1, 1, 8),
+    (1, 2, 3, 5),
+    (2, 2, 37, 16),
+    (1, 1, 64, 8),
+    (1, 3, 65, 4),
+    (2, 1, 100, 32),
+    (1, 1, 5, 1),
+    (1, 1, 130, 4),
+];
+
+#[test]
+fn sdpa_property_sweep_matches_the_naive_oracle() {
+    let sdpa = kernel::lookup("sdpa").expect("sdpa is registered via kernel::make");
+    let mut rng = SplitMix64::new(2026);
+    for &(b, h, s, d) in SWEEP {
+        let inputs = qkv(b, h, s, d, &mut rng);
+        let expected = exec::reference::sdpa(&inputs[0], &inputs[1], &inputs[2]).unwrap();
+        let serial = sdpa.run(&inputs, &GridScheduler::serial()).unwrap();
+        let diff = serial[0].max_abs_diff(&expected).unwrap();
+        assert!(diff <= TOL, "sdpa [{b},{h},{s},{d}] serial: max|diff| = {diff}");
+        let pooled = sdpa.run(&inputs, &GridScheduler::pooled(4)).unwrap();
+        assert_eq!(serial[0], pooled[0], "sdpa [{b},{h},{s},{d}]: pooled must be bit-identical");
+    }
+}
+
+#[test]
+fn sdpa_bias_expresses_causal_masking() {
+    let sdpa_bias = kernel::lookup("sdpa_bias").expect("sdpa_bias is registered");
+    let mut rng = SplitMix64::new(2027);
+    for &(b, h, s, d) in SWEEP {
+        let mut inputs = qkv(b, h, s, d, &mut rng);
+        inputs.push(causal_bias(s));
+        let expected =
+            exec::reference::sdpa_bias(&inputs[0], &inputs[1], &inputs[2], &inputs[3]).unwrap();
+        let got = sdpa_bias.run(&inputs, &GridScheduler::serial()).unwrap();
+        let diff = got[0].max_abs_diff(&expected).unwrap();
+        assert!(diff <= TOL, "sdpa_bias causal [{b},{h},{s},{d}]: max|diff| = {diff}");
+        // causal row 0 attends only to position 0: output row 0 == v row 0
+        let out = got[0].as_f32().unwrap();
+        let v = inputs[2].as_f32().unwrap();
+        for bh in 0..b * h {
+            for di in 0..d {
+                let (o, w) = (out[bh * s * d + di], v[bh * s * d + di]);
+                assert!((o - w).abs() <= TOL, "causal first row must copy v: {o} vs {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sdpa_shape_preconditions_reject_cleanly() {
+    let sdpa = kernel::lookup("sdpa").unwrap();
+    let sdpa_bias = kernel::lookup("sdpa_bias").unwrap();
+    // unified dims: q/k/v must agree everywhere
+    assert!(sdpa.check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 4], &[2, 2, 8, 4]]).is_ok());
+    let err = sdpa.check_shapes(&[&[2, 2, 8, 4], &[2, 2, 9, 4], &[2, 2, 8, 4]]).unwrap_err();
+    assert!(format!("{err:#}").contains("size s"), "{err:#}");
+    let err = sdpa.check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 5], &[2, 2, 8, 4]]).unwrap_err();
+    assert!(format!("{err:#}").contains("size d"), "{err:#}");
+    // rank and arity
+    assert!(sdpa.check_shapes(&[&[2, 8, 4], &[2, 8, 4], &[2, 8, 4]]).is_err());
+    assert!(sdpa.check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 4]]).is_err());
+    // the bias must be [s, s]
+    assert!(sdpa_bias
+        .check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 4], &[2, 2, 8, 4], &[8, 8]])
+        .is_ok());
+    assert!(sdpa_bias
+        .check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 4], &[2, 2, 8, 4], &[8, 9]])
+        .is_err());
+    assert!(sdpa_bias
+        .check_shapes(&[&[2, 2, 8, 4], &[2, 2, 8, 4], &[2, 2, 8, 4], &[7, 7]])
+        .is_err());
+    // output inference never takes an output argument
+    assert_eq!(
+        sdpa.output_shapes(&[&[2, 3, 10, 8], &[2, 3, 10, 8], &[2, 3, 10, 8]]).unwrap(),
+        vec![vec![2, 3, 10, 8]]
+    );
+}
+
+#[test]
+fn sdpa_stacks_batchwise_bit_identically_and_bias_variant_never_stacks() {
+    // derivation: sdpa's parameters all lead with the batch symbol, the
+    // carried loop walks the sequence dim — batch-stackable; sdpa_bias's
+    // [s, s] bias has no batch dim — not stackable
+    let sdpa = kernel::lookup("sdpa").unwrap();
+    let sdpa_bias = kernel::lookup("sdpa_bias").unwrap();
+    assert!(sdpa.coalesce, "sdpa must derive as batch-stackable");
+    assert!(!sdpa_bias.coalesce, "sdpa_bias must never derive as stackable");
+
+    // and stacking is bit-identical to per-request execution
+    let mut rng = SplitMix64::new(2028);
+    let sched = GridScheduler::pooled(4);
+    let per_request: Vec<Vec<HostTensor>> = (0..3).map(|_| qkv(1, 2, 37, 8, &mut rng)).collect();
+    let singles: Vec<Vec<HostTensor>> =
+        per_request.iter().map(|inputs| sdpa.run(inputs, &sched).unwrap()).collect();
+    let refs: Vec<Vec<&HostTensor>> =
+        per_request.iter().map(|inputs| inputs.iter().collect()).collect();
+    let stacked = Coalescer::stack(&refs).unwrap();
+    assert_eq!(stacked[0].shape, vec![3, 2, 37, 8]);
+    let outs = sdpa.run(&stacked, &sched).unwrap();
+    let unstacked = Coalescer::unstack(3, outs).unwrap();
+    for (got, want) in unstacked.iter().zip(&singles) {
+        assert_eq!(got[0], want[0], "stacked sdpa must be bit-identical to per-request");
+    }
+}
+
+#[test]
+fn sdpa_bias_burst_is_never_fused_by_the_coordinator() {
+    // a queued same-shape burst of the non-stackable variant must execute
+    // one launch per request — the router routes off the derived flag
+    let coordinator = Coordinator::start(
+        Arc::new(Manifest::builtin()),
+        CoordinatorConfig { workers: 1, queue_capacity: 128, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(2029);
+    let a = HostTensor::randn(vec![192, 192], &mut rng);
+    let b = HostTensor::randn(vec![192, 192], &mut rng);
+    // head-of-line mm keeps the single worker busy so the burst queues
+    let mm_rx = coordinator.submit("mm", "nt", vec![a, b]).unwrap();
+    let base = qkv(1, 2, 20, 8, &mut rng);
+    let bias = causal_bias(20);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let mut inputs = base.clone();
+        inputs.push(bias.clone());
+        rxs.push(coordinator.submit("sdpa_bias", "nt", inputs).unwrap());
+    }
+    mm_rx.recv().unwrap().unwrap();
+    let mut outputs = Vec::new();
+    for rx in rxs {
+        outputs.push(rx.recv().unwrap().unwrap());
+    }
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.coalesced, 0, "sdpa_bias must never stack: {}", metrics.render());
+    assert_eq!(metrics.executions, 5, "every sdpa_bias request executes alone");
+    // same inputs -> same bits, and all correct vs the oracle
+    let expected = exec::reference::sdpa_bias(&base[0], &base[1], &base[2], &bias).unwrap();
+    for resp in &outputs {
+        assert_eq!(resp.outputs[0], outputs[0].outputs[0]);
+        assert!(resp.outputs[0].max_abs_diff(&expected).unwrap() <= TOL);
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn sdpa_serves_end_to_end_with_plan_cache_hits() {
+    // the acceptance path: declared only through kernel::make, served by
+    // the coordinator with a plan-cache hit on the second same-shape
+    // request, bit-identical across hits, 1e-3 of the f64 oracle
+    let coordinator =
+        Coordinator::start(Arc::new(Manifest::builtin()), CoordinatorConfig::default()).unwrap();
+    let mut rng = SplitMix64::new(2030);
+    let inputs = qkv(1, 4, 100, 32, &mut rng);
+    let first =
+        coordinator.submit("sdpa", "nt", inputs.clone()).unwrap().recv().unwrap().unwrap();
+    assert_eq!(first.backend, "native");
+    let expected = exec::reference::sdpa(&inputs[0], &inputs[1], &inputs[2]).unwrap();
+    let diff = first.outputs[0].max_abs_diff(&expected).unwrap();
+    assert!(diff <= TOL, "served sdpa vs oracle: max|diff| = {diff}");
+    let m1 = coordinator.metrics();
+    assert_eq!((m1.plan_misses, m1.plan_hits), (1, 0), "first sdpa request compiles");
+    let second =
+        coordinator.submit("sdpa", "nt", inputs.clone()).unwrap().recv().unwrap().unwrap();
+    let m2 = coordinator.metrics();
+    assert_eq!((m2.plan_misses, m2.plan_hits), (1, 1), "same-shape sdpa request must hit");
+    assert_eq!(first.outputs[0], second.outputs[0], "bit-identical across the cache hit");
+    // admission rejects mismatched q/k/v before anything executes
+    let bad = HostTensor::randn(vec![1, 4, 99, 32], &mut rng);
+    assert!(coordinator
+        .submit("sdpa", "nt", vec![inputs[0].clone(), bad, inputs[2].clone()])
+        .is_err());
+    coordinator.shutdown();
+}

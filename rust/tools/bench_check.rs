@@ -32,7 +32,11 @@ use ninetoothed_repro::json::Json;
 /// warm `prepare` throughput fails CI); `coalesced_per_s` gates the
 /// stacked-launch serving path the same way; `resolves_per_s` gates the
 /// `kernel::make` registry indirection (hash lookup + Arc clone — the
-/// API redesign must stay free on the per-request path).
+/// API redesign must stay free on the per-request path).  The
+/// `sdpa_*`/`plan_sdpa_*` baseline rows gate the loop-carried
+/// flash-attention kernel through the same `gflops_*`/`warm_per_s`
+/// metrics — a collapse there means the carried-register loop
+/// interpreter or its plan path regressed.
 const METRICS: &[&str] = &[
     "gflops",
     "naive_gflops",
