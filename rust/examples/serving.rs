@@ -1,6 +1,7 @@
 //! Serving example: start the coordinator, submit a bursty mixed workload
 //! from several client threads, and observe routing, slot-packed batching,
-//! backpressure and the metrics endpoint.
+//! backpressure and the observability layer (per-kernel stats table and
+//! the slowest traced requests, printed at exit).
 //!
 //! ```bash
 //! cargo run --release --example serving -- --workers 2 --clients 4
@@ -79,6 +80,13 @@ fn main() -> Result<()> {
         total += handle.join().expect("client thread")?;
     }
     println!("all {total} responses verified element-exact");
-    println!("{}", coordinator.metrics().render());
+    // per-kernel/per-shape stats table (includes the global section)
+    print!("{}", coordinator.obs_snapshot().render_table());
+    // and the top-3 slowest sampled traces as a span waterfall
+    let slowest = coordinator.obs().traces.slowest(3);
+    if !slowest.is_empty() {
+        println!("top-{} slowest requests:", slowest.len());
+        print!("{}", ninetoothed_repro::obs::render_waterfall(&slowest));
+    }
     Ok(())
 }

@@ -30,6 +30,17 @@ pub struct PackPlan {
     pub slot: usize,
 }
 
+impl PackPlan {
+    /// Fraction of the slot occupied by real request data (0.0–1.0);
+    /// the observability layer reports it as a packing-efficiency gauge.
+    pub fn utilization(&self) -> f64 {
+        if self.slot == 0 {
+            return 0.0;
+        }
+        self.used as f64 / self.slot as f64
+    }
+}
+
 pub struct Packer {
     pub slot: usize,
     /// max requests fused into one execution
@@ -200,6 +211,15 @@ mod tests {
         let p = Packer::new(100, 2);
         let (taken, _) = p.plan(&[10, 10, 10]).unwrap();
         assert_eq!(taken, 2);
+    }
+
+    #[test]
+    fn utilization_is_used_over_slot() {
+        let p = Packer::new(100, 8);
+        let (_, plan) = p.plan(&[40, 40]).unwrap();
+        assert!((plan.utilization() - 0.8).abs() < 1e-12);
+        let empty = PackPlan { offsets: vec![], lengths: vec![], used: 0, slot: 0 };
+        assert_eq!(empty.utilization(), 0.0);
     }
 
     #[test]

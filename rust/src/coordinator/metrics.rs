@@ -1,4 +1,9 @@
 //! Lock-free serving metrics: atomic counters + a log2 latency histogram.
+//!
+//! One `Metrics` instance is the coordinator's global view; the same
+//! struct keyed per (kernel, shape) forms the rows of
+//! [`crate::obs::MetricsRegistry`].  Every field is a relaxed atomic, so
+//! recording never takes a lock and snapshots are cheap copies.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -16,6 +21,8 @@ pub struct Metrics {
     pub executions: AtomicU64,
     pub exec_us_total: AtomicU64,
     pub queue_us_total: AtomicU64,
+    /// exact sum of observed latencies, so the mean is not bucket-bounded
+    latency_us_sum: AtomicU64,
     latency_hist: [AtomicU64; BUCKETS],
 }
 
@@ -24,12 +31,20 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record one request latency.  Bucket `i` holds latencies in
+    /// `[2^i, 2^(i+1))` µs: `us=1` lands in bucket 0, `us=2..3` in
+    /// bucket 1, and so on (values above the last bucket clamp into it).
     pub fn observe_latency_us(&self, us: u64) {
-        let bucket = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        let bucket = ((63 - us.max(1).leading_zeros()) as usize).min(BUCKETS - 1);
         self.latency_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
     }
 
-    pub fn snapshot(&self) -> MetricsSnapshot {
+    /// Copy the counters out.  The plan-cache counters live on
+    /// [`crate::exec::PlanCache`], not here — callers pass them in so a
+    /// snapshot is never silently zero (`Coordinator::metrics` supplies
+    /// the real values; pass `(0, 0)` only when no cache exists).
+    pub fn snapshot(&self, plan_hits: u64, plan_misses: u64) -> MetricsSnapshot {
         let hist: Vec<u64> = self
             .latency_hist
             .iter()
@@ -44,8 +59,9 @@ impl Metrics {
             executions: self.executions.load(Ordering::Relaxed),
             exec_us_total: self.exec_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
-            plan_hits: 0,
-            plan_misses: 0,
+            plan_hits,
+            plan_misses,
+            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_hist: hist,
         }
     }
@@ -61,15 +77,59 @@ pub struct MetricsSnapshot {
     pub executions: u64,
     pub exec_us_total: u64,
     pub queue_us_total: u64,
-    /// plan-cache counters (filled in by `Coordinator::metrics`, which
-    /// owns the shared `exec::PlanCache`; zero for a bare snapshot)
+    /// plan-cache counters, supplied by the caller of
+    /// [`Metrics::snapshot`] (the cache lives in `exec::PlanCache`)
     pub plan_hits: u64,
     pub plan_misses: u64,
+    /// exact sum of observed latencies in µs
+    pub latency_us_sum: u64,
     pub latency_hist: Vec<u64>,
 }
 
 impl MetricsSnapshot {
-    /// Latency quantile from the log2 histogram (upper bucket bound).
+    /// An all-zero snapshot, the identity for [`MetricsSnapshot::merge`].
+    pub fn empty() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            batched: 0,
+            coalesced: 0,
+            executions: 0,
+            exec_us_total: 0,
+            queue_us_total: 0,
+            plan_hits: 0,
+            plan_misses: 0,
+            latency_us_sum: 0,
+            latency_hist: vec![0; BUCKETS],
+        }
+    }
+
+    /// Add `other`'s counters and histogram into this snapshot — summing
+    /// per-kernel rows yields the global view.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.batched += other.batched;
+        self.coalesced += other.coalesced;
+        self.executions += other.executions;
+        self.exec_us_total += other.exec_us_total;
+        self.queue_us_total += other.queue_us_total;
+        self.plan_hits += other.plan_hits;
+        self.plan_misses += other.plan_misses;
+        self.latency_us_sum += other.latency_us_sum;
+        if self.latency_hist.len() < other.latency_hist.len() {
+            self.latency_hist.resize(other.latency_hist.len(), 0);
+        }
+        for (mine, theirs) in self.latency_hist.iter_mut().zip(&other.latency_hist) {
+            *mine += theirs;
+        }
+    }
+
+    /// Latency quantile from the log2 histogram.  Returns the bucket's
+    /// inclusive upper bound (`2^(i+1) - 1` µs for bucket `i`), so the
+    /// estimate never understates the true quantile.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
         let total: u64 = self.latency_hist.iter().sum();
         if total == 0 {
@@ -80,10 +140,20 @@ impl MetricsSnapshot {
         for (i, count) in self.latency_hist.iter().enumerate() {
             seen += count;
             if seen >= target {
-                return 1u64 << i;
+                return (1u64 << (i + 1)) - 1;
             }
         }
-        1u64 << (BUCKETS - 1)
+        (1u64 << BUCKETS) - 1
+    }
+
+    /// Exact mean latency from the sum counter (not bucket-bounded).
+    pub fn mean_latency_us(&self) -> f64 {
+        let total: u64 = self.latency_hist.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / total as f64
+        }
     }
 
     pub fn mean_exec_us(&self) -> f64 {
@@ -114,7 +184,7 @@ impl MetricsSnapshot {
         format!(
             "submitted={} completed={} rejected={} executions={} batching={:.2}x \
              coalesced={} plan_cache={}h/{}m mean_exec={:.0}µs mean_queue={:.0}µs \
-             p50={}µs p99={}µs",
+             mean={:.0}µs p50={}µs p99={}µs",
             self.submitted,
             self.completed,
             self.rejected,
@@ -125,6 +195,7 @@ impl MetricsSnapshot {
             self.plan_misses,
             self.mean_exec_us(),
             self.mean_queue_us(),
+            self.mean_latency_us(),
             self.latency_quantile_us(0.5),
             self.latency_quantile_us(0.99),
         )
@@ -141,9 +212,62 @@ mod tests {
         for us in [1u64, 2, 4, 8, 1024, 2048] {
             m.observe_latency_us(us);
         }
-        let s = m.snapshot();
+        let s = m.snapshot(0, 0);
         assert!(s.latency_quantile_us(0.5) <= 16);
         assert!(s.latency_quantile_us(1.0) >= 2048);
+    }
+
+    #[test]
+    fn bucket_zero_is_reachable() {
+        let m = Metrics::new();
+        m.observe_latency_us(1);
+        let s = m.snapshot(0, 0);
+        assert_eq!(s.latency_hist[0], 1, "us=1 must land in bucket 0");
+        assert_eq!(s.latency_quantile_us(1.0), 1, "bucket 0 upper bound is 1µs");
+        // bucket boundaries: 2 and 3 share bucket 1, 4 starts bucket 2
+        m.observe_latency_us(2);
+        m.observe_latency_us(3);
+        m.observe_latency_us(4);
+        let s = m.snapshot(0, 0);
+        assert_eq!(s.latency_hist[1], 2);
+        assert_eq!(s.latency_hist[2], 1);
+    }
+
+    #[test]
+    fn mean_latency_is_exact() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 600] {
+            m.observe_latency_us(us);
+        }
+        let s = m.snapshot(0, 0);
+        assert_eq!(s.latency_us_sum, 900);
+        assert!((s.mean_latency_us() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_carries_plan_counters() {
+        let m = Metrics::new();
+        let s = m.snapshot(7, 3);
+        assert_eq!((s.plan_hits, s.plan_misses), (7, 3));
+        assert!(s.render().contains("7h/3m"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_histograms() {
+        let a = Metrics::new();
+        a.submitted.store(2, Ordering::Relaxed);
+        a.observe_latency_us(1);
+        let b = Metrics::new();
+        b.submitted.store(3, Ordering::Relaxed);
+        b.observe_latency_us(1);
+        b.observe_latency_us(1000);
+        let mut total = MetricsSnapshot::empty();
+        total.merge(&a.snapshot(1, 0));
+        total.merge(&b.snapshot(0, 2));
+        assert_eq!(total.submitted, 5);
+        assert_eq!((total.plan_hits, total.plan_misses), (1, 2));
+        assert_eq!(total.latency_hist[0], 2);
+        assert_eq!(total.latency_us_sum, 1002);
     }
 
     #[test]
@@ -151,6 +275,6 @@ mod tests {
         let m = Metrics::new();
         m.completed.store(10, Ordering::Relaxed);
         m.executions.store(4, Ordering::Relaxed);
-        assert!((m.snapshot().batching_factor() - 2.5).abs() < 1e-9);
+        assert!((m.snapshot(0, 0).batching_factor() - 2.5).abs() < 1e-9);
     }
 }

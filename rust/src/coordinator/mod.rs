@@ -19,7 +19,14 @@
 //!   capacity (backpressure), startup-validated config (pool size, plan
 //!   cache capacity, coalescing fan-in: env + flags) and graceful shutdown.
 //! * [`metrics`] — lock-free counters (incl. plan-cache hits/misses and
-//!   coalesced requests) + log2 latency histogram.
+//!   coalesced requests) + log2 latency histogram with an exact sum.
+//!
+//! Every admission outcome (submit, reject, backpressure), batch drain and
+//! execution also records into the per-kernel/per-shape
+//! [`crate::obs::MetricsRegistry`], and sampled requests leave a span
+//! waterfall in the [`crate::obs::TraceRecorder`] —
+//! [`Coordinator::obs_snapshot`](server::Coordinator::obs_snapshot)
+//! exports the whole picture (`repro stats`).
 
 pub mod batcher;
 pub mod metrics;

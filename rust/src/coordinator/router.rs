@@ -22,6 +22,12 @@ pub struct Request {
     pub variant: String,
     pub inputs: Vec<HostTensor>,
     pub submitted: Instant,
+    /// canonical input-shape signature ([`crate::obs::shape_sig`]) — the
+    /// per-kernel metrics key, computed once at submit (rejections at
+    /// admission are recorded against it too)
+    pub shape_sig: String,
+    /// whether the trace recorder sampled this request at submit
+    pub sampled: bool,
     /// where the response is delivered
     pub reply: mpsc::Sender<Result<Response>>,
 }

@@ -87,6 +87,8 @@ struct Shared {
     queues: Mutex<State>,
     available: Condvar,
     metrics: Metrics,
+    /// per-kernel/per-shape metrics + the sampled trace ring
+    obs: crate::obs::Obs,
 }
 
 struct State {
@@ -123,6 +125,8 @@ impl Coordinator {
             }),
             available: Condvar::new(),
             metrics: Metrics::new(),
+            // NT_TRACE_SAMPLE is validated here, with the other knobs
+            obs: crate::obs::Obs::from_env()?,
         });
         let router = Arc::new(Router::new(manifest.clone()));
         let plan_cache = Arc::new(PlanCache::new(config.plan_cache_capacity));
@@ -165,17 +169,27 @@ impl Coordinator {
         inputs: Vec<crate::runtime::HostTensor>,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
         let (tx, rx) = mpsc::channel();
+        let shape_sig = {
+            let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+            crate::obs::shape_sig(&shapes)
+        };
         let req = Request {
             kernel: kernel.to_string(),
             variant: variant.to_string(),
             inputs,
             submitted: Instant::now(),
+            shape_sig,
+            sampled: self.shared.obs.traces.should_sample(),
             reply: tx,
         };
+        // one registry lookup per submit; every admission outcome below
+        // records against the same per-(kernel, shape) row
+        let per_kernel = self.shared.obs.per_kernel.handle(&req.kernel, &req.shape_sig);
         let route = match self.router.admit(&req) {
             Ok(route) => route,
             Err(e) => {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                per_kernel.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(e);
             }
         };
@@ -183,6 +197,7 @@ impl Coordinator {
             let mut state = self.shared.queues.lock().unwrap();
             if state.depth >= self.config.queue_capacity {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                per_kernel.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(anyhow!("coordinator queue full ({})", self.config.queue_capacity));
             }
             if !state.pending.contains_key(&route) {
@@ -192,6 +207,7 @@ impl Coordinator {
             state.depth += 1;
         }
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        per_kernel.submitted.fetch_add(1, Ordering::Relaxed);
         self.shared.available.notify_one();
         Ok(rx)
     }
@@ -200,10 +216,28 @@ impl Coordinator {
     /// counters (cache-hit rate is how you observe that repeat shapes do
     /// zero specialization work).
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
-        let mut snapshot = self.shared.metrics.snapshot();
-        snapshot.plan_hits = self.plan_cache.hits();
-        snapshot.plan_misses = self.plan_cache.misses();
-        snapshot
+        self.shared.metrics.snapshot(self.plan_cache.hits(), self.plan_cache.misses())
+    }
+
+    /// The live observability layer: the per-kernel/per-shape metrics
+    /// registry and the sampled trace ring.
+    pub fn obs(&self) -> &crate::obs::Obs {
+        &self.shared.obs
+    }
+
+    /// One coherent snapshot of everything observable — global metrics,
+    /// per-kernel/per-shape rows, per-kernel plan-cache attribution, the
+    /// slowest sampled traces, per-plan profiles (under `NT_PROFILE=1`),
+    /// and pool gauges.
+    pub fn obs_snapshot(&self) -> crate::obs::ObsSnapshot {
+        crate::obs::ObsSnapshot {
+            global: self.metrics(),
+            kernels: self.shared.obs.per_kernel.snapshot(),
+            plan_kernels: self.plan_cache.kernel_counters(),
+            traces: self.shared.obs.traces.slowest(crate::obs::TRACE_TOP_N),
+            profiles: self.plan_cache.profile_snapshots(),
+            pool: pool::global_gauges(),
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -308,10 +342,18 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
     };
     let backend_name = backend.kind().as_str();
 
+    // the instant this batch left the queue: the boundary between the
+    // Queued and Batch spans of every request in it
+    let drained = Instant::now();
     let queue_us: Vec<u64> = batch
         .iter()
-        .map(|r| r.submitted.elapsed().as_micros() as u64)
+        .map(|r| drained.saturating_duration_since(r.submitted).as_micros() as u64)
         .collect();
+    // execution-level counters attribute to the head request's shape row
+    // (coalesced batches share one shape; packed batches may not — the
+    // head is the approximation there)
+    let head_sig = batch[0].shape_sig.clone();
+    let head_metrics = shared.obs.per_kernel.handle(&route.kernel, &head_sig);
 
     // slot dimension for packable (artifact) routes; native routes are
     // shape-polymorphic and coalesced instead of packed
@@ -327,6 +369,19 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
 
     let t0 = Instant::now();
     let coalesced = !route.packable && route.coalescible && batch.len() > 1;
+    // every branch funnels through `run`, which splits plan lookup
+    // (prepare) from grid execution so the tracer can draw them as
+    // separate spans and attribute the plan-cache outcome
+    let mut plan_span: Option<(Instant, Instant)> = None;
+    let mut plan_hit: Option<bool> = None;
+    let mut run = |inputs: &[HostTensor]| -> Result<Vec<HostTensor>> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        let plan_start = Instant::now();
+        let (prepared, hit) = backend.prepare_traced(&shapes)?;
+        plan_span = Some((plan_start, Instant::now()));
+        plan_hit = hit;
+        backend.execute(&prepared, inputs)
+    };
     let result: Result<Vec<Vec<HostTensor>>> = if route.packable
         && (batch.len() > 1 || batch[0].inputs[0].len() != slot)
     {
@@ -338,7 +393,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                 let per_request: Vec<Vec<&HostTensor>> =
                     batch.iter().map(|r| r.inputs.iter().collect()).collect();
                 let packed = packer.pack(&plan, &per_request);
-                backend.run(&packed).map(|outs| {
+                run(&packed).map(|outs| {
                     packer
                         .unpack(&plan, &outs[0])
                         .into_iter()
@@ -355,33 +410,36 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
         let per_request: Vec<Vec<&HostTensor>> =
             batch.iter().map(|r| r.inputs.iter().collect()).collect();
         Coalescer::stack(&per_request)
-            .and_then(|stacked| backend.run(&stacked))
+            .and_then(|stacked| run(&stacked))
             .and_then(|outs| Coalescer::unstack(batch.len(), outs))
     } else {
-        backend.run(&batch[0].inputs).map(|outs| vec![outs])
+        run(&batch[0].inputs).map(|outs| vec![outs])
     };
-    let exec_us = t0.elapsed().as_micros() as u64;
+    let exec_end = Instant::now();
+    let exec_us = exec_end.duration_since(t0).as_micros() as u64;
 
-    shared.metrics.executions.fetch_add(1, Ordering::Relaxed);
-    shared.metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
-    if batch.len() > 1 {
-        shared
-            .metrics
-            .batched
-            .fetch_add(batch.len() as u64, Ordering::Relaxed);
-    }
-    if coalesced && result.is_ok() {
-        shared.metrics.coalesced.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for m in [&shared.metrics, &*head_metrics] {
+        m.executions.fetch_add(1, Ordering::Relaxed);
+        m.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+        if batch.len() > 1 {
+            m.batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
+        if coalesced && result.is_ok() {
+            m.coalesced.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
     }
 
     match result {
         Ok(outputs_per_req) => {
             let n = batch.len();
             for ((req, outputs), q_us) in batch.into_iter().zip(outputs_per_req).zip(queue_us) {
-                shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
-                shared.metrics.queue_us_total.fetch_add(q_us, Ordering::Relaxed);
+                let req_metrics = shared.obs.per_kernel.handle(&route.kernel, &req.shape_sig);
                 let total_us = req.submitted.elapsed().as_micros() as u64;
-                shared.metrics.observe_latency_us(total_us);
+                for m in [&shared.metrics, &*req_metrics] {
+                    m.completed.fetch_add(1, Ordering::Relaxed);
+                    m.queue_us_total.fetch_add(q_us, Ordering::Relaxed);
+                    m.observe_latency_us(total_us);
+                }
                 let _ = req.reply.send(Ok(Response {
                     outputs,
                     queue_us: q_us,
@@ -389,6 +447,22 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                     batch_size: n,
                     backend: backend_name,
                 }));
+                // recorded after the send so the Reply span covers delivery
+                // (send takes &self, so req is still usable here)
+                if req.sampled {
+                    shared.obs.traces.record(build_trace(
+                        route,
+                        &req.shape_sig,
+                        req.submitted,
+                        drained,
+                        plan_span,
+                        t0,
+                        exec_end,
+                        plan_hit,
+                        n,
+                        coalesced,
+                    ));
+                }
             }
         }
         Err(e) => {
@@ -397,6 +471,51 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                 let _ = req.reply.send(Err(anyhow!("{msg}")));
             }
         }
+    }
+}
+
+/// Assemble the span waterfall for one completed request: queued →
+/// batched → plan lookup/compile → grid execute → reply, all as offsets
+/// from the request's own submit instant.
+#[allow(clippy::too_many_arguments)]
+fn build_trace(
+    route: &RouteKey,
+    shape_sig: &str,
+    submitted: Instant,
+    drained: Instant,
+    plan_span: Option<(Instant, Instant)>,
+    exec_start: Instant,
+    exec_end: Instant,
+    plan_hit: Option<bool>,
+    batch_size: usize,
+    coalesced: bool,
+) -> crate::obs::Trace {
+    use crate::obs::{Span, SpanKind};
+    let off = |t: Instant| t.saturating_duration_since(submitted).as_micros() as u64;
+    let reply_end = Instant::now();
+    let mut spans = vec![
+        Span { kind: SpanKind::Queued, start_us: 0, end_us: off(drained) },
+        Span { kind: SpanKind::Batch, start_us: off(drained), end_us: off(exec_start) },
+    ];
+    if let Some((ps, pe)) = plan_span {
+        spans.push(Span { kind: SpanKind::Plan, start_us: off(ps), end_us: off(pe) });
+        spans.push(Span { kind: SpanKind::Execute, start_us: off(pe), end_us: off(exec_end) });
+    } else {
+        spans.push(Span {
+            kind: SpanKind::Execute,
+            start_us: off(exec_start),
+            end_us: off(exec_end),
+        });
+    }
+    spans.push(Span { kind: SpanKind::Reply, start_us: off(exec_end), end_us: off(reply_end) });
+    crate::obs::Trace {
+        kernel: route.kernel.clone(),
+        shapes: shape_sig.to_string(),
+        batch_size,
+        coalesced,
+        plan_hit,
+        total_us: off(reply_end),
+        spans,
     }
 }
 
@@ -409,11 +528,17 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         // leak the receiver so sends do not error mid-test
         std::mem::forget(_rx);
+        let shape_sig = {
+            let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+            crate::obs::shape_sig(&shapes)
+        };
         Request {
             kernel: kernel.to_string(),
             variant: "nt".to_string(),
             inputs,
             submitted: Instant::now(),
+            shape_sig,
+            sampled: false,
             reply: tx,
         }
     }

@@ -28,6 +28,7 @@ use anyhow::{bail, Result};
 
 use super::native::{KernelDef, Specialization};
 use super::scheduler::GridScheduler;
+use crate::obs::{ProfileReport, ProfileSnapshot};
 use crate::runtime::HostTensor;
 
 /// Cache key: which kernel/variant, specialized for which input shapes.
@@ -60,6 +61,10 @@ pub struct CompiledProgram {
     pub shapes: Vec<Vec<usize>>,
     /// specialized views + grid/loop geometry + output shapes
     pub spec: Specialization,
+    /// execution profile accumulated across launches of this plan;
+    /// recording only happens when the report is enabled (`NT_PROFILE=1`
+    /// at compile time, or an explicit report via `execute_profiled`)
+    pub profile: ProfileReport,
 }
 
 impl CompiledProgram {
@@ -70,6 +75,18 @@ impl CompiledProgram {
         &self,
         inputs: &[HostTensor],
         scheduler: &GridScheduler,
+    ) -> Result<Vec<HostTensor>> {
+        self.execute_profiled(inputs, scheduler, &self.profile)
+    }
+
+    /// [`CompiledProgram::execute`] recording into an explicit
+    /// [`ProfileReport`] instead of the plan's own (tests and benches
+    /// profile without setting `NT_PROFILE`).
+    pub fn execute_profiled(
+        &self,
+        inputs: &[HostTensor],
+        scheduler: &GridScheduler,
+        profile: &ProfileReport,
     ) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.shapes.len() {
             bail!(
@@ -92,7 +109,25 @@ impl CompiledProgram {
             })?;
         }
         let refs: Vec<&HostTensor> = inputs.iter().collect();
-        scheduler.run(&self.kernel.program, &self.spec.views, &refs, &self.spec.output_shapes)
+        scheduler.run_with(
+            &self.kernel.program,
+            &self.spec.views,
+            &refs,
+            &self.spec.output_shapes,
+            Some(profile),
+        )
+    }
+
+    /// The accumulated profile, labeled `"<kernel> <shape sig>"` —
+    /// `None` unless profiling is enabled and the plan has executed.
+    pub fn profile_snapshot(&self) -> Option<ProfileSnapshot> {
+        if !self.profile.is_enabled() {
+            return None;
+        }
+        let shape_refs: Vec<&[usize]> = self.shapes.iter().map(|s| s.as_slice()).collect();
+        let label = format!("{} {}", self.kernel.name, crate::obs::shape_sig(&shape_refs));
+        let snap = self.profile.snapshot(&label);
+        (snap.cells > 0).then_some(snap)
     }
 }
 
@@ -104,6 +139,7 @@ pub fn compile(kernel: &Arc<KernelDef>, shapes: &[&[usize]]) -> Result<CompiledP
         kernel: kernel.clone(),
         shapes: shapes.iter().map(|s| s.to_vec()).collect(),
         spec,
+        profile: ProfileReport::from_env(),
     })
 }
 
@@ -117,6 +153,10 @@ struct CacheInner {
     map: HashMap<PlanKey, Entry>,
     /// monotonic logical clock for `last_used`
     tick: u64,
+    /// per-kernel (hits, misses) — coarser than the map's (kernel,
+    /// variant, shapes) keys, and never evicted, so attribution survives
+    /// plan eviction
+    per_kernel: HashMap<String, (u64, u64)>,
 }
 
 /// Concurrent memoization of compiled programs.  One instance is shared
@@ -135,7 +175,11 @@ impl PlanCache {
 
     pub fn new(capacity: usize) -> PlanCache {
         PlanCache {
-            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                tick: 0,
+                per_kernel: HashMap::new(),
+            }),
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -157,23 +201,38 @@ impl PlanCache {
         variant: &str,
         shapes: &[&[usize]],
     ) -> Result<Arc<CompiledProgram>> {
+        Ok(self.prepare_with_outcome(kernel, variant, shapes)?.0)
+    }
+
+    /// [`PlanCache::prepare`] that also reports whether the lookup was a
+    /// hit (`true`) or compiled fresh (`false`) — the per-request plan
+    /// attribution the tracer records.
+    pub fn prepare_with_outcome(
+        &self,
+        kernel: &Arc<KernelDef>,
+        variant: &str,
+        shapes: &[&[usize]],
+    ) -> Result<(Arc<CompiledProgram>, bool)> {
         let key = PlanKey {
             kernel: kernel.name.clone(),
             variant: intern_variant(variant),
             shapes: shapes.iter().map(|s| s.to_vec()).collect(),
         };
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         inner.tick += 1;
         let now = inner.tick;
         if let Some(entry) = inner.map.get_mut(&key) {
             entry.last_used = now;
             let compiled = entry.program.clone();
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(compiled);
+            inner.per_kernel.entry(key.kernel).or_insert((0, 0)).0 += 1;
+            return Ok((compiled, true));
         }
         // miss: compile while holding the lock (errors are not cached)
         let compiled = Arc::new(compile(kernel, shapes)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
+        inner.per_kernel.entry(key.kernel.clone()).or_insert((0, 0)).1 += 1;
         inner.map.insert(key, Entry { program: compiled.clone(), last_used: now });
         // evict the least-recently-used entries (O(n) scan, but only on
         // insert past capacity — never on the hit path)
@@ -188,7 +247,34 @@ impl PlanCache {
             };
             inner.map.remove(&cold);
         }
-        Ok(compiled)
+        Ok((compiled, false))
+    }
+
+    /// Per-kernel `(name, hits, misses)`, sorted by kernel name.  Counts
+    /// are kernel-level (summed over variants and shapes) and survive
+    /// plan eviction.
+    pub fn kernel_counters(&self) -> Vec<(String, u64, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut rows: Vec<(String, u64, u64)> = inner
+            .per_kernel
+            .iter()
+            .map(|(k, (h, m))| (k.clone(), *h, *m))
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    /// Profile snapshots of every cached plan that has recorded execution
+    /// data (non-empty only under `NT_PROFILE=1`), sorted by label.
+    pub fn profile_snapshots(&self) -> Vec<ProfileSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        let mut snaps: Vec<ProfileSnapshot> = inner
+            .map
+            .values()
+            .filter_map(|e| e.program.profile_snapshot())
+            .collect();
+        snaps.sort_by(|a, b| a.label.cmp(&b.label));
+        snaps
     }
 
     pub fn hits(&self) -> u64 {
@@ -289,6 +375,25 @@ mod tests {
         assert_eq!(cache.misses(), miss_before, "touched entry must have survived");
         cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 16))).unwrap();
         assert_eq!(cache.misses(), miss_before + 1, "LRU victim must recompile");
+    }
+
+    #[test]
+    fn kernel_counters_attribute_hits_and_misses() {
+        let cache = PlanCache::new(8);
+        let mm = lookup("mm").unwrap();
+        let softmax = lookup("softmax").unwrap();
+        cache.prepare(&mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        let (_, hit) =
+            cache.prepare_with_outcome(&mm, "nt", &refs(&mm_shapes(8, 8, 8))).unwrap();
+        assert!(hit, "second same-shape prepare must report a hit");
+        let sm_shapes = vec![vec![4usize, 16]];
+        cache.prepare(&softmax, "nt", &refs(&sm_shapes)).unwrap();
+        let rows = cache.kernel_counters();
+        assert_eq!(
+            rows,
+            vec![("mm".to_string(), 1, 1), ("softmax".to_string(), 0, 1)],
+            "per-kernel attribution must match global hit/miss counts"
+        );
     }
 
     #[test]

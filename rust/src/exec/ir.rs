@@ -28,6 +28,7 @@ use anyhow::{anyhow, bail, Result};
 use super::gemm::{gemm_rows_parallel, INTRA_PAR_MIN_MADDS};
 use super::tile::{naive_dot_forced, BinOp, ReduceOp, Tile, UnaryOp};
 use super::view::ParamView;
+use crate::obs::ProfileReport;
 use crate::runtime::HostTensor;
 
 pub type Reg = usize;
@@ -93,6 +94,30 @@ pub enum Instr {
 }
 
 impl Instr {
+    /// Index into [`crate::obs::INSTR_KINDS`] — the profiler's
+    /// per-instruction-kind accumulator slot.
+    pub fn kind_index(&self) -> usize {
+        match self {
+            Instr::Load { .. } => 0,
+            Instr::Zeros { .. } => 1,
+            Instr::Const { .. } => 2,
+            Instr::Unary { .. } => 3,
+            Instr::Binary { .. } => 4,
+            Instr::Reduce { .. } => 5,
+            Instr::Dot { .. } => 6,
+            Instr::DotAcc { .. } => 7,
+            Instr::Broadcast { .. } => 8,
+            Instr::Transpose { .. } => 9,
+            Instr::PadMask { .. } => 10,
+            Instr::BlockDim { .. } => 11,
+            Instr::SplitHalf { .. } => 12,
+            Instr::Concat { .. } => 13,
+            Instr::Assign { .. } => 14,
+            Instr::Loop { .. } => 15,
+            Instr::Store { .. } => 16,
+        }
+    }
+
     /// Registers this instruction reads / writes, and parameters it
     /// references (loops report none; their body is walked separately).
     fn effects(&self) -> (Vec<Reg>, Vec<Reg>, Vec<usize>) {
@@ -270,6 +295,11 @@ pub enum ParamData<'a> {
 /// may split across *within* this cell — the scheduler hands the whole
 /// pool to each cell when the grid itself is too small to fill it, so a
 /// big single-tile GEMM still parallelizes.
+///
+/// `profile` is the plan's [`ProfileReport`]; per-instruction wall time
+/// is recorded only when it is present *and* enabled, so the disabled
+/// path costs one branch per instruction.
+#[allow(clippy::too_many_arguments)]
 pub fn exec_cell(
     program: &TileProgram,
     views: &[ParamView],
@@ -277,10 +307,22 @@ pub fn exec_cell(
     cell: &[i64],
     loop_shape: &[usize],
     intra_threads: usize,
+    profile: Option<&ProfileReport>,
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
     let mut regs: Vec<Option<Tile>> = vec![None; program.regs];
-    run_block(&program.instrs, &mut regs, views, data, cell, loop_shape, None, intra_threads, write)
+    run_block(
+        &program.instrs,
+        &mut regs,
+        views,
+        data,
+        cell,
+        loop_shape,
+        None,
+        intra_threads,
+        profile,
+        write,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -293,6 +335,7 @@ fn run_block(
     loop_shape: &[usize],
     sub: Option<&[usize]>,
     intra_threads: usize,
+    profile: Option<&ProfileReport>,
     write: &mut dyn FnMut(usize, usize, f32),
 ) -> Result<()> {
     // register reads borrow — every op produces a fresh output tile, so
@@ -320,7 +363,9 @@ fn run_block(
             _ => Cow::Owned(vec![0usize; v.loop_shape.len()]),
         }
     }
+    let prof = profile.filter(|p| p.is_enabled());
     for instr in instrs {
+        let t0 = prof.map(|_| std::time::Instant::now());
         match instr {
             Instr::Load { dst, param } => {
                 let tensor = match &data[*param] {
@@ -435,6 +480,7 @@ fn run_block(
                         loop_shape,
                         Some(&coords),
                         intra_threads,
+                        profile,
                         write,
                     )?;
                     for &r in &locals {
@@ -453,6 +499,13 @@ fn run_block(
                 let tile = get(regs, *src)?;
                 let s = param_sub(views, *param, sub);
                 views[*param].scatter_with(tile, cell, &s, |off, v| write(*param, off, v))?;
+            }
+        }
+        // Loop bodies record their own instructions through the recursive
+        // call; attributing the whole loop again would double-count.
+        if let (Some(p), Some(t0)) = (prof, t0) {
+            if !matches!(instr, Instr::Loop { .. }) {
+                p.record_instr(instr.kind_index(), t0.elapsed().as_nanos() as u64);
             }
         }
     }

@@ -50,7 +50,9 @@
 //!   threads per run;
 //! * [`scheduler`] — the grid scheduler: one program instance per
 //!   outermost-level cell, chunked across the pool exactly as the code
-//!   generator would launch the grid;
+//!   generator would launch the grid.  Under `NT_PROFILE=1` it feeds the
+//!   plan-attached [`crate::obs::ProfileReport`] with per-instruction and
+//!   per-cell wall time (`repro stats` renders the report);
 //! * [`reference`] — straightforward oracle implementations the tile
 //!   programs are cross-checked against in `cargo test`.
 //!

@@ -26,9 +26,12 @@
 //! the caller), so no borrow outlives the data it references.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use anyhow::{anyhow, Result};
+
+use crate::obs::PoolGauges;
 
 /// A lifetime-erased job (see module docs for why `'static` is sound).
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -42,6 +45,10 @@ struct Shared {
     state: Mutex<PoolState>,
     /// signaled when work arrives or shutdown begins
     work: Condvar,
+    /// workers currently executing a job (observability gauge)
+    busy: AtomicUsize,
+    /// jobs executed from the queue since the pool started
+    jobs: AtomicU64,
 }
 
 /// One scope of jobs submitted together: a countdown latch plus the first
@@ -64,6 +71,8 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
             work: Condvar::new(),
+            busy: AtomicUsize::new(0),
+            jobs: AtomicU64::new(0),
         });
         let workers = (0..workers)
             .map(|i| {
@@ -81,6 +90,17 @@ impl WorkerPool {
     /// more runner on top during `run_scoped`).
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Point-in-time utilization gauges (queue depth, busy workers,
+    /// lifetime job count).
+    pub fn gauges(&self) -> PoolGauges {
+        PoolGauges {
+            workers: self.workers.len(),
+            queue_depth: self.shared.state.lock().unwrap().queue.len(),
+            busy_workers: self.shared.busy.load(Ordering::Relaxed),
+            jobs_executed: self.shared.jobs.load(Ordering::Relaxed),
+        }
     }
 
     /// Run every job to completion, in parallel across the pool plus the
@@ -136,7 +156,10 @@ impl WorkerPool {
             }
             let job = self.shared.state.lock().unwrap().queue.pop_front();
             match job {
-                Some(job) => job(),
+                Some(job) => {
+                    job();
+                    self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+                }
                 None => {
                     let mut remaining = scope.remaining.lock().unwrap();
                     while *remaining > 0 {
@@ -177,7 +200,12 @@ fn worker_loop(shared: &Shared) {
             }
         };
         match job {
-            Some(job) => job(),
+            Some(job) => {
+                shared.busy.fetch_add(1, Ordering::Relaxed);
+                job();
+                shared.busy.fetch_sub(1, Ordering::Relaxed);
+                shared.jobs.fetch_add(1, Ordering::Relaxed);
+            }
             None => return,
         }
     }
@@ -234,6 +262,12 @@ pub fn global() -> &'static WorkerPool {
     })
 }
 
+/// Gauges for the global pool *without* forcing its creation: all zeros
+/// until some parallel execution has instantiated it.
+pub fn global_gauges() -> PoolGauges {
+    GLOBAL.get().map(WorkerPool::gauges).unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +322,18 @@ mod tests {
             pool.run_scoped(tasks);
         }));
         assert!(result.is_err(), "worker panic must surface in run_scoped");
+    }
+
+    #[test]
+    fn gauges_count_executed_jobs() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            (0..8).map(|_| Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>).collect();
+        pool.run_scoped(tasks);
+        let g = pool.gauges();
+        assert_eq!(g.workers, 2);
+        assert_eq!(g.queue_depth, 0, "scope completion drains the queue");
+        assert_eq!(g.jobs_executed, 8);
     }
 
     #[test]

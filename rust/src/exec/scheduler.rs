@@ -27,6 +27,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::ir::{exec_cell, ParamData, TileProgram};
 use super::view::ParamView;
+use crate::obs::ProfileReport;
 use crate::runtime::HostTensor;
 
 /// Raw output pointer that may cross thread boundaries (see module docs).
@@ -71,6 +72,21 @@ impl GridScheduler {
         views: &[ParamView],
         inputs: &[&HostTensor],
         output_shapes: &[Vec<usize>],
+    ) -> Result<Vec<HostTensor>> {
+        self.run_with(program, views, inputs, output_shapes, None)
+    }
+
+    /// [`GridScheduler::run`] with an optional [`ProfileReport`]: when
+    /// present and enabled, per-instruction and per-cell wall time is
+    /// accumulated into it (the report is `Sync` — grid workers record
+    /// concurrently).
+    pub fn run_with(
+        &self,
+        program: &TileProgram,
+        views: &[ParamView],
+        inputs: &[&HostTensor],
+        output_shapes: &[Vec<usize>],
+        profile: Option<&ProfileReport>,
     ) -> Result<Vec<HostTensor>> {
         // marshal parameter data: inputs in declaration order, outputs
         // allocated here
@@ -186,7 +202,9 @@ impl GridScheduler {
             (self.threads, 1)
         };
         if threads == 1 {
-            run_cells(program, views, &data, &grid, &loop_shape, 0, cells, intra, &out_ptrs)?;
+            run_cells(
+                program, views, &data, &grid, &loop_shape, 0, cells, intra, profile, &out_ptrs,
+            )?;
         } else {
             let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
             let chunk = (cells + threads as i64 - 1) / threads as i64;
@@ -200,9 +218,9 @@ impl GridScheduler {
                     continue;
                 }
                 tasks.push(Box::new(move || {
-                    if let Err(e) =
-                        run_cells(program, views, data, grid, loop_shape, lo, hi, intra, out_ptrs)
-                    {
+                    if let Err(e) = run_cells(
+                        program, views, data, grid, loop_shape, lo, hi, intra, profile, out_ptrs,
+                    ) {
                         *failure.lock().unwrap() = Some(e);
                     }
                 }));
@@ -226,6 +244,7 @@ fn run_cells(
     lo: i64,
     hi: i64,
     intra_threads: usize,
+    profile: Option<&ProfileReport>,
     out_ptrs: &[SharedOut],
 ) -> Result<()> {
     let out_index: Vec<Option<usize>> = {
@@ -252,6 +271,7 @@ fn run_cells(
         // outlives the scope and `off < len` by scatter bounds-checking.
         unsafe { *ptr.add(off) = v };
     };
+    let prof = profile.filter(|p| p.is_enabled());
     for linear in lo..hi {
         // linear → multi-index (row-major)
         let mut rem = linear;
@@ -259,7 +279,11 @@ fn run_cells(
             cell[d] = rem % grid[d].max(1);
             rem /= grid[d].max(1);
         }
-        exec_cell(program, views, data, &cell, loop_shape, intra_threads, &mut write)?;
+        let t0 = prof.map(|_| std::time::Instant::now());
+        exec_cell(program, views, data, &cell, loop_shape, intra_threads, profile, &mut write)?;
+        if let (Some(p), Some(t0)) = (prof, t0) {
+            p.record_cell(t0.elapsed().as_nanos() as u64);
+        }
     }
     Ok(())
 }

@@ -6,6 +6,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod golden;
 pub mod serve;
+pub mod stats;
 pub mod table2;
 pub mod validate;
 

@@ -101,7 +101,9 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
     println!("completed {ok}/{requests}; largest fused batch: {max_batch}");
-    println!("{}", coordinator.metrics().render());
+    // the full observability snapshot (its global section is the former
+    // metrics render): per-kernel rows, trace waterfall, pool gauges
+    print!("{}", coordinator.obs_snapshot().render_table());
     coordinator.shutdown();
     Ok(())
 }

@@ -1,0 +1,58 @@
+//! `repro stats` — drive the coordinator with a short mixed burst
+//! (mm / softmax / sdpa / add) and print the full observability snapshot:
+//! global metrics, per-kernel/per-shape rows with plan-cache attribution,
+//! the slowest traced requests as a span waterfall, pool gauges, and —
+//! under `NT_PROFILE=1` — the per-instruction execution profiles.
+//!
+//! Flags: `--workers N` (default 2), `--requests N` (default 48),
+//! `--prometheus` (emit Prometheus text exposition instead of the table),
+//! `--json` (emit the snapshot as JSON).  `NT_TRACE_SAMPLE=k` samples
+//! every k-th request into the trace ring.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::harness::golden;
+use crate::prng::SplitMix64;
+use crate::runtime::Manifest;
+
+/// The kernels the burst cycles through — the acceptance mix.
+const BURST: &[&str] = &["mm", "softmax", "sdpa", "add"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let requests = args.opt_usize("requests", 48);
+    let mut config = CoordinatorConfig::default().from_env()?;
+    config.workers = args.opt_positive("workers")?.unwrap_or(2);
+    // native-only: the burst exercises the plan cache and coalescer, which
+    // AOT artifacts would shadow
+    let manifest = Arc::new(Manifest::builtin());
+    let coordinator = Coordinator::start(manifest, config)?;
+
+    let mut rng = SplitMix64::new(99);
+    let mut receivers = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let kernel = BURST[i % BURST.len()];
+        let inputs = golden::native_task_inputs(kernel, &mut rng)?;
+        receivers.push(coordinator.submit(kernel, "nt", inputs)?);
+    }
+    let mut ok = 0usize;
+    for rx in receivers {
+        rx.recv()??;
+        ok += 1;
+    }
+
+    let snapshot = coordinator.obs_snapshot();
+    if args.flag("prometheus") {
+        print!("{}", snapshot.render_prometheus());
+    } else if args.flag("json") {
+        println!("{}", snapshot.to_json());
+    } else {
+        println!("completed {ok}/{requests} requests");
+        print!("{}", snapshot.render_table());
+    }
+    coordinator.shutdown();
+    Ok(())
+}

@@ -29,6 +29,12 @@
 //!   (slot packing + native same-shape coalescing), worker pool, metrics.
 //!   Requests for kernels without artifacts are routed to the native
 //!   backend transparently;
+//! * [`obs`] — the observability layer threaded through the stack: a
+//!   per-kernel/per-shape [`obs::MetricsRegistry`], a sampled request
+//!   [`obs::TraceRecorder`] with a waterfall renderer, and an opt-in
+//!   (`NT_PROFILE=1`) per-instruction/per-cell execution profiler; one
+//!   [`obs::ObsSnapshot`] exports all of it as a human table
+//!   (`repro stats`), Prometheus exposition text, or JSON;
 //! * [`inference`] — the end-to-end autoregressive engine of Fig 7;
 //! * [`codemetrics`] — the Table 2 metric suite (raw, cyclomatic, Halstead,
 //!   maintainability index) over Python kernel sources;
@@ -48,6 +54,7 @@ pub mod harness;
 pub mod inference;
 pub mod json;
 pub mod kernel;
+pub mod obs;
 pub mod prng;
 pub mod runtime;
 pub mod symbolic;

@@ -7,6 +7,8 @@
 //!   bench-kernels regenerate Fig 6 (single-kernel tasks)
 //!   bench-e2e     regenerate Fig 7 (end-to-end inference)
 //!   serve         run the kernel-serving coordinator demo workload
+//!   stats         mixed burst + full observability snapshot (table,
+//!                 --prometheus, --json)
 //!   kernels       list the kernel registry (serving-deployment debugging)
 //!   inspect       print manifest + launch-plan details
 
@@ -27,6 +29,7 @@ fn main() -> Result<()> {
         Some("bench-kernels") => harness::fig6::run(&args),
         Some("bench-e2e") => harness::fig7::run(&args),
         Some("serve") => harness::serve::run(&args),
+        Some("stats") => harness::stats::run(&args),
         Some("kernels") => kernels_cmd(),
         Some("inspect") => inspect(),
         other => {
@@ -43,6 +46,8 @@ fn main() -> Result<()> {
                  \x20 bench-kernels  regenerate Fig 6 (single-kernel performance)\n\
                  \x20 bench-e2e      regenerate Fig 7 (end-to-end inference throughput)\n\
                  \x20 serve          run the kernel-serving coordinator demo\n\
+                 \x20 stats          mixed burst + observability snapshot (per-kernel\n\
+                 \x20                metrics, trace waterfall; --prometheus / --json)\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
                  \x20                coalescible, loop-carried, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"

@@ -1,0 +1,404 @@
+//! Observability: the measurement substrate for the serving stack.
+//!
+//! Three std-only layers, all exported through one [`ObsSnapshot`]:
+//!
+//! 1. **Per-kernel/per-shape metrics** — [`MetricsRegistry`], a concurrent
+//!    map of the coordinator's lock-free atomic
+//!    [`Metrics`](crate::coordinator::Metrics) keyed by kernel name and
+//!    shape signature, recorded at the same submit/complete/reject/coalesce
+//!    points as the global struct, with per-kernel plan-cache hit/miss
+//!    attribution joined in from [`crate::exec::PlanCache`].
+//! 2. **Request tracing** — [`TraceRecorder`], a sampled ring buffer of
+//!    per-request span timelines (queued → batch → plan → execute →
+//!    reply), with an ASCII [`render_waterfall`] for the slowest recent
+//!    requests.  Sampling knob: `NT_TRACE_SAMPLE=k` keeps every k-th
+//!    request.
+//! 3. **Execution profiling** — [`ProfileReport`], opt-in (`NT_PROFILE=1`)
+//!    wall-time attribution per IR instruction kind and per grid cell,
+//!    attached to each compiled plan, plus worker-pool [`PoolGauges`].
+//!
+//! Snapshots render three ways: a human table ([`ObsSnapshot::render_table`],
+//! the `repro stats` subcommand), Prometheus text exposition
+//! ([`ObsSnapshot::render_prometheus`], ready for a future TCP `/metrics`
+//! endpoint), and JSON ([`ObsSnapshot::to_json`]).
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::MetricsSnapshot;
+use crate::json::Json;
+pub use profile::{InstrStat, PoolGauges, ProfileReport, ProfileSnapshot, INSTR_KINDS};
+pub use registry::{KernelShapeSnapshot, MetricsRegistry};
+pub use trace::{render_waterfall, Span, SpanKind, Trace, TraceRecorder};
+
+/// How many slowest traces an [`ObsSnapshot`] retains and renders.
+pub const TRACE_TOP_N: usize = 5;
+
+/// Canonical shape signature: dims joined with `x`, tensors joined with
+/// `|` — `[[70,50],[50,90]]` → `"70x50|50x90"`.  Rank-0 tensors render as
+/// `scalar`, an empty input list as `-`.
+pub fn shape_sig(shapes: &[&[usize]]) -> String {
+    if shapes.is_empty() {
+        return "-".to_string();
+    }
+    shapes
+        .iter()
+        .map(|dims| {
+            if dims.is_empty() {
+                "scalar".to_string()
+            } else {
+                dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// The live recording half of the layer: one per coordinator, shared by
+/// every worker.  (Profiles live on compiled plans; pool gauges live on
+/// the global pool — both are pulled in at snapshot time.)
+pub struct Obs {
+    pub per_kernel: MetricsRegistry,
+    pub traces: TraceRecorder,
+}
+
+impl Obs {
+    /// Build with knobs from the environment (`NT_TRACE_SAMPLE`); garbage
+    /// values fail loudly, matching the pool knobs.
+    pub fn from_env() -> Result<Obs> {
+        Ok(Obs { per_kernel: MetricsRegistry::new(), traces: TraceRecorder::from_env()? })
+    }
+}
+
+/// A point-in-time copy of everything the layer knows, ready to render.
+pub struct ObsSnapshot {
+    /// the coordinator's global counters, plan h/m included
+    pub global: MetricsSnapshot,
+    /// per-(kernel, shape) rows, sorted; plan h/m zero (see `plan_kernels`)
+    pub kernels: Vec<KernelShapeSnapshot>,
+    /// per-kernel plan-cache (hits, misses) from [`crate::exec::PlanCache`]
+    pub plan_kernels: Vec<(String, u64, u64)>,
+    /// the `TRACE_TOP_N` slowest retained traces, slowest first
+    pub traces: Vec<Trace>,
+    /// per-plan profiles (non-empty only under `NT_PROFILE=1`)
+    pub profiles: Vec<ProfileSnapshot>,
+    pub pool: PoolGauges,
+}
+
+impl ObsSnapshot {
+    fn plan_for(&self, kernel: &str) -> (u64, u64) {
+        self.plan_kernels
+            .iter()
+            .find(|(k, _, _)| k == kernel)
+            .map(|(_, h, m)| (*h, *m))
+            .unwrap_or((0, 0))
+    }
+
+    /// The human-readable stats table `repro stats` prints.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.global.render());
+        out.push_str("\nper-kernel/per-shape (plan h/m is kernel-level):\n");
+        out.push_str(&format!(
+            "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11}\n",
+            "kernel", "shapes", "count", "p50_us", "p99_us", "coalesced", "batched", "plan h/m"
+        ));
+        for row in &self.kernels {
+            let m = &row.metrics;
+            let (hits, misses) = self.plan_for(&row.kernel);
+            out.push_str(&format!(
+                "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11}\n",
+                row.kernel,
+                row.shapes,
+                m.completed,
+                m.latency_quantile_us(0.5),
+                m.latency_quantile_us(0.99),
+                m.coalesced,
+                m.batched,
+                format!("{hits}/{misses}"),
+            ));
+        }
+        out.push_str(&self.pool.render());
+        out.push('\n');
+        if !self.traces.is_empty() {
+            out.push_str(&format!("slowest {} traced requests:\n", self.traces.len()));
+            out.push_str(&render_waterfall(&self.traces));
+        }
+        for p in &self.profiles {
+            out.push_str(&p.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# HELP`/`# TYPE`
+    /// preambles, cumulative `le` buckets for the latency histogram, and
+    /// escaped label values.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let g = &self.global;
+
+        out.push_str("# HELP nt_requests_total Requests by lifecycle event.\n");
+        out.push_str("# TYPE nt_requests_total counter\n");
+        for (event, v) in [
+            ("submitted", g.submitted),
+            ("completed", g.completed),
+            ("rejected", g.rejected),
+            ("batched", g.batched),
+            ("coalesced", g.coalesced),
+        ] {
+            out.push_str(&format!("nt_requests_total{{event=\"{event}\"}} {v}\n"));
+        }
+        out.push_str("# HELP nt_executions_total Backend launches (batches count once).\n");
+        out.push_str("# TYPE nt_executions_total counter\n");
+        out.push_str(&format!("nt_executions_total {}\n", g.executions));
+        out.push_str("# HELP nt_exec_us_total Wall microseconds spent executing backends.\n");
+        out.push_str("# TYPE nt_exec_us_total counter\n");
+        out.push_str(&format!("nt_exec_us_total {}\n", g.exec_us_total));
+        out.push_str("# HELP nt_queue_us_total Microseconds requests spent queued.\n");
+        out.push_str("# TYPE nt_queue_us_total counter\n");
+        out.push_str(&format!("nt_queue_us_total {}\n", g.queue_us_total));
+
+        out.push_str("# HELP nt_plan_cache_total Compiled-plan cache lookups by result.\n");
+        out.push_str("# TYPE nt_plan_cache_total counter\n");
+        out.push_str(&format!("nt_plan_cache_total{{result=\"hit\"}} {}\n", g.plan_hits));
+        out.push_str(&format!("nt_plan_cache_total{{result=\"miss\"}} {}\n", g.plan_misses));
+
+        out.push_str("# HELP nt_request_latency_us Submit-to-reply latency histogram.\n");
+        out.push_str("# TYPE nt_request_latency_us histogram\n");
+        let mut cumulative = 0u64;
+        for (i, count) in g.latency_hist.iter().enumerate() {
+            cumulative += count;
+            let le = (1u64 << (i + 1)) - 1;
+            out.push_str(&format!(
+                "nt_request_latency_us_bucket{{le=\"{le}\"}} {cumulative}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "nt_request_latency_us_bucket{{le=\"+Inf\"}} {cumulative}\n"
+        ));
+        out.push_str(&format!("nt_request_latency_us_sum {}\n", g.latency_us_sum));
+        out.push_str(&format!("nt_request_latency_us_count {cumulative}\n"));
+
+        out.push_str("# HELP nt_kernel_requests_total Per-kernel/per-shape requests by event.\n");
+        out.push_str("# TYPE nt_kernel_requests_total counter\n");
+        for row in &self.kernels {
+            let (kernel, shapes) = (escape_label(&row.kernel), escape_label(&row.shapes));
+            let m = &row.metrics;
+            for (event, v) in [
+                ("submitted", m.submitted),
+                ("completed", m.completed),
+                ("rejected", m.rejected),
+                ("batched", m.batched),
+                ("coalesced", m.coalesced),
+            ] {
+                out.push_str(&format!(
+                    "nt_kernel_requests_total{{kernel=\"{kernel}\",shapes=\"{shapes}\",\
+                     event=\"{event}\"}} {v}\n"
+                ));
+            }
+        }
+        out.push_str("# HELP nt_kernel_latency_us Per-kernel/per-shape latency quantiles.\n");
+        out.push_str("# TYPE nt_kernel_latency_us gauge\n");
+        for row in &self.kernels {
+            let (kernel, shapes) = (escape_label(&row.kernel), escape_label(&row.shapes));
+            for (q, label) in [(0.5, "0.5"), (0.99, "0.99")] {
+                out.push_str(&format!(
+                    "nt_kernel_latency_us{{kernel=\"{kernel}\",shapes=\"{shapes}\",\
+                     quantile=\"{label}\"}} {}\n",
+                    row.metrics.latency_quantile_us(q)
+                ));
+            }
+        }
+        out.push_str("# HELP nt_kernel_plan_total Per-kernel plan-cache lookups by result.\n");
+        out.push_str("# TYPE nt_kernel_plan_total counter\n");
+        for (kernel, hits, misses) in &self.plan_kernels {
+            let kernel = escape_label(kernel);
+            out.push_str(&format!(
+                "nt_kernel_plan_total{{kernel=\"{kernel}\",result=\"hit\"}} {hits}\n"
+            ));
+            out.push_str(&format!(
+                "nt_kernel_plan_total{{kernel=\"{kernel}\",result=\"miss\"}} {misses}\n"
+            ));
+        }
+
+        out.push_str("# HELP nt_pool_workers Persistent worker-pool threads.\n");
+        out.push_str("# TYPE nt_pool_workers gauge\n");
+        out.push_str(&format!("nt_pool_workers {}\n", self.pool.workers));
+        out.push_str("# HELP nt_pool_queue_depth Jobs waiting in the pool's injector queue.\n");
+        out.push_str("# TYPE nt_pool_queue_depth gauge\n");
+        out.push_str(&format!("nt_pool_queue_depth {}\n", self.pool.queue_depth));
+        out.push_str("# HELP nt_pool_busy_workers Workers currently executing a job.\n");
+        out.push_str("# TYPE nt_pool_busy_workers gauge\n");
+        out.push_str(&format!("nt_pool_busy_workers {}\n", self.pool.busy_workers));
+        out.push_str("# HELP nt_pool_jobs_total Jobs executed by pool workers since start.\n");
+        out.push_str("# TYPE nt_pool_jobs_total counter\n");
+        out.push_str(&format!("nt_pool_jobs_total {}\n", self.pool.jobs_executed));
+        out
+    }
+
+    /// The whole snapshot as a [`Json`] tree (serialize with `to_string`).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("global".to_string(), metrics_json(&self.global));
+        root.insert(
+            "kernels".to_string(),
+            Json::Arr(
+                self.kernels
+                    .iter()
+                    .map(|row| {
+                        let (hits, misses) = self.plan_for(&row.kernel);
+                        let mut o = BTreeMap::new();
+                        o.insert("kernel".to_string(), Json::Str(row.kernel.clone()));
+                        o.insert("shapes".to_string(), Json::Str(row.shapes.clone()));
+                        o.insert("metrics".to_string(), metrics_json(&row.metrics));
+                        o.insert("plan_hits".to_string(), Json::Num(hits as f64));
+                        o.insert("plan_misses".to_string(), Json::Num(misses as f64));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "traces".to_string(),
+            Json::Arr(
+                self.traces
+                    .iter()
+                    .map(|t| {
+                        let mut o = BTreeMap::new();
+                        o.insert("kernel".to_string(), Json::Str(t.kernel.clone()));
+                        o.insert("shapes".to_string(), Json::Str(t.shapes.clone()));
+                        o.insert("batch_size".to_string(), Json::Num(t.batch_size as f64));
+                        o.insert("coalesced".to_string(), Json::Bool(t.coalesced));
+                        o.insert(
+                            "plan_hit".to_string(),
+                            match t.plan_hit {
+                                Some(b) => Json::Bool(b),
+                                None => Json::Null,
+                            },
+                        );
+                        o.insert("total_us".to_string(), Json::Num(t.total_us as f64));
+                        o.insert(
+                            "spans".to_string(),
+                            Json::Arr(
+                                t.spans
+                                    .iter()
+                                    .map(|s| {
+                                        let mut so = BTreeMap::new();
+                                        so.insert(
+                                            "kind".to_string(),
+                                            Json::Str(s.kind.name().to_string()),
+                                        );
+                                        so.insert(
+                                            "start_us".to_string(),
+                                            Json::Num(s.start_us as f64),
+                                        );
+                                        so.insert("end_us".to_string(), Json::Num(s.end_us as f64));
+                                        Json::Obj(so)
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "profiles".to_string(),
+            Json::Arr(
+                self.profiles
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("label".to_string(), Json::Str(p.label.clone()));
+                        o.insert("cells".to_string(), Json::Num(p.cells as f64));
+                        o.insert("cell_ns_total".to_string(), Json::Num(p.cell_ns_total as f64));
+                        o.insert("cell_ns_max".to_string(), Json::Num(p.cell_ns_max as f64));
+                        o.insert(
+                            "instrs".to_string(),
+                            Json::Arr(
+                                p.instrs
+                                    .iter()
+                                    .map(|i| {
+                                        let mut io = BTreeMap::new();
+                                        io.insert(
+                                            "kind".to_string(),
+                                            Json::Str(i.kind.to_string()),
+                                        );
+                                        io.insert("count".to_string(), Json::Num(i.count as f64));
+                                        io.insert(
+                                            "total_ns".to_string(),
+                                            Json::Num(i.total_ns as f64),
+                                        );
+                                        Json::Obj(io)
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        let mut pool = BTreeMap::new();
+        pool.insert("workers".to_string(), Json::Num(self.pool.workers as f64));
+        pool.insert("queue_depth".to_string(), Json::Num(self.pool.queue_depth as f64));
+        pool.insert("busy_workers".to_string(), Json::Num(self.pool.busy_workers as f64));
+        pool.insert("jobs_executed".to_string(), Json::Num(self.pool.jobs_executed as f64));
+        root.insert("pool".to_string(), Json::Obj(pool));
+        Json::Obj(root)
+    }
+}
+
+fn metrics_json(m: &MetricsSnapshot) -> Json {
+    let mut o = BTreeMap::new();
+    for (k, v) in [
+        ("submitted", m.submitted),
+        ("completed", m.completed),
+        ("rejected", m.rejected),
+        ("batched", m.batched),
+        ("coalesced", m.coalesced),
+        ("executions", m.executions),
+        ("exec_us_total", m.exec_us_total),
+        ("queue_us_total", m.queue_us_total),
+        ("plan_hits", m.plan_hits),
+        ("plan_misses", m.plan_misses),
+        ("latency_us_sum", m.latency_us_sum),
+        ("latency_p50_us", m.latency_quantile_us(0.5)),
+        ("latency_p99_us", m.latency_quantile_us(0.99)),
+    ] {
+        o.insert(k.to_string(), Json::Num(v as f64));
+    }
+    Json::Obj(o)
+}
+
+fn escape_label(value: &str) -> String {
+    value
+        .replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_sig_formats() {
+        assert_eq!(shape_sig(&[&[70, 50], &[50, 90]]), "70x50|50x90");
+        assert_eq!(shape_sig(&[&[7, 301]]), "7x301");
+        assert_eq!(shape_sig(&[&[]]), "scalar");
+        assert_eq!(shape_sig(&[]), "-");
+    }
+
+    #[test]
+    fn escape_label_handles_specials() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,221 @@
+//! The execution profiler: opt-in wall-time attribution per instruction
+//! kind and per grid cell, plus the worker-pool gauges.
+//!
+//! A [`ProfileReport`] is attached to every compiled plan
+//! ([`crate::exec::CompiledProgram`]); when profiling is enabled
+//! (`NT_PROFILE=1` at compile time of the plan, or an explicitly
+//! [`ProfileReport::enabled`] report passed to
+//! `CompiledProgram::execute_profiled`), the IR interpreter and the grid
+//! scheduler record into it on every launch.  Disabled reports cost one
+//! branch per instruction — the hot path stays untimed.
+//!
+//! All counters are relaxed atomics, so many grid workers record into one
+//! report concurrently without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Display names for [`crate::exec::Instr`] kinds, indexed by
+/// `Instr::kind_index`.
+pub const INSTR_KINDS: &[&str] = &[
+    "load",
+    "zeros",
+    "const",
+    "unary",
+    "binary",
+    "reduce",
+    "dot",
+    "dot_acc",
+    "broadcast",
+    "transpose",
+    "pad_mask",
+    "block_dim",
+    "split_half",
+    "concat",
+    "assign",
+    "loop",
+    "store",
+];
+
+/// Accumulated execution profile for one compiled plan: wall time and
+/// execution count per instruction kind, plus per-grid-cell timing.
+pub struct ProfileReport {
+    enabled: bool,
+    instr_ns: Vec<AtomicU64>,
+    instr_count: Vec<AtomicU64>,
+    cells: AtomicU64,
+    cell_ns_total: AtomicU64,
+    cell_ns_max: AtomicU64,
+}
+
+impl ProfileReport {
+    fn with_enabled(enabled: bool) -> ProfileReport {
+        ProfileReport {
+            enabled,
+            instr_ns: (0..INSTR_KINDS.len()).map(|_| AtomicU64::new(0)).collect(),
+            instr_count: (0..INSTR_KINDS.len()).map(|_| AtomicU64::new(0)).collect(),
+            cells: AtomicU64::new(0),
+            cell_ns_total: AtomicU64::new(0),
+            cell_ns_max: AtomicU64::new(0),
+        }
+    }
+
+    /// Enabled iff `NT_PROFILE=1` — the report every compiled plan carries.
+    pub fn from_env() -> ProfileReport {
+        ProfileReport::with_enabled(std::env::var("NT_PROFILE").is_ok_and(|v| v == "1"))
+    }
+
+    /// A report that records nothing (one branch per instruction).
+    pub fn disabled() -> ProfileReport {
+        ProfileReport::with_enabled(false)
+    }
+
+    /// An always-recording report, independent of `NT_PROFILE` (tests,
+    /// benches, explicit `execute_profiled` callers).
+    pub fn enabled() -> ProfileReport {
+        ProfileReport::with_enabled(true)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one executed instruction of `kind` (an
+    /// `Instr::kind_index`) taking `ns` wall nanoseconds.
+    pub fn record_instr(&self, kind: usize, ns: u64) {
+        if let (Some(t), Some(c)) = (self.instr_ns.get(kind), self.instr_count.get(kind)) {
+            t.fetch_add(ns, Ordering::Relaxed);
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one executed grid cell taking `ns` wall nanoseconds.
+    pub fn record_cell(&self, ns: u64) {
+        self.cells.fetch_add(1, Ordering::Relaxed);
+        self.cell_ns_total.fetch_add(ns, Ordering::Relaxed);
+        self.cell_ns_max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Copy the counters out (instruction kinds that never executed are
+    /// omitted).
+    pub fn snapshot(&self, label: &str) -> ProfileSnapshot {
+        let instrs = INSTR_KINDS
+            .iter()
+            .enumerate()
+            .filter_map(|(i, kind)| {
+                let count = self.instr_count[i].load(Ordering::Relaxed);
+                (count > 0).then(|| InstrStat {
+                    kind,
+                    count,
+                    total_ns: self.instr_ns[i].load(Ordering::Relaxed),
+                })
+            })
+            .collect();
+        ProfileSnapshot {
+            label: label.to_string(),
+            instrs,
+            cells: self.cells.load(Ordering::Relaxed),
+            cell_ns_total: self.cell_ns_total.load(Ordering::Relaxed),
+            cell_ns_max: self.cell_ns_max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One instruction kind's accumulated profile.
+#[derive(Debug, Clone)]
+pub struct InstrStat {
+    pub kind: &'static str,
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+/// A point-in-time copy of a [`ProfileReport`], labeled with the plan it
+/// came from (kernel + shape signature).
+#[derive(Debug, Clone)]
+pub struct ProfileSnapshot {
+    pub label: String,
+    /// per-instruction-kind stats, in `INSTR_KINDS` order, zeros omitted
+    pub instrs: Vec<InstrStat>,
+    pub cells: u64,
+    pub cell_ns_total: u64,
+    pub cell_ns_max: u64,
+}
+
+impl ProfileSnapshot {
+    /// Human table: instruction kinds sorted by total time, then the
+    /// per-cell summary line.
+    pub fn render(&self) -> String {
+        let mut rows = self.instrs.clone();
+        rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        let mut out = format!("profile {}:\n", self.label);
+        for r in &rows {
+            let mean_ns = if r.count == 0 { 0 } else { r.total_ns / r.count };
+            out.push_str(&format!(
+                "  {:<11} count={:<8} total={:>9.3}ms mean={:>7}ns\n",
+                r.kind,
+                r.count,
+                r.total_ns as f64 / 1e6,
+                mean_ns,
+            ));
+        }
+        let mean_cell = if self.cells == 0 { 0 } else { self.cell_ns_total / self.cells };
+        out.push_str(&format!(
+            "  cells={} mean={}ns max={}ns",
+            self.cells, mean_cell, self.cell_ns_max
+        ));
+        out
+    }
+}
+
+/// Point-in-time gauges of the shared worker pool
+/// (`crate::exec::pool`): how wide it is, how deep its injector queue
+/// currently is, how many workers are executing a job right now, and how
+/// many queued jobs it has executed since start.
+#[derive(Debug, Clone, Default)]
+pub struct PoolGauges {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub busy_workers: usize,
+    pub jobs_executed: u64,
+}
+
+impl PoolGauges {
+    pub fn render(&self) -> String {
+        format!(
+            "pool: workers={} queue_depth={} busy={} jobs_executed={}",
+            self.workers, self.queue_depth, self.busy_workers, self.jobs_executed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_skips_untouched_kinds_and_tracks_cells() {
+        let p = ProfileReport::enabled();
+        assert!(p.is_enabled());
+        p.record_instr(0, 100);
+        p.record_instr(0, 50);
+        p.record_instr(16, 25);
+        p.record_cell(10);
+        p.record_cell(30);
+        let s = p.snapshot("test");
+        assert_eq!(s.instrs.len(), 2);
+        assert_eq!(s.instrs[0].kind, "load");
+        assert_eq!((s.instrs[0].count, s.instrs[0].total_ns), (2, 150));
+        assert_eq!(s.instrs[1].kind, "store");
+        assert_eq!((s.cells, s.cell_ns_total, s.cell_ns_max), (2, 40, 30));
+        assert!(s.render().contains("store"));
+    }
+
+    #[test]
+    fn disabled_report_still_accepts_records() {
+        // recording is gated by the *caller* checking is_enabled; the
+        // report itself never panics either way
+        let p = ProfileReport::disabled();
+        assert!(!p.is_enabled());
+        p.record_instr(999, 1); // out of range: ignored
+        assert!(p.snapshot("x").instrs.is_empty());
+    }
+}

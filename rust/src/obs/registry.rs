@@ -1,0 +1,146 @@
+//! The per-kernel/per-shape metrics registry.
+//!
+//! A [`MetricsRegistry`] maps `(kernel, shape signature)` to the same
+//! lock-free atomic [`Metrics`](crate::coordinator::Metrics) struct the
+//! coordinator uses globally.  Handles are `Arc`s: the hot path takes a
+//! read lock once per request to fetch (or, first time, a write lock to
+//! create) the handle, then records with plain relaxed atomics exactly
+//! like the global struct.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::{Metrics, MetricsSnapshot};
+
+/// One registry row, snapshotted.
+///
+/// `metrics.plan_hits`/`plan_misses` are zero here — plan-cache
+/// attribution is per-kernel (not per-shape) and is joined in from
+/// [`crate::exec::PlanCache::kernel_counters`] by
+/// [`ObsSnapshot`](crate::obs::ObsSnapshot).
+#[derive(Debug, Clone)]
+pub struct KernelShapeSnapshot {
+    pub kernel: String,
+    pub shapes: String,
+    pub metrics: MetricsSnapshot,
+}
+
+/// Concurrent map of per-(kernel, shape) [`Metrics`].
+///
+/// ```
+/// use std::sync::atomic::Ordering;
+/// use ninetoothed_repro::obs::MetricsRegistry;
+///
+/// let reg = MetricsRegistry::new();
+/// let m = reg.handle("softmax", "64x256");
+/// m.submitted.fetch_add(1, Ordering::Relaxed);
+/// m.completed.fetch_add(1, Ordering::Relaxed);
+/// m.observe_latency_us(120);
+///
+/// let rows = reg.snapshot();
+/// assert_eq!(rows.len(), 1);
+/// assert_eq!(rows[0].kernel, "softmax");
+/// assert_eq!(rows[0].metrics.completed, 1);
+/// assert_eq!(reg.merged().submitted, 1);
+/// ```
+pub struct MetricsRegistry {
+    inner: RwLock<HashMap<(String, String), Arc<Metrics>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { inner: RwLock::new(HashMap::new()) }
+    }
+
+    /// Fetch the metrics handle for `(kernel, shapes)`, creating it on
+    /// first use.  Read-lock fast path; the write lock is only taken the
+    /// first time a (kernel, shape) pair is seen.
+    pub fn handle(&self, kernel: &str, shapes: &str) -> Arc<Metrics> {
+        if let Some(m) = self
+            .inner
+            .read()
+            .unwrap()
+            .get(&(kernel.to_string(), shapes.to_string()))
+        {
+            return m.clone();
+        }
+        self.inner
+            .write()
+            .unwrap()
+            .entry((kernel.to_string(), shapes.to_string()))
+            .or_default()
+            .clone()
+    }
+
+    /// Snapshot every row, sorted by kernel then shape signature.
+    pub fn snapshot(&self) -> Vec<KernelShapeSnapshot> {
+        let mut rows: Vec<KernelShapeSnapshot> = self
+            .inner
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((kernel, shapes), m)| KernelShapeSnapshot {
+                kernel: kernel.clone(),
+                shapes: shapes.clone(),
+                metrics: m.snapshot(0, 0),
+            })
+            .collect();
+        rows.sort_by(|a, b| (&a.kernel, &a.shapes).cmp(&(&b.kernel, &b.shapes)));
+        rows
+    }
+
+    /// Sum of every row — equals the coordinator's bare global snapshot
+    /// when both were recorded from the same requests.
+    pub fn merged(&self) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot::empty();
+        for row in self.snapshot() {
+            total.merge(&row.metrics);
+        }
+        total
+    }
+
+    /// Number of distinct (kernel, shape) rows.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.read().unwrap().is_empty()
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::Ordering;
+
+    use super::*;
+
+    #[test]
+    fn handle_returns_same_struct_for_same_key() {
+        let reg = MetricsRegistry::new();
+        let a = reg.handle("mm", "8x8|8x8");
+        let b = reg.handle("mm", "8x8|8x8");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.submitted.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(reg.snapshot()[0].metrics.submitted, 2);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn same_kernel_different_shapes_get_distinct_rows() {
+        let reg = MetricsRegistry::new();
+        reg.handle("softmax", "4x16").completed.fetch_add(1, Ordering::Relaxed);
+        reg.handle("softmax", "4x32").completed.fetch_add(3, Ordering::Relaxed);
+        let rows = reg.snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].shapes.as_str(), rows[0].metrics.completed), ("4x16", 1));
+        assert_eq!((rows[1].shapes.as_str(), rows[1].metrics.completed), ("4x32", 3));
+        assert_eq!(reg.merged().completed, 4);
+    }
+}

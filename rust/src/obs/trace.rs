@@ -1,0 +1,238 @@
+//! Request tracing: a sampled, lock-cheap ring buffer of per-request
+//! span timelines.
+//!
+//! The coordinator records one [`Trace`] per sampled request, built from
+//! monotonic offsets against the request's submit instant: queued →
+//! coalesced/batched → plan lookup or compile → grid execute → reply.
+//! Sampling (`NT_TRACE_SAMPLE=k` keeps every k-th request, default 1 =
+//! all) is decided with a single relaxed atomic increment at submit time,
+//! so unsampled requests never touch the ring's mutex.  The ring holds
+//! the most recent `capacity` traces; [`render_waterfall`] draws the
+//! classic per-span timeline for the slowest of them.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// The phases a request passes through, in lifecycle order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// submit → drained from the queue by a worker
+    Queued,
+    /// drained → batch assembled (pack/coalesce decision made)
+    Batch,
+    /// plan-cache lookup, compiling on a miss
+    Plan,
+    /// grid execution of the compiled plan
+    Execute,
+    /// unpack/unstack and reply delivery
+    Reply,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Queued => "queued",
+            SpanKind::Batch => "batch",
+            SpanKind::Plan => "plan",
+            SpanKind::Execute => "execute",
+            SpanKind::Reply => "reply",
+        }
+    }
+}
+
+/// One phase of one request, as microsecond offsets from submit.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// A sampled request's full timeline.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub kernel: String,
+    /// shape signature, e.g. `"7x301"` or `"70x50|50x90"`
+    pub shapes: String,
+    pub batch_size: usize,
+    pub coalesced: bool,
+    /// `Some(true)` plan-cache hit, `Some(false)` compile, `None` when the
+    /// backend has no plan cache (artifact / reference paths)
+    pub plan_hit: Option<bool>,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+/// Sampling ring buffer of recent [`Trace`]s.
+pub struct TraceRecorder {
+    sample: u64,
+    counter: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<Trace>>,
+}
+
+impl TraceRecorder {
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    /// Keep every `sample`-th request (1 = all), retaining the most recent
+    /// `capacity` traces.
+    pub fn new(sample: u64, capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            sample: sample.max(1),
+            counter: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Sampling interval from `NT_TRACE_SAMPLE` (default 1: trace every
+    /// request).  Garbage values fail loudly, like the pool knobs.
+    pub fn from_env() -> Result<TraceRecorder> {
+        let sample = crate::exec::pool::parse_env_usize("NT_TRACE_SAMPLE")?.unwrap_or(1);
+        Ok(TraceRecorder::new(sample as u64, TraceRecorder::DEFAULT_CAPACITY))
+    }
+
+    /// Decide at submit time whether this request is traced.  One relaxed
+    /// atomic increment; every k-th caller (starting with the first) gets
+    /// `true`.
+    pub fn should_sample(&self) -> bool {
+        self.counter.fetch_add(1, Ordering::Relaxed) % self.sample == 0
+    }
+
+    /// The configured sampling interval.
+    pub fn sample_interval(&self) -> u64 {
+        self.sample
+    }
+
+    pub fn record(&self, trace: Trace) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(trace);
+    }
+
+    /// All retained traces, oldest first.
+    pub fn recent(&self) -> Vec<Trace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The `n` slowest retained traces, slowest first.
+    pub fn slowest(&self, n: usize) -> Vec<Trace> {
+        let mut traces = self.recent();
+        traces.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        traces.truncate(n);
+        traces
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.lock().unwrap().is_empty()
+    }
+}
+
+/// Render an ASCII waterfall, one block of rows per trace, each span a
+/// `#`-bar positioned on a common per-trace time axis.
+pub fn render_waterfall(traces: &[Trace]) -> String {
+    const WIDTH: usize = 32;
+    let mut out = String::new();
+    for t in traces {
+        let hit = match t.plan_hit {
+            Some(true) => "plan=hit",
+            Some(false) => "plan=compile",
+            None => "plan=-",
+        };
+        out.push_str(&format!(
+            "{} [{}] total={}us batch={} coalesced={} {}\n",
+            t.kernel, t.shapes, t.total_us, t.batch_size, t.coalesced, hit
+        ));
+        let total = t.total_us.max(1);
+        for span in &t.spans {
+            let start_col = (span.start_us as usize * WIDTH / total as usize).min(WIDTH);
+            let end_col = (span.end_us as usize * WIDTH / total as usize).clamp(start_col, WIDTH);
+            let bar = format!(
+                "{}{}",
+                " ".repeat(start_col),
+                "#".repeat((end_col - start_col).max(1))
+            );
+            out.push_str(&format!(
+                "  {:<8}|{:<w$}| {:>6}us\n",
+                span.kind.name(),
+                bar,
+                span.dur_us(),
+                w = WIDTH + 1
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(kernel: &str, total_us: u64) -> Trace {
+        Trace {
+            kernel: kernel.to_string(),
+            shapes: "4x4".to_string(),
+            batch_size: 1,
+            coalesced: false,
+            plan_hit: Some(true),
+            total_us,
+            spans: vec![
+                Span { kind: SpanKind::Queued, start_us: 0, end_us: total_us / 2 },
+                Span { kind: SpanKind::Execute, start_us: total_us / 2, end_us: total_us },
+            ],
+        }
+    }
+
+    #[test]
+    fn sampling_keeps_every_kth_request() {
+        let rec = TraceRecorder::new(3, 8);
+        let sampled: Vec<bool> = (0..9).map(|_| rec.should_sample()).collect();
+        assert_eq!(sampled.iter().filter(|s| **s).count(), 3);
+        assert!(sampled[0] && sampled[3] && sampled[6]);
+    }
+
+    #[test]
+    fn ring_caps_retention_and_slowest_sorts() {
+        let rec = TraceRecorder::new(1, 4);
+        for i in 0..10u64 {
+            rec.record(trace("softmax", i * 100));
+        }
+        assert_eq!(rec.len(), 4);
+        let slow = rec.slowest(2);
+        assert_eq!(slow.len(), 2);
+        assert_eq!(slow[0].total_us, 900);
+        assert_eq!(slow[1].total_us, 800);
+    }
+
+    #[test]
+    fn waterfall_renders_each_span() {
+        let out = render_waterfall(&[trace("mm", 200)]);
+        assert!(out.contains("mm [4x4] total=200us"));
+        assert!(out.contains("queued"));
+        assert!(out.contains("execute"));
+        assert!(out.contains('#'));
+    }
+
+    #[test]
+    fn waterfall_handles_zero_total() {
+        let mut t = trace("add", 0);
+        t.spans = vec![Span { kind: SpanKind::Reply, start_us: 0, end_us: 0 }];
+        let out = render_waterfall(&[t]);
+        assert!(out.contains("reply"));
+    }
+}

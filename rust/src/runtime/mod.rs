@@ -167,6 +167,14 @@ pub trait Backend {
     fn kind(&self) -> BackendKind;
     /// Resolve concrete input shapes to a reusable execution handle.
     fn prepare(&self, shapes: &[&[usize]]) -> Result<Prepared>;
+    /// [`Backend::prepare`] plus plan-cache attribution: `Some(true)` when
+    /// the handle came from a cache hit, `Some(false)` when it compiled
+    /// fresh, `None` when the backend has no plan cache (artifact /
+    /// reference paths).  The coordinator's tracer records this per
+    /// request.
+    fn prepare_traced(&self, shapes: &[&[usize]]) -> Result<(Prepared, Option<bool>)> {
+        Ok((self.prepare(shapes)?, None))
+    }
     /// Execute a prepared handle over concrete inputs.
     fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
     /// prepare + execute in one step.
@@ -245,6 +253,12 @@ impl Backend for NativeBackend {
 
     fn prepare(&self, shapes: &[&[usize]]) -> Result<Prepared> {
         Ok(Prepared::Native(self.plans.prepare(&self.kernel, &self.variant, shapes)?))
+    }
+
+    fn prepare_traced(&self, shapes: &[&[usize]]) -> Result<(Prepared, Option<bool>)> {
+        let (compiled, hit) =
+            self.plans.prepare_with_outcome(&self.kernel, &self.variant, shapes)?;
+        Ok((Prepared::Native(compiled), Some(hit)))
     }
 
     fn execute(&self, prepared: &Prepared, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {

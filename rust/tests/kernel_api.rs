@@ -474,11 +474,17 @@ fn derived_preconditions_match_the_old_hand_written_checks() {
 fn admit(router: &Router, name: &str, inputs: Vec<HostTensor>) -> RouteKey {
     let (tx, _rx) = mpsc::channel();
     std::mem::forget(_rx);
+    let shape_sig = {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        ninetoothed_repro::obs::shape_sig(&shapes)
+    };
     let req = Request {
         kernel: name.to_string(),
         variant: "nt".to_string(),
         inputs,
         submitted: Instant::now(),
+        shape_sig,
+        sampled: false,
         reply: tx,
     };
     router.admit(&req).unwrap()

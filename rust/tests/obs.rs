@@ -1,0 +1,273 @@
+//! Observability-layer integration tests: the per-kernel/per-shape
+//! metrics registry under concurrency, the coordinator's recording
+//! points, Prometheus exposition validity, trace sampling, and the
+//! opt-in execution profiler.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::exec::{lookup, GridScheduler, PlanCache};
+use ninetoothed_repro::harness::golden;
+use ninetoothed_repro::obs::{MetricsRegistry, ProfileReport, TraceRecorder};
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::Manifest;
+
+/// 8 threads hammer 8 distinct kernels through one shared registry; the
+/// per-kernel rows must come out exact, and the merged (bare global)
+/// snapshot must equal the sum of the per-kernel snapshots.
+#[test]
+fn registry_under_concurrent_distinct_kernel_hammering() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 100;
+    let reg = Arc::new(MetricsRegistry::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|i| {
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                let kernel = format!("k{i}");
+                for _ in 0..PER_THREAD {
+                    // re-resolve every iteration: exercises the read-lock
+                    // fast path against concurrent first-insert writers
+                    let m = reg.handle(&kernel, "8x8");
+                    m.submitted.fetch_add(1, Ordering::Relaxed);
+                    m.completed.fetch_add(1, Ordering::Relaxed);
+                    m.observe_latency_us(100);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let rows = reg.snapshot();
+    assert_eq!(rows.len(), THREADS);
+    for row in &rows {
+        assert_eq!(row.shapes, "8x8");
+        assert_eq!(row.metrics.submitted, PER_THREAD);
+        assert_eq!(row.metrics.completed, PER_THREAD);
+        assert_eq!(row.metrics.latency_us_sum, PER_THREAD * 100);
+        // 100µs lands in bucket [64, 128): inclusive upper bound 127
+        assert_eq!(row.metrics.latency_quantile_us(0.5), 127);
+        assert_eq!(row.metrics.latency_quantile_us(0.99), 127);
+    }
+    // bare global == sum of per-kernel rows
+    let merged = reg.merged();
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(merged.submitted, total);
+    assert_eq!(merged.completed, total);
+    assert_eq!(merged.latency_us_sum, total * 100);
+    assert_eq!(merged.latency_hist.iter().sum::<u64>(), total);
+    assert!((merged.mean_latency_us() - 100.0).abs() < 1e-9);
+}
+
+/// Drive a mixed burst through the coordinator and check the snapshot:
+/// per-kernel rows exist for every burst kernel, the global counters
+/// equal the sum over rows, and plan-cache attribution is per kernel.
+#[test]
+fn coordinator_burst_populates_per_kernel_rows_and_traces() {
+    let burst = ["mm", "softmax", "sdpa", "add"];
+    let requests = 24;
+    let config = CoordinatorConfig { workers: 2, ..Default::default() };
+    let coordinator = Coordinator::start(Arc::new(Manifest::builtin()), config).unwrap();
+    let mut rng = SplitMix64::new(7);
+    // warm one request per kernel first (and wait for it), so the burst
+    // below always hits the cached plan even if a whole kernel's worth of
+    // requests coalesces into a single batch
+    for kernel in burst {
+        let inputs = golden::native_task_inputs(kernel, &mut rng).unwrap();
+        coordinator.submit(kernel, "nt", inputs).unwrap().recv().unwrap().unwrap();
+    }
+    let mut receivers = Vec::new();
+    for i in 0..requests {
+        let kernel = burst[i % burst.len()];
+        let inputs = golden::native_task_inputs(kernel, &mut rng).unwrap();
+        receivers.push(coordinator.submit(kernel, "nt", inputs).unwrap());
+    }
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let total = (requests + burst.len()) as u64;
+
+    let snapshot = coordinator.obs_snapshot();
+    for kernel in burst {
+        assert!(
+            snapshot.kernels.iter().any(|r| r.kernel == kernel),
+            "missing per-kernel row for {kernel}"
+        );
+        // per-kernel plan-cache attribution: each kernel compiled exactly
+        // once (fixed golden shapes) and hit the cache afterwards
+        let (hits, misses) = snapshot
+            .plan_kernels
+            .iter()
+            .find(|(k, _, _)| k == kernel)
+            .map(|&(_, h, m)| (h, m))
+            .unwrap_or((0, 0));
+        assert_eq!(misses, 1, "{kernel} should compile exactly once");
+        assert!(hits >= 1, "{kernel} should hit its cached plan");
+    }
+    // global == sum of per-kernel rows for every counter recorded on both
+    let sum =
+        |f: fn(&ninetoothed_repro::coordinator::MetricsSnapshot) -> u64| -> u64 {
+            snapshot.kernels.iter().map(|r| f(&r.metrics)).sum()
+        };
+    assert_eq!(snapshot.global.submitted, total);
+    assert_eq!(snapshot.global.submitted, sum(|m| m.submitted));
+    assert_eq!(snapshot.global.completed, sum(|m| m.completed));
+    assert_eq!(snapshot.global.executions, sum(|m| m.executions));
+    assert_eq!(snapshot.global.latency_us_sum, sum(|m| m.latency_us_sum));
+    assert_eq!(
+        snapshot.global.latency_hist.iter().sum::<u64>(),
+        total,
+        "every completed request observed exactly once"
+    );
+    // default NT_TRACE_SAMPLE samples everything: the ring holds traces
+    // and the slowest list is sorted descending
+    assert!(!snapshot.traces.is_empty(), "traces should be recorded by default");
+    for pair in snapshot.traces.windows(2) {
+        assert!(pair[0].total_us >= pair[1].total_us);
+    }
+    let table = snapshot.render_table();
+    for kernel in burst {
+        assert!(table.contains(kernel), "stats table missing {kernel}:\n{table}");
+    }
+    coordinator.shutdown();
+}
+
+/// `render_prometheus()` must be valid text exposition format: every line
+/// is a comment (`# HELP` / `# TYPE`) or a sample `name{labels} value`
+/// with a legal metric name and a parseable value, and every sample's
+/// family is TYPE-declared before use.
+#[test]
+fn prometheus_exposition_parses() {
+    let config = CoordinatorConfig { workers: 1, ..Default::default() };
+    let coordinator = Coordinator::start(Arc::new(Manifest::builtin()), config).unwrap();
+    let mut rng = SplitMix64::new(11);
+    let mut receivers = Vec::new();
+    for kernel in ["softmax", "mm", "softmax"] {
+        let inputs = golden::native_task_inputs(kernel, &mut rng).unwrap();
+        receivers.push(coordinator.submit(kernel, "nt", inputs).unwrap());
+    }
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let text = coordinator.obs_snapshot().render_prometheus();
+    coordinator.shutdown();
+
+    let name_ok = |name: &str| {
+        !name.is_empty()
+            && name
+                .chars()
+                .next()
+                .map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+                .unwrap_or(false)
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    };
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let family = parts.next().unwrap_or("");
+            assert!(
+                keyword == "HELP" || keyword == "TYPE",
+                "unknown comment keyword in: {line}"
+            );
+            assert!(name_ok(family), "bad family name in: {line}");
+            if keyword == "TYPE" {
+                let kind = parts.next().unwrap_or("");
+                assert!(
+                    ["counter", "gauge", "histogram", "summary", "untyped"].contains(&kind),
+                    "bad TYPE in: {line}"
+                );
+                typed.push(family.to_string());
+            }
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (series, value) = line.rsplit_once(' ').expect("sample line needs a value");
+        let name = match series.split_once('{') {
+            Some((name, labels)) => {
+                assert!(labels.ends_with('}'), "unbalanced labels in: {line}");
+                for pair in labels[..labels.len() - 1].split("\",") {
+                    let (k, v) = pair.split_once("=\"").expect("label pair k=\"v\"");
+                    assert!(name_ok(k), "bad label name {k:?} in: {line}");
+                    assert!(!v.contains('\n'), "raw newline in label value: {line}");
+                }
+                name
+            }
+            None => series,
+        };
+        assert!(name_ok(name), "bad metric name in: {line}");
+        assert!(
+            value == "+Inf" || value.parse::<f64>().is_ok(),
+            "unparseable value {value:?} in: {line}"
+        );
+        // histogram series suffix back to the declared family name
+        let family = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|f| typed.iter().any(|t| t == f))
+            .unwrap_or(name);
+        assert!(
+            typed.iter().any(|t| t == family),
+            "sample {name} has no preceding TYPE declaration"
+        );
+        samples += 1;
+    }
+    assert!(samples > 10, "expected a real exposition, got {samples} samples");
+    assert!(text.contains("nt_requests_total"));
+    assert!(text.contains("nt_kernel_requests_total"));
+    assert!(text.contains("nt_request_latency_us_bucket"));
+}
+
+/// The sampling knob keeps every k-th request; the ring drops the oldest.
+#[test]
+fn trace_recorder_samples_and_caps() {
+    let rec = TraceRecorder::new(4, 16);
+    let sampled = (0..16).filter(|_| rec.should_sample()).count();
+    assert_eq!(sampled, 4, "every 4th of 16 requests");
+    assert_eq!(rec.sample_interval(), 4);
+}
+
+/// Opt-in profiler: executing a cached program with an enabled report
+/// accumulates per-instruction and per-cell wall time.
+#[test]
+fn profiler_accumulates_instruction_and_cell_time() {
+    let cache = PlanCache::new(4);
+    let softmax = lookup("softmax").unwrap();
+    let mut rng = SplitMix64::new(3);
+    let inputs = golden::native_task_inputs("softmax", &mut rng).unwrap();
+    let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+    let compiled = cache.prepare(&softmax, "nt", &shapes).unwrap();
+    let report = ProfileReport::enabled();
+    let sched = GridScheduler::serial();
+    let out = compiled.execute_profiled(&inputs, &sched, &report).unwrap();
+    assert_eq!(out.len(), 1);
+    let snap = report.snapshot("softmax 7x301");
+    assert!(snap.cells > 0, "cells must be counted");
+    assert!(snap.cell_ns_total > 0);
+    assert!(snap.cell_ns_max > 0);
+    assert!(!snap.instrs.is_empty(), "instruction kinds must be profiled");
+    assert!(
+        snap.instrs.iter().any(|s| s.kind == "load"),
+        "softmax loads its input tile: {:?}",
+        snap.instrs
+    );
+    assert!(snap.instrs.iter().all(|s| s.count > 0));
+    let rendered = snap.render();
+    assert!(rendered.contains("softmax 7x301"), "{rendered}");
+
+    // a disabled report attached by default must record nothing
+    let off = ProfileReport::from_env();
+    if !off.is_enabled() {
+        compiled.execute_profiled(&inputs, &sched, &off).unwrap();
+        assert_eq!(off.snapshot("off").cells, 0);
+    }
+}

@@ -6,7 +6,10 @@
 //! [`METRICS`] that appears in both the baseline and the current row, the
 //! current value must be at least `baseline * (1 - tolerance)` —
 //! tolerance defaults to 25% and can be overridden with
-//! `NT_BENCH_TOLERANCE` (e.g. `0.4`).
+//! `NT_BENCH_TOLERANCE` (e.g. `0.4`).  A baseline row may carry its own
+//! `"tolerance"` field, which overrides the global value for every
+//! metric in that row (the `obs_overhead_*` row uses `0.05`: the
+//! metrics+tracing-enabled path must stay within 5% of bare execution).
 //!
 //! The committed baseline intentionally holds *conservative floors*
 //! (slow-CI-runner safe), not best-machine numbers: its job is to catch
@@ -37,6 +40,10 @@ use ninetoothed_repro::json::Json;
 /// flash-attention kernel through the same `gflops_*`/`warm_per_s`
 /// metrics — a collapse there means the carried-register loop
 /// interpreter or its plan path regressed.
+/// `obs_rel_throughput` gates the observability layer itself: it is the
+/// bare-execution / observed-execution time ratio on the coalesced
+/// serving shape, with a 1.0 baseline and a per-row 5% tolerance — the
+/// recording points must stay effectively free.
 const METRICS: &[&str] = &[
     "gflops",
     "naive_gflops",
@@ -46,6 +53,7 @@ const METRICS: &[&str] = &[
     "warm_per_s",
     "coalesced_per_s",
     "resolves_per_s",
+    "obs_rel_throughput",
 ];
 
 fn load(path: &str) -> Result<Json, String> {
@@ -120,6 +128,12 @@ fn main() -> ExitCode {
             missing.push(key.to_string());
             continue;
         };
+        // a baseline row can pin its own tolerance (tighter gates for
+        // rows whose metric is a ratio rather than raw throughput)
+        let tolerance = base_row
+            .get("tolerance")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(tolerance);
         for metric in METRICS {
             let (Some(base), Some(cur)) = (
                 base_row.get(metric).and_then(|v| v.as_f64()),
