@@ -1,0 +1,116 @@
+//! Wire-protocol client example: drive a running `repro serve --addr`
+//! server over TCP with a mixed kernel burst, then scrape and sanity-check
+//! the Prometheus stats exposition.  The CI serving-smoke step runs
+//! exactly this pair:
+//!
+//! ```bash
+//! cargo run --release -- serve --addr 127.0.0.1:7071 &
+//! cargo run --release --example client -- --addr 127.0.0.1:7071 --shutdown
+//! ```
+//!
+//! `--shutdown` asks the server to drain and exit after the burst (the
+//! serve process prints its final stats table and returns).
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+use ninetoothed_repro::cli::Args;
+use ninetoothed_repro::coordinator::net::Client;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::HostTensor;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7071").to_string();
+    let rounds = args.opt_usize("rounds", 4);
+
+    // the server may still be binding (CI starts it in the background)
+    let mut client = Client::connect_with_retry(&addr, Duration::from_secs(10))?;
+
+    let health = client.health()?;
+    println!(
+        "connected to {addr}: protocol v{}, {} kernels, {} workers, queue {} (shed at {})",
+        health.usize("protocol")?,
+        health.usize("kernels")?,
+        health.usize("workers")?,
+        health.usize("queue_capacity")?,
+        health.usize("shed_watermark")?,
+    );
+
+    // a mixed burst: elementwise (coalescible), matmul, rowwise softmax and
+    // flash-style attention all through the same four-byte-prefix frames
+    let mut rng = SplitMix64::new(42);
+    let mut completed = 0;
+    for round in 0..rounds {
+        let x = HostTensor::randn(vec![1000], &mut rng);
+        let y = HostTensor::randn(vec![1000], &mut rng);
+        // verify the elementwise result client-side
+        let expect: Vec<f32> = x.as_f32()?.iter().zip(y.as_f32()?).map(|(a, b)| a + b).collect();
+        let reply = client.submit("add", "nt", &[x, y])?;
+        ensure!(
+            reply.outputs[0].as_f32()? == expect.as_slice(),
+            "add result differs from the client-side sum"
+        );
+        completed += 1;
+
+        for (kernel, inputs, out_shape) in [
+            (
+                "mm",
+                vec![
+                    HostTensor::randn(vec![70, 50], &mut rng),
+                    HostTensor::randn(vec![50, 90], &mut rng),
+                ],
+                vec![70, 90],
+            ),
+            ("softmax", vec![HostTensor::randn(vec![7, 301], &mut rng)], vec![7, 301]),
+            (
+                "sdpa",
+                vec![
+                    HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+                    HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+                    HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+                ],
+                vec![2, 2, 100, 16],
+            ),
+        ] {
+            let reply = client.submit(kernel, "nt", &inputs)?;
+            ensure!(
+                reply.outputs[0].shape == out_shape,
+                "{kernel} output shape {:?} != {out_shape:?}",
+                reply.outputs[0].shape
+            );
+            if round == 0 {
+                println!(
+                    "  {kernel}: backend={} batch={} queue={}µs exec={}µs",
+                    reply.backend, reply.batch_size, reply.queue_us, reply.exec_us
+                );
+            }
+            completed += 1;
+        }
+    }
+    println!("burst complete: {completed} requests verified over the wire");
+
+    // scrape the server-side metrics and sanity-check the exposition
+    let prom = client.stats_prometheus()?;
+    let submitted = prom
+        .lines()
+        .find(|l| l.starts_with("nt_requests_total{event=\"submitted\"}"))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| anyhow::anyhow!("no submitted counter in the exposition"))?;
+    ensure!(
+        submitted >= completed,
+        "server saw {submitted} submits, client completed {completed}"
+    );
+    ensure!(
+        prom.contains("# TYPE nt_request_latency_us histogram"),
+        "latency histogram missing from the exposition"
+    );
+    println!("stats scrape OK: server counted {submitted} submitted requests");
+
+    if args.flag("shutdown") {
+        client.shutdown_server()?;
+        println!("server draining");
+    }
+    Ok(())
+}

@@ -14,6 +14,11 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// requests refused by admission control because the queue depth was
+    /// at or beyond the shed watermark (the client is told to retry)
+    pub shed: AtomicU64,
+    /// wire connections closed because a read or write timed out
+    pub net_timeouts: AtomicU64,
     pub batched: AtomicU64,
     /// requests served through a coalesced native launch (stacked
     /// same-shape requests, one grid execution)
@@ -54,6 +59,8 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            net_timeouts: self.net_timeouts.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             executions: self.executions.load(Ordering::Relaxed),
@@ -72,6 +79,10 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// requests load-shed at admission (queue depth >= shed watermark)
+    pub shed: u64,
+    /// wire connections closed on read/write timeout
+    pub net_timeouts: u64,
     pub batched: u64,
     pub coalesced: u64,
     pub executions: u64,
@@ -93,6 +104,8 @@ impl MetricsSnapshot {
             submitted: 0,
             completed: 0,
             rejected: 0,
+            shed: 0,
+            net_timeouts: 0,
             batched: 0,
             coalesced: 0,
             executions: 0,
@@ -111,6 +124,8 @@ impl MetricsSnapshot {
         self.submitted += other.submitted;
         self.completed += other.completed;
         self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.net_timeouts += other.net_timeouts;
         self.batched += other.batched;
         self.coalesced += other.coalesced;
         self.executions += other.executions;
@@ -182,12 +197,14 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} executions={} batching={:.2}x \
-             coalesced={} plan_cache={}h/{}m mean_exec={:.0}µs mean_queue={:.0}µs \
-             mean={:.0}µs p50={}µs p99={}µs",
+            "submitted={} completed={} rejected={} shed={} net_timeouts={} executions={} \
+             batching={:.2}x coalesced={} plan_cache={}h/{}m mean_exec={:.0}µs \
+             mean_queue={:.0}µs mean={:.0}µs p50={}µs p99={}µs",
             self.submitted,
             self.completed,
             self.rejected,
+            self.shed,
+            self.net_timeouts,
             self.executions,
             self.batching_factor(),
             self.coalesced,
@@ -256,15 +273,19 @@ mod tests {
     fn merge_sums_counters_and_histograms() {
         let a = Metrics::new();
         a.submitted.store(2, Ordering::Relaxed);
+        a.shed.store(4, Ordering::Relaxed);
+        a.net_timeouts.store(1, Ordering::Relaxed);
         a.observe_latency_us(1);
         let b = Metrics::new();
         b.submitted.store(3, Ordering::Relaxed);
+        b.shed.store(1, Ordering::Relaxed);
         b.observe_latency_us(1);
         b.observe_latency_us(1000);
         let mut total = MetricsSnapshot::empty();
         total.merge(&a.snapshot(1, 0));
         total.merge(&b.snapshot(0, 2));
         assert_eq!(total.submitted, 5);
+        assert_eq!((total.shed, total.net_timeouts), (5, 1));
         assert_eq!((total.plan_hits, total.plan_misses), (1, 2));
         assert_eq!(total.latency_hist[0], 2);
         assert_eq!(total.latency_us_sum, 1002);

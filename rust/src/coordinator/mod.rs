@@ -18,8 +18,14 @@
 //! * [`server`] — worker-thread pool over an injector queue with bounded
 //!   capacity (backpressure), startup-validated config (pool size, plan
 //!   cache capacity, coalescing fan-in: env + flags) and graceful shutdown.
-//! * [`metrics`] — lock-free counters (incl. plan-cache hits/misses and
-//!   coalesced requests) + log2 latency histogram with an exact sum.
+//! * [`metrics`] — lock-free counters (incl. plan-cache hits/misses,
+//!   coalesced/shed requests and wire timeouts) + log2 latency histogram
+//!   with an exact sum.
+//! * [`net`] — the wire front door: a std-only TCP server speaking
+//!   length-prefixed JSON frames (`submit`, `kernels`, `stats`, `health`),
+//!   with bounded-queue admission control, load shedding with retry
+//!   hints, per-connection timeouts and graceful drain.  The protocol is
+//!   specified in `docs/wire-protocol.md`.
 //!
 //! Every admission outcome (submit, reject, backpressure), batch drain and
 //! execution also records into the per-kernel/per-shape
@@ -30,10 +36,12 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Coalescer, PackPlan, Packer};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use net::{Client, NetConfig, Server};
 pub use router::{Request, Response, Router};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, SubmitError};

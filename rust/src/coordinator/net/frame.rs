@@ -1,0 +1,183 @@
+//! Length-prefixed frame codec: the wire unit of the serving protocol.
+//!
+//! A frame is a 4-byte big-endian `u32` payload length followed by that
+//! many bytes of UTF-8 JSON.  The codec is transport-agnostic (`Read` /
+//! `Write`), so the same functions back the TCP server, the client
+//! helper and the in-memory codec tests.
+//!
+//! Failure taxonomy (what [`read_frame`] can return) drives the server's
+//! connection policy:
+//!
+//! * [`FrameError::Closed`] — EOF *between* frames: the peer hung up
+//!   cleanly; close quietly.
+//! * [`FrameError::TimedOut`] — the read blocked past the socket's
+//!   configured timeout: count a net timeout, close.
+//! * [`FrameError::Malformed`] — oversized declared length, EOF in the
+//!   middle of a frame, or a non-UTF-8 payload: reply with a `bad_frame`
+//!   error (best effort) and close, because the stream can no longer be
+//!   resynchronized.
+//! * [`FrameError::Io`] — anything else the OS reports.
+//!
+//! Note that a well-formed frame carrying garbage *JSON* is not a frame
+//! error: it decodes here, fails in the protocol layer, and the
+//! connection survives.
+//!
+//! ```
+//! use ninetoothed_repro::coordinator::net::frame::{read_frame, write_frame};
+//!
+//! let mut wire = Vec::new();
+//! write_frame(&mut wire, r#"{"op":"health"}"#).unwrap();
+//! assert_eq!(&wire[..4], &15u32.to_be_bytes());
+//!
+//! let mut reader = wire.as_slice();
+//! assert_eq!(read_frame(&mut reader, 1024).unwrap(), r#"{"op":"health"}"#);
+//! ```
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Default cap on a single frame's payload (server and client side).
+/// Large enough for a coalescible batch of serialized f32 tensors,
+/// small enough that a hostile length prefix cannot OOM the server.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// clean EOF on a frame boundary (the peer closed the connection)
+    Closed,
+    /// the socket's read timeout elapsed with no (complete) frame
+    TimedOut,
+    /// protocol violation: oversized length, truncated frame, bad UTF-8.
+    /// The stream cannot be resynchronized after this.
+    Malformed(String),
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::TimedOut => write!(f, "read timed out"),
+            FrameError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            FrameError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn classify(e: io::Error) -> FrameError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => FrameError::TimedOut,
+        io::ErrorKind::UnexpectedEof => {
+            FrameError::Malformed("connection closed mid-frame".to_string())
+        }
+        _ => FrameError::Io(e),
+    }
+}
+
+/// Read one frame; `max_bytes` bounds the declared payload length.
+///
+/// EOF before the first length byte is [`FrameError::Closed`]; EOF (or a
+/// timeout) anywhere later is a protocol violation, because a prefix of
+/// a frame has already been consumed.
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> Result<String, FrameError> {
+    let mut len_buf = [0u8; 4];
+    // distinguish clean close (0 bytes) from a truncated prefix
+    let mut got = 0;
+    while got < len_buf.len() {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Err(FrameError::Closed),
+            Ok(0) => {
+                return Err(FrameError::Malformed(format!(
+                    "connection closed after {got} of 4 length-prefix bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if got == 0 => return Err(classify(e)),
+            Err(e) => {
+                return match classify(e) {
+                    FrameError::TimedOut => Err(FrameError::Malformed(
+                        "read timed out mid-length-prefix".to_string(),
+                    )),
+                    other => Err(other),
+                }
+            }
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > max_bytes {
+        return Err(FrameError::Malformed(format!(
+            "declared frame length {len} exceeds the {max_bytes}-byte limit"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return match classify(e) {
+            FrameError::TimedOut => {
+                Err(FrameError::Malformed("read timed out mid-frame".to_string()))
+            }
+            other => Err(other),
+        };
+    }
+    String::from_utf8(payload)
+        .map_err(|_| FrameError::Malformed("frame payload is not valid UTF-8".to_string()))
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &str) -> io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "frame payload exceeds u32 length")
+    })?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, "{}").unwrap();
+        write_frame(&mut wire, r#"{"op":"health"}"#).unwrap();
+        let mut r = wire.as_slice();
+        assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap(), "{}");
+        assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap(), r#"{"op":"health"}"#);
+        assert!(matches!(read_frame(&mut r, MAX_FRAME_BYTES), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_is_malformed() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_be_bytes());
+        let err = read_frame(&mut wire.as_slice(), 1024).unwrap_err();
+        assert!(matches!(&err, FrameError::Malformed(m) if m.contains("exceeds")), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_malformed_not_closed() {
+        // length says 10 bytes, body carries 3
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&10u32.to_be_bytes());
+        wire.extend_from_slice(b"abc");
+        let err = read_frame(&mut wire.as_slice(), 1024).unwrap_err();
+        assert!(matches!(err, FrameError::Malformed(_)), "{err}");
+        // ...and so is a truncated length prefix
+        let err = read_frame(&mut [0u8, 0].as_slice(), 1024).unwrap_err();
+        assert!(matches!(&err, FrameError::Malformed(m) if m.contains("length-prefix")), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_payload_is_malformed() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&2u32.to_be_bytes());
+        wire.extend_from_slice(&[0xff, 0xfe]);
+        let err = read_frame(&mut wire.as_slice(), 1024).unwrap_err();
+        assert!(matches!(&err, FrameError::Malformed(m) if m.contains("UTF-8")), "{err}");
+    }
+}

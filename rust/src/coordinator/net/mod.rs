@@ -1,0 +1,581 @@
+//! The wire-protocol serving front door: a std-only TCP server over the
+//! in-process [`Coordinator`].
+//!
+//! Transport is deliberately minimal — length-prefixed JSON frames
+//! ([`frame`]) over `std::net::TcpListener`, reusing the crate's own
+//! [`crate::json`] codec; no new dependencies.  The protocol layer
+//! ([`protocol`]) exposes four endpoints (`submit`, `kernels`, `stats`,
+//! `health`) plus a `shutdown` op, each documented with replayable
+//! examples in `docs/wire-protocol.md`.
+//!
+//! Robustness semantics, in one place:
+//!
+//! * **Admission control** — submits pass through
+//!   [`Coordinator::submit_admit`]: the bounded queue sheds load at the
+//!   configured watermark and the client receives a structured
+//!   `overloaded` error with a `retry_after_ms` hint instead of a hang
+//!   or a dropped connection.  Shed counts surface in the serving
+//!   metrics (`repro stats`).
+//! * **Per-connection timeouts** — reads and writes carry socket
+//!   timeouts ([`NetConfig`]); a connection idle past the read timeout
+//!   is closed and counted (`net_timeouts`).
+//! * **Frame hygiene** — garbage JSON in a well-formed frame gets a
+//!   clean `bad_request` reply and the connection survives; an
+//!   unparseable frame (oversized length, truncation) gets a best-effort
+//!   `bad_frame` reply and the connection closes, since the byte stream
+//!   can no longer be resynchronized.
+//! * **Graceful drain** — [`Server::shutdown`] stops accepting, lets
+//!   in-flight requests finish and their replies flush, then returns;
+//!   the caller drains the coordinator afterwards
+//!   ([`Coordinator::drain`]), which flushes any still-queued batches.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use ninetoothed_repro::coordinator::net::{Client, NetConfig, Server};
+//! use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+//! use ninetoothed_repro::runtime::{HostTensor, Manifest};
+//!
+//! let coordinator = Arc::new(
+//!     Coordinator::start(Arc::new(Manifest::builtin()), CoordinatorConfig::default()).unwrap(),
+//! );
+//! // port 0: the OS picks a free port, `local_addr` reports it
+//! let server = Server::start(coordinator.clone(), NetConfig::default()).unwrap();
+//!
+//! let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+//! let health = client.health().unwrap();
+//! assert_eq!(health.str("status").unwrap(), "ok");
+//!
+//! let x = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+//! let y = HostTensor::f32(vec![2], vec![3.0, 4.0]).unwrap();
+//! let reply = client.submit("add", "nt", &[x, y]).unwrap();
+//! assert_eq!(reply.outputs[0].as_f32().unwrap(), &[4.0, 6.0]);
+//!
+//! server.shutdown();
+//! coordinator.drain();
+//! ```
+
+pub mod frame;
+pub mod protocol;
+
+use std::collections::BTreeMap;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::server::{Coordinator, SubmitError};
+use crate::exec::pool;
+use crate::json::Json;
+use crate::runtime::HostTensor;
+use self::frame::{read_frame, write_frame, FrameError};
+use self::protocol::{
+    decode_request, error_reply, ok_reply, tensor_from_json, tensor_to_json, ErrorCode,
+    PROTOCOL_VERSION,
+};
+
+/// Wire-transport knobs, startup-validated like every other `NT_*` knob.
+///
+/// ```
+/// use ninetoothed_repro::coordinator::net::NetConfig;
+///
+/// let config = NetConfig::default();
+/// assert_eq!(config.addr, "127.0.0.1:0"); // OS-assigned port
+/// assert!(config.validate().is_ok());
+/// ```
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// listen address, `host:port` (`port 0` = OS-assigned)
+    pub addr: String,
+    /// close a connection idle longer than this (counted in metrics)
+    pub read_timeout: Duration,
+    /// give up on a reply write blocked longer than this
+    pub write_timeout: Duration,
+    /// reject frames whose declared payload exceeds this
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_frame_bytes: frame::MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Apply environment overrides: `NT_NET_READ_TIMEOUT_MS`,
+    /// `NT_NET_WRITE_TIMEOUT_MS`, `NT_NET_MAX_FRAME_MB` (all validated
+    /// positive integers — garbage fails startup, never defaults).
+    pub fn from_env(mut self) -> Result<NetConfig> {
+        if let Some(ms) = pool::parse_env_usize("NT_NET_READ_TIMEOUT_MS")? {
+            self.read_timeout = Duration::from_millis(ms as u64);
+        }
+        if let Some(ms) = pool::parse_env_usize("NT_NET_WRITE_TIMEOUT_MS")? {
+            self.write_timeout = Duration::from_millis(ms as u64);
+        }
+        if let Some(mb) = pool::parse_env_usize("NT_NET_MAX_FRAME_MB")? {
+            self.max_frame_bytes = mb << 20;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Startup validation: non-zero timeouts, a frame cap big enough for
+    /// any control-plane reply.
+    pub fn validate(&self) -> Result<()> {
+        if self.read_timeout.is_zero() || self.write_timeout.is_zero() {
+            bail!("net config: read/write timeouts must be non-zero");
+        }
+        if self.max_frame_bytes < 1024 {
+            bail!("net config: max_frame_bytes must be at least 1024");
+        }
+        Ok(())
+    }
+}
+
+struct ServerShared {
+    coordinator: Arc<Coordinator>,
+    config: NetConfig,
+    /// set by [`Server::shutdown`]: stop accepting, refuse new submits
+    draining: AtomicBool,
+    /// set when a wire `shutdown` op arrives ([`Server::wait`] watches it)
+    shutdown_requested: AtomicBool,
+    /// live connections: a stream handle (so drain can unblock readers)
+    /// plus the serving thread
+    conns: Mutex<Vec<(TcpStream, JoinHandle<()>)>>,
+}
+
+/// The TCP front door.  One OS thread accepts; one OS thread per
+/// connection serves frames sequentially (replies preserve request
+/// order within a connection).  Blocking threads — not an async
+/// reactor — match the rest of the stack: execution itself is blocking
+/// and CPU-bound.
+pub struct Server {
+    shared: Arc<ServerShared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `config.addr` and start accepting.  The coordinator is
+    /// shared — in-process submitters keep working alongside the wire.
+    pub fn start(coordinator: Arc<Coordinator>, config: NetConfig) -> Result<Server> {
+        config.validate()?;
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding {}", config.addr))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            coordinator,
+            config,
+            draining: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("nt-net-accept".to_string())
+                .spawn(move || accept_loop(shared, listener))
+                .expect("spawn acceptor")
+        };
+        Ok(Server { shared, addr, accept: Some(accept) })
+    }
+
+    /// The actual bound address (resolves `:0` to the assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a wire `shutdown` op arrives, then drain gracefully.
+    /// `repro serve --addr` sits here.
+    pub fn wait(self) {
+        while !self.shared.shutdown_requested.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        self.shutdown();
+    }
+
+    /// Graceful drain: stop accepting, unblock idle readers, let
+    /// in-flight requests finish and their replies flush, join every
+    /// connection thread.  The coordinator itself keeps running — call
+    /// [`Coordinator::drain`] afterwards to flush queued batches and
+    /// stop the workers.
+    pub fn shutdown(mut self) {
+        self.shared.draining.store(true, Ordering::Release);
+        // wake the blocking accept() so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        let conns: Vec<(TcpStream, JoinHandle<()>)> =
+            self.shared.conns.lock().unwrap().drain(..).collect();
+        for (stream, _) in &conns {
+            // unblock readers parked in read_frame; the write side stays
+            // open so in-flight replies still deliver
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        for (_, handle) in conns {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn accept_loop(shared: Arc<ServerShared>, listener: TcpListener) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) => {
+                if shared.draining.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        let handle_stream = match stream.try_clone() {
+            Ok(clone) => clone,
+            Err(_) => continue,
+        };
+        let conn_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("nt-net-conn".to_string())
+            .spawn(move || serve_connection(conn_shared, stream))
+            .expect("spawn connection thread");
+        let mut conns = shared.conns.lock().unwrap();
+        // reap finished connections so the registry doesn't grow forever
+        conns.retain(|(_, h)| !h.is_finished());
+        conns.push((handle_stream, handle));
+    }
+}
+
+fn serve_connection(shared: Arc<ServerShared>, stream: TcpStream) {
+    let config = &shared.config;
+    let _ = stream.set_read_timeout(Some(config.read_timeout));
+    let _ = stream.set_write_timeout(Some(config.write_timeout));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut writer = BufWriter::new(write_half);
+    loop {
+        match read_frame(&mut reader, config.max_frame_bytes) {
+            Ok(payload) => {
+                let reply = handle_frame(&shared, &payload);
+                if let Err(e) = write_frame(&mut writer, &reply) {
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
+                        shared.coordinator.note_net_timeout();
+                    }
+                    return;
+                }
+            }
+            Err(FrameError::Closed) => return,
+            Err(FrameError::TimedOut) => {
+                shared.coordinator.note_net_timeout();
+                return;
+            }
+            Err(FrameError::Malformed(msg)) => {
+                // best effort: tell the peer why, then close — after a
+                // framing violation the stream cannot be resynchronized
+                let _ = write_frame(
+                    &mut writer,
+                    &error_reply(None, ErrorCode::BadFrame, &msg, None),
+                );
+                return;
+            }
+            Err(FrameError::Io(_)) => return,
+        }
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+    }
+}
+
+/// Decode one frame payload and execute its op.  Always returns a reply
+/// frame — every failure mode maps to a structured error.
+fn handle_frame(shared: &ServerShared, payload: &str) -> String {
+    let req = match decode_request(payload) {
+        Ok(req) => req,
+        Err((code, msg)) => return error_reply(None, code, &msg, None),
+    };
+    match req.op.as_str() {
+        "health" => handle_health(shared, req.id),
+        "kernels" => handle_kernels(req.id),
+        "stats" => handle_stats(shared, req.id, &req.body),
+        "submit" => handle_submit(shared, req.id, &req.body),
+        "shutdown" => {
+            shared.shutdown_requested.store(true, Ordering::Release);
+            ok_reply(req.id, vec![("draining", Json::Bool(true))])
+        }
+        other => error_reply(
+            req.id,
+            ErrorCode::UnknownOp,
+            &format!("unknown op {other:?} (expected submit, kernels, stats, health, shutdown)"),
+            None,
+        ),
+    }
+}
+
+fn handle_health(shared: &ServerShared, id: Option<u64>) -> String {
+    let config = shared.coordinator.config();
+    ok_reply(
+        id,
+        vec![
+            ("draining", Json::Bool(shared.draining.load(Ordering::Acquire))),
+            ("kernels", Json::Num(crate::kernel::kernels().len() as f64)),
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+            ("queue_capacity", Json::Num(config.queue_capacity as f64)),
+            ("queue_depth", Json::Num(shared.coordinator.queue_depth() as f64)),
+            ("shed_watermark", Json::Num(config.effective_shed_watermark() as f64)),
+            ("status", Json::Str("ok".to_string())),
+            ("workers", Json::Num(config.workers as f64)),
+        ],
+    )
+}
+
+fn handle_kernels(id: Option<u64>) -> String {
+    let mut defs = crate::kernel::kernels();
+    defs.sort_by(|a, b| a.name.cmp(&b.name));
+    let rows = defs
+        .iter()
+        .map(|def| {
+            let mut o = BTreeMap::new();
+            o.insert("arity".to_string(), Json::Num(def.arity as f64));
+            o.insert("coalesce".to_string(), Json::Bool(def.coalesce));
+            o.insert("executable".to_string(), Json::Bool(def.executable()));
+            o.insert(
+                "loop_carries".to_string(),
+                match def.loop_carries() {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            );
+            o.insert("name".to_string(), Json::Str(def.name.clone()));
+            Json::Obj(o)
+        })
+        .collect();
+    ok_reply(id, vec![("kernels", Json::Arr(rows))])
+}
+
+fn handle_stats(shared: &ServerShared, id: Option<u64>, body: &Json) -> String {
+    let snapshot = shared.coordinator.obs_snapshot();
+    match body.get("format").and_then(Json::as_str).unwrap_or("json") {
+        "json" => ok_reply(id, vec![("stats", snapshot.to_json())]),
+        "prometheus" => ok_reply(id, vec![("prometheus", Json::Str(snapshot.render_prometheus()))]),
+        "table" => ok_reply(id, vec![("table", Json::Str(snapshot.render_table()))]),
+        other => error_reply(
+            id,
+            ErrorCode::InvalidArgument,
+            &format!("unknown stats format {other:?} (expected json, prometheus, table)"),
+            None,
+        ),
+    }
+}
+
+fn handle_submit(shared: &ServerShared, id: Option<u64>, body: &Json) -> String {
+    if shared.draining.load(Ordering::Acquire) {
+        return error_reply(id, ErrorCode::ShuttingDown, "server is draining", None);
+    }
+    let kernel = match body.str("kernel") {
+        Ok(k) => k,
+        Err(e) => return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None),
+    };
+    let variant = body.get("variant").and_then(Json::as_str).unwrap_or("nt");
+    let inputs: Vec<HostTensor> = match body
+        .arr("inputs")
+        .map_err(|e| anyhow!("{e:#}"))
+        .and_then(|arr| arr.iter().map(tensor_from_json).collect())
+    {
+        Ok(inputs) => inputs,
+        Err(e) => return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None),
+    };
+    let rx = match shared.coordinator.submit_admit(kernel, variant, inputs) {
+        Ok(rx) => rx,
+        Err(SubmitError::Invalid(e)) => {
+            return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None)
+        }
+        Err(SubmitError::Overloaded { depth, watermark, retry_after_ms }) => {
+            return error_reply(
+                id,
+                ErrorCode::Overloaded,
+                &format!("queue depth {depth} >= shed watermark {watermark}"),
+                Some(retry_after_ms),
+            )
+        }
+    };
+    match rx.recv() {
+        Ok(Ok(resp)) => ok_reply(
+            id,
+            vec![
+                ("backend", Json::Str(resp.backend.to_string())),
+                ("batch_size", Json::Num(resp.batch_size as f64)),
+                ("exec_us", Json::Num(resp.exec_us as f64)),
+                ("outputs", Json::Arr(resp.outputs.iter().map(tensor_to_json).collect())),
+                ("queue_us", Json::Num(resp.queue_us as f64)),
+            ],
+        ),
+        Ok(Err(e)) => error_reply(id, ErrorCode::Internal, &format!("{e:#}"), None),
+        Err(_) => error_reply(id, ErrorCode::Internal, "worker dropped the reply", None),
+    }
+}
+
+/// A decoded `submit` success reply.
+#[derive(Debug)]
+pub struct SubmitReply {
+    pub outputs: Vec<HostTensor>,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    pub batch_size: usize,
+    pub backend: String,
+}
+
+/// The tiny client helper: one connection, sequential request/reply.
+/// `examples/client.rs` and the protocol tests drive the server through
+/// this; [`Client::call_raw`] is the escape hatch for hand-built frames.
+pub struct Client {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect once (no retry); `addr` is `host:port`.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream, max_frame_bytes: frame::MAX_FRAME_BYTES, next_id: 0 })
+    }
+
+    /// Connect, retrying with backoff until `timeout` elapses — for
+    /// racing a server that is still binding (the CI smoke step).
+    pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<Client> {
+        let deadline = Instant::now() + timeout;
+        let mut wait = Duration::from_millis(20);
+        loop {
+            match Client::connect(addr) {
+                Ok(client) => return Ok(client),
+                Err(e) if Instant::now() + wait >= deadline => {
+                    return Err(e.wrap(format!("no server at {addr} within {timeout:?}")))
+                }
+                Err(_) => {
+                    std::thread::sleep(wait);
+                    wait = (wait * 2).min(Duration::from_millis(500));
+                }
+            }
+        }
+    }
+
+    /// Send one raw payload as a frame and read one reply frame.
+    pub fn call_raw(&mut self, payload: &str) -> Result<String> {
+        write_frame(&mut self.stream, payload)?;
+        read_frame(&mut self.stream, self.max_frame_bytes).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Send an op and parse the reply object (which may be `ok:false` —
+    /// use [`Client::expect_ok`] to turn errors into `Err`).
+    pub fn call(&mut self, mut fields: BTreeMap<String, Json>) -> Result<Json> {
+        self.next_id += 1;
+        fields.insert("id".to_string(), Json::Num(self.next_id as f64));
+        let reply = self.call_raw(&Json::Obj(fields).to_string())?;
+        Json::parse(&reply).map_err(|e| anyhow!("unparseable reply: {e}"))
+    }
+
+    /// Convert an `ok:false` reply into an error carrying the protocol
+    /// code and message.
+    pub fn expect_ok(reply: Json) -> Result<Json> {
+        if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+            return Ok(reply);
+        }
+        let code = reply
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(Json::as_str)
+            .unwrap_or("unknown");
+        let msg = reply
+            .get("error")
+            .and_then(|e| e.get("message"))
+            .and_then(Json::as_str)
+            .unwrap_or("");
+        bail!("server error [{code}]: {msg}")
+    }
+
+    fn op(name: &str) -> BTreeMap<String, Json> {
+        let mut o = BTreeMap::new();
+        o.insert("op".to_string(), Json::Str(name.to_string()));
+        o
+    }
+
+    /// `health` — server liveness + queue state.
+    pub fn health(&mut self) -> Result<Json> {
+        Self::expect_ok(self.call(Self::op("health"))?)
+    }
+
+    /// `kernels` — the registry as the server exposes it.
+    pub fn kernels(&mut self) -> Result<Json> {
+        Self::expect_ok(self.call(Self::op("kernels"))?)
+    }
+
+    /// `stats` with `format:"json"` — the full [`crate::obs::ObsSnapshot`].
+    pub fn stats_json(&mut self) -> Result<Json> {
+        let mut o = Self::op("stats");
+        o.insert("format".to_string(), Json::Str("json".to_string()));
+        Ok(Self::expect_ok(self.call(o)?)?.req("stats")?.clone())
+    }
+
+    /// `stats` with `format:"prometheus"` — the text exposition.
+    pub fn stats_prometheus(&mut self) -> Result<String> {
+        let mut o = Self::op("stats");
+        o.insert("format".to_string(), Json::Str("prometheus".to_string()));
+        let reply = Self::expect_ok(self.call(o)?)?;
+        Ok(reply.str("prometheus")?.to_string())
+    }
+
+    /// `submit`, returning the parsed reply object verbatim (ok **or**
+    /// error) — the overload tests inspect shed replies through this.
+    pub fn submit_raw(
+        &mut self,
+        kernel: &str,
+        variant: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Json> {
+        let mut o = Self::op("submit");
+        o.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+        o.insert("variant".to_string(), Json::Str(variant.to_string()));
+        o.insert("inputs".to_string(), Json::Arr(inputs.iter().map(tensor_to_json).collect()));
+        self.call(o)
+    }
+
+    /// `submit`, decoded: outputs + timing, or the server's error.
+    pub fn submit(
+        &mut self,
+        kernel: &str,
+        variant: &str,
+        inputs: &[HostTensor],
+    ) -> Result<SubmitReply> {
+        let reply = Self::expect_ok(self.submit_raw(kernel, variant, inputs)?)?;
+        let outputs = reply
+            .arr("outputs")?
+            .iter()
+            .map(tensor_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SubmitReply {
+            outputs,
+            queue_us: reply.usize("queue_us")? as u64,
+            exec_us: reply.usize("exec_us")? as u64,
+            batch_size: reply.usize("batch_size")?,
+            backend: reply.str("backend")?.to_string(),
+        })
+    }
+
+    /// Ask the server to drain and exit (`repro serve --addr` honors it).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        Self::expect_ok(self.call(Self::op("shutdown"))?)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,248 @@
+//! The wire protocol: JSON payloads carried inside length-prefixed
+//! frames (see [`super::frame`]).
+//!
+//! Every request is a JSON object with an `"op"` field and an optional
+//! numeric `"id"` the server echoes back; every reply carries `"ok"`
+//! (boolean) plus either the op's result fields or an `"error"` object
+//! with a stable machine-readable `code`.  The full grammar — every
+//! endpoint, every error code, worked examples the protocol tests replay
+//! verbatim — is documented in `docs/wire-protocol.md`.
+//!
+//! Tensors travel as `{"shape": [...], "data": [...], "dtype": "f32"}`.
+//! f32 values are serialized through f64 shortest-roundtrip formatting,
+//! which is exact in both directions — results received over the wire
+//! are **bit-identical** to in-process execution (a test pins this).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::Json;
+use crate::runtime::{HostData, HostTensor};
+
+/// Protocol version, reported by the `health` endpoint.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Stable machine-readable error codes (`error.code` in error replies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// the framing itself was violated (oversized declared length,
+    /// truncated frame, non-UTF-8 payload); the reply is best-effort and
+    /// the connection closes, since the stream cannot be resynchronized
+    BadFrame,
+    /// the frame's payload was not parseable JSON, or not a JSON object
+    BadRequest,
+    /// the `"op"` field is missing or names no endpoint
+    UnknownOp,
+    /// a well-formed request the router refused (unknown kernel, bad
+    /// arity, bad shapes, malformed tensor encoding)
+    InvalidArgument,
+    /// admission control shed the request; retry after `retry_after_ms`
+    Overloaded,
+    /// the server is draining; no new submits are accepted
+    ShuttingDown,
+    /// the request was admitted but execution failed
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::InvalidArgument => "invalid_argument",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// Serialize a tensor for the wire.
+pub fn tensor_to_json(t: &HostTensor) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "shape".to_string(),
+        Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    match &t.data {
+        HostData::F32(v) => {
+            o.insert("dtype".to_string(), Json::Str("f32".to_string()));
+            o.insert(
+                "data".to_string(),
+                Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+        }
+        HostData::I32(v) => {
+            o.insert("dtype".to_string(), Json::Str("i32".to_string()));
+            o.insert(
+                "data".to_string(),
+                Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Decode a wire tensor; rejects shape/data disagreements cleanly.
+pub fn tensor_from_json(v: &Json) -> Result<HostTensor> {
+    let shape = v.usize_vec("shape")?;
+    let data = v.arr("data")?;
+    let dtype = match v.get("dtype") {
+        None => "f32",
+        Some(d) => d.as_str().ok_or_else(|| anyhow!("tensor dtype must be a string"))?,
+    };
+    match dtype {
+        "f32" => {
+            let values: Vec<f32> = data
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow!("non-numeric value in tensor data"))
+                })
+                .collect::<Result<_>>()?;
+            HostTensor::f32(shape, values)
+        }
+        "i32" => {
+            let values: Vec<i32> = data
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|i| i32::try_from(i).ok())
+                        .ok_or_else(|| anyhow!("non-i32 value in tensor data"))
+                })
+                .collect::<Result<_>>()?;
+            HostTensor::i32(shape, values)
+        }
+        other => bail!("unsupported tensor dtype {other:?} (expected \"f32\" or \"i32\")"),
+    }
+}
+
+/// A decoded request envelope: the op name, the echo id, and the raw
+/// object for op-specific fields.
+#[derive(Debug)]
+pub struct WireRequest {
+    pub op: String,
+    pub id: Option<u64>,
+    pub body: Json,
+}
+
+/// Decode a frame payload into a request envelope.  The error string is
+/// ready for [`error_reply`] with the paired code.
+pub fn decode_request(payload: &str) -> Result<WireRequest, (ErrorCode, String)> {
+    let body = Json::parse(payload)
+        .map_err(|e| (ErrorCode::BadRequest, format!("invalid JSON: {e}")))?;
+    if !matches!(body, Json::Obj(_)) {
+        return Err((ErrorCode::BadRequest, "request must be a JSON object".to_string()));
+    }
+    let id = body.get("id").and_then(Json::as_i64).and_then(|v| u64::try_from(v).ok());
+    let op = match body.get("op").and_then(Json::as_str) {
+        Some(op) => op.to_string(),
+        None => {
+            return Err((ErrorCode::UnknownOp, "request has no \"op\" field".to_string()))
+        }
+    };
+    Ok(WireRequest { op, id, body })
+}
+
+fn base_reply(id: Option<u64>, ok: bool) -> BTreeMap<String, Json> {
+    let mut o = BTreeMap::new();
+    if let Some(id) = id {
+        o.insert("id".to_string(), Json::Num(id as f64));
+    }
+    o.insert("ok".to_string(), Json::Bool(ok));
+    o
+}
+
+/// Build a success reply: the base envelope plus the op's result fields.
+pub fn ok_reply(id: Option<u64>, fields: Vec<(&str, Json)>) -> String {
+    let mut o = base_reply(id, true);
+    for (k, v) in fields {
+        o.insert(k.to_string(), v);
+    }
+    Json::Obj(o).to_string()
+}
+
+/// Build an error reply with a stable code, a human message, and an
+/// optional retry hint (set for [`ErrorCode::Overloaded`]).
+pub fn error_reply(
+    id: Option<u64>,
+    code: ErrorCode,
+    message: &str,
+    retry_after_ms: Option<u64>,
+) -> String {
+    let mut err = BTreeMap::new();
+    err.insert("code".to_string(), Json::Str(code.as_str().to_string()));
+    err.insert("message".to_string(), Json::Str(message.to_string()));
+    if let Some(ms) = retry_after_ms {
+        err.insert("retry_after_ms".to_string(), Json::Num(ms as f64));
+    }
+    let mut o = base_reply(id, false);
+    o.insert("error".to_string(), Json::Obj(err));
+    Json::Obj(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn tensor_roundtrip_is_bit_identical() {
+        let mut rng = SplitMix64::new(11);
+        let t = HostTensor::randn(vec![3, 17], &mut rng);
+        let wire = tensor_to_json(&t).to_string();
+        let back = tensor_from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.shape, t.shape);
+        let (a, b) = (t.as_f32().unwrap(), back.as_f32().unwrap());
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "f32 data must survive the wire bit-exactly"
+        );
+    }
+
+    #[test]
+    fn i32_tensor_roundtrip() {
+        let t = HostTensor::scalar_i32(-7);
+        let wire = tensor_to_json(&t).to_string();
+        let back = tensor_from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn tensor_decode_rejects_garbage() {
+        for bad in [
+            r#"{"shape":[2],"data":[1]}"#,                     // length mismatch
+            r#"{"shape":[1],"data":["x"]}"#,                   // non-numeric
+            r#"{"shape":[1],"data":[1],"dtype":"f64"}"#,       // unknown dtype
+            r#"{"data":[1]}"#,                                 // no shape
+        ] {
+            assert!(tensor_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn request_envelope_decodes() {
+        let req = decode_request(r#"{"id":4,"op":"health"}"#).unwrap();
+        assert_eq!((req.op.as_str(), req.id), ("health", Some(4)));
+        assert_eq!(decode_request("nonsense").unwrap_err().0, ErrorCode::BadRequest);
+        assert_eq!(decode_request("[1,2]").unwrap_err().0, ErrorCode::BadRequest);
+        assert_eq!(decode_request(r#"{"id":1}"#).unwrap_err().0, ErrorCode::UnknownOp);
+    }
+
+    #[test]
+    fn replies_are_canonical_json() {
+        assert_eq!(
+            ok_reply(Some(1), vec![("status", Json::Str("ok".into()))]),
+            r#"{"id":1,"ok":true,"status":"ok"}"#
+        );
+        assert_eq!(
+            error_reply(None, ErrorCode::Overloaded, "queue full", Some(3)),
+            r#"{"error":{"code":"overloaded","message":"queue full","retry_after_ms":3},"ok":false}"#
+        );
+    }
+}

@@ -25,11 +25,31 @@ use super::router::{Request, Response, RouteKey, Router};
 use crate::exec::{pool, PlanCache};
 use crate::runtime::{Backend, HostTensor, Manifest, Registry};
 
+/// Startup-validated serving knobs.
+///
+/// Every field has an environment override applied by
+/// [`CoordinatorConfig::from_env`]; garbage values are a clean startup
+/// error, never a silent default.
+///
+/// ```
+/// use ninetoothed_repro::coordinator::CoordinatorConfig;
+///
+/// let config = CoordinatorConfig { queue_capacity: 8, ..Default::default() };
+/// assert!(config.validate().is_ok());
+/// assert_eq!(config.effective_shed_watermark(), 8); // defaults to capacity
+///
+/// let bad = CoordinatorConfig { shed_watermark: Some(9), ..config };
+/// assert!(bad.validate().is_err()); // watermark must not exceed capacity
+/// ```
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub workers: usize,
-    /// injector queue capacity; submits beyond this are rejected (backpressure)
+    /// injector queue capacity; submits beyond this are shed (backpressure)
     pub queue_capacity: usize,
+    /// load-shedding watermark: submits at or beyond this queue depth are
+    /// refused with a retry hint.  `None` means "at capacity" — shedding
+    /// only when the queue is actually full.  Must be `<= queue_capacity`.
+    pub shed_watermark: Option<usize>,
     /// max requests fused into one slot-packed execution (artifact routes)
     pub max_fanin: usize,
     /// max same-shape requests stacked into one native launch
@@ -43,6 +63,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             workers: 2,
             queue_capacity: 1024,
+            shed_watermark: None,
             max_fanin: 16,
             coalesce_fanin: 16,
             plan_cache_capacity: 256,
@@ -51,11 +72,18 @@ impl Default for CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
-    /// Apply environment overrides: `NT_COALESCE_FANIN`,
-    /// `NT_PLAN_CACHE_CAP` (both validated — garbage is a clean error,
-    /// not a silent default).  `NT_POOL_THREADS` is read by the shared
-    /// pool itself; [`Coordinator::start`] validates it too.
+    /// Apply environment overrides: `NT_QUEUE_CAP`, `NT_SHED_WATERMARK`,
+    /// `NT_COALESCE_FANIN`, `NT_PLAN_CACHE_CAP` (all validated — garbage
+    /// is a clean error, not a silent default).  `NT_POOL_THREADS` is
+    /// read by the shared pool itself; [`Coordinator::start`] validates
+    /// it too.
     pub fn from_env(mut self) -> Result<CoordinatorConfig> {
+        if let Some(v) = pool::parse_env_usize("NT_QUEUE_CAP")? {
+            self.queue_capacity = v;
+        }
+        if let Some(v) = pool::parse_env_usize("NT_SHED_WATERMARK")? {
+            self.shed_watermark = Some(v);
+        }
         if let Some(v) = pool::parse_env_usize("NT_COALESCE_FANIN")? {
             self.coalesce_fanin = v;
         }
@@ -66,11 +94,19 @@ impl CoordinatorConfig {
         Ok(self)
     }
 
-    /// Startup validation: every knob must be a positive integer.
+    /// The queue depth at which admission starts shedding: the configured
+    /// watermark, or the full queue capacity when none was set.
+    pub fn effective_shed_watermark(&self) -> usize {
+        self.shed_watermark.unwrap_or(self.queue_capacity)
+    }
+
+    /// Startup validation: every knob must be a positive integer, and the
+    /// shed watermark must not exceed the queue capacity.
     pub fn validate(&self) -> Result<()> {
         for (name, value) in [
             ("workers", self.workers),
             ("queue_capacity", self.queue_capacity),
+            ("shed_watermark", self.effective_shed_watermark()),
             ("max_fanin", self.max_fanin),
             ("coalesce_fanin", self.coalesce_fanin),
             ("plan_cache_capacity", self.plan_cache_capacity),
@@ -79,7 +115,39 @@ impl CoordinatorConfig {
                 bail!("coordinator config: {name} must be >= 1, got 0");
             }
         }
+        if self.effective_shed_watermark() > self.queue_capacity {
+            bail!(
+                "coordinator config: shed_watermark ({}) must be <= queue_capacity ({})",
+                self.effective_shed_watermark(),
+                self.queue_capacity
+            );
+        }
         Ok(())
+    }
+}
+
+/// Why [`Coordinator::submit_admit`] refused a request.  The wire front
+/// door maps the two variants to distinct protocol error codes
+/// (`invalid_argument` vs `overloaded` + retry hint).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// the request itself is malformed (unknown kernel, bad arity/shapes);
+    /// retrying the same request can never succeed
+    Invalid(anyhow::Error),
+    /// admission control shed the request: the queue depth reached the
+    /// shed watermark.  The request was valid — retry after the hint.
+    Overloaded { depth: usize, watermark: usize, retry_after_ms: u64 },
+}
+
+impl SubmitError {
+    pub fn into_anyhow(self) -> anyhow::Error {
+        match self {
+            SubmitError::Invalid(e) => e,
+            SubmitError::Overloaded { depth, watermark, retry_after_ms } => anyhow!(
+                "coordinator overloaded: queue depth {depth} >= shed watermark {watermark} \
+                 (retry in ~{retry_after_ms}ms)"
+            ),
+        }
     }
 }
 
@@ -104,7 +172,9 @@ pub struct Coordinator {
     router: Arc<Router>,
     config: CoordinatorConfig,
     plan_cache: Arc<PlanCache>,
-    workers: Vec<JoinHandle<()>>,
+    /// behind a mutex so [`Coordinator::drain`] can join through `&self`
+    /// (the wire server holds the coordinator in an `Arc`)
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -157,7 +227,7 @@ impl Coordinator {
                     .expect("spawn worker"),
             );
         }
-        Ok(Coordinator { shared, router, config, plan_cache, workers })
+        Ok(Coordinator { shared, router, config, plan_cache, workers: Mutex::new(workers) })
     }
 
     /// Submit a request; the response arrives on the receiver.
@@ -168,6 +238,20 @@ impl Coordinator {
         variant: &str,
         inputs: Vec<crate::runtime::HostTensor>,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_admit(kernel, variant, inputs)
+            .map_err(SubmitError::into_anyhow)
+    }
+
+    /// [`Coordinator::submit`] with a typed admission outcome: malformed
+    /// requests come back as [`SubmitError::Invalid`], load-shed requests
+    /// as [`SubmitError::Overloaded`] with a retry hint — the distinction
+    /// the wire protocol's error codes are built on.
+    pub fn submit_admit(
+        &self,
+        kernel: &str,
+        variant: &str,
+        inputs: Vec<crate::runtime::HostTensor>,
+    ) -> Result<mpsc::Receiver<Result<Response>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let shape_sig = {
             let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
@@ -190,15 +274,22 @@ impl Coordinator {
             Err(e) => {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 per_kernel.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(e);
+                return Err(SubmitError::Invalid(e));
             }
         };
+        let watermark = self.config.effective_shed_watermark();
         {
             let mut state = self.shared.queues.lock().unwrap();
-            if state.depth >= self.config.queue_capacity {
-                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                per_kernel.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(anyhow!("coordinator queue full ({})", self.config.queue_capacity));
+            if state.depth >= watermark {
+                let depth = state.depth;
+                drop(state);
+                self.shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                per_kernel.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Overloaded {
+                    depth,
+                    watermark,
+                    retry_after_ms: self.retry_after_ms(depth),
+                });
             }
             if !state.pending.contains_key(&route) {
                 state.order.push_back(route.clone());
@@ -210,6 +301,35 @@ impl Coordinator {
         per_kernel.submitted.fetch_add(1, Ordering::Relaxed);
         self.shared.available.notify_one();
         Ok(rx)
+    }
+
+    /// Estimate how long a shed client should wait before retrying:
+    /// roughly the time the current backlog needs to drain (mean
+    /// execution time x depth / workers), clamped to [1ms, 5s].  Before
+    /// any execution completes, the floor (1ms) is the hint.
+    fn retry_after_ms(&self, depth: usize) -> u64 {
+        let execs = self.shared.metrics.executions.load(Ordering::Relaxed);
+        let exec_us = self.shared.metrics.exec_us_total.load(Ordering::Relaxed);
+        let mean_us = if execs == 0 { 0 } else { exec_us / execs };
+        let workers = self.config.workers.max(1) as u64;
+        (depth as u64 * mean_us / workers / 1000).clamp(1, 5_000)
+    }
+
+    /// The validated config this coordinator was started with (the wire
+    /// `health` endpoint reports the admission knobs from it).
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Requests currently queued (admitted, not yet drained by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queues.lock().unwrap().depth
+    }
+
+    /// Record a wire-connection read/write timeout into the serving
+    /// metrics (the net front door has no kernel to attribute it to).
+    pub fn note_net_timeout(&self) {
+        self.shared.metrics.net_timeouts.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Serving metrics, including the shared plan cache's hit/miss
@@ -240,13 +360,23 @@ impl Coordinator {
         }
     }
 
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
+        self.drain();
+    }
+
+    /// Graceful drain through a shared reference: stop accepting nothing
+    /// new here (submits still succeed until the flag is seen), set the
+    /// shutdown flag, and join the workers — they exit only once every
+    /// pending route queue is empty, so in-flight batches flush.
+    /// Idempotent: a second call finds no workers to join.
+    pub fn drain(&self) {
         {
             let mut state = self.shared.queues.lock().unwrap();
             state.shutdown = true;
         }
         self.shared.available.notify_all();
-        for handle in self.workers.drain(..) {
+        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for handle in handles {
             let _ = handle.join();
         }
     }

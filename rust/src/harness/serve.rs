@@ -1,11 +1,20 @@
-//! `repro serve` — drive the kernel-serving coordinator with a synthetic
-//! mixed workload and print the serving metrics (latency percentiles,
-//! batching factor, plan-cache hit rate, coalesced requests, rejections).
+//! `repro serve` — the serving entry point, in two modes:
+//!
+//! * **demo** (default): drive the coordinator with a synthetic mixed
+//!   workload and print the serving metrics (latency percentiles,
+//!   batching factor, plan-cache hit rate, coalesced requests).
+//! * **server** (`--addr HOST:PORT`): expose the coordinator over TCP —
+//!   length-prefixed JSON frames, see `docs/wire-protocol.md` — and run
+//!   until a wire `shutdown` op arrives, then drain gracefully and print
+//!   the final stats table.  `cargo run --example client` drives it.
 //!
 //! Flags (all validated at startup; env fallbacks in parentheses):
-//! `--workers N`, `--requests N`, `--pool-threads N` (`NT_POOL_THREADS`),
-//! `--coalesce-fanin N` (`NT_COALESCE_FANIN`), `--plan-cache-cap N`
-//! (`NT_PLAN_CACHE_CAP`).
+//! `--addr HOST:PORT`, `--workers N`, `--requests N`, `--pool-threads N`
+//! (`NT_POOL_THREADS`), `--coalesce-fanin N` (`NT_COALESCE_FANIN`),
+//! `--plan-cache-cap N` (`NT_PLAN_CACHE_CAP`), `--queue-cap N`
+//! (`NT_QUEUE_CAP`), `--shed-watermark N` (`NT_SHED_WATERMARK`).  The
+//! wire timeouts are env-only: `NT_NET_READ_TIMEOUT_MS`,
+//! `NT_NET_WRITE_TIMEOUT_MS`, `NT_NET_MAX_FRAME_MB`.
 
 use std::sync::Arc;
 
@@ -13,6 +22,7 @@ use anyhow::Result;
 
 use crate::artifacts_dir;
 use crate::cli::Args;
+use crate::coordinator::net::{NetConfig, Server};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::exec::pool;
 use crate::prng::SplitMix64;
@@ -29,10 +39,21 @@ pub fn run(args: &Args) -> Result<()> {
     if let Some(v) = args.opt_positive("plan-cache-cap")? {
         config.plan_cache_capacity = v;
     }
+    if let Some(v) = args.opt_positive("queue-cap")? {
+        config.queue_capacity = v;
+    }
+    if let Some(v) = args.opt_positive("shed-watermark")? {
+        config.shed_watermark = Some(v);
+    }
+    config.validate()?;
     if let Some(v) = args.opt_positive("pool-threads")? {
         if !pool::init_global(v) {
             println!("(pool already initialized; --pool-threads {v} ignored)");
         }
+    }
+
+    if let Some(addr) = args.opt("addr") {
+        return serve_tcp(manifest, config, addr);
     }
     println!(
         "starting coordinator: {} workers, {requests} requests, coalesce fan-in {}, \
@@ -105,5 +126,28 @@ pub fn run(args: &Args) -> Result<()> {
     // metrics render): per-kernel rows, trace waterfall, pool gauges
     print!("{}", coordinator.obs_snapshot().render_table());
     coordinator.shutdown();
+    Ok(())
+}
+
+/// Server mode: bind `addr`, serve wire requests until a `shutdown` op
+/// arrives, drain, and print the final observability table.
+fn serve_tcp(manifest: Arc<Manifest>, config: CoordinatorConfig, addr: &str) -> Result<()> {
+    let net = NetConfig { addr: addr.to_string(), ..NetConfig::default() }.from_env()?;
+    let coordinator = Arc::new(Coordinator::start(manifest, config.clone())?);
+    let server = Server::start(coordinator.clone(), net)?;
+    println!(
+        "listening on {} ({} workers, queue {} / shed at {})",
+        server.local_addr(),
+        config.workers,
+        config.queue_capacity,
+        config.effective_shed_watermark(),
+    );
+    // blocks until a client sends {"op":"shutdown"}, then stops accepting,
+    // flushes in-flight replies and joins the connection threads
+    server.wait();
+    // flush anything still queued and stop the workers
+    coordinator.drain();
+    println!("drained; final stats:");
+    print!("{}", coordinator.obs_snapshot().render_table());
     Ok(())
 }

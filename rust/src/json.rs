@@ -135,7 +135,15 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if n.is_nan() {
+                    // mirror the tokens the parser accepts (Python's json
+                    // emits these); Rust's own Display would print "NaN"
+                    // for NaN but "inf" for infinities, which no JSON
+                    // parser — including ours — reads back
+                    write!(f, "NaN")
+                } else if n.is_infinite() {
+                    write!(f, "{}Infinity", if *n < 0.0 { "-" } else { "" })
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -424,6 +432,20 @@ mod tests {
         assert_eq!(Json::parse("-Infinity").unwrap(), Json::Num(f64::NEG_INFINITY));
         assert_eq!(Json::parse("Infinity").unwrap(), Json::Num(f64::INFINITY));
         assert!(matches!(Json::parse("NaN").unwrap(), Json::Num(v) if v.is_nan()));
+    }
+
+    #[test]
+    fn nonfinite_floats_roundtrip_through_display() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "Infinity");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "-Infinity");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "NaN");
+        for v in [f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::parse(&Json::Num(v).to_string()).unwrap(), Json::Num(v));
+        }
+        assert!(matches!(
+            Json::parse(&Json::Num(f64::NAN).to_string()).unwrap(),
+            Json::Num(v) if v.is_nan()
+        ));
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //!   code-metrics  regenerate Table 2
 //!   bench-kernels regenerate Fig 6 (single-kernel tasks)
 //!   bench-e2e     regenerate Fig 7 (end-to-end inference)
-//!   serve         run the kernel-serving coordinator demo workload
+//!   serve         run the kernel-serving coordinator demo workload, or
+//!                 with --addr HOST:PORT serve it over TCP (length-prefixed
+//!                 JSON frames; see docs/wire-protocol.md)
 //!   stats         mixed burst + full observability snapshot (table,
 //!                 --prometheus, --json)
 //!   kernels       list the kernel registry (serving-deployment debugging)
@@ -45,7 +47,8 @@ fn main() -> Result<()> {
                  \x20 code-metrics   regenerate Table 2 (code complexity)\n\
                  \x20 bench-kernels  regenerate Fig 6 (single-kernel performance)\n\
                  \x20 bench-e2e      regenerate Fig 7 (end-to-end inference throughput)\n\
-                 \x20 serve          run the kernel-serving coordinator demo\n\
+                 \x20 serve          run the kernel-serving coordinator demo, or serve it\n\
+                 \x20                over TCP with --addr HOST:PORT (docs/wire-protocol.md)\n\
                  \x20 stats          mixed burst + observability snapshot (per-kernel\n\
                  \x20                metrics, trace waterfall; --prometheus / --json)\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\

@@ -149,11 +149,15 @@ impl ObsSnapshot {
             ("submitted", g.submitted),
             ("completed", g.completed),
             ("rejected", g.rejected),
+            ("shed", g.shed),
             ("batched", g.batched),
             ("coalesced", g.coalesced),
         ] {
             out.push_str(&format!("nt_requests_total{{event=\"{event}\"}} {v}\n"));
         }
+        out.push_str("# HELP nt_net_timeouts_total Wire connections closed on read/write timeout.\n");
+        out.push_str("# TYPE nt_net_timeouts_total counter\n");
+        out.push_str(&format!("nt_net_timeouts_total {}\n", g.net_timeouts));
         out.push_str("# HELP nt_executions_total Backend launches (batches count once).\n");
         out.push_str("# TYPE nt_executions_total counter\n");
         out.push_str(&format!("nt_executions_total {}\n", g.executions));
@@ -194,6 +198,7 @@ impl ObsSnapshot {
                 ("submitted", m.submitted),
                 ("completed", m.completed),
                 ("rejected", m.rejected),
+                ("shed", m.shed),
                 ("batched", m.batched),
                 ("coalesced", m.coalesced),
             ] {
@@ -362,6 +367,8 @@ fn metrics_json(m: &MetricsSnapshot) -> Json {
         ("submitted", m.submitted),
         ("completed", m.completed),
         ("rejected", m.rejected),
+        ("shed", m.shed),
+        ("net_timeouts", m.net_timeouts),
         ("batched", m.batched),
         ("coalesced", m.coalesced),
         ("executions", m.executions),

@@ -1,0 +1,348 @@
+//! Wire-protocol integration tests: real TCP sockets against
+//! [`ninetoothed_repro::coordinator::net::Server`].
+//!
+//! Covers the acceptance contract of the serving front door:
+//! * results over the wire are **bit-identical** to in-process execution,
+//! * flooding a queue-capacity-2 server yields structured `overloaded`
+//!   replies (never hangs) and the shed count lands in the obs snapshot,
+//! * frame/protocol violations get clean error replies with the documented
+//!   connection policy (garbage JSON survives; framing violations close),
+//! * every replayable example in `docs/wire-protocol.md` is replayed
+//!   byte-for-byte (modulo the two documented timing fields).
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ninetoothed_repro::coordinator::net::frame::{read_frame, write_frame, FrameError};
+use ninetoothed_repro::coordinator::net::{Client, NetConfig, Server};
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::json::Json;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::{HostTensor, Manifest};
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load_or_builtin(&ninetoothed_repro::artifacts_dir()))
+}
+
+fn start_server(config: CoordinatorConfig) -> (Arc<Coordinator>, Server) {
+    let coordinator = Arc::new(Coordinator::start(manifest(), config).unwrap());
+    let server = Server::start(coordinator.clone(), NetConfig::default()).unwrap();
+    (coordinator, server)
+}
+
+/// The mixed burst of the acceptance criteria: add, mm, softmax and sdpa,
+/// three rounds each, deterministic inputs.
+fn burst_inputs() -> Vec<(&'static str, Vec<HostTensor>)> {
+    let mut rng = SplitMix64::new(0xbeef);
+    let mut requests = Vec::new();
+    for _ in 0..3 {
+        requests.push((
+            "add",
+            vec![
+                HostTensor::randn(vec![1000], &mut rng),
+                HostTensor::randn(vec![1000], &mut rng),
+            ],
+        ));
+        requests.push((
+            "mm",
+            vec![
+                HostTensor::randn(vec![70, 50], &mut rng),
+                HostTensor::randn(vec![50, 90], &mut rng),
+            ],
+        ));
+        requests.push(("softmax", vec![HostTensor::randn(vec![7, 301], &mut rng)]));
+        requests.push((
+            "sdpa",
+            vec![
+                HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+                HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+                HostTensor::randn(vec![2, 2, 100, 16], &mut rng),
+            ],
+        ));
+    }
+    requests
+}
+
+fn bits(t: &HostTensor) -> Vec<u32> {
+    t.as_f32().unwrap().iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tcp_burst_is_bit_identical_to_in_process() {
+    let requests = burst_inputs();
+
+    // in-process reference: same inputs straight into a coordinator
+    let local = Coordinator::start(manifest(), CoordinatorConfig::default()).unwrap();
+    let mut expected = Vec::new();
+    for (kernel, inputs) in &requests {
+        let rx = local.submit(kernel, "nt", inputs.clone()).unwrap();
+        expected.push(rx.recv().unwrap().unwrap().outputs);
+    }
+    local.shutdown();
+
+    // the same burst over the wire, against a fresh server
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    for ((kernel, inputs), expect) in requests.iter().zip(&expected) {
+        let reply = client.submit(kernel, "nt", inputs).unwrap();
+        assert_eq!(reply.outputs.len(), expect.len(), "{kernel}: output count");
+        for (got, want) in reply.outputs.iter().zip(expect) {
+            assert_eq!(got.shape, want.shape, "{kernel}: output shape");
+            assert_eq!(bits(got), bits(want), "{kernel}: outputs must be bit-identical");
+        }
+    }
+    let stats = client.stats_json().unwrap();
+    assert_eq!(
+        stats.req("global").unwrap().usize("completed").unwrap(),
+        requests.len(),
+        "server must have completed the whole burst"
+    );
+    server.shutdown();
+    coordinator.drain();
+}
+
+#[test]
+fn flooding_a_small_queue_sheds_cleanly() {
+    // one slow worker, a two-deep queue: concurrent clients must overrun
+    // the watermark and receive structured overloaded replies, not hangs
+    let (coordinator, server) = start_server(CoordinatorConfig {
+        workers: 1,
+        queue_capacity: 2,
+        ..Default::default()
+    });
+    let addr = server.local_addr().to_string();
+
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 12;
+    let mut handles = Vec::new();
+    for seed in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> (u64, u64) {
+            let mut rng = SplitMix64::new(1000 + seed as u64);
+            let mut client = Client::connect(&addr).unwrap();
+            let (mut ok, mut shed) = (0u64, 0u64);
+            for _ in 0..ROUNDS {
+                let a = HostTensor::randn(vec![128, 128], &mut rng);
+                let b = HostTensor::randn(vec![128, 128], &mut rng);
+                let reply = client.submit_raw("mm", "nt", &[a, b]).unwrap();
+                if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+                    ok += 1;
+                } else {
+                    let err = reply.req("error").unwrap();
+                    assert_eq!(
+                        err.str("code").unwrap(),
+                        "overloaded",
+                        "only load shedding may fail this burst: {reply}"
+                    );
+                    assert!(
+                        err.usize("retry_after_ms").unwrap() >= 1,
+                        "shed replies must carry a retry hint: {reply}"
+                    );
+                    shed += 1;
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let (mut ok_total, mut shed_total) = (0u64, 0u64);
+    for handle in handles {
+        let (ok, shed) = handle.join().unwrap();
+        ok_total += ok;
+        shed_total += shed;
+    }
+    assert_eq!(ok_total + shed_total, (CLIENTS * ROUNDS) as u64, "no request may hang");
+    assert!(shed_total > 0, "8 concurrent clients against queue depth 2 must shed");
+
+    // the shed count surfaces in the metrics and the obs snapshot
+    let metrics = coordinator.metrics();
+    assert_eq!(metrics.shed, shed_total);
+    assert_eq!(metrics.completed, ok_total);
+    let snapshot = coordinator.obs_snapshot();
+    assert_eq!(
+        snapshot.to_json().req("global").unwrap().usize("shed").unwrap(),
+        shed_total as usize
+    );
+    assert!(
+        snapshot.render_prometheus().contains(&format!(
+            "nt_requests_total{{event=\"shed\"}} {shed_total}"
+        )),
+        "shed must appear in the Prometheus exposition"
+    );
+    server.shutdown();
+    coordinator.drain();
+}
+
+#[test]
+fn garbage_json_gets_error_reply_and_connection_survives() {
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+
+    // a well-formed frame with unparseable JSON: clean error, stay open
+    write_frame(&mut stream, "this is not json").unwrap();
+    let reply = Json::parse(&read_frame(&mut stream, 1 << 20).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "bad_request");
+
+    // valid JSON that is not an object: same code, connection still fine
+    write_frame(&mut stream, "[1,2]").unwrap();
+    let reply = Json::parse(&read_frame(&mut stream, 1 << 20).unwrap()).unwrap();
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "bad_request");
+
+    // the connection survived both: a health request still answers
+    write_frame(&mut stream, r#"{"id":1,"op":"health"}"#).unwrap();
+    let reply = Json::parse(&read_frame(&mut stream, 1 << 20).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(reply.str("status").unwrap(), "ok");
+
+    server.shutdown();
+    coordinator.drain();
+}
+
+#[test]
+fn oversized_length_prefix_gets_bad_frame_then_close() {
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // a hostile 4 GiB length prefix: bad_frame reply, then the server
+    // closes (the stream cannot be resynchronized)
+    use std::io::Write;
+    stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+    stream.flush().unwrap();
+    let reply = Json::parse(&read_frame(&mut stream, 1 << 20).unwrap()).unwrap();
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "bad_frame");
+    assert!(
+        matches!(read_frame(&mut stream, 1 << 20), Err(FrameError::Closed)),
+        "server must close after a framing violation"
+    );
+    server.shutdown();
+    coordinator.drain();
+}
+
+#[test]
+fn truncated_frame_gets_bad_frame_then_close() {
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // declare 100 payload bytes, deliver 3, hang up the write side
+    use std::io::Write;
+    stream.write_all(&100u32.to_be_bytes()).unwrap();
+    stream.write_all(b"abc").unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let reply = Json::parse(&read_frame(&mut stream, 1 << 20).unwrap()).unwrap();
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "bad_frame");
+    assert!(matches!(read_frame(&mut stream, 1 << 20), Err(FrameError::Closed)));
+    server.shutdown();
+    coordinator.drain();
+}
+
+#[test]
+fn submit_errors_carry_protocol_codes() {
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+    // a request the router can never serve: invalid_argument
+    let t = HostTensor::f32(vec![1], vec![1.0]).unwrap();
+    let reply = client.submit_raw("no_such_kernel", "nt", &[t]).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "invalid_argument");
+
+    // an op that does not exist: unknown_op, id echoed
+    let raw = client.call_raw(r#"{"id":77,"op":"frobnicate"}"#).unwrap();
+    let reply = Json::parse(&raw).unwrap();
+    assert_eq!(reply.usize("id").unwrap(), 77);
+    assert_eq!(reply.req("error").unwrap().str("code").unwrap(), "unknown_op");
+
+    // the rejection was counted as such (not shed)
+    assert_eq!(coordinator.metrics().rejected, 1);
+    assert_eq!(coordinator.metrics().shed, 0);
+    server.shutdown();
+    coordinator.drain();
+}
+
+// ---------------------------------------------------------------------------
+// docs/wire-protocol.md replay
+// ---------------------------------------------------------------------------
+
+/// Extract the replayable `request`/`reply` example pairs from the
+/// protocol doc: fenced blocks tagged ```` ```json request ```` must be
+/// followed by a ```` ```json reply ```` block.
+fn doc_examples(doc: &str) -> Vec<(String, String)> {
+    let mut blocks = Vec::new();
+    let mut lines = doc.lines();
+    while let Some(line) = lines.next() {
+        let tag = line.trim();
+        if tag != "```json request" && tag != "```json reply" {
+            continue;
+        }
+        let mut body = String::new();
+        for content in lines.by_ref() {
+            if content.trim() == "```" {
+                break;
+            }
+            if !body.is_empty() {
+                body.push('\n');
+            }
+            body.push_str(content);
+        }
+        blocks.push((tag == "```json request", body));
+    }
+    let mut pairs = Vec::new();
+    let mut i = 0;
+    while i < blocks.len() {
+        assert!(blocks[i].0, "found a reply block with no preceding request");
+        assert!(
+            i + 1 < blocks.len() && !blocks[i + 1].0,
+            "request block without a following reply block: {}",
+            blocks[i].1
+        );
+        pairs.push((blocks[i].1.clone(), blocks[i + 1].1.clone()));
+        i += 2;
+    }
+    pairs
+}
+
+/// Zero the two documented timing fields so a reply can be compared
+/// byte-for-byte against the doc (which explains this normalization).
+fn normalize_timings(reply: &str) -> String {
+    let mut v = Json::parse(reply).unwrap_or_else(|e| panic!("unparseable reply {reply:?}: {e}"));
+    if let Json::Obj(map) = &mut v {
+        for key in ["queue_us", "exec_us"] {
+            if map.contains_key(key) {
+                map.insert(key.to_string(), Json::Num(0.0));
+            }
+        }
+    }
+    v.to_string()
+}
+
+#[test]
+fn wire_protocol_doc_examples_replay_byte_for_byte() {
+    // the documented examples assume the native backend; with AOT
+    // artifacts present routing (and the backend field) changes
+    if Manifest::load(&ninetoothed_repro::artifacts_dir()).is_ok() {
+        eprintln!("skipping doc replay: AOT artifacts present, doc documents the native build");
+        return;
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/wire-protocol.md");
+    let doc = std::fs::read_to_string(path).expect("docs/wire-protocol.md must exist");
+    let pairs = doc_examples(&doc);
+    assert!(pairs.len() >= 5, "expected at least 5 replayable examples, found {}", pairs.len());
+
+    // the doc documents a server at the default config
+    let (coordinator, server) = start_server(CoordinatorConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    for (request, documented) in &pairs {
+        let actual = client.call_raw(request).unwrap();
+        assert_eq!(
+            normalize_timings(&actual),
+            normalize_timings(documented),
+            "documented reply for {request:?} diverged (doc: {documented:?}, got: {actual:?})"
+        );
+    }
+    server.shutdown();
+    coordinator.drain();
+}

@@ -1,0 +1,169 @@
+//! Relative-link checker for the documentation tree — the docs CI job
+//! runs `cargo run --release --bin linkcheck` and fails on any broken
+//! relative link or unknown `#anchor` in `README.md`, `rust/README.md`
+//! or `docs/*.md`.  Std-only, like everything else in the crate.
+//!
+//! What counts as a link: inline markdown `[text](target)` outside
+//! fenced code blocks.  `http(s)://` and `mailto:` targets are skipped
+//! (offline CI cannot vouch for the network); everything else must
+//! resolve to an existing file or directory relative to the containing
+//! document, and a `#fragment` on a markdown target must match a heading
+//! in that file under GitHub's slugification rules.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    // the binary lives in rust/; the documentation tree is one level up
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent").to_path_buf()
+    });
+
+    let mut files = vec![root.join("README.md"), root.join("rust/README.md")];
+    let docs = root.join("docs");
+    if let Ok(entries) = std::fs::read_dir(&docs) {
+        let mut md: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|ext| ext == "md"))
+            .collect();
+        md.sort();
+        files.extend(md);
+    }
+
+    let mut slug_cache: HashMap<PathBuf, Vec<String>> = HashMap::new();
+    let mut checked = 0usize;
+    let mut broken = Vec::new();
+    for file in &files {
+        let text = match std::fs::read_to_string(file) {
+            Ok(text) => text,
+            Err(e) => {
+                broken.push(format!("{}: unreadable: {e}", file.display()));
+                continue;
+            }
+        };
+        let dir = file.parent().unwrap_or(Path::new("."));
+        for (line_no, target) in links(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            checked += 1;
+            let (path_part, anchor) = match target.split_once('#') {
+                Some((p, a)) => (p, Some(a)),
+                None => (target.as_str(), None),
+            };
+            // `#anchor` alone refers to the containing document
+            let resolved =
+                if path_part.is_empty() { file.clone() } else { dir.join(path_part) };
+            if !resolved.exists() {
+                broken.push(format!(
+                    "{}:{line_no}: broken link `{target}` ({} does not exist)",
+                    file.display(),
+                    resolved.display()
+                ));
+                continue;
+            }
+            let Some(anchor) = anchor else { continue };
+            if resolved.extension().map(|ext| ext != "md").unwrap_or(true) {
+                continue; // anchors into non-markdown files are not ours to judge
+            }
+            let slugs = slug_cache.entry(resolved.clone()).or_insert_with(|| {
+                std::fs::read_to_string(&resolved)
+                    .map(|t| heading_slugs(&t))
+                    .unwrap_or_default()
+            });
+            if !slugs.iter().any(|s| s == anchor) {
+                broken.push(format!(
+                    "{}:{line_no}: broken anchor `{target}` (no heading slugifies to \
+                     {anchor:?} in {})",
+                    file.display(),
+                    resolved.display()
+                ));
+            }
+        }
+    }
+
+    println!("linkcheck: {} files, {checked} relative links", files.len());
+    if !broken.is_empty() {
+        for b in &broken {
+            eprintln!("  {b}");
+        }
+        eprintln!("linkcheck: {} broken link(s)", broken.len());
+        std::process::exit(1);
+    }
+    println!("linkcheck: OK");
+}
+
+/// Extract `(line number, target)` for every inline link outside fenced
+/// code blocks.
+fn links(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut j = 0;
+        while j + 1 < bytes.len() {
+            if bytes[j] == b']' && bytes[j + 1] == b'(' {
+                if let Some(end) = line[j + 2..].find(')') {
+                    let target = line[j + 2..j + 2 + end].trim();
+                    if !target.is_empty() {
+                        out.push((i + 1, target.to_string()));
+                    }
+                    j += 2 + end;
+                    continue;
+                }
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// GitHub-style anchor slugs for every ATX heading: backticks stripped,
+/// lowercased, alphanumerics kept, spaces become hyphens, everything
+/// else dropped; duplicate slugs get `-1`, `-2`, ... suffixes.
+fn heading_slugs(text: &str) -> Vec<String> {
+    let mut counts: HashMap<String, usize> = HashMap::new();
+    let mut slugs = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let hashes = line.len() - line.trim_start_matches('#').len();
+        if !(1..=6).contains(&hashes) || !line[hashes..].starts_with(' ') {
+            continue;
+        }
+        let mut slug = String::new();
+        for c in line[hashes..].trim().chars() {
+            match c {
+                '`' => {}
+                ' ' => slug.push('-'),
+                c if c.is_alphanumeric() => slug.extend(c.to_lowercase()),
+                '-' | '_' => slug.push(c),
+                _ => {}
+            }
+        }
+        let n = counts.entry(slug.clone()).or_insert(0);
+        if *n > 0 {
+            slug = format!("{slug}-{n}");
+        }
+        *n += 1;
+        slugs.push(slug);
+    }
+    slugs
+}
