@@ -1,7 +1,7 @@
 //! `cargo bench --bench native_backend` — native tile-execution backend
 //! throughput.
 //!
-//! Five sections:
+//! Sections:
 //!
 //! 1. **dot microkernel sweep** — naive i-k-j loop vs the blocked GEMM
 //!    on single tiles across sizes (the ISSUE 2 acceptance series: the
@@ -14,7 +14,10 @@
 //!    vs warm `PlanCache::prepare` latency: the compile-once/execute-many
 //!    evidence, gated so a warm-path regression fails CI;
 //! 4. **coalescing** — N same-shape requests executed sequentially vs
-//!    stacked into one grid launch (requests/s both ways);
+//!    stacked into one grid launch (requests/s both ways), plus the
+//!    observability-overhead and **autotune** gates (tuned winner vs the
+//!    block-size heuristic; warm tuning-table restart must re-measure
+//!    nothing);
 //! 5. the **artifact path** for context, when AOT artifacts + a PJRT
 //!    runtime exist.
 //!
@@ -34,7 +37,7 @@ use std::time::Duration;
 
 use ninetoothed_repro::benchkit::{bench_for, fmt_duration, Table};
 use ninetoothed_repro::coordinator::Coalescer;
-use ninetoothed_repro::exec::{self, GridScheduler, PlanCache, Tile};
+use ninetoothed_repro::exec::{self, GridScheduler, PlanCache, Tile, TuneMode, Tuner};
 use ninetoothed_repro::obs::{MetricsRegistry, Span, SpanKind, Trace, TraceRecorder};
 use ninetoothed_repro::json::Json;
 use ninetoothed_repro::prng::SplitMix64;
@@ -442,6 +445,90 @@ fn main() {
             ("coalesced_per_s", Json::Num(coal_per_s)),
             ("obs_rel_throughput", Json::Num(rel)),
         ]));
+    }
+
+    // -- 4c. autotune: elected winner vs the block-size heuristic, plus the
+    //        warm table restart.  `tuned_rel_throughput` is gated >= 1.0
+    //        with a per-row 5% tolerance in the baseline: the tuner may
+    //        tie the heuristic (winner index 0 pins the ratio to exactly
+    //        1.0 — identical plans, nothing to re-measure) but must never
+    //        lose to it.  `restart_zero_measurements` gates the warm
+    //        start: a fresh tuner restoring the just-written table must
+    //        install every winner without a single timed execution.
+    {
+        let mut tune_cases = vec![sdpa_case(1, 4, 256, 64, &mut rng)];
+        if !smoke {
+            tune_cases.push(mm_case(512, 512, 512, &mut rng));
+        }
+        let table_path =
+            std::env::temp_dir().join(format!("nt_bench_tune_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&table_path);
+        let plans = std::sync::Arc::new(PlanCache::new(64));
+        let tuner = Tuner::new(TuneMode::FirstUse, Some(table_path.clone()), plans);
+        let pooled = GridScheduler::pooled(threads);
+        for case in &tune_cases {
+            let kernel = exec::lookup(case.kernel).expect("registered kernel");
+            let shapes: Vec<&[usize]> = case.inputs.iter().map(|t| t.shape.as_slice()).collect();
+            let candidates = kernel.meta_candidates(&shapes).expect("candidate space");
+            let outcome = tuner
+                .tune_with_candidates(&kernel, "nt", &case.inputs, &candidates, &pooled)
+                .expect("tune");
+            let rel = if outcome.winner_index == 0 {
+                1.0
+            } else {
+                let heuristic = exec::compile(&kernel, &shapes).expect("heuristic compile");
+                let tuned = exec::compile_with_meta(&kernel, &shapes, &outcome.winner)
+                    .expect("tuned compile");
+                let base = bench_for(1, min_time, || {
+                    heuristic.execute(&case.inputs, &pooled).expect("heuristic run");
+                });
+                let best = bench_for(1, min_time, || {
+                    tuned.execute(&case.inputs, &pooled).expect("tuned run");
+                });
+                base.mean_s / best.mean_s
+            };
+            let winner: Vec<String> =
+                outcome.winner.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            println!(
+                "autotune {}: {} candidates, winner #{} [{}], rel throughput {rel:.2}x \
+                 (search {} over {} measurement(s), {} skipped)",
+                case.key,
+                outcome.candidates,
+                outcome.winner_index,
+                winner.join(" "),
+                fmt_duration(outcome.tune_us as f64 / 1e6),
+                outcome.measurements,
+                outcome.skipped,
+            );
+            rows.push(obj(vec![
+                ("key", Json::Str(format!("tuned_{}", case.key))),
+                ("kernel", Json::Str(case.kernel.to_string())),
+                ("candidates", Json::Num(outcome.candidates as f64)),
+                ("winner_index", Json::Num(outcome.winner_index as f64)),
+                ("tune_us", Json::Num(outcome.tune_us as f64)),
+                ("tuned_rel_throughput", Json::Num(rel)),
+            ]));
+        }
+        // warm restart: a fresh tuner against the table the searches above
+        // just wrote must restore every winner with zero measurements
+        let plans2 = std::sync::Arc::new(PlanCache::new(64));
+        let tuner2 = Tuner::new(TuneMode::FirstUse, Some(table_path.clone()), plans2);
+        let restored = tuner2.restore();
+        let warm = tuner2.measurements() == 0 && restored == tune_cases.len();
+        let zero = if warm { 1.0 } else { 0.0 };
+        println!(
+            "tune table restart: restored {restored}/{} winner(s) with {} measurement(s) -> {}",
+            tune_cases.len(),
+            tuner2.measurements(),
+            if zero == 1.0 { "ok" } else { "FAIL" },
+        );
+        rows.push(obj(vec![
+            ("key", Json::Str("tune_table_restart".to_string())),
+            ("kernel", Json::Str("tuner".to_string())),
+            ("restored", Json::Num(restored as f64)),
+            ("restart_zero_measurements", Json::Num(zero)),
+        ]));
+        let _ = std::fs::remove_file(&table_path);
     }
 
     // -- 5. artifact-path comparison, once per kernel, at the artifact's own

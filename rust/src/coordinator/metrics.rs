@@ -26,6 +26,13 @@ pub struct Metrics {
     pub executions: AtomicU64,
     pub exec_us_total: AtomicU64,
     pub queue_us_total: AtomicU64,
+    /// first-use autotune searches that elected and installed a winner
+    pub tuned_plans: AtomicU64,
+    /// wall-clock spent in autotune searches
+    pub tune_us_total: AtomicU64,
+    /// timed candidate executions performed by autotune searches — the
+    /// counter the warm-restart CI gate asserts stays 0 against a table
+    pub tune_measurements: AtomicU64,
     /// exact sum of observed latencies, so the mean is not bucket-bounded
     latency_us_sum: AtomicU64,
     latency_hist: [AtomicU64; BUCKETS],
@@ -66,6 +73,9 @@ impl Metrics {
             executions: self.executions.load(Ordering::Relaxed),
             exec_us_total: self.exec_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
+            tuned_plans: self.tuned_plans.load(Ordering::Relaxed),
+            tune_us_total: self.tune_us_total.load(Ordering::Relaxed),
+            tune_measurements: self.tune_measurements.load(Ordering::Relaxed),
             plan_hits,
             plan_misses,
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
@@ -88,6 +98,12 @@ pub struct MetricsSnapshot {
     pub executions: u64,
     pub exec_us_total: u64,
     pub queue_us_total: u64,
+    /// autotune searches that installed a winner
+    pub tuned_plans: u64,
+    /// wall-clock spent in autotune searches, µs
+    pub tune_us_total: u64,
+    /// timed candidate executions performed by autotune searches
+    pub tune_measurements: u64,
     /// plan-cache counters, supplied by the caller of
     /// [`Metrics::snapshot`] (the cache lives in `exec::PlanCache`)
     pub plan_hits: u64,
@@ -111,6 +127,9 @@ impl MetricsSnapshot {
             executions: 0,
             exec_us_total: 0,
             queue_us_total: 0,
+            tuned_plans: 0,
+            tune_us_total: 0,
+            tune_measurements: 0,
             plan_hits: 0,
             plan_misses: 0,
             latency_us_sum: 0,
@@ -131,6 +150,9 @@ impl MetricsSnapshot {
         self.executions += other.executions;
         self.exec_us_total += other.exec_us_total;
         self.queue_us_total += other.queue_us_total;
+        self.tuned_plans += other.tuned_plans;
+        self.tune_us_total += other.tune_us_total;
+        self.tune_measurements += other.tune_measurements;
         self.plan_hits += other.plan_hits;
         self.plan_misses += other.plan_misses;
         self.latency_us_sum += other.latency_us_sum;
@@ -198,8 +220,8 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} shed={} net_timeouts={} executions={} \
-             batching={:.2}x coalesced={} plan_cache={}h/{}m mean_exec={:.0}µs \
-             mean_queue={:.0}µs mean={:.0}µs p50={}µs p99={}µs",
+             batching={:.2}x coalesced={} plan_cache={}h/{}m tuned={} tune_ms={:.1} \
+             mean_exec={:.0}µs mean_queue={:.0}µs mean={:.0}µs p50={}µs p99={}µs",
             self.submitted,
             self.completed,
             self.rejected,
@@ -210,6 +232,8 @@ impl MetricsSnapshot {
             self.coalesced,
             self.plan_hits,
             self.plan_misses,
+            self.tuned_plans,
+            self.tune_us_total as f64 / 1000.0,
             self.mean_exec_us(),
             self.mean_queue_us(),
             self.mean_latency_us(),

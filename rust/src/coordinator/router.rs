@@ -28,6 +28,9 @@ pub struct Request {
     pub shape_sig: String,
     /// whether the trace recorder sampled this request at submit
     pub sampled: bool,
+    /// wall-clock of the first-use autotune search this submit triggered
+    /// (`None` for the common no-tuning case) — traced as a `Tune` span
+    pub tune_us: Option<u64>,
     /// where the response is delivered
     pub reply: mpsc::Sender<Result<Response>>,
 }

@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Result};
 use super::batcher::{Coalescer, Packer};
 use super::metrics::Metrics;
 use super::router::{Request, Response, RouteKey, Router};
-use crate::exec::{pool, PlanCache};
+use crate::exec::{pool, GridScheduler, PlanCache, TuneMode, Tuner};
 use crate::runtime::{Backend, HostTensor, Manifest, Registry};
 
 /// Startup-validated serving knobs.
@@ -56,6 +56,12 @@ pub struct CoordinatorConfig {
     pub coalesce_fanin: usize,
     /// compiled plans kept in the shared cache (LRU beyond this)
     pub plan_cache_capacity: usize,
+    /// block-size autotuning policy (`NT_TUNE`); `Off` is byte-for-byte
+    /// the pre-tuner coordinator
+    pub tune_mode: TuneMode,
+    /// on-disk tuning table (`NT_TUNE_TABLE`): consulted at startup to
+    /// restore winners, rewritten atomically after each search
+    pub tune_table: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,16 +73,18 @@ impl Default for CoordinatorConfig {
             max_fanin: 16,
             coalesce_fanin: 16,
             plan_cache_capacity: 256,
+            tune_mode: TuneMode::Off,
+            tune_table: None,
         }
     }
 }
 
 impl CoordinatorConfig {
     /// Apply environment overrides: `NT_QUEUE_CAP`, `NT_SHED_WATERMARK`,
-    /// `NT_COALESCE_FANIN`, `NT_PLAN_CACHE_CAP` (all validated — garbage
-    /// is a clean error, not a silent default).  `NT_POOL_THREADS` is
-    /// read by the shared pool itself; [`Coordinator::start`] validates
-    /// it too.
+    /// `NT_COALESCE_FANIN`, `NT_PLAN_CACHE_CAP`, `NT_TUNE`,
+    /// `NT_TUNE_TABLE` (all validated — garbage is a clean error, not a
+    /// silent default).  `NT_POOL_THREADS` is read by the shared pool
+    /// itself; [`Coordinator::start`] validates it too.
     pub fn from_env(mut self) -> Result<CoordinatorConfig> {
         if let Some(v) = pool::parse_env_usize("NT_QUEUE_CAP")? {
             self.queue_capacity = v;
@@ -89,6 +97,10 @@ impl CoordinatorConfig {
         }
         if let Some(v) = pool::parse_env_usize("NT_PLAN_CACHE_CAP")? {
             self.plan_cache_capacity = v;
+        }
+        self.tune_mode = TuneMode::from_env()?;
+        if let Ok(path) = std::env::var("NT_TUNE_TABLE") {
+            self.tune_table = Some(std::path::PathBuf::from(path));
         }
         self.validate()?;
         Ok(self)
@@ -172,6 +184,12 @@ pub struct Coordinator {
     router: Arc<Router>,
     config: CoordinatorConfig,
     plan_cache: Arc<PlanCache>,
+    /// the block-size autotuner; first-use searches run on the submitting
+    /// thread (never inside the batcher drain path)
+    tuner: Arc<Tuner>,
+    /// parallelism budget for tuning measurements: the same per-worker
+    /// budget serving executions get, so medians transfer
+    tune_scheduler: GridScheduler,
     /// behind a mutex so [`Coordinator::drain`] can join through `&self`
     /// (the wire server holds the coordinator in an `Arc`)
     workers: Mutex<Vec<JoinHandle<()>>>,
@@ -200,6 +218,15 @@ impl Coordinator {
         });
         let router = Arc::new(Router::new(manifest.clone()));
         let plan_cache = Arc::new(PlanCache::new(config.plan_cache_capacity));
+        let tuner = Arc::new(Tuner::new(
+            config.tune_mode,
+            config.tune_table.clone(),
+            plan_cache.clone(),
+        ));
+        let restored = tuner.restore();
+        if restored > 0 {
+            eprintln!("nt-tune: restored {restored} tuned plan(s) from the tuning table");
+        }
         let mut workers = Vec::new();
         let worker_count = config.workers.max(1);
         for worker_id in 0..worker_count {
@@ -227,7 +254,23 @@ impl Coordinator {
                     .expect("spawn worker"),
             );
         }
-        Ok(Coordinator { shared, router, config, plan_cache, workers: Mutex::new(workers) })
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let tune_scheduler = GridScheduler::pooled((cores / worker_count).max(1));
+        Ok(Coordinator {
+            shared,
+            router,
+            config,
+            plan_cache,
+            tuner,
+            tune_scheduler,
+            workers: Mutex::new(workers),
+        })
+    }
+
+    /// The autotuner (counters feed the obs snapshot; the `repro tune`
+    /// harness drives searches through it directly).
+    pub fn tuner(&self) -> &Arc<Tuner> {
+        &self.tuner
     }
 
     /// Submit a request; the response arrives on the receiver.
@@ -257,13 +300,14 @@ impl Coordinator {
             let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
             crate::obs::shape_sig(&shapes)
         };
-        let req = Request {
+        let mut req = Request {
             kernel: kernel.to_string(),
             variant: variant.to_string(),
             inputs,
             submitted: Instant::now(),
             shape_sig,
             sampled: self.shared.obs.traces.should_sample(),
+            tune_us: None,
             reply: tx,
         };
         // one registry lookup per submit; every admission outcome below
@@ -277,6 +321,35 @@ impl Coordinator {
                 return Err(SubmitError::Invalid(e));
             }
         };
+        // First-use autotuning runs HERE, on the submitting thread, after
+        // admission validated the request and before it enters the launch
+        // queue — never inside the batcher drain path.  A tuning failure
+        // is logged and the request serves with the heuristic plan.
+        if route.native && self.tuner.mode() != TuneMode::Off {
+            if let Some(kernel_def) = crate::kernel::lookup(&req.kernel) {
+                match self.tuner.maybe_tune(
+                    &kernel_def,
+                    &req.variant,
+                    &req.inputs,
+                    &self.tune_scheduler,
+                ) {
+                    Ok(Some(outcome)) => {
+                        req.tune_us = Some(outcome.tune_us);
+                        for m in [&self.shared.metrics, &*per_kernel] {
+                            m.tuned_plans.fetch_add(1, Ordering::Relaxed);
+                            m.tune_us_total.fetch_add(outcome.tune_us, Ordering::Relaxed);
+                            m.tune_measurements.fetch_add(outcome.measurements, Ordering::Relaxed);
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(e) => eprintln!(
+                        "nt-tune: {} {}: {e:#} (serving with the heuristic)",
+                        req.kernel,
+                        req.shape_sig
+                    ),
+                }
+            }
+        }
         let watermark = self.config.effective_shed_watermark();
         {
             let mut state = self.shared.queues.lock().unwrap();
@@ -585,6 +658,7 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
                         &req.shape_sig,
                         req.submitted,
                         drained,
+                        req.tune_us,
                         plan_span,
                         t0,
                         exec_end,
@@ -604,15 +678,17 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
     }
 }
 
-/// Assemble the span waterfall for one completed request: queued →
-/// batched → plan lookup/compile → grid execute → reply, all as offsets
-/// from the request's own submit instant.
+/// Assemble the span waterfall for one completed request: (tune →)
+/// queued → batched → plan lookup/compile → grid execute → reply, all as
+/// offsets from the request's own submit instant.  The `Tune` span only
+/// appears on the request that triggered a first-use search.
 #[allow(clippy::too_many_arguments)]
 fn build_trace(
     route: &RouteKey,
     shape_sig: &str,
     submitted: Instant,
     drained: Instant,
+    tune_us: Option<u64>,
     plan_span: Option<(Instant, Instant)>,
     exec_start: Instant,
     exec_end: Instant,
@@ -623,10 +699,16 @@ fn build_trace(
     use crate::obs::{Span, SpanKind};
     let off = |t: Instant| t.saturating_duration_since(submitted).as_micros() as u64;
     let reply_end = Instant::now();
-    let mut spans = vec![
-        Span { kind: SpanKind::Queued, start_us: 0, end_us: off(drained) },
-        Span { kind: SpanKind::Batch, start_us: off(drained), end_us: off(exec_start) },
-    ];
+    let mut spans = Vec::new();
+    let queued_start = match tune_us {
+        Some(t) => {
+            spans.push(Span { kind: SpanKind::Tune, start_us: 0, end_us: t });
+            t.min(off(drained))
+        }
+        None => 0,
+    };
+    spans.push(Span { kind: SpanKind::Queued, start_us: queued_start, end_us: off(drained) });
+    spans.push(Span { kind: SpanKind::Batch, start_us: off(drained), end_us: off(exec_start) });
     if let Some((ps, pe)) = plan_span {
         spans.push(Span { kind: SpanKind::Plan, start_us: off(ps), end_us: off(pe) });
         spans.push(Span { kind: SpanKind::Execute, start_us: off(pe), end_us: off(exec_end) });
@@ -669,6 +751,7 @@ mod tests {
             submitted: Instant::now(),
             shape_sig,
             sampled: false,
+            tune_us: None,
             reply: tx,
         }
     }

@@ -59,6 +59,10 @@ pub struct CompiledProgram {
     pub kernel: Arc<KernelDef>,
     /// the input shapes this program was compiled for
     pub shapes: Vec<Vec<usize>>,
+    /// the meta (block-size) bindings this program was specialized with
+    /// when they differ from the heuristic: `None` for the default
+    /// policy, `Some(winner)` for an autotuned plan ([`compile_with_meta`])
+    pub meta: Option<Vec<(String, i64)>>,
     /// specialized views + grid/loop geometry + output shapes
     pub spec: Specialization,
     /// execution profile accumulated across launches of this plan;
@@ -138,6 +142,26 @@ pub fn compile(kernel: &Arc<KernelDef>, shapes: &[&[usize]]) -> Result<CompiledP
     Ok(CompiledProgram {
         kernel: kernel.clone(),
         shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        meta: None,
+        spec,
+        profile: ProfileReport::from_env(),
+    })
+}
+
+/// [`compile`] with an explicit meta (block-size) binding set — the
+/// autotuner's entry point for candidate configurations.  The candidate
+/// runs through the ordinary specializer, so an infeasible block size is
+/// a clean error the search skips, never a panic.
+pub fn compile_with_meta(
+    kernel: &Arc<KernelDef>,
+    shapes: &[&[usize]],
+    meta: &[(String, i64)],
+) -> Result<CompiledProgram> {
+    let spec = kernel.specialize_shapes_with_meta(shapes, meta)?;
+    Ok(CompiledProgram {
+        kernel: kernel.clone(),
+        shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        meta: Some(meta.to_vec()),
         spec,
         profile: ProfileReport::from_env(),
     })
@@ -157,6 +181,12 @@ struct CacheInner {
     /// variant, shapes) keys, and never evicted, so attribution survives
     /// plan eviction
     per_kernel: HashMap<String, (u64, u64)>,
+    /// autotuned winners: meta bindings a miss for this key compiles with
+    /// instead of the heuristic.  Never evicted (a handful of small
+    /// vectors), so an LRU-evicted tuned plan recompiles straight to its
+    /// winner and a table-restored winner compiles lazily on first use —
+    /// both with zero re-measurement.
+    winners: HashMap<PlanKey, Arc<Vec<(String, i64)>>>,
 }
 
 /// Concurrent memoization of compiled programs.  One instance is shared
@@ -179,6 +209,7 @@ impl PlanCache {
                 map: HashMap::new(),
                 tick: 0,
                 per_kernel: HashMap::new(),
+                winners: HashMap::new(),
             }),
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
@@ -229,8 +260,15 @@ impl PlanCache {
             inner.per_kernel.entry(key.kernel).or_insert((0, 0)).0 += 1;
             return Ok((compiled, true));
         }
-        // miss: compile while holding the lock (errors are not cached)
-        let compiled = Arc::new(compile(kernel, shapes)?);
+        // miss: compile while holding the lock (errors are not cached).
+        // A key with an installed tuned winner compiles with the winner's
+        // block bindings instead of the heuristic's — this is how both an
+        // LRU-evicted tuned plan and a tuning-table-restored winner come
+        // back without re-searching.
+        let compiled = match inner.winners.get(&key) {
+            Some(winner) => Arc::new(compile_with_meta(kernel, shapes, winner)?),
+            None => Arc::new(compile(kernel, shapes)?),
+        };
         self.misses.fetch_add(1, Ordering::Relaxed);
         inner.per_kernel.entry(key.kernel.clone()).or_insert((0, 0)).1 += 1;
         inner.map.insert(key, Entry { program: compiled.clone(), last_used: now });
@@ -248,6 +286,79 @@ impl PlanCache {
             inner.map.remove(&cold);
         }
         Ok((compiled, false))
+    }
+
+    /// Install an autotuned winner for `(kernel, variant, shapes)`: the
+    /// meta bindings future misses compile with, plus (optionally) the
+    /// already-compiled winning program so the very next `prepare` is a
+    /// plain warm hit.  Passing `program: None` records the winner lazily
+    /// (the tuning-table restore path — no compilation, no measurement;
+    /// the first `prepare` compiles straight to the winner).
+    pub fn install_winner(
+        &self,
+        kernel_name: &str,
+        variant: &str,
+        shapes: &[&[usize]],
+        meta: Vec<(String, i64)>,
+        program: Option<Arc<CompiledProgram>>,
+    ) {
+        let key = PlanKey {
+            kernel: kernel_name.to_string(),
+            variant: intern_variant(variant),
+            shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        };
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.winners.insert(key.clone(), Arc::new(meta));
+        if let Some(program) = program {
+            inner.tick += 1;
+            let now = inner.tick;
+            inner.map.insert(key, Entry { program, last_used: now });
+            while inner.map.len() > self.capacity {
+                let Some(cold) = inner
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                else {
+                    break;
+                };
+                inner.map.remove(&cold);
+            }
+        }
+    }
+
+    /// The installed tuned winner for `(kernel, variant, shapes)`, if any.
+    pub fn winner(
+        &self,
+        kernel_name: &str,
+        variant: &str,
+        shapes: &[&[usize]],
+    ) -> Option<Arc<Vec<(String, i64)>>> {
+        let key = PlanKey {
+            kernel: kernel_name.to_string(),
+            variant: intern_variant(variant),
+            shapes: shapes.iter().map(|s| s.to_vec()).collect(),
+        };
+        self.inner.lock().unwrap().winners.get(&key).cloned()
+    }
+
+    /// Number of installed tuned winners (all kernels).
+    pub fn tuned_plans(&self) -> usize {
+        self.inner.lock().unwrap().winners.len()
+    }
+
+    /// Per-kernel count of installed tuned winners, sorted by name.
+    pub fn tuned_counters(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for key in inner.winners.keys() {
+            *counts.entry(key.kernel.as_str()).or_insert(0) += 1;
+        }
+        let mut rows: Vec<(String, u64)> =
+            counts.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        rows.sort();
+        rows
     }
 
     /// Per-kernel `(name, hits, misses)`, sorted by kernel name.  Counts

@@ -54,7 +54,12 @@
 //!   plan-attached [`crate::obs::ProfileReport`] with per-instruction and
 //!   per-cell wall time (`repro stats` renders the report);
 //! * [`reference`] — straightforward oracle implementations the tile
-//!   programs are cross-checked against in `cargo test`.
+//!   programs are cross-checked against in `cargo test`;
+//! * [`tune`] — the per-shape block-size autotuner (`NT_TUNE`): searches
+//!   each `Meta` policy's candidate space on first use, installs the
+//!   winner in the [`PlanCache`], and persists it to an on-disk tuning
+//!   table (`NT_TUNE_TABLE`) so a restart restores winners with zero
+//!   re-measurement.
 //!
 //! The coordinator reaches this subsystem through the
 //! [`crate::runtime::Backend`] trait's `prepare`/`execute` split: the
@@ -72,14 +77,16 @@ pub mod pool;
 pub mod reference;
 pub mod scheduler;
 pub mod tile;
+pub mod tune;
 pub mod view;
 
-pub use compile::{compile, CompiledProgram, PlanCache, PlanKey};
+pub use compile::{compile, compile_with_meta, CompiledProgram, PlanCache, PlanKey};
 pub use ir::{Instr, TileProgram};
 pub use native::{kernels, lookup, KernelDef, Specialization};
 pub use pool::WorkerPool;
 pub use scheduler::GridScheduler;
 pub use tile::{BinOp, ReduceOp, Tile, UnaryOp};
+pub use tune::{TuneMode, TuneOutcome, TuneTable, Tuner};
 pub use view::ParamView;
 
 use anyhow::{anyhow, Result};

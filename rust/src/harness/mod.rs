@@ -8,6 +8,7 @@ pub mod golden;
 pub mod serve;
 pub mod stats;
 pub mod table2;
+pub mod tune;
 pub mod validate;
 
 use std::path::PathBuf;

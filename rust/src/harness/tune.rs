@@ -1,0 +1,122 @@
+//! `repro tune` — pre-tune a kernel/shape list and write the tuning table.
+//!
+//! Runs the [`crate::exec::Tuner`] directly (no coordinator): for each
+//! task it prints the candidate space, the elected winner, and the search
+//! cost, then persists every winner to the table so a later serving
+//! process (`NT_TUNE=first_use NT_TUNE_TABLE=...`) restores them with
+//! zero re-measurement.
+//!
+//! Flags:
+//!   `--smoke`          only the `repro stats` burst shapes (the CI list)
+//!   `--table PATH`     tuning-table path (default `NT_TUNE_TABLE`,
+//!                      falling back to `tune_table.json`)
+//!   `--kernels a,b,c`  restrict to the named kernels
+//!
+//! `NT_TUNE=exhaustive` disables the search's early exit; any other value
+//! (or none) tunes first-use style.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::exec::{GridScheduler, PlanCache, TuneMode, Tuner};
+use crate::harness::golden;
+use crate::prng::SplitMix64;
+use crate::runtime::HostTensor;
+
+/// The tunable workload: the `repro stats` burst shapes first (so a table
+/// written with `--smoke` warm-starts the stats burst exactly), then the
+/// gated bench shapes.
+fn tasks(smoke: bool, rng: &mut SplitMix64) -> Result<Vec<(String, Vec<HostTensor>)>> {
+    let mut out = Vec::new();
+    for kernel in ["mm", "softmax", "sdpa", "add"] {
+        out.push((kernel.to_string(), golden::native_task_inputs(kernel, rng)?));
+    }
+    if !smoke {
+        out.push((
+            "mm".to_string(),
+            vec![
+                HostTensor::randn(vec![512, 512], rng),
+                HostTensor::randn(vec![512, 512], rng),
+            ],
+        ));
+        out.push((
+            "sdpa".to_string(),
+            (0..3).map(|_| HostTensor::randn(vec![1, 4, 256, 64], rng)).collect(),
+        ));
+    }
+    Ok(out)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let mode = match TuneMode::from_env()? {
+        // `repro tune` exists to tune: off would make it a no-op
+        TuneMode::Off => TuneMode::FirstUse,
+        mode => mode,
+    };
+    let table_path = args
+        .opt("table")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var("NT_TUNE_TABLE").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("tune_table.json"));
+    let only: Option<Vec<String>> =
+        args.opt("kernels").map(|v| v.split(',').map(|k| k.trim().to_string()).collect());
+
+    let plans = Arc::new(PlanCache::new(256));
+    let tuner = Tuner::new(mode, Some(table_path.clone()), plans);
+    let restored = tuner.restore();
+    println!(
+        "tuning table: {} (restored {restored} winner(s)); mode: {}",
+        table_path.display(),
+        mode.as_str()
+    );
+
+    let scheduler = GridScheduler::default();
+    let mut rng = SplitMix64::new(99);
+    let mut tuned = 0usize;
+    for (kernel_name, inputs) in tasks(args.flag("smoke"), &mut rng)? {
+        if let Some(only) = &only {
+            if !only.contains(&kernel_name) {
+                continue;
+            }
+        }
+        let Some(kernel) = crate::exec::lookup(&kernel_name) else {
+            println!("  {kernel_name:<8} unknown kernel, skipped");
+            continue;
+        };
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        let sig = crate::obs::shape_sig(&shapes);
+        let candidates = kernel.meta_candidates(&shapes)?;
+        if candidates.len() <= 1 {
+            println!("  {kernel_name:<8} {sig:<22} untunable (single candidate)");
+            continue;
+        }
+        match tuner.maybe_tune(&kernel, "nt", &inputs, &scheduler)? {
+            Some(outcome) => {
+                let winner: Vec<String> =
+                    outcome.winner.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                println!(
+                    "  {kernel_name:<8} {sig:<22} candidates={} winner=#{} {} best={}µs \
+                     measurements={} skipped={}",
+                    outcome.candidates,
+                    outcome.winner_index,
+                    winner.join(" "),
+                    outcome.best_us,
+                    outcome.measurements,
+                    outcome.skipped,
+                );
+                tuned += 1;
+            }
+            None => println!("  {kernel_name:<8} {sig:<22} warm (winner already installed)"),
+        }
+    }
+    println!(
+        "summary: tuned={tuned} measurements={} tune_ms={:.1} table={}",
+        tuner.measurements(),
+        tuner.tune_us_total() as f64 / 1000.0,
+        table_path.display()
+    );
+    Ok(())
+}

@@ -466,7 +466,7 @@ pub fn defaults() -> Result<Vec<KernelDef>> {
                  online-softmax loop",
                 arr_sdpa,
             )
-            .with_meta(Meta::AttentionBlocks { seq: "s" }),
+            .with_meta(Meta::AttentionBlocks { seq: "s", head: "d" }),
             app_sdpa("sdpa", false),
             vec![
                 TensorSpec::input(
@@ -493,7 +493,7 @@ pub fn defaults() -> Result<Vec<KernelDef>> {
                  broadcast over batch and heads",
                 arr_sdpa_bias,
             )
-            .with_meta(Meta::AttentionBlocks { seq: "s" }),
+            .with_meta(Meta::AttentionBlocks { seq: "s", head: "d" }),
             app_sdpa("sdpa_bias", true),
             vec![
                 TensorSpec::input(

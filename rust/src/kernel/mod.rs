@@ -196,9 +196,13 @@ pub enum Meta {
     /// program) and `BLOCK_SIZE_N` (key/value rows per online-softmax
     /// step) — one power-of-two block covering short sequences exactly,
     /// capped at 64 (the Python sdpa kernel's `block_size(64)` default)
+    /// and clamped against the head dim (a degenerate `head_dim 1` must
+    /// not allocate a 64x64 score tile for 64x1 operand tiles)
     AttentionBlocks {
         /// the sequence-length dim symbol
         seq: &'static str,
+        /// the head-dim symbol the block is clamped against
+        head: &'static str,
     },
     /// fixed bindings, independent of the request shapes
     Fixed(&'static [(&'static str, i64)]),
@@ -225,8 +229,8 @@ impl Meta {
                     ("BLOCK_SIZE_K".to_string(), bk),
                 ]
             }
-            Meta::AttentionBlocks { seq } => {
-                let block = attention_block(get(seq)? as usize);
+            Meta::AttentionBlocks { seq, head } => {
+                let block = attention_block(get(seq)? as usize, get(head)? as usize);
                 vec![
                     ("BLOCK_SIZE_M".to_string(), block),
                     ("BLOCK_SIZE_N".to_string(), block),
@@ -237,6 +241,75 @@ impl Meta {
             }
         })
     }
+
+    /// The autotuner's candidate space for concrete dims: a short
+    /// power-of-two sweep around the heuristic.  Two invariants the
+    /// whole `exec::tune` subsystem rests on:
+    ///
+    /// 1. **Candidate 0 is always [`Meta::bindings`]** — the heuristic is
+    ///    the guaranteed fallback, so a search that skips every other
+    ///    candidate (compile failure, slower) degenerates to the status
+    ///    quo.
+    /// 2. **Candidates never vary a symbol that changes reduction or
+    ///    accumulation order** — `BLOCK_SIZE_K` and attention's key/value
+    ///    block (`BLOCK_SIZE_N`) are pinned to the heuristic value.  Every
+    ///    candidate therefore computes *bit-identical* outputs to the
+    ///    heuristic plan, which is what lets `NT_TUNE=first_use` serving
+    ///    be byte-for-byte equal to `NT_TUNE=off`.
+    ///
+    /// Untunable policies ([`Meta::None`], [`Meta::Fixed`]) return a
+    /// single candidate.
+    pub fn candidates(&self, dims: &DimBindings) -> Result<Vec<Vec<(String, i64)>>> {
+        fn push(cand: Vec<(String, i64)>, out: &mut Vec<Vec<(String, i64)>>) {
+            if !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+        let base = self.bindings(dims)?;
+        let mut out: Vec<Vec<(String, i64)>> = vec![base.clone()];
+        match self {
+            Meta::None | Meta::Fixed(_) => {}
+            Meta::ElementwiseBlock { sym, .. } => {
+                let b0 = base[0].1;
+                for b in [b0 / 4, b0 / 2, b0 * 2, b0 * 4] {
+                    let b = b.clamp(32, 4096);
+                    push(vec![((*sym).to_string(), b)], &mut out);
+                }
+            }
+            Meta::MatmulBlocks { .. } => {
+                // base order: BLOCK_SIZE_M, BLOCK_SIZE_N, BLOCK_SIZE_K;
+                // K is pinned (it sets the accumulation split)
+                let (bm, bn, bk) = (base[0].1, base[1].1, base[2].1);
+                for m in [bm / 2, bm, bm * 2] {
+                    for n in [bn / 2, bn, bn * 2] {
+                        let (m, n) = (m.clamp(16, 128), n.clamp(16, 128));
+                        push(
+                            vec![
+                                ("BLOCK_SIZE_M".to_string(), m),
+                                ("BLOCK_SIZE_N".to_string(), n),
+                                ("BLOCK_SIZE_K".to_string(), bk),
+                            ],
+                            &mut out,
+                        );
+                    }
+                }
+            }
+            Meta::AttentionBlocks { .. } => {
+                // only the query-rows block is swept; the key/value block
+                // (BLOCK_SIZE_N) sets the online-softmax step order and
+                // stays pinned to the heuristic
+                let (bm, bn) = (base[0].1, base[1].1);
+                for m in [bm / 2, bm * 2] {
+                    let m = m.clamp(16, 128);
+                    push(
+                        vec![("BLOCK_SIZE_M".to_string(), m), ("BLOCK_SIZE_N".to_string(), bn)],
+                        &mut out,
+                    );
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// Element-wise block size: a power of two covering small inputs exactly.
@@ -244,9 +317,15 @@ fn elementwise_block(n: usize) -> i64 {
     (n.next_power_of_two() as i64).min(4096)
 }
 
-/// Attention block size: covers short sequences in one block, caps at 64.
-fn attention_block(seq: usize) -> i64 {
-    (seq.next_power_of_two() as i64).min(64)
+/// Attention block size: covers short sequences in one block, caps at 64
+/// — and clamps against the head dim, so degenerate heads (`head_dim 1`)
+/// do not over-allocate the `[block, block]` score tile relative to the
+/// `[block, head]` operand tiles it is computed from.  Heads of 4 or more
+/// (every realistic model) leave the seq-derived block unchanged.
+fn attention_block(seq: usize, head: usize) -> i64 {
+    let seq_block = (seq.next_power_of_two() as i64).min(64);
+    let head_cap = ((head.next_power_of_two() as i64) * 16).max(16);
+    seq_block.min(head_cap)
 }
 
 const MM_BLOCK: i64 = 32;
@@ -401,6 +480,18 @@ impl AppBuilder {
     pub fn reduce(&mut self, a: Val, axis: Option<usize>, op: ReduceOp) -> Val {
         let dst = self.fresh();
         self.instrs.push(Instr::Reduce { dst, a: a.0, axis, op });
+        Val(dst)
+    }
+
+    /// 2-D matrix product of two register tiles (`ntl.dot`), e.g. flash
+    /// attention's `dot(q, trans(k))` score product.  The mm-family
+    /// k-loops use the fused [`dot_acc`] instead (it feeds the blocked
+    /// GEMM from the source tensors without materializing operand tiles).
+    ///
+    /// [`dot_acc`]: AppBuilder::dot_acc
+    pub fn dot(&mut self, a: Val, b: Val) -> Val {
+        let dst = self.fresh();
+        self.instrs.push(Instr::Dot { dst, a: a.0, b: b.0 });
         Val(dst)
     }
 
@@ -885,6 +976,30 @@ impl KernelDef {
         self.specialize_with(&dims, &all)
     }
 
+    /// [`KernelDef::specialize_shapes`] with the arrangement's meta
+    /// bindings replaced by `meta` — how the autotuner compiles a
+    /// candidate block configuration through the ordinary specializer
+    /// (every downstream check — grid agreement, probe verification —
+    /// still runs, so an infeasible candidate is a clean error).
+    pub fn specialize_shapes_with_meta(
+        &self,
+        shapes: &[&[usize]],
+        meta: &[(String, i64)],
+    ) -> Result<Specialization> {
+        let (dims, canon) = self.bind(shapes)?;
+        let all = self.all_shapes(&dims, &canon)?;
+        self.specialize_with_meta(&dims, &all, Some(meta))
+    }
+
+    /// The tunable block-configuration space for concrete input shapes:
+    /// [`Meta::candidates`] evaluated at the request's dim bindings.
+    /// Candidate 0 is always the heuristic; a single-candidate space
+    /// means the kernel is not tunable for these shapes.
+    pub fn meta_candidates(&self, shapes: &[&[usize]]) -> Result<Vec<Vec<(String, i64)>>> {
+        let (dims, _) = self.bind(shapes)?;
+        self.arrangement.meta.candidates(&dims)
+    }
+
     /// Validate inputs and compute the concrete launch for them.
     pub fn specialize(&self, inputs: &[HostTensor]) -> Result<Specialization> {
         self.check(inputs)?;
@@ -904,8 +1019,24 @@ impl KernelDef {
     /// view lowering, §3.2.1 agreement.  `shapes` covers all parameters
     /// (outputs included), in declaration order.
     fn specialize_with(&self, dims: &DimBindings, shapes: &[Vec<usize>]) -> Result<Specialization> {
+        self.specialize_with_meta(dims, shapes, None)
+    }
+
+    /// [`KernelDef::specialize_with`] with an optional meta override: the
+    /// autotuner substitutes a candidate's block bindings for the
+    /// heuristic's; everything downstream is identical.
+    fn specialize_with_meta(
+        &self,
+        dims: &DimBindings,
+        shapes: &[Vec<usize>],
+        meta_override: Option<&[(String, i64)]>,
+    ) -> Result<Specialization> {
         let mut bindings: BTreeMap<String, i64> = BTreeMap::new();
-        for (sym, v) in self.arrangement.meta.bindings(dims)? {
+        let meta = match meta_override {
+            Some(pairs) => pairs.to_vec(),
+            None => self.arrangement.meta.bindings(dims)?,
+        };
+        for (sym, v) in meta {
             bindings.insert(sym, v);
         }
         for (spec, shape) in self.tensors.iter().zip(shapes) {

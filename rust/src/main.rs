@@ -11,6 +11,8 @@
 //!                 JSON frames; see docs/wire-protocol.md)
 //!   stats         mixed burst + full observability snapshot (table,
 //!                 --prometheus, --json)
+//!   tune          pre-tune block sizes for a kernel/shape list and write
+//!                 the on-disk tuning table (NT_TUNE / NT_TUNE_TABLE)
 //!   kernels       list the kernel registry (serving-deployment debugging)
 //!   inspect       print manifest + launch-plan details
 
@@ -32,6 +34,7 @@ fn main() -> Result<()> {
         Some("bench-e2e") => harness::fig7::run(&args),
         Some("serve") => harness::serve::run(&args),
         Some("stats") => harness::stats::run(&args),
+        Some("tune") => harness::tune::run(&args),
         Some("kernels") => kernels_cmd(),
         Some("inspect") => inspect(),
         other => {
@@ -51,6 +54,8 @@ fn main() -> Result<()> {
                  \x20                over TCP with --addr HOST:PORT (docs/wire-protocol.md)\n\
                  \x20 stats          mixed burst + observability snapshot (per-kernel\n\
                  \x20                metrics, trace waterfall; --prometheus / --json)\n\
+                 \x20 tune           pre-tune block sizes and write the tuning table\n\
+                 \x20                (--smoke, --table PATH, --kernels a,b,c; NT_TUNE)\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
                  \x20                coalescible, loop-carried, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"

@@ -105,14 +105,15 @@ impl ObsSnapshot {
         out.push_str(&self.global.render());
         out.push_str("\nper-kernel/per-shape (plan h/m is kernel-level):\n");
         out.push_str(&format!(
-            "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11}\n",
-            "kernel", "shapes", "count", "p50_us", "p99_us", "coalesced", "batched", "plan h/m"
+            "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8}\n",
+            "kernel", "shapes", "count", "p50_us", "p99_us", "coalesced", "batched", "plan h/m",
+            "tuned", "tune_ms"
         ));
         for row in &self.kernels {
             let m = &row.metrics;
             let (hits, misses) = self.plan_for(&row.kernel);
             out.push_str(&format!(
-                "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11}\n",
+                "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8.1}\n",
                 row.kernel,
                 row.shapes,
                 m.completed,
@@ -121,6 +122,8 @@ impl ObsSnapshot {
                 m.coalesced,
                 m.batched,
                 format!("{hits}/{misses}"),
+                m.tuned_plans,
+                m.tune_us_total as f64 / 1000.0,
             ));
         }
         out.push_str(&self.pool.render());
@@ -168,6 +171,19 @@ impl ObsSnapshot {
         out.push_str("# TYPE nt_queue_us_total counter\n");
         out.push_str(&format!("nt_queue_us_total {}\n", g.queue_us_total));
 
+        out.push_str("# HELP nt_tuned_plans_total Autotune searches that installed a winner.\n");
+        out.push_str("# TYPE nt_tuned_plans_total counter\n");
+        out.push_str(&format!("nt_tuned_plans_total {}\n", g.tuned_plans));
+        out.push_str("# HELP nt_tune_us_total Wall microseconds spent in autotune searches.\n");
+        out.push_str("# TYPE nt_tune_us_total counter\n");
+        out.push_str(&format!("nt_tune_us_total {}\n", g.tune_us_total));
+        out.push_str(
+            "# HELP nt_tune_measurements_total Timed candidate executions performed by \
+             autotune searches (0 after a warm restart against a tuning table).\n",
+        );
+        out.push_str("# TYPE nt_tune_measurements_total counter\n");
+        out.push_str(&format!("nt_tune_measurements_total {}\n", g.tune_measurements));
+
         out.push_str("# HELP nt_plan_cache_total Compiled-plan cache lookups by result.\n");
         out.push_str("# TYPE nt_plan_cache_total counter\n");
         out.push_str(&format!("nt_plan_cache_total{{result=\"hit\"}} {}\n", g.plan_hits));
@@ -201,6 +217,7 @@ impl ObsSnapshot {
                 ("shed", m.shed),
                 ("batched", m.batched),
                 ("coalesced", m.coalesced),
+                ("tuned", m.tuned_plans),
             ] {
                 out.push_str(&format!(
                     "nt_kernel_requests_total{{kernel=\"{kernel}\",shapes=\"{shapes}\",\
@@ -374,6 +391,9 @@ fn metrics_json(m: &MetricsSnapshot) -> Json {
         ("executions", m.executions),
         ("exec_us_total", m.exec_us_total),
         ("queue_us_total", m.queue_us_total),
+        ("tuned_plans", m.tuned_plans),
+        ("tune_us_total", m.tune_us_total),
+        ("tune_measurements", m.tune_measurements),
         ("plan_hits", m.plan_hits),
         ("plan_misses", m.plan_misses),
         ("latency_us_sum", m.latency_us_sum),

@@ -19,6 +19,9 @@ use anyhow::Result;
 /// The phases a request passes through, in lifecycle order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpanKind {
+    /// first-use autotune search on the submitting thread (only present
+    /// on the request that triggered it)
+    Tune,
     /// submit → drained from the queue by a worker
     Queued,
     /// drained → batch assembled (pack/coalesce decision made)
@@ -34,6 +37,7 @@ pub enum SpanKind {
 impl SpanKind {
     pub fn name(&self) -> &'static str {
         match self {
+            SpanKind::Tune => "tune",
             SpanKind::Queued => "queued",
             SpanKind::Batch => "batch",
             SpanKind::Plan => "plan",

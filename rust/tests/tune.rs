@@ -1,0 +1,299 @@
+//! Autotuner acceptance (ported from the seed's
+//! `python/tests/test_autotune_and_failures.py` scenarios, plus the
+//! tuning-table durability matrix):
+//!
+//! * tuned output bit-identical to the default-config output for every
+//!   tunable builtin (mm, softmax, sdpa, add);
+//! * a candidate that fails to compile is skipped, not fatal — and an
+//!   all-bogus candidate space is a clean error, never a panic;
+//! * `NT_TUNE=off` (TuneMode::Off) is byte-for-byte the status quo;
+//! * corrupt / stale-version / candidate-space-mismatched tables are
+//!   ignored with a warning;
+//! * concurrent first-use tuning of one key elects exactly one winner;
+//! * a restart against a persisted table performs zero re-measurements
+//!   and its first `prepare` compiles straight to the winner;
+//! * `Meta::AttentionBlocks` clamps the block to the head dim
+//!   (regression at head_dim 1).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ninetoothed_repro::exec::{self, compile, GridScheduler, PlanCache, TuneMode, TuneTable, Tuner};
+use ninetoothed_repro::harness::golden;
+use ninetoothed_repro::prng::SplitMix64;
+use ninetoothed_repro::runtime::HostTensor;
+
+/// Per-test scratch path (no tempfile crate in the offline set).
+fn tmp_table(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nt_tune_test_{}_{name}.json", std::process::id()))
+}
+
+fn shapes_of(inputs: &[HostTensor]) -> Vec<&[usize]> {
+    inputs.iter().map(|t| t.shape.as_slice()).collect()
+}
+
+/// The acceptance mix: every tunable builtin the `repro stats` burst
+/// serves.  Tuned serving must be **bit-identical** to the heuristic —
+/// candidate spaces never vary accumulation-order symbols, and the
+/// search skips any candidate whose output differs from candidate 0's.
+#[test]
+fn tuned_output_is_bit_identical_to_default() {
+    let scheduler = GridScheduler::default();
+    for kernel_name in ["mm", "softmax", "sdpa", "add"] {
+        let mut rng = SplitMix64::new(42);
+        let inputs = golden::native_task_inputs(kernel_name, &mut rng).unwrap();
+        let kernel = exec::lookup(kernel_name).unwrap();
+        let shapes = shapes_of(&inputs);
+        let default_out = compile(&kernel, &shapes).unwrap().execute(&inputs, &scheduler).unwrap();
+
+        let plans = Arc::new(PlanCache::new(64));
+        let tuner = Tuner::new(TuneMode::FirstUse, None, plans.clone());
+        tuner.maybe_tune(&kernel, "nt", &inputs, &scheduler).unwrap();
+        let prepared = plans.prepare(&kernel, "nt", &shapes).unwrap();
+        let tuned_out = prepared.execute(&inputs, &scheduler).unwrap();
+
+        assert_eq!(default_out.len(), tuned_out.len());
+        for (d, t) in default_out.iter().zip(&tuned_out) {
+            assert_eq!(d, t, "{kernel_name}: tuned output must equal the default output");
+        }
+    }
+}
+
+/// A candidate that cannot compile (here: empty meta, leaving the mm
+/// block symbols unbound) is skipped; candidate 0 failing is a clean
+/// error because the heuristic is the guaranteed fallback.
+#[test]
+fn failing_candidate_is_skipped_not_fatal() {
+    let kernel = exec::lookup("mm").unwrap();
+    let mut rng = SplitMix64::new(7);
+    let inputs = golden::native_task_inputs("mm", &mut rng).unwrap();
+    let shapes = shapes_of(&inputs);
+    let heuristic = kernel.meta_candidates(&shapes).unwrap()[0].clone();
+    let bogus: Vec<(String, i64)> = Vec::new();
+
+    let plans = Arc::new(PlanCache::new(8));
+    let tuner = Tuner::new(TuneMode::FirstUse, None, plans);
+    let outcome = tuner
+        .tune_with_candidates(
+            &kernel,
+            "nt",
+            &inputs,
+            &[heuristic, bogus.clone()],
+            &GridScheduler::serial(),
+        )
+        .unwrap();
+    assert_eq!(outcome.winner_index, 0, "only the heuristic survived");
+    assert_eq!(outcome.skipped, 1);
+
+    let all_bogus =
+        tuner.tune_with_candidates(&kernel, "nt", &inputs, &[bogus], &GridScheduler::serial());
+    assert!(all_bogus.is_err(), "heuristic candidate failing must be a clean error");
+}
+
+/// `TuneMode::Off` performs no measurements, installs no winners, and
+/// the cache compiles the plain heuristic plan — byte-for-byte the
+/// pre-tuner behaviour.
+#[test]
+fn off_mode_is_the_status_quo() {
+    let kernel = exec::lookup("mm").unwrap();
+    let mut rng = SplitMix64::new(11);
+    let inputs = golden::native_task_inputs("mm", &mut rng).unwrap();
+    let shapes = shapes_of(&inputs);
+
+    let plans = Arc::new(PlanCache::new(8));
+    let tuner = Tuner::new(TuneMode::Off, None, plans.clone());
+    let outcome = tuner.maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial()).unwrap();
+    assert!(outcome.is_none());
+    assert_eq!(tuner.measurements(), 0);
+    assert_eq!(plans.tuned_plans(), 0);
+
+    let prepared = plans.prepare(&kernel, "nt", &shapes).unwrap();
+    assert!(prepared.meta.is_none(), "off mode must serve the heuristic plan");
+    let default_out =
+        compile(&kernel, &shapes).unwrap().execute(&inputs, &GridScheduler::serial()).unwrap();
+    let served = prepared.execute(&inputs, &GridScheduler::serial()).unwrap();
+    assert_eq!(default_out, served);
+}
+
+/// Corrupt and stale-version tables load as empty (with a warning on
+/// stderr), and a tuner pointed at one starts clean — never a panic.
+#[test]
+fn corrupt_and_stale_tables_are_ignored() {
+    let path = tmp_table("corrupt");
+    std::fs::write(&path, "{definitely not json").unwrap();
+    assert!(TuneTable::load(&path).entries.is_empty());
+
+    std::fs::write(&path, "{\"version\":999,\"entries\":[]}").unwrap();
+    assert!(TuneTable::load(&path).entries.is_empty());
+
+    std::fs::write(&path, "][").unwrap();
+    let plans = Arc::new(PlanCache::new(8));
+    let tuner = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans);
+    assert_eq!(tuner.restore(), 0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// A table whose candidate-space hash no longer matches (the heuristic
+/// changed since it was written) is ignored on restore — the key
+/// re-tunes at first use instead of serving a stale winner.
+#[test]
+fn candidate_space_mismatch_is_ignored_on_restore() {
+    let path = tmp_table("mismatch");
+    let kernel = exec::lookup("mm").unwrap();
+    let mut rng = SplitMix64::new(13);
+    let inputs = golden::native_task_inputs("mm", &mut rng).unwrap();
+    let shapes = shapes_of(&inputs);
+
+    let plans = Arc::new(PlanCache::new(8));
+    let tuner = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans);
+    tuner
+        .maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial())
+        .unwrap()
+        .expect("first use must search");
+
+    let mut table = TuneTable::load(&path);
+    assert_eq!(table.entries.len(), 1);
+    table.entries[0].space_hash ^= 1;
+    table.save(&path).unwrap();
+
+    let plans2 = Arc::new(PlanCache::new(8));
+    let tuner2 = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans2.clone());
+    assert_eq!(tuner2.restore(), 0, "mismatched space hash must not restore");
+    assert!(plans2.winner("mm", "nt", &shapes).is_none());
+    std::fs::remove_file(&path).ok();
+}
+
+/// 8 threads race first-use tuning of the same (kernel, shapes) key:
+/// exactly one searches and installs the winner, the rest find it
+/// installed and skip.
+#[test]
+fn concurrent_first_use_elects_one_winner() {
+    let kernel = exec::lookup("mm").unwrap();
+    let mut rng = SplitMix64::new(17);
+    let inputs = Arc::new(golden::native_task_inputs("mm", &mut rng).unwrap());
+    let plans = Arc::new(PlanCache::new(8));
+    let tuner = Arc::new(Tuner::new(TuneMode::FirstUse, None, plans.clone()));
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let (tuner, kernel, inputs) = (tuner.clone(), kernel.clone(), inputs.clone());
+            std::thread::spawn(move || {
+                tuner
+                    .maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial())
+                    .unwrap()
+                    .is_some()
+            })
+        })
+        .collect();
+    let searched: usize = handles.into_iter().map(|h| h.join().unwrap() as usize).sum();
+    assert_eq!(searched, 1, "exactly one thread may search");
+    assert_eq!(tuner.tuned_plans(), 1);
+    assert_eq!(plans.tuned_plans(), 1);
+}
+
+/// The warm-restart guarantee the CI smoke step gates on: a new process
+/// pointed at a persisted table restores every winner lazily, performs
+/// **zero** tuning measurements, and its first `prepare` compiles
+/// straight to the winner's block bindings.
+#[test]
+fn restart_with_table_does_zero_measurements() {
+    let path = tmp_table("restart");
+    std::fs::remove_file(&path).ok();
+    let kernels = ["mm", "add", "sdpa"];
+
+    // "process 1": tune and persist
+    let plans1 = Arc::new(PlanCache::new(16));
+    let tuner1 = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans1);
+    let mut rng = SplitMix64::new(23);
+    for kernel_name in kernels {
+        let inputs = golden::native_task_inputs(kernel_name, &mut rng).unwrap();
+        let kernel = exec::lookup(kernel_name).unwrap();
+        tuner1
+            .maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial())
+            .unwrap()
+            .expect("first use must search");
+    }
+    assert!(tuner1.measurements() > 0);
+
+    // "process 2": restore and serve — same shapes, fresh everything
+    let plans2 = Arc::new(PlanCache::new(16));
+    let tuner2 = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans2.clone());
+    assert_eq!(tuner2.restore(), kernels.len());
+    let mut rng = SplitMix64::new(23);
+    for kernel_name in kernels {
+        let inputs = golden::native_task_inputs(kernel_name, &mut rng).unwrap();
+        let kernel = exec::lookup(kernel_name).unwrap();
+        let outcome = tuner2.maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial()).unwrap();
+        assert!(outcome.is_none(), "{kernel_name}: restored key must not re-search");
+    }
+    assert_eq!(tuner2.measurements(), 0, "restart against a table re-measures nothing");
+    assert_eq!(tuner2.restored(), kernels.len() as u64);
+
+    // first prepare compiles with the restored winner, not the heuristic
+    let mut rng = SplitMix64::new(23);
+    let inputs = golden::native_task_inputs("mm", &mut rng).unwrap();
+    let shapes = shapes_of(&inputs);
+    let kernel = exec::lookup("mm").unwrap();
+    let winner = plans2.winner("mm", "nt", &shapes).expect("restored winner");
+    let prepared = plans2.prepare(&kernel, "nt", &shapes).unwrap();
+    assert_eq!(prepared.meta.as_ref(), Some(&*winner));
+    std::fs::remove_file(&path).ok();
+}
+
+/// Regression (satellite 1): `Meta::AttentionBlocks` clamps its block to
+/// the head-dim probe as well as seq.  At head_dim 1 the old seq-only
+/// heuristic allocated a 64x64 score tile for 64x1 operand tiles.
+#[test]
+fn attention_blocks_clamp_to_head_dim() {
+    let kernel = exec::lookup("sdpa").unwrap();
+    let block_of = |shapes: &[&[usize]], sym: &str| -> i64 {
+        kernel.meta_candidates(shapes).unwrap()[0].iter().find(|(k, _)| k == sym).unwrap().1
+    };
+
+    // head_dim 1, seq 64: clamp to 16 (the floor), not the seq-derived 64
+    let degenerate: Vec<Vec<usize>> = vec![vec![1, 1, 64, 1]; 3];
+    let shapes: Vec<&[usize]> = degenerate.iter().map(|s| s.as_slice()).collect();
+    assert_eq!(block_of(&shapes, "BLOCK_SIZE_M"), 16);
+    assert_eq!(block_of(&shapes, "BLOCK_SIZE_N"), 16);
+
+    // realistic heads are unaffected: head 16 keeps the seq-derived 64
+    let realistic: Vec<Vec<usize>> = vec![vec![2, 2, 100, 16]; 3];
+    let shapes: Vec<&[usize]> = realistic.iter().map(|s| s.as_slice()).collect();
+    assert_eq!(block_of(&shapes, "BLOCK_SIZE_M"), 64);
+
+    // and the clamped plan is numerically right vs the naive oracle
+    let mut rng = SplitMix64::new(3);
+    let inputs: Vec<HostTensor> =
+        (0..3).map(|_| HostTensor::randn(vec![1, 1, 64, 1], &mut rng)).collect();
+    let shapes = shapes_of(&inputs);
+    let out =
+        compile(&kernel, &shapes).unwrap().execute(&inputs, &GridScheduler::serial()).unwrap();
+    let expected = exec::reference::sdpa(&inputs[0], &inputs[1], &inputs[2]).unwrap();
+    assert!(out[0].max_abs_diff(&expected).unwrap() <= 1e-3);
+}
+
+/// Exhaustive mode re-searches keys a restored table already answered
+/// (its whole point is a fresh full sweep).
+#[test]
+fn exhaustive_mode_retunes_restored_keys() {
+    let path = tmp_table("exhaustive");
+    std::fs::remove_file(&path).ok();
+    let kernel = exec::lookup("add").unwrap();
+    let mut rng = SplitMix64::new(29);
+    let inputs = golden::native_task_inputs("add", &mut rng).unwrap();
+
+    let plans1 = Arc::new(PlanCache::new(8));
+    let tuner1 = Tuner::new(TuneMode::FirstUse, Some(path.clone()), plans1);
+    tuner1
+        .maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial())
+        .unwrap()
+        .expect("first use must search");
+
+    let plans2 = Arc::new(PlanCache::new(8));
+    let tuner2 = Tuner::new(TuneMode::Exhaustive, Some(path.clone()), plans2);
+    assert_eq!(tuner2.restore(), 1);
+    let outcome = tuner2.maybe_tune(&kernel, "nt", &inputs, &GridScheduler::serial()).unwrap();
+    assert!(outcome.is_some(), "exhaustive mode re-searches restored keys");
+    assert!(tuner2.measurements() > 0);
+    std::fs::remove_file(&path).ok();
+}

@@ -44,6 +44,13 @@ use ninetoothed_repro::json::Json;
 /// bare-execution / observed-execution time ratio on the coalesced
 /// serving shape, with a 1.0 baseline and a per-row 5% tolerance — the
 /// recording points must stay effectively free.
+/// `tuned_rel_throughput` gates the autotuner's election on the
+/// `tuned_*` rows: heuristic-plan time over tuned-plan time, pinned to
+/// exactly 1.0 when the heuristic itself wins — with a 1.0 baseline and
+/// a per-row 5% tolerance, the tuned plan may tie but never lose to the
+/// heuristic.  `restart_zero_measurements` gates the warm start on
+/// `tune_table_restart`: 1.0 iff a fresh tuner restored every winner
+/// from the just-written table without a single timed execution.
 const METRICS: &[&str] = &[
     "gflops",
     "naive_gflops",
@@ -54,6 +61,8 @@ const METRICS: &[&str] = &[
     "coalesced_per_s",
     "resolves_per_s",
     "obs_rel_throughput",
+    "tuned_rel_throughput",
+    "restart_zero_measurements",
 ];
 
 fn load(path: &str) -> Result<Json, String> {
