@@ -324,6 +324,24 @@ fn main() {
         ]));
     }
 
+    // -- 3c. declaration verifier: full four-pass verification throughput ----
+    // registration and `repro lint` both run this; gate it so the static
+    // analyses stay a startup-time cost measured in microseconds, never a
+    // reason to skip the gate
+    {
+        let kernel = exec::lookup("mm").expect("mm");
+        let checked = bench_for(1, min_time, || {
+            assert!(ninetoothed_repro::kernel::verify::verify(&kernel).is_clean());
+        });
+        let verifications_per_s = 1.0 / checked.mean_s;
+        println!("declaration verify (mm, all four analyses): {verifications_per_s:.0}/s");
+        rows.push(obj(vec![
+            ("key", Json::Str("verify_mm_decl".to_string())),
+            ("kernel", Json::Str("mm".to_string())),
+            ("verifications_per_s", Json::Num(verifications_per_s)),
+        ]));
+    }
+
     // -- 4. coalescing: sequential same-shape requests vs one stacked launch --
     {
         // small per-request rows: a single request's grid cannot fill the

@@ -120,7 +120,12 @@ impl Instr {
 
     /// Registers this instruction reads / writes, and parameters it
     /// references (loops report none; their body is walked separately).
-    fn effects(&self) -> (Vec<Reg>, Vec<Reg>, Vec<usize>) {
+    ///
+    /// This is the structured metadata the `kernel::verify` analyses walk
+    /// — dataflow, padding taint and the coalescibility race audit all
+    /// consume instructions through this single accessor instead of
+    /// re-matching the enum per analysis.
+    pub fn effects(&self) -> (Vec<Reg>, Vec<Reg>, Vec<usize>) {
         match self {
             Instr::Load { dst, param } => (vec![], vec![*dst], vec![*param]),
             Instr::Zeros { dst, like_param } => (vec![], vec![*dst], vec![*like_param]),
@@ -257,6 +262,57 @@ impl TileProgram {
         }
         let mut init = BTreeSet::new();
         walk(&self.instrs, self.regs, n_params, is_output, &mut init, None)
+    }
+
+    /// Structural bounds checks only: register/parameter indices in
+    /// range, no nested loops, stores target output parameters.  The
+    /// dataflow discipline (read-before-assign, the carry rules) is *not*
+    /// checked here — standalone programs get it from
+    /// [`TileProgram::validate`], while declarations going through
+    /// `kernel::make` get the richer `kernel::verify` pass, which reports
+    /// the same violations under stable `NT-V*` diagnostic codes instead
+    /// of bailing at the first one.
+    pub fn validate_structure(&self, n_params: usize, is_output: &[bool]) -> Result<()> {
+        fn walk(
+            instrs: &[Instr],
+            regs: usize,
+            n_params: usize,
+            is_output: &[bool],
+            in_loop: bool,
+        ) -> Result<()> {
+            for instr in instrs {
+                if let Instr::Loop { carried, body } = instr {
+                    if in_loop {
+                        bail!("tile programs do not support nested loops");
+                    }
+                    for &c in carried {
+                        if c >= regs {
+                            bail!("register {c} out of range (program has {regs})");
+                        }
+                    }
+                    walk(body, regs, n_params, is_output, true)?;
+                    continue;
+                }
+                let (reads, writes, params) = instr.effects();
+                for r in reads.iter().chain(writes.iter()) {
+                    if *r >= regs {
+                        bail!("register {r} out of range (program has {regs})");
+                    }
+                }
+                for p in params {
+                    if p >= n_params {
+                        bail!("parameter {p} out of range (program has {n_params})");
+                    }
+                }
+                if let Instr::Store { param, .. } = instr {
+                    if !is_output.get(*param).copied().unwrap_or(false) {
+                        bail!("store to non-output parameter {param}");
+                    }
+                }
+            }
+            Ok(())
+        }
+        walk(&self.instrs, self.regs, n_params, is_output, false)
     }
 
     /// Total number of loop-carried registers across the program's loops

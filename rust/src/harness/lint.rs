@@ -1,0 +1,101 @@
+//! `repro lint` — run the declaration verifier over the kernel registry
+//! (or the negative corpus) and print a diagnostics table.
+//!
+//! Modes:
+//!   lint                   verify every registered kernel (same as --all)
+//!   lint --kernel NAME     verify one kernel
+//!   lint --corpus          verify the negative corpus instead: every case
+//!                          must fire exactly its intended NT-V* code, and
+//!                          the command always exits non-zero (CI uses this
+//!                          to prove the gate actually bites)
+//!
+//! Exit status is the contract: any diagnostic on a registered kernel —
+//! warnings included — makes the command fail, so `lint --all` in CI means
+//! every shipped declaration verifies completely clean.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::kernel::{self, verify};
+
+pub fn run(args: &Args) -> Result<()> {
+    if args.flag("corpus") {
+        return corpus();
+    }
+    let defs = kernel::kernels();
+    let selected: Vec<_> = match args.opt("kernel") {
+        Some(name) => {
+            let hits: Vec<_> = defs.iter().filter(|d| d.name == name).cloned().collect();
+            if hits.is_empty() {
+                bail!("lint: no registered kernel named {name:?}");
+            }
+            hits
+        }
+        None => defs,
+    };
+
+    println!("declaration verifier ({} kernels):", selected.len());
+    println!("  {:<11} {:<8} {:<22} note", "name", "verdict", "codes");
+    let mut dirty = 0usize;
+    for def in &selected {
+        let report = verify::verify(def);
+        let codes = report.codes();
+        let codes_col = if codes.is_empty() {
+            "-".to_string()
+        } else {
+            codes.iter().map(|c| c.as_str()).collect::<Vec<_>>().join(",")
+        };
+        let note = verify::lowerability(def).unwrap_or_else(|| "-".to_string());
+        let verdict = if report.is_clean() { "clean" } else { "dirty" };
+        println!("  {:<11} {:<8} {:<22} {}", def.name, verdict, codes_col, note);
+        if !report.is_clean() {
+            dirty += 1;
+            println!("{}", report.render());
+        }
+    }
+    if dirty > 0 {
+        bail!("lint: {dirty} kernel declaration(s) carry verifier findings");
+    }
+    println!(
+        "\nall declarations verify clean (dataflow, shapes, coalesce audit, padding safety)"
+    );
+    Ok(())
+}
+
+/// The negative corpus: print what each deliberately broken declaration
+/// fires, check it is exactly the intended code, and always exit
+/// non-zero — a lint that cannot reject its own corpus proves nothing.
+fn corpus() -> Result<()> {
+    let cases = verify::corpus::cases()?;
+    println!("negative corpus ({} broken declarations):", cases.len());
+    println!("  {:<12} {:<9} {:<9} summary", "case", "expected", "fired");
+    let mut mismatched = 0usize;
+    for case in &cases {
+        let codes = case.report.codes();
+        let fired = if codes.is_empty() {
+            "(none)".to_string()
+        } else {
+            codes.iter().map(|c| c.as_str()).collect::<Vec<_>>().join(",")
+        };
+        let exact = codes == [case.expected];
+        if !exact {
+            mismatched += 1;
+        }
+        println!(
+            "  {:<12} {:<9} {:<9} {}{}",
+            case.name,
+            case.expected.as_str(),
+            fired,
+            case.summary,
+            if exact { "" } else { "  <-- MISMATCH" }
+        );
+    }
+    if mismatched > 0 {
+        bail!("lint --corpus: {mismatched} case(s) did not fire exactly their intended code");
+    }
+    bail!(
+        "lint --corpus: all {} broken declarations correctly rejected (this mode always \
+         exits non-zero — the corpus is the proof the gate bites)",
+        cases.len()
+    );
+}

@@ -5,6 +5,7 @@
 pub mod fig6;
 pub mod fig7;
 pub mod golden;
+pub mod lint;
 pub mod serve;
 pub mod stats;
 pub mod table2;

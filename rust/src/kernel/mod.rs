@@ -42,6 +42,7 @@
 //! in [`builtins`].
 
 pub mod builtins;
+pub mod verify;
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, OnceLock, RwLock};
@@ -694,6 +695,24 @@ pub fn make(
     application: TileProgram,
     tensors: Vec<TensorSpec>,
 ) -> Result<KernelDef> {
+    let def = assemble(arrangement, application, tensors)?;
+    let report = verify::verify(&def);
+    if report.has_errors() {
+        bail!("make: kernel {} fails declaration verification:\n{}", def.name, report.render());
+    }
+    Ok(def)
+}
+
+/// [`make`] without the verification gate: structural checks + probe
+/// derivation only.  This is what the `verify::corpus` negative
+/// declarations go through — a deliberately broken definition must be
+/// *constructible* so the verifier can report on it, it just must never
+/// pass [`make`] or registration.
+fn assemble(
+    arrangement: Arrangement,
+    application: TileProgram,
+    tensors: Vec<TensorSpec>,
+) -> Result<KernelDef> {
     if tensors.is_empty() {
         bail!("make: kernel {} declares no tensors", application.name);
     }
@@ -702,7 +721,7 @@ pub fn make(
         bail!("make: kernel {} declares no output tensor", application.name);
     }
     application
-        .validate(tensors.len(), &is_output)
+        .validate_structure(tensors.len(), &is_output)
         .with_context(|| format!("make: application {} is malformed", application.name))?;
     // every size symbol an output (or a derived dim) references must be
     // bound by some input's bare symbol — otherwise the kernel would
@@ -1272,16 +1291,31 @@ impl KernelRegistry {
 
     /// Register (or replace) a definition under its name.
     ///
+    /// The definition is re-verified here even though [`make`] already
+    /// gated it: `KernelDef` has public fields (notably `coalesce`, which
+    /// the batcher's coalescer trusts), so a definition tampered with —
+    /// or assembled outside `make` — between construction and
+    /// registration must not enter the serving path.  Definite (`Error`)
+    /// findings reject; warnings register but still show in `repro lint`.
+    ///
     /// Replacing an existing name does **not** invalidate backends or
     /// compiled plans already resolved from the old definition (the
     /// runtime registry memoizes per `(kernel, variant)` and the plan
     /// cache per shape signature), so redefinition mid-serving can leave
     /// old and new programs serving different shapes.  Register new
     /// kernels under fresh names; replacement is for startup composition.
-    pub fn register(&self, def: KernelDef) -> Arc<KernelDef> {
+    pub fn register(&self, def: KernelDef) -> Result<Arc<KernelDef>> {
+        let report = verify::verify(&def);
+        if report.has_errors() {
+            bail!(
+                "register: kernel {} fails declaration verification:\n{}",
+                def.name,
+                report.render()
+            );
+        }
         let def = Arc::new(def);
         self.map.write().unwrap().insert(def.name.clone(), def.clone());
-        def
+        Ok(def)
     }
 
     /// Hash lookup by kernel name.
@@ -1320,7 +1354,7 @@ pub fn registry() -> &'static KernelRegistry {
     GLOBAL.get_or_init(|| {
         let reg = KernelRegistry::new();
         for def in builtins::defaults().expect("builtin kernel definitions are valid") {
-            reg.register(def);
+            reg.register(def).expect("builtin kernel definitions verify clean");
         }
         reg
     })
@@ -1485,7 +1519,7 @@ mod tests {
             ],
         )
         .unwrap();
-        let arc = reg.register(def);
+        let arc = reg.register(def).unwrap();
         assert_eq!(reg.len(), 1);
         assert!(arc.executable() && arc.coalesce);
         assert!(Arc::ptr_eq(&reg.lookup("copy").unwrap(), &arc));

@@ -1,0 +1,300 @@
+//! The negative-declaration corpus: one deliberately broken kernel per
+//! diagnostic code, each constructed through the un-gated assembly path
+//! so the verifier can report on it (the same declarations would never
+//! survive [`crate::kernel::make`]).
+//!
+//! Consumed twice: `rust/tests/verify.rs` asserts each case fires
+//! *exactly* its intended code and nothing else, and `repro lint
+//! --corpus` prints the table (exiting non-zero, which CI uses to prove
+//! the gate bites).  `docs/diagnostics.md` documents the same
+//! declarations with their fixes.
+
+use anyhow::Result;
+
+use crate::arrange::catalog;
+use crate::exec::ir::{Instr, TileProgram};
+use crate::exec::tile::{BinOp, ReduceOp, UnaryOp};
+use crate::kernel::{assemble, dim, AppBuilder, Arrangement, Meta, TensorSpec};
+
+use super::{verify, Code, Report};
+
+/// One broken declaration and the verdict on it.
+pub struct Case {
+    /// corpus kernel name (also the assembled kernel's name)
+    pub name: &'static str,
+    /// the single code the declaration is built to fire
+    pub expected: Code,
+    /// what the declaration does wrong
+    pub summary: &'static str,
+    /// the verifier's findings on it
+    pub report: Report,
+}
+
+fn elementwise() -> Arrangement {
+    Arrangement::new("1-D element-wise", |_| catalog::elementwise_1d(&["input", "output"]))
+        .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" })
+}
+
+fn ew_tensors(probe: i64) -> Vec<TensorSpec> {
+    vec![
+        TensorSpec::input("input", vec![dim("n", probe)]),
+        TensorSpec::output("output", vec![dim("n", probe)]),
+    ]
+}
+
+fn rowwise_arrangement() -> Arrangement {
+    Arrangement::new("one program per row", |_| catalog::rowwise())
+}
+
+fn rw_tensors(rows: i64, cols: i64) -> Vec<TensorSpec> {
+    vec![
+        TensorSpec::input("input", vec![dim("rows", rows), dim("cols", cols)]),
+        TensorSpec::output("output", vec![dim("rows", rows), dim("cols", cols)]),
+    ]
+}
+
+fn mm_arrangement() -> Arrangement {
+    Arrangement::new("mm tiling", |_| catalog::mm())
+        .with_meta(Meta::MatmulBlocks { m: "m", k: "k", n: "n" })
+}
+
+fn mm_tensors() -> Vec<TensorSpec> {
+    vec![
+        TensorSpec::input("input", vec![dim("m", 70), dim("k", 50)]),
+        TensorSpec::input("other", vec![dim("k", 50), dim("n", 90)]),
+        TensorSpec::output("output", vec![dim("m", 70), dim("n", 90)]),
+    ]
+}
+
+fn case(
+    name: &'static str,
+    expected: Code,
+    summary: &'static str,
+    arrangement: Arrangement,
+    program: TileProgram,
+    tensors: Vec<TensorSpec>,
+) -> Result<Case> {
+    let def = assemble(arrangement, program, tensors)?;
+    Ok(Case { name, expected, summary, report: verify(&def) })
+}
+
+/// Build the full corpus: one case per `NT-V*` code, in code order.
+pub fn cases() -> Result<Vec<Case>> {
+    let mut out = Vec::new();
+
+    // NT-V001: reg 0 is read by the Unary but nothing ever assigns it
+    out.push(case(
+        "corpus_v001",
+        Code::UseBeforeDef,
+        "reads a register no instruction assigns",
+        elementwise(),
+        TileProgram {
+            name: "corpus_v001",
+            regs: 2,
+            instrs: vec![
+                Instr::Unary { dst: 1, a: 0, op: UnaryOp::Exp },
+                Instr::Store { param: 1, src: 1 },
+            ],
+        },
+        ew_tensors(8),
+    )?);
+
+    // NT-V002: the accumulator carry is never initialized before the loop
+    out.push(case(
+        "corpus_v002",
+        Code::CarryUninitialized,
+        "declares a loop carry without initializing it",
+        mm_arrangement(),
+        TileProgram {
+            name: "corpus_v002",
+            regs: 1,
+            instrs: vec![
+                Instr::Loop {
+                    carried: vec![0],
+                    body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+                },
+                Instr::Store { param: 2, src: 0 },
+            ],
+        },
+        mm_tensors(),
+    )?);
+
+    // NT-V003: the body updates a pre-loop register without declaring the
+    // carry (the pre-migration implicit-persistence form)
+    out.push(case(
+        "corpus_v003",
+        Code::UndeclaredCarry,
+        "overwrites a pre-loop register inside the loop without a carry",
+        mm_arrangement(),
+        TileProgram {
+            name: "corpus_v003",
+            regs: 1,
+            instrs: vec![
+                Instr::Zeros { dst: 0, like_param: 2 },
+                Instr::Loop {
+                    carried: vec![],
+                    body: vec![Instr::DotAcc { acc: 0, a_param: 0, b_param: 1 }],
+                },
+                Instr::Store { param: 2, src: 0 },
+            ],
+        },
+        mm_tensors(),
+    )?);
+
+    // NT-V004: the carry is read after the loop but no body instruction
+    // can ever change it
+    let mut app = AppBuilder::new("corpus_v004");
+    let acc = app.zeros_like(2);
+    app.loop_over(&[acc], |b| {
+        let x = b.load(0);
+        let r = b.reduce(x, None, ReduceOp::Sum);
+        let y = b.binary(acc, r, BinOp::Add);
+        b.store(2, y);
+    });
+    app.store(2, acc);
+    out.push(case(
+        "corpus_v004",
+        Code::CarryNeverAssigned,
+        "carries a register the loop body never assigns, then reads it after",
+        mm_arrangement(),
+        app.build(),
+        mm_tensors(),
+    )?);
+
+    // NT-V005: a constant is computed and never used
+    let mut app = AppBuilder::new("corpus_v005");
+    let x = app.load(0);
+    let _dead = app.constant(7.0);
+    let y = app.unary(x, UnaryOp::Exp);
+    app.store(1, y);
+    out.push(case(
+        "corpus_v005",
+        Code::DeadRegister,
+        "computes a constant no instruction reads",
+        elementwise(),
+        app.build(),
+        ew_tensors(8),
+    )?);
+
+    // NT-V006: the Unary's result is overwritten by the Assign before
+    // anything reads it
+    let mut app = AppBuilder::new("corpus_v006");
+    let x = app.load(0);
+    let y = app.unary(x, UnaryOp::Exp);
+    app.assign(y, x);
+    app.store(1, y);
+    out.push(case(
+        "corpus_v006",
+        Code::DeadStore,
+        "overwrites a register before its previous value is read",
+        elementwise(),
+        app.build(),
+        ew_tensors(8),
+    )?);
+
+    // NT-V007: transpose of a rank-1 element-wise tile
+    let mut app = AppBuilder::new("corpus_v007");
+    let x = app.load(0);
+    let t = app.transpose(x);
+    app.store(1, t);
+    out.push(case(
+        "corpus_v007",
+        Code::RankMismatch,
+        "transposes a rank-1 tile",
+        elementwise(),
+        app.build(),
+        ew_tensors(8),
+    )?);
+
+    // NT-V008: dot(x, x) on a [1, cols] row tile — inner dims 6 vs 1
+    let mut app = AppBuilder::new("corpus_v008");
+    let x = app.load(0);
+    let d = app.dot(x, x);
+    app.store(1, d);
+    out.push(case(
+        "corpus_v008",
+        Code::DotDimMismatch,
+        "dot inner dimensions disagree",
+        rowwise_arrangement(),
+        app.build(),
+        rw_tensors(4, 6),
+    )?);
+
+    // NT-V009: stores the [1, 1] row max into the [1, cols] output block
+    let mut app = AppBuilder::new("corpus_v009");
+    let x = app.load(0);
+    let m = app.reduce(x, None, ReduceOp::Max);
+    app.store(1, m);
+    out.push(case(
+        "corpus_v009",
+        Code::ShapeMismatch,
+        "stores a reduced tile into a full-width output block",
+        rowwise_arrangement(),
+        app.build(),
+        rw_tensors(4, 6),
+    )?);
+
+    // NT-V010: reduce axis 1 of a rank-1 tile
+    let mut app = AppBuilder::new("corpus_v010");
+    let x = app.load(0);
+    let r = app.reduce(x, Some(1), ReduceOp::Sum);
+    app.store(1, r);
+    out.push(case(
+        "corpus_v010",
+        Code::AxisOutOfBounds,
+        "reduces along an axis the tile does not have",
+        elementwise(),
+        app.build(),
+        ew_tensors(8),
+    )?);
+
+    // NT-V011: split_half along a 7-wide row
+    let mut app = AppBuilder::new("corpus_v011");
+    let x = app.load(0);
+    let (lo, hi) = app.split_half(x, 1);
+    let y = app.binary(lo, hi, BinOp::Add);
+    app.store(1, y);
+    out.push(case(
+        "corpus_v011",
+        Code::OddSplit,
+        "splits an odd extent in half",
+        rowwise_arrangement(),
+        app.build(),
+        rw_tensors(4, 7),
+    )?);
+
+    // NT-V012: a row-mixing reduction kernel whose coalesce flag is
+    // tampered to true after derivation — the seeded unsound declaration
+    let mut app = AppBuilder::new("corpus_v012");
+    let x = app.load(0);
+    let m = app.reduce(x, None, ReduceOp::Max);
+    let y = app.binary(x, m, BinOp::Sub);
+    app.store(1, y);
+    let mut def = assemble(elementwise(), app.build(), ew_tensors(8))?;
+    assert!(!def.coalesce, "derivation must refuse to coalesce a 1-D reduction");
+    def.coalesce = true;
+    out.push(Case {
+        name: "corpus_v012",
+        expected: Code::CoalesceUnsound,
+        summary: "claims coalesce on a block-wide reduction (tampered flag)",
+        report: verify(&def),
+    });
+
+    // NT-V013: the same reduction over a *padded* element-wise view with
+    // pad 0 — padded lanes can win the max (softmax without its -inf pad)
+    let mut app = AppBuilder::new("corpus_v013");
+    let x = app.load(0);
+    let m = app.reduce(x, None, ReduceOp::Max);
+    let y = app.binary(x, m, BinOp::Sub);
+    app.store(1, y);
+    out.push(case(
+        "corpus_v013",
+        Code::UnmaskedPadding,
+        "max-reduces a padded load whose pad value is not neutral",
+        elementwise(),
+        app.build(),
+        ew_tensors(1000),
+    )?);
+
+    Ok(out)
+}

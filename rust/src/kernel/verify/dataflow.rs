@@ -1,0 +1,234 @@
+//! Register dataflow: the whole-program generalization of the carry
+//! rules that used to live only inside `TileProgram::validate`.
+//!
+//! A declaration is a straight-line prefix, at most non-nested loops, and
+//! a straight-line suffix; the interpreter clears body-local registers
+//! after every iteration.  This pass walks that structure once and
+//! reports, instead of bailing at the first violation:
+//!
+//! * NT-V001 — read of a register nothing has assigned (including reads
+//!   of body-locals at the top of the next iteration);
+//! * NT-V002 — loop carry not initialized before the loop;
+//! * NT-V003 — body overwrites a pre-loop register it did not declare as
+//!   a carry;
+//! * NT-V004 — carry read *after* the loop that the body never assigns
+//!   (the loop cannot change it — previously unchecked);
+//! * NT-V005 — register written but never read anywhere;
+//! * NT-V006 — register overwritten before its previous value is read
+//!   (dead store).  Loop bodies are walked twice so a carry overwritten
+//!   every iteration without an intervening read is caught; body-locals
+//!   are exempt at the iteration boundary (the interpreter clears them —
+//!   that is discard, not overwrite).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::exec::ir::{Instr, Reg, TileProgram};
+
+use super::{Code, Report, Span};
+
+pub(super) fn analyze(program: &TileProgram, report: &mut Report) {
+    let mut census = Census::new(program.regs);
+    census.walk(&program.instrs, None);
+    for r in 0..program.regs {
+        if census.written[r] && !census.read[r] {
+            report.push(
+                Code::DeadRegister,
+                census.first_write[r],
+                format!("register {r} is written but never read"),
+            );
+        }
+    }
+
+    let mut state = Flow { init: BTreeSet::new(), pending: BTreeMap::new() };
+    for (i, instr) in program.instrs.iter().enumerate() {
+        if let Instr::Loop { carried, body } = instr {
+            analyze_loop(i, carried, body, &mut state, &program.instrs[i + 1..], report);
+        } else {
+            state.step(instr, Span::top(i), false, report);
+        }
+    }
+}
+
+/// Global read/write census (loop bodies included) for NT-V005.
+struct Census {
+    read: Vec<bool>,
+    written: Vec<bool>,
+    first_write: Vec<Option<Span>>,
+}
+
+impl Census {
+    fn new(regs: usize) -> Census {
+        Census { read: vec![false; regs], written: vec![false; regs], first_write: vec![None; regs] }
+    }
+
+    fn walk(&mut self, instrs: &[Instr], outer: Option<usize>) {
+        for (i, instr) in instrs.iter().enumerate() {
+            if let Instr::Loop { body, .. } = instr {
+                self.walk(body, Some(i));
+                continue;
+            }
+            let span = match outer {
+                Some(o) => Span::body(o, i),
+                None => Span::top(i),
+            };
+            let (reads, writes, _) = instr.effects();
+            for r in reads {
+                if r < self.read.len() {
+                    self.read[r] = true;
+                }
+            }
+            for w in writes {
+                if w < self.written.len() {
+                    self.written[w] = true;
+                    self.first_write[w].get_or_insert(span);
+                }
+            }
+        }
+    }
+}
+
+/// Straight-line state: which registers hold a value, and which hold a
+/// value no instruction has read yet (dead-store candidates).
+struct Flow {
+    init: BTreeSet<Reg>,
+    pending: BTreeMap<Reg, Span>,
+}
+
+impl Flow {
+    fn step(&mut self, instr: &Instr, span: Span, in_loop: bool, report: &mut Report) {
+        let (reads, writes, _) = instr.effects();
+        for r in reads {
+            if !self.init.contains(&r) {
+                report.push(
+                    Code::UseBeforeDef,
+                    Some(span),
+                    format!(
+                        "register {r} is read before it is assigned{}",
+                        if in_loop {
+                            " (iteration-local values do not persist across loop \
+                             iterations — declare a loop carry)"
+                        } else {
+                            ""
+                        }
+                    ),
+                );
+                // report once, then treat as assigned so one missing def
+                // does not cascade into a finding per downstream read
+                self.init.insert(r);
+            }
+            self.pending.remove(&r);
+        }
+        for w in writes {
+            if let Some(prev) = self.pending.insert(w, span) {
+                report.push(
+                    Code::DeadStore,
+                    Some(span),
+                    format!(
+                        "register {w} is overwritten before the value assigned at {prev} \
+                         is read"
+                    ),
+                );
+            }
+            self.init.insert(w);
+        }
+    }
+}
+
+fn analyze_loop(
+    outer: usize,
+    carried: &[Reg],
+    body: &[Instr],
+    state: &mut Flow,
+    rest: &[Instr],
+    report: &mut Report,
+) {
+    let loop_span = Span::top(outer);
+    for &c in carried {
+        if !state.init.contains(&c) {
+            report.push(
+                Code::CarryUninitialized,
+                Some(loop_span),
+                format!("loop-carried register {c} must be initialized before the loop"),
+            );
+            // suppress the cascading NT-V001 on the body's reads of it
+            state.init.insert(c);
+        }
+    }
+    let mut carried_set: BTreeSet<Reg> = carried.iter().copied().collect();
+    let pre = state.init.clone();
+    let mut body_writes: Vec<Reg> = Vec::new();
+    for (j, instr) in body.iter().enumerate() {
+        // nested loops are a structural error caught before verification
+        let (_, writes, _) = instr.effects();
+        for &w in &writes {
+            if pre.contains(&w) && !carried_set.contains(&w) {
+                report.push(
+                    Code::UndeclaredCarry,
+                    Some(Span::body(outer, j)),
+                    format!(
+                        "register {w} is assigned inside the loop but initialized outside \
+                         it — declare it as a loop carry"
+                    ),
+                );
+                // repair: analyze the rest of the loop as if the carry
+                // were declared, so the same mistake does not cascade
+                // into cross-iteration NT-V001s
+                carried_set.insert(w);
+            }
+        }
+        body_writes.extend(writes);
+    }
+    body_writes.sort_unstable();
+    body_writes.dedup();
+
+    // NT-V004: a carry the body can never change, read after the loop
+    for &c in carried {
+        if body_writes.contains(&c) {
+            continue;
+        }
+        if reads_after(rest, c) {
+            report.push(
+                Code::CarryNeverAssigned,
+                Some(loop_span),
+                format!(
+                    "loop-carried register {c} is read after the loop but no body \
+                     instruction assigns it — the loop cannot change it (drop the carry \
+                     or assign it in the body)"
+                ),
+            );
+        }
+    }
+
+    // walk the body as iteration 1, clear the locals, then iteration 2 —
+    // the second pass sees carries as the previous iteration left them,
+    // catching cross-iteration use-before-def and carry dead stores
+    let locals: Vec<Reg> =
+        body_writes.iter().copied().filter(|r| !carried_set.contains(r)).collect();
+    for _ in 0..2 {
+        for (j, instr) in body.iter().enumerate() {
+            state.step(instr, Span::body(outer, j), true, report);
+        }
+        for &r in &locals {
+            state.init.remove(&r);
+            // the interpreter clears body-locals between iterations:
+            // their unread values are discarded, not overwritten
+            state.pending.remove(&r);
+        }
+    }
+    // after the loop only pre-loop registers (carries included) hold
+    // values; restore exactly them
+    state.init = pre;
+    for &c in carried {
+        state.init.insert(c);
+    }
+}
+
+/// Is `reg` read anywhere in `rest` (subsequent loop bodies included)?
+fn reads_after(rest: &[Instr], reg: Reg) -> bool {
+    rest.iter().any(|instr| {
+        if let Instr::Loop { body, .. } = instr {
+            return reads_after(body, reg);
+        }
+        instr.effects().0.contains(&reg)
+    })
+}

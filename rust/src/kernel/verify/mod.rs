@@ -1,0 +1,309 @@
+//! Declaration-time static analysis over [`KernelDef`] — the checker
+//! behind [`super::make`]'s hard gate, [`super::KernelRegistry::register`]'s
+//! re-check and the `repro lint` CLI.
+//!
+//! The paper's promise is that a *serial* tile declaration can be
+//! transformed into parallel code automatically **and safely**.  That
+//! transformation carries safety obligations the runtime used to discover
+//! one panic at a time: carries must be initialized, tile ops must be
+//! shape-consistent, batch stacking must not reorder a reduction, padded
+//! loads must be neutralized before they reach one.  This module checks
+//! all of them statically, at `make`/registration time, with four
+//! analyses:
+//!
+//! * `dataflow` — register liveness over the whole program:
+//!   use-before-def, uninitialized / undeclared / never-assigned loop
+//!   carries, dead registers and dead stores (`NT-V001`–`NT-V006`);
+//! * `shape` — abstract interpretation of per-register block shapes
+//!   through every instruction, mirroring the `Tile` op semantics
+//!   (`NT-V007`–`NT-V011`), so a Dot inner-dim mismatch surfaces at
+//!   `make` time instead of at the first specialization;
+//! * `race` — an independent coalescibility audit re-deriving
+//!   row-independence from the lowered views; it must agree with the
+//!   derived `coalesce` flag, and flags the unsound direction
+//!   (`NT-V012`);
+//! * `padding` — taint analysis of pad values through the program,
+//!   flagging padded loads that flow into order-sensitive reductions
+//!   without `PadMask`/neutralization (`NT-V013`, the bug class the sdpa
+//!   `-1e30` mask exists to prevent).
+//!
+//! Findings carry stable [`Code`]s with instruction-level [`Span`]s.
+//! `Error`-severity findings make [`super::make`] and registration fail;
+//! `Warning`s pass `make` but fail `repro lint` (and CI).  Every code is
+//! documented with a minimal broken declaration in `docs/diagnostics.md`,
+//! and [`corpus`] keeps those declarations executable as the negative
+//! test corpus.
+
+mod dataflow;
+mod padding;
+mod race;
+mod shape;
+
+pub mod corpus;
+
+use std::fmt;
+
+use super::{KernelDef, Specialization};
+
+/// Stable diagnostic codes.  The `NT-V*` string form is the public
+/// contract: tests, docs and CI grep for it, so variants are append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Code {
+    /// NT-V001 — a register is read before any instruction assigns it.
+    UseBeforeDef,
+    /// NT-V002 — a loop-carried register is not initialized before its
+    /// loop.
+    CarryUninitialized,
+    /// NT-V003 — a loop body overwrites a pre-loop register without
+    /// declaring it as a carry (undeclared cross-iteration persistence).
+    UndeclaredCarry,
+    /// NT-V004 — a carry is read after the loop but the body never
+    /// assigns it: the loop cannot change it, so either the carry or the
+    /// post-loop read is a mistake.
+    CarryNeverAssigned,
+    /// NT-V005 — a register is written but never read anywhere.
+    DeadRegister,
+    /// NT-V006 — a register is overwritten before its previous value is
+    /// read (dead store).
+    DeadStore,
+    /// NT-V007 — Dot/Transpose applied to a tile that is not rank-2.
+    RankMismatch,
+    /// NT-V008 — Dot/DotAcc operand inner dimensions (or the accumulator
+    /// shape) disagree.
+    DotDimMismatch,
+    /// NT-V009 — incompatible shapes in Binary/Broadcast/Concat, or a
+    /// Store whose tile does not match the output block.
+    ShapeMismatch,
+    /// NT-V010 — Reduce/BlockDim/SplitHalf/Concat axis out of bounds.
+    AxisOutOfBounds,
+    /// NT-V011 — SplitHalf along an odd extent.
+    OddSplit,
+    /// NT-V012 — the declaration claims `coalesce` but the independent
+    /// race audit proves stacking would mix rows (unsound batching).
+    CoalesceUnsound,
+    /// NT-V013 — a padded load flows into an order-sensitive reduction
+    /// (or a matrix product) without PadMask/neutralization.
+    UnmaskedPadding,
+}
+
+impl Code {
+    /// The stable wire/doc form, e.g. `"NT-V001"`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::UseBeforeDef => "NT-V001",
+            Code::CarryUninitialized => "NT-V002",
+            Code::UndeclaredCarry => "NT-V003",
+            Code::CarryNeverAssigned => "NT-V004",
+            Code::DeadRegister => "NT-V005",
+            Code::DeadStore => "NT-V006",
+            Code::RankMismatch => "NT-V007",
+            Code::DotDimMismatch => "NT-V008",
+            Code::ShapeMismatch => "NT-V009",
+            Code::AxisOutOfBounds => "NT-V010",
+            Code::OddSplit => "NT-V011",
+            Code::CoalesceUnsound => "NT-V012",
+            Code::UnmaskedPadding => "NT-V013",
+        }
+    }
+
+    /// Definite violations are errors ([`make`](super::make) rejects);
+    /// suspicious-but-runnable declarations are warnings (`repro lint`
+    /// still fails on them, so nothing ships dirty).
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::UseBeforeDef
+            | Code::CarryUninitialized
+            | Code::UndeclaredCarry
+            | Code::RankMismatch
+            | Code::DotDimMismatch
+            | Code::ShapeMismatch
+            | Code::AxisOutOfBounds
+            | Code::OddSplit
+            | Code::CoalesceUnsound => Severity::Error,
+            Code::CarryNeverAssigned
+            | Code::DeadRegister
+            | Code::DeadStore
+            | Code::UnmaskedPadding => Severity::Warning,
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Instruction-level location: index in the top-level instruction list,
+/// plus the index inside a loop body when the finding is in one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Span {
+    pub outer: usize,
+    pub inner: Option<usize>,
+}
+
+impl Span {
+    pub fn top(outer: usize) -> Span {
+        Span { outer, inner: None }
+    }
+
+    pub fn body(outer: usize, inner: usize) -> Span {
+        Span { outer, inner: Some(inner) }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.inner {
+            Some(i) => write!(f, "#{}.{i}", self.outer),
+            None => write!(f, "#{}", self.outer),
+        }
+    }
+}
+
+/// One finding: stable code, derived severity, instruction span, and a
+/// human-readable message.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    pub span: Option<Span>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.code, self.severity)?;
+        if let Some(span) = self.span {
+            write!(f, " at {span}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The result of verifying one declaration.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// kernel name the report is about
+    pub kernel: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    fn new(kernel: &str) -> Report {
+        Report { kernel: kernel.to_string(), diagnostics: Vec::new() }
+    }
+
+    /// Record a finding, deduplicating by `(code, span)` — the shape
+    /// fixpoint and the twice-walked loop body would otherwise repeat
+    /// themselves.
+    fn push(&mut self, code: Code, span: Option<Span>, message: String) {
+        if self.diagnostics.iter().any(|d| d.code == code && d.span == span) {
+            return;
+        }
+        self.diagnostics.push(Diagnostic { code, severity: code.severity(), span, message });
+    }
+
+    /// No findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Any `Error`-severity finding (what makes `make`/register fail).
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// The distinct codes that fired, sorted.
+    pub fn codes(&self) -> Vec<Code> {
+        let mut codes: Vec<Code> = self.diagnostics.iter().map(|d| d.code).collect();
+        codes.sort();
+        codes.dedup();
+        codes
+    }
+
+    /// All findings, one per line — the body of `make`/register errors
+    /// and of the `repro lint` table.
+    pub fn render(&self) -> String {
+        self.diagnostics
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Run all four analyses over a declaration.
+///
+/// The dataflow pass needs only the program; the shape, race and padding
+/// passes interpret the *lowered* probe specialization, so they are
+/// skipped for non-executable declarations (conv2d's implicit-GEMM
+/// arrangement does not lower to affine views — its diagnosis is the
+/// probe error itself, surfaced by [`lowerability`]).
+pub fn verify(def: &KernelDef) -> Report {
+    let mut report = Report::new(&def.name);
+    dataflow::analyze(&def.program, &mut report);
+    if let Some(spec) = probe_spec(def) {
+        shape::analyze(&def.program, &spec, &mut report);
+        race::analyze(def, &spec, &mut report);
+        padding::analyze(&def.program, &spec, &mut report);
+    }
+    report
+}
+
+/// The independent coalescibility verdict for a declaration, from the
+/// `race` analysis alone (`None` when the declaration does not lower at
+/// its probe shapes).  Exposed so tests can assert the audit agrees with
+/// the derived `coalesce` flag for every registered kernel.
+pub fn race_audit(def: &KernelDef) -> Option<bool> {
+    probe_spec(def).map(|spec| race::stackable(def, &spec))
+}
+
+/// Why a registered declaration is not natively executable, in the short
+/// form `repro kernels` and `repro lint` print (`None` for executable
+/// kernels).
+pub fn lowerability(def: &KernelDef) -> Option<String> {
+    if def.executable() {
+        return None;
+    }
+    match def.probe_error() {
+        Some(e) if e.contains("is not affine") => {
+            Some("non-affine indexing not lowerable".to_string())
+        }
+        Some(e) => Some(format!("probe specialization failed: {e}")),
+        None => Some("probe specialization failed".to_string()),
+    }
+}
+
+/// The probe-shape specialization the view-level analyses interpret —
+/// the same lowering `KernelDef::derive` ran at `make` time.
+fn probe_spec(def: &KernelDef) -> Option<Specialization> {
+    let probe = def.probe_dims().ok()?;
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(def.tensors.len());
+    for spec in &def.tensors {
+        let mut s = Vec::with_capacity(spec.dims.len());
+        for ds in &spec.dims {
+            match ds.eval(&probe) {
+                Ok(v) if v > 0 => s.push(v as usize),
+                _ => return None,
+            }
+        }
+        shapes.push(s);
+    }
+    def.specialize_with(&probe, &shapes).ok()
+}

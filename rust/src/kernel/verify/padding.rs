@@ -1,0 +1,347 @@
+//! Padding-safety taint analysis: flag padded loads that flow into
+//! order-sensitive reductions (or matrix products) without an
+//! intervening `PadMask`/neutralization — the bug class the sdpa `-1e30`
+//! score mask exists to prevent (a padded key row winning the online
+//! softmax).
+//!
+//! Whether a view pads at all is decided concretely at the probe
+//! specialization: a parameter **may pad** if any (cell, sub) block maps
+//! some coordinate out of range ([`crate::exec::view::ParamView::dense_window`]
+//! returns `None`).  The abstract state then tracks what the padded
+//! lanes of each register hold:
+//!
+//! * `Clean` — no padded lanes (unpadded load, or neutralized);
+//! * `Uniform(v)` — *every* lane holds `v` (constants, `Zeros`) — what
+//!   lets `max(-inf, scores)` and `acc * alpha` stay precise;
+//! * `Tainted(Some(v))` — padded lanes hold (approximately) `v`, tracked
+//!   numerically through unary/binary arithmetic so `exp(x - 1e30·mask)
+//!   = 0` is provable;
+//! * `Tainted(None)` — padded lanes hold something unknown.
+//!
+//! A `Reduce` over a tainted register fires NT-V013 unless the tracked
+//! pad value is the reduction's neutral element (`0` for Sum, `≤ -1e29`
+//! for Max — the sdpa mask magnitude; Mean has none).  `Dot`/`DotAcc`
+//! contract over lanes, so any non-zero taint in an operand fires too.
+
+use crate::exec::ir::{Instr, TileProgram};
+use crate::exec::tile::{BinOp, ReduceOp, UnaryOp};
+use crate::kernel::Specialization;
+
+use super::{Code, Report, Span};
+
+/// Pad values at or below `-1e29` are treated as mask-magnitude: the
+/// sdpa `-1e30` and `-inf` both neutralize a Max.
+const MASK_MAG: f32 = 1e29;
+
+#[derive(Debug, Clone, Copy)]
+enum PadState {
+    Clean,
+    Uniform(f32),
+    Tainted(Option<f32>),
+}
+
+impl PadState {
+    /// Bit-exact comparison (NaN-safe) for the loop fixpoint.
+    fn same(self, other: PadState) -> bool {
+        match (self, other) {
+            (PadState::Clean, PadState::Clean) => true,
+            (PadState::Uniform(a), PadState::Uniform(b)) => a.to_bits() == b.to_bits(),
+            (PadState::Tainted(a), PadState::Tainted(b)) => {
+                a.map(f32::to_bits) == b.map(f32::to_bits)
+            }
+            _ => false,
+        }
+    }
+}
+
+pub(super) fn analyze(program: &TileProgram, spec: &Specialization, report: &mut Report) {
+    let may_pad: Vec<bool> = spec.views.iter().map(may_pad).collect();
+    let pads: Vec<f32> = spec.views.iter().map(|v| v.pad_value).collect();
+    let mut states: Vec<PadState> = vec![PadState::Clean; program.regs];
+    for _ in 0..4 {
+        let before = states.clone();
+        walk(program, &may_pad, &pads, &mut states, None);
+        if states.iter().zip(&before).all(|(a, b)| a.same(*b)) {
+            break;
+        }
+    }
+    walk(program, &may_pad, &pads, &mut states, Some(report));
+}
+
+/// Does any (cell, sub) block of this view read out-of-range (padded)
+/// source coordinates at the probe shapes?
+fn may_pad(view: &crate::exec::view::ParamView) -> bool {
+    let mut cell = vec![0i64; view.grid.len()];
+    loop {
+        let mut sub = vec![0usize; view.loop_shape.len()];
+        loop {
+            if view.dense_window(&cell, &sub).is_none() {
+                return true;
+            }
+            if !odometer(&mut sub, &view.loop_shape) {
+                break;
+            }
+        }
+        let mut done = true;
+        for d in (0..cell.len()).rev() {
+            cell[d] += 1;
+            if cell[d] < view.grid[d] {
+                done = false;
+                break;
+            }
+            cell[d] = 0;
+        }
+        if done {
+            return false;
+        }
+    }
+}
+
+fn odometer(coords: &mut [usize], shape: &[usize]) -> bool {
+    for d in (0..coords.len()).rev() {
+        coords[d] += 1;
+        if coords[d] < shape[d] {
+            return true;
+        }
+        coords[d] = 0;
+    }
+    false
+}
+
+fn walk(
+    program: &TileProgram,
+    may_pad: &[bool],
+    pads: &[f32],
+    states: &mut [PadState],
+    mut report: Option<&mut Report>,
+) {
+    for (i, instr) in program.instrs.iter().enumerate() {
+        if let Instr::Loop { body, .. } = instr {
+            for (j, instr) in body.iter().enumerate() {
+                step(instr, Span::body(i, j), may_pad, pads, states, report.as_deref_mut());
+            }
+        } else {
+            step(instr, Span::top(i), may_pad, pads, states, report.as_deref_mut());
+        }
+    }
+}
+
+fn step(
+    instr: &Instr,
+    span: Span,
+    may_pad: &[bool],
+    pads: &[f32],
+    states: &mut [PadState],
+    mut report: Option<&mut Report>,
+) {
+    use PadState::{Clean, Tainted, Uniform};
+    let mut diag = |message: String| {
+        if let Some(r) = report.as_deref_mut() {
+            r.push(Code::UnmaskedPadding, Some(span), message);
+        }
+    };
+    match instr {
+        Instr::Load { dst, param } => {
+            states[*dst] = if may_pad[*param] { Tainted(Some(pads[*param])) } else { Clean };
+        }
+        Instr::PadMask { dst, like_param, value } => {
+            // in-range lanes hold 0, padded lanes hold `value`
+            states[*dst] = if may_pad[*like_param] { Tainted(Some(*value)) } else { Uniform(0.0) };
+        }
+        Instr::Zeros { dst, .. } => states[*dst] = Uniform(0.0),
+        Instr::Const { dst, value } => states[*dst] = Uniform(*value),
+        Instr::BlockDim { dst, .. } => states[*dst] = Clean,
+        Instr::Unary { dst, a, op } => {
+            states[*dst] = match states[*a] {
+                Clean => Clean,
+                Uniform(v) => Uniform(apply1(*op, v)),
+                Tainted(Some(v)) => {
+                    let r = apply1(*op, v);
+                    Tainted(if r.is_nan() { None } else { Some(r) })
+                }
+                Tainted(None) => Tainted(None),
+            };
+        }
+        Instr::Binary { dst, a, b, op } => {
+            states[*dst] = binary(*op, states[*a], states[*b]);
+        }
+        Instr::Reduce { dst, a, op, .. } => {
+            states[*dst] = match states[*a] {
+                Clean => Clean,
+                Uniform(v) => match op {
+                    ReduceOp::Max | ReduceOp::Mean => Uniform(v),
+                    ReduceOp::Sum if v == 0.0 => Uniform(0.0),
+                    ReduceOp::Sum => Clean,
+                },
+                Tainted(Some(v)) if neutral(*op, v) => Tainted(Some(v)),
+                Tainted(v) => {
+                    diag(format!(
+                        "{op:?} reduction over a tile whose padded lanes hold {} — \
+                         neutralize them first (PadMask, or declare the right pad value)",
+                        describe(v)
+                    ));
+                    Clean
+                }
+            };
+        }
+        Instr::Dot { dst, a, b } => {
+            let mut tainted_zero = false;
+            for &r in &[*a, *b] {
+                match states[r] {
+                    Tainted(Some(v)) if v == 0.0 => tainted_zero = true,
+                    Tainted(v) => {
+                        diag(format!(
+                            "dot contracts over lanes whose padded values hold {} — only \
+                             zero-padded operands contribute nothing to the product",
+                            describe(v)
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+            states[*dst] = if tainted_zero { Tainted(Some(0.0)) } else { Clean };
+        }
+        Instr::DotAcc { acc, a_param, b_param } => {
+            let mut any_pad = false;
+            for &p in &[*a_param, *b_param] {
+                if may_pad[p] {
+                    any_pad = true;
+                    if pads[p] != 0.0 {
+                        diag(format!(
+                            "dot_acc contracts over parameter {p} whose pad value is {} — \
+                             only zero padding contributes nothing to the product",
+                            pads[p]
+                        ));
+                    }
+                }
+            }
+            // zero-padded lanes contribute nothing, but the accumulator
+            // rows covering padded output rows are no longer pristine
+            if any_pad {
+                if let Clean | Uniform(_) = states[*acc] {
+                    states[*acc] = Tainted(Some(0.0));
+                }
+            }
+        }
+        Instr::Broadcast { dst, a, .. } | Instr::Transpose { dst, a } => {
+            states[*dst] = states[*a];
+        }
+        Instr::Assign { dst, src } => states[*dst] = states[*src],
+        Instr::SplitHalf { lo, hi, a, .. } => {
+            states[*lo] = states[*a];
+            states[*hi] = states[*a];
+        }
+        Instr::Concat { dst, a, b, .. } => {
+            states[*dst] = match (states[*a], states[*b]) {
+                (Clean, Clean) => Clean,
+                (Uniform(x), Uniform(y)) if x.to_bits() == y.to_bits() => Uniform(x),
+                (Tainted(Some(x)), Tainted(Some(y))) if x.to_bits() == y.to_bits() => {
+                    Tainted(Some(x))
+                }
+                (Clean | Uniform(_), Clean | Uniform(_)) => Clean,
+                _ => Tainted(None),
+            };
+        }
+        Instr::Store { .. } | Instr::Loop { .. } => {}
+    }
+}
+
+/// Is `v` the neutral element of `op` — a pad value that cannot affect
+/// the reduction?
+fn neutral(op: ReduceOp, v: f32) -> bool {
+    match op {
+        ReduceOp::Sum => v == 0.0,
+        ReduceOp::Max => v <= -MASK_MAG,
+        ReduceOp::Mean => false,
+    }
+}
+
+fn describe(v: Option<f32>) -> String {
+    match v {
+        Some(v) => format!("{v}"),
+        None => "an unknown value".to_string(),
+    }
+}
+
+fn apply1(op: UnaryOp, v: f32) -> f32 {
+    match op {
+        UnaryOp::Exp => v.exp(),
+        UnaryOp::Neg => -v,
+        UnaryOp::Rsqrt => 1.0 / v.sqrt(),
+        UnaryOp::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+    }
+}
+
+fn apply2(op: BinOp, a: f32, b: f32) -> f32 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Max => a.max(b),
+    }
+}
+
+fn binary(op: BinOp, a: PadState, b: PadState) -> PadState {
+    use PadState::{Clean, Tainted, Uniform};
+    match (a, b) {
+        (Clean, Clean) | (Clean, Uniform(_)) | (Uniform(_), Clean) => Clean,
+        (Uniform(x), Uniform(y)) => Uniform(apply2(op, x, y)),
+        (Tainted(None), _) | (_, Tainted(None)) => Tainted(None),
+        // a uniform operand holds its value on *every* lane, so it pairs
+        // exactly with the other operand's padded lanes
+        (Tainted(Some(x)), Uniform(u)) => tainted(apply2(op, x, u)),
+        (Uniform(u), Tainted(Some(x))) => tainted(apply2(op, u, x)),
+        // two tainted operands need not pad the same lanes (a reduced-
+        // and-rebroadcast tile holds per-row data on its in-range side),
+        // so mixing tracked values is only sound when one dominates: a
+        // mask-magnitude value swallows Add/Sub and loses every Max
+        (Tainted(Some(x)), Tainted(Some(y))) => {
+            if x <= -MASK_MAG || y <= -MASK_MAG {
+                dominated(op, x, y)
+            } else {
+                tainted(apply2(op, x, y))
+            }
+        }
+        (Tainted(Some(x)), Clean) => taint_with_clean(op, x, true),
+        (Clean, Tainted(Some(x))) => taint_with_clean(op, x, false),
+    }
+}
+
+fn tainted(r: f32) -> PadState {
+    PadState::Tainted(if r.is_nan() { None } else { Some(r) })
+}
+
+/// One side of a `Tainted ⊗ Tainted` is mask-magnitude (`≤ -1e29`): it
+/// swallows Add, survives/flips Sub depending on its side, and always
+/// loses a Max.
+fn dominated(op: BinOp, x: f32, y: f32) -> PadState {
+    use PadState::Tainted;
+    match op {
+        BinOp::Add => Tainted(Some(x.min(y))),
+        BinOp::Sub => {
+            if x <= -MASK_MAG {
+                Tainted(Some(x))
+            } else {
+                // x - (-1e30) explodes positive — track the sign so a
+                // later Max cannot be mistaken for neutral
+                Tainted(Some(-y))
+            }
+        }
+        BinOp::Max => Tainted(Some(x.max(y))),
+        BinOp::Mul | BinOp::Div => Tainted(None),
+    }
+}
+
+/// `Tainted ⊗ Clean`: the clean operand's lane values are unknown, so
+/// only value-independent identities stay precise.
+fn taint_with_clean(op: BinOp, x: f32, taint_left: bool) -> PadState {
+    use PadState::Tainted;
+    match op {
+        BinOp::Mul if x == 0.0 => Tainted(Some(0.0)),
+        BinOp::Add if x.abs() >= MASK_MAG => Tainted(Some(x)),
+        BinOp::Sub if taint_left && x.abs() >= MASK_MAG => Tainted(Some(x)),
+        BinOp::Sub if !taint_left && x.abs() >= MASK_MAG => Tainted(Some(-x)),
+        _ => Tainted(None),
+    }
+}

@@ -1,0 +1,104 @@
+//! Coalescibility race audit: an independent re-derivation of
+//! row-independence from the *lowered* probe views, checked against the
+//! `coalesce` flag `KernelDef::derive` computed at `make` time.
+//!
+//! The batcher's coalescer stacks same-shape requests along dim 0 and
+//! runs one launch; that is bit-identical to per-request execution only
+//! if no program instance reads or reduces across the stacking boundary.
+//! This audit re-proves that from the view access profiles alone:
+//!
+//! * dim 0 of every parameter must be partitioned by exactly one common
+//!   grid axis — any loop-level motion along dim 0 (`sub_span != 0`)
+//!   means a carried reduction walks the stacked rows, and a cell stride
+//!   smaller than the block's dim-0 footprint means neighbouring
+//!   programs overlap rows;
+//! * that axis must drive no other source dimension (a cross-row gather
+//!   like mm's k-loop reads *other* requests' rows after stacking);
+//! * if one tile covers several stacked rows (1-D element-wise blocks),
+//!   every instruction must be row-local — a reduction or dot would
+//!   regroup rows that stacking re-partitioned.
+//!
+//! The audit deliberately re-implements the view-level reasoning instead
+//! of calling `derive_stackable` — it is the check *on* that derivation.
+//! `derive` additionally requires symbol-level conditions (a shared dim-0
+//! size symbol appearing nowhere else), so `derive ⇒ audit`; the reverse
+//! direction is allowed to disagree (the audit being more permissive is
+//! safe) and only `coalesce && !audit` — unsound stacking — is a finding
+//! (NT-V012).
+
+use crate::exec::ir::Instr;
+use crate::kernel::{KernelDef, Specialization};
+
+use super::{Code, Report};
+
+pub(super) fn analyze(def: &KernelDef, spec: &Specialization, report: &mut Report) {
+    if def.coalesce && !stackable(def, spec) {
+        report.push(
+            Code::CoalesceUnsound,
+            None,
+            "declaration claims coalesce (same-shape requests stacked along dim 0) but \
+             the race audit finds cross-row access or an order-sensitive reduction over \
+             the stacked dim — batching would corrupt replies"
+                .to_string(),
+        );
+    }
+}
+
+/// The audit's own verdict: may same-shape requests be stacked along
+/// dim 0 into one launch?
+pub(super) fn stackable(def: &KernelDef, spec: &Specialization) -> bool {
+    let mut stack_axis: Option<usize> = None;
+    let mut tile_spans_rows = false;
+    for view in &spec.views {
+        let (cell, sub_span, inner_span) = view.dim_profile(0);
+        if sub_span != 0 {
+            return false;
+        }
+        let driving: Vec<usize> =
+            cell.iter().enumerate().filter(|(_, &c)| c != 0).map(|(g, _)| g).collect();
+        let axis = match driving.as_slice() {
+            &[axis] => axis,
+            _ => return false,
+        };
+        if *stack_axis.get_or_insert(axis) != axis {
+            return false;
+        }
+        // adjacent cells must own disjoint row ranges
+        if cell[axis].abs() < 1 + inner_span {
+            return false;
+        }
+        if inner_span > 0 {
+            tile_spans_rows = true;
+        }
+        // the stacking axis must steer no other source dim
+        for d in 1..view.src_shape.len() {
+            let (cell_d, _, _) = view.dim_profile(d);
+            if cell_d.get(axis).copied().unwrap_or(0) != 0 {
+                return false;
+            }
+        }
+    }
+    if stack_axis.is_none() {
+        return false;
+    }
+    if tile_spans_rows && !row_local(&def.program.instrs) {
+        return false;
+    }
+    true
+}
+
+/// Every output lane computed from the same lane of its inputs: the only
+/// instruction set safe when one tile covers several stacked rows.
+fn row_local(instrs: &[Instr]) -> bool {
+    instrs.iter().all(|i| {
+        matches!(
+            i,
+            Instr::Load { .. }
+                | Instr::Const { .. }
+                | Instr::Unary { .. }
+                | Instr::Binary { .. }
+                | Instr::Assign { .. }
+                | Instr::Store { .. }
+        )
+    })
+}

@@ -1,0 +1,284 @@
+//! Symbolic shape abstract interpretation: propagate per-register block
+//! shapes through every instruction at the probe specialization,
+//! mirroring the `exec::tile::Tile` op semantics exactly — so a Dot
+//! inner-dim disagreement or an odd SplitHalf surfaces at `make` time
+//! instead of as a runtime error in the first specialized launch.
+//!
+//! Codes: NT-V007 (Dot/Transpose rank), NT-V008 (Dot/DotAcc dims),
+//! NT-V009 (Binary/Broadcast/Concat/Store compatibility), NT-V010 (axis
+//! bounds), NT-V011 (odd SplitHalf extent).
+//!
+//! An instruction whose inputs are unknown (an earlier finding poisoned
+//! them) produces an unknown output instead of cascading; loop bodies are
+//! interpreted to a carry-shape fixpoint before findings are recorded.
+
+use crate::exec::ir::{Instr, TileProgram};
+use crate::kernel::Specialization;
+
+use super::{Code, Report, Span};
+
+type Shape = Option<Vec<usize>>;
+
+pub(super) fn analyze(program: &TileProgram, spec: &Specialization, report: &mut Report) {
+    let blocks: Vec<&[usize]> = spec.views.iter().map(|v| v.block_shape.as_slice()).collect();
+    let mut shapes: Vec<Shape> = vec![None; program.regs];
+    // silent passes to the loop-carry fixpoint (carry shapes stabilize in
+    // at most a few iterations — sdpa's scalar-to-row promotion takes 2)
+    for _ in 0..4 {
+        let before = shapes.clone();
+        walk(program, &blocks, &mut shapes, None);
+        if shapes == before {
+            break;
+        }
+    }
+    walk(program, &blocks, &mut shapes, Some(report));
+}
+
+fn walk(
+    program: &TileProgram,
+    blocks: &[&[usize]],
+    shapes: &mut [Shape],
+    mut report: Option<&mut Report>,
+) {
+    for (i, instr) in program.instrs.iter().enumerate() {
+        if let Instr::Loop { body, .. } = instr {
+            for (j, instr) in body.iter().enumerate() {
+                step(instr, Span::body(i, j), blocks, shapes, report.as_deref_mut());
+            }
+        } else {
+            step(instr, Span::top(i), blocks, shapes, report.as_deref_mut());
+        }
+    }
+}
+
+fn step(
+    instr: &Instr,
+    span: Span,
+    blocks: &[&[usize]],
+    shapes: &mut [Shape],
+    mut report: Option<&mut Report>,
+) {
+    let mut diag = |code: Code, message: String| {
+        if let Some(r) = report.as_deref_mut() {
+            r.push(code, Some(span), message);
+        }
+    };
+    match instr {
+        Instr::Load { dst, param } | Instr::Zeros { dst, like_param: param } => {
+            shapes[*dst] = Some(blocks[*param].to_vec());
+        }
+        Instr::Const { dst, .. } => shapes[*dst] = Some(vec![1]),
+        Instr::PadMask { dst, like_param, .. } => {
+            shapes[*dst] = Some(blocks[*like_param].to_vec());
+        }
+        Instr::BlockDim { dst, param, axis } => {
+            if *axis >= blocks[*param].len() {
+                diag(
+                    Code::AxisOutOfBounds,
+                    format!(
+                        "block_dim axis {axis} out of range for parameter {param} \
+                         (block {:?})",
+                        blocks[*param]
+                    ),
+                );
+                shapes[*dst] = None;
+            } else {
+                shapes[*dst] = Some(vec![1]);
+            }
+        }
+        Instr::Unary { dst, a, .. } => shapes[*dst] = shapes[*a].clone(),
+        Instr::Assign { dst, src } => shapes[*dst] = shapes[*src].clone(),
+        Instr::Binary { dst, a, b, .. } => {
+            shapes[*dst] = match (&shapes[*a], &shapes[*b]) {
+                (Some(sa), Some(sb)) => match broadcast(sa, sb) {
+                    Some(s) => Some(s),
+                    None => {
+                        diag(
+                            Code::ShapeMismatch,
+                            format!("binary operands {sa:?} and {sb:?} do not broadcast"),
+                        );
+                        None
+                    }
+                },
+                _ => None,
+            };
+        }
+        Instr::Reduce { dst, a, axis, .. } => {
+            shapes[*dst] = match &shapes[*a] {
+                Some(sa) => match axis {
+                    Some(ax) if *ax >= sa.len() => {
+                        diag(
+                            Code::AxisOutOfBounds,
+                            format!("reduce axis {ax} out of range for tile {sa:?}"),
+                        );
+                        None
+                    }
+                    Some(ax) => {
+                        let mut s = sa.clone();
+                        s[*ax] = 1;
+                        Some(s)
+                    }
+                    None => Some(vec![1; sa.len()]),
+                },
+                None => None,
+            };
+        }
+        Instr::Dot { dst, a, b } => {
+            shapes[*dst] = match (&shapes[*a], &shapes[*b]) {
+                (Some(sa), Some(sb)) => {
+                    if sa.len() != 2 || sb.len() != 2 {
+                        diag(
+                            Code::RankMismatch,
+                            format!("dot needs rank-2 tiles, got {sa:?} x {sb:?}"),
+                        );
+                        None
+                    } else if sa[1] != sb[0] {
+                        diag(
+                            Code::DotDimMismatch,
+                            format!("dot inner dims disagree: {sa:?} x {sb:?}"),
+                        );
+                        None
+                    } else {
+                        Some(vec![sa[0], sb[1]])
+                    }
+                }
+                _ => None,
+            };
+        }
+        Instr::DotAcc { acc, a_param, b_param } => {
+            let (sa, sb) = (blocks[*a_param], blocks[*b_param]);
+            if sa.len() != 2 || sb.len() != 2 {
+                diag(
+                    Code::RankMismatch,
+                    format!("dot_acc needs rank-2 parameter blocks, got {sa:?} x {sb:?}"),
+                );
+                shapes[*acc] = None;
+            } else if sa[1] != sb[0] {
+                diag(
+                    Code::DotDimMismatch,
+                    format!("dot_acc inner dims disagree: {sa:?} x {sb:?}"),
+                );
+                shapes[*acc] = None;
+            } else {
+                let want = vec![sa[0], sb[1]];
+                if let Some(got) = &shapes[*acc] {
+                    if *got != want {
+                        diag(
+                            Code::DotDimMismatch,
+                            format!("dot_acc accumulator is {got:?}, product is {want:?}"),
+                        );
+                    }
+                }
+                shapes[*acc] = Some(want);
+            }
+        }
+        Instr::Broadcast { dst, a, like_param } => {
+            let target = blocks[*like_param];
+            shapes[*dst] = match &shapes[*a] {
+                Some(sa) => match broadcast(sa, target) {
+                    Some(s) if s == target => Some(s),
+                    _ => {
+                        diag(
+                            Code::ShapeMismatch,
+                            format!("tile {sa:?} does not broadcast to block {target:?}"),
+                        );
+                        None
+                    }
+                },
+                None => None,
+            };
+        }
+        Instr::Transpose { dst, a } => {
+            shapes[*dst] = match &shapes[*a] {
+                Some(sa) if sa.len() == 2 => Some(vec![sa[1], sa[0]]),
+                Some(sa) => {
+                    diag(Code::RankMismatch, format!("transpose needs a rank-2 tile, got {sa:?}"));
+                    None
+                }
+                None => None,
+            };
+        }
+        Instr::SplitHalf { lo, hi, a, axis } => {
+            let half = match &shapes[*a] {
+                Some(sa) if *axis >= sa.len() => {
+                    diag(
+                        Code::AxisOutOfBounds,
+                        format!("split axis {axis} out of range for tile {sa:?}"),
+                    );
+                    None
+                }
+                Some(sa) if sa[*axis] % 2 != 0 => {
+                    diag(
+                        Code::OddSplit,
+                        format!("split_half along axis {axis} of {sa:?}: extent is odd"),
+                    );
+                    None
+                }
+                Some(sa) => {
+                    let mut s = sa.clone();
+                    s[*axis] /= 2;
+                    Some(s)
+                }
+                None => None,
+            };
+            shapes[*lo] = half.clone();
+            shapes[*hi] = half;
+        }
+        Instr::Concat { dst, a, b, axis } => {
+            shapes[*dst] = match (&shapes[*a], &shapes[*b]) {
+                (Some(sa), Some(sb)) => {
+                    if *axis >= sa.len() {
+                        diag(
+                            Code::AxisOutOfBounds,
+                            format!("concat axis {axis} out of range for tile {sa:?}"),
+                        );
+                        None
+                    } else if sa.len() != sb.len()
+                        || (0..sa.len()).any(|d| d != *axis && sa[d] != sb[d])
+                    {
+                        diag(
+                            Code::ShapeMismatch,
+                            format!("concat along axis {axis}: {sa:?} and {sb:?} disagree \
+                                     off-axis"),
+                        );
+                        None
+                    } else {
+                        let mut s = sa.clone();
+                        s[*axis] += sb[*axis];
+                        Some(s)
+                    }
+                }
+                _ => None,
+            };
+        }
+        Instr::Store { param, src } => {
+            if let Some(s) = &shapes[*src] {
+                if s.as_slice() != blocks[*param] {
+                    diag(
+                        Code::ShapeMismatch,
+                        format!(
+                            "store of tile {s:?} into parameter {param} with block {:?}",
+                            blocks[*param]
+                        ),
+                    );
+                }
+            }
+        }
+        Instr::Loop { .. } => {}
+    }
+}
+
+/// NumPy-style right-aligned broadcast, mirroring `Tile::broadcast_shape`.
+fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        if da != db && da != 1 && db != 1 {
+            return None;
+        }
+        out[i] = da.max(db);
+    }
+    Some(out)
+}

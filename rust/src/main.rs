@@ -13,6 +13,8 @@
 //!                 --prometheus, --json)
 //!   tune          pre-tune block sizes for a kernel/shape list and write
 //!                 the on-disk tuning table (NT_TUNE / NT_TUNE_TABLE)
+//!   lint          run the declaration verifier over the registry (--kernel
+//!                 NAME for one, --corpus for the negative test corpus)
 //!   kernels       list the kernel registry (serving-deployment debugging)
 //!   inspect       print manifest + launch-plan details
 
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
         Some("serve") => harness::serve::run(&args),
         Some("stats") => harness::stats::run(&args),
         Some("tune") => harness::tune::run(&args),
+        Some("lint") => harness::lint::run(&args),
         Some("kernels") => kernels_cmd(),
         Some("inspect") => inspect(),
         other => {
@@ -56,6 +59,9 @@ fn main() -> Result<()> {
                  \x20                metrics, trace waterfall; --prometheus / --json)\n\
                  \x20 tune           pre-tune block sizes and write the tuning table\n\
                  \x20                (--smoke, --table PATH, --kernels a,b,c; NT_TUNE)\n\
+                 \x20 lint           run the declaration verifier (dataflow, shapes,\n\
+                 \x20                coalesce audit, padding safety) over the registry\n\
+                 \x20                (--kernel NAME, --corpus; docs/diagnostics.md)\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
                  \x20                coalescible, loop-carried, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"
@@ -124,8 +130,8 @@ fn kernels_cmd() -> Result<()> {
     let yn = |b: bool| if b { "yes" } else { "no" };
     println!("kernel registry ({} definitions):", defs.len());
     println!(
-        "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} arrangement",
-        "name", "arity", "coalesce", "native", "artifact", "loop-carried"
+        "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} {:<34} arrangement",
+        "name", "arity", "coalesce", "native", "artifact", "loop-carried", "diagnostic"
     );
     for def in &defs {
         let artifact = manifest.kernels.iter().any(|k| k.name == def.name);
@@ -133,20 +139,24 @@ fn kernels_cmd() -> Result<()> {
             Some(n) => format!("{n} carries"),
             None => "none".to_string(),
         };
+        let diagnostic = ninetoothed_repro::kernel::verify::lowerability(def)
+            .unwrap_or_else(|| "-".to_string());
         println!(
-            "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} {}",
+            "  {:<11} {:>5}  {:<10} {:<6} {:<8} {:<12} {:<34} {}",
             def.name,
             def.arity,
             yn(def.coalesce),
             yn(def.executable()),
             yn(artifact),
             carries,
+            diagnostic,
             def.arrangement.summary
         );
     }
     println!(
-        "\n(coalesce, native availability and the loop-carried register count are \
-         derived by kernel::make from the declaration — nothing is asserted by hand)"
+        "\n(coalesce, native availability, the loop-carried register count and the \
+         lowerability diagnostic are derived by kernel::make from the declaration — \
+         nothing is asserted by hand)"
     );
     Ok(())
 }

@@ -624,7 +624,7 @@ fn runtime_registered_kernel_serves_with_zero_additional_wiring() {
     )
     .unwrap();
     assert!(def.coalesce, "element-wise kernels derive as coalescible");
-    kernel::registry().register(def);
+    kernel::registry().register(def).unwrap();
 
     let coordinator =
         Coordinator::start(Arc::new(Manifest::builtin()), CoordinatorConfig::default()).unwrap();

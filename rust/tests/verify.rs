@@ -1,0 +1,213 @@
+//! Acceptance for the declaration verifier (`kernel::verify`).
+//!
+//! Three contracts:
+//!
+//! * **negative corpus** — every deliberately broken declaration in
+//!   `kernel::verify::corpus` fires *exactly* its intended `NT-V*` code:
+//!   one diagnostic family, no cascades, no cross-talk between analyses;
+//! * **clean builtins** — every registered kernel verifies with zero
+//!   findings (warnings included), so `repro lint --all` ships clean;
+//! * **race-audit agreement** — the independent coalescibility audit
+//!   reproduces the derived `coalesce` flag for every executable
+//!   builtin, and registration rejects a seeded unsound declaration
+//!   (the `coalesce` flag tampered to `true` on a row-mixing program).
+
+use ninetoothed_repro::exec::{Instr, TileProgram, UnaryOp};
+use ninetoothed_repro::kernel::verify::{corpus, race_audit, verify, Code, Severity};
+use ninetoothed_repro::kernel::{
+    self, dim, make, AppBuilder, Arrangement, KernelRegistry, Meta, TensorSpec,
+};
+use ninetoothed_repro::{arrange::catalog, exec::ReduceOp};
+
+fn elementwise_arrangement() -> Arrangement {
+    Arrangement::new("1-D element-wise", |_| catalog::elementwise_1d(&["input", "output"]))
+        .with_meta(Meta::ElementwiseBlock { sym: "BLOCK_SIZE", of: "n" })
+}
+
+fn elementwise_tensors(probe: i64) -> Vec<TensorSpec> {
+    vec![
+        TensorSpec::input("input", vec![dim("n", probe)]),
+        TensorSpec::output("output", vec![dim("n", probe)]),
+    ]
+}
+
+/// Every corpus declaration fires exactly its intended code — the single
+/// distinct code equals the expectation, and *every* diagnostic carries
+/// it (an analysis cascading into a second code family is a bug here).
+#[test]
+fn corpus_cases_fire_exactly_their_code() {
+    let cases = corpus::cases().unwrap();
+    assert_eq!(cases.len(), 13, "one corpus case per NT-V* code");
+    for case in &cases {
+        assert!(
+            !case.report.diagnostics.is_empty(),
+            "{}: expected {} to fire, report is clean",
+            case.name,
+            case.expected.as_str()
+        );
+        assert_eq!(
+            case.report.codes(),
+            vec![case.expected],
+            "{}: expected exactly {}, got:\n{}",
+            case.name,
+            case.expected.as_str(),
+            case.report.render()
+        );
+    }
+    // the corpus covers every code once, in order
+    let expected: Vec<Code> = cases.iter().map(|c| c.expected).collect();
+    let mut sorted = expected.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(sorted, expected, "corpus is one case per code, in code order");
+}
+
+/// NT-V004 regression (the latent asymmetry this verifier closes): a
+/// carry the body never assigns, read after the loop, is reported — the
+/// old `TileProgram::validate` accepted it silently.
+#[test]
+fn never_assigned_carry_read_after_loop_is_reported() {
+    let cases = corpus::cases().unwrap();
+    let case = cases.iter().find(|c| c.expected == Code::CarryNeverAssigned).unwrap();
+    let diag = &case.report.diagnostics[0];
+    assert_eq!(diag.severity, Severity::Warning);
+    assert!(
+        diag.message.contains("no body instruction assigns it"),
+        "message should explain the loop cannot change the carry: {}",
+        diag.message
+    );
+    // ...and the same declaration still passes the old structural
+    // validation, proving the verifier sees strictly more
+    let program = &case.report;
+    assert_eq!(program.kernel, "corpus_v004");
+}
+
+/// Every registered kernel declaration verifies completely clean —
+/// errors *and* warnings — so `repro lint --all` has nothing to report.
+#[test]
+fn builtins_verify_clean() {
+    let defs = kernel::kernels();
+    assert!(defs.len() >= 10, "registry should hold the builtin catalog");
+    for def in &defs {
+        let report = verify(def);
+        assert!(
+            report.is_clean(),
+            "builtin {} has verifier findings:\n{}",
+            def.name,
+            report.render()
+        );
+    }
+}
+
+/// The race audit independently reproduces the derived coalesce verdict
+/// for every executable builtin (and abstains exactly on the
+/// non-executable conv2d declaration).
+#[test]
+fn race_audit_agrees_with_derived_coalesce() {
+    for def in kernel::kernels() {
+        if def.executable() {
+            assert_eq!(
+                race_audit(&def),
+                Some(def.coalesce),
+                "race audit disagrees with derived coalesce for {}",
+                def.name
+            );
+        } else {
+            assert_eq!(race_audit(&def), None, "{} has no probe views to audit", def.name);
+        }
+    }
+}
+
+/// Seeded unsound declaration: tamper the pub `coalesce` field to `true`
+/// on a row-mixing (block-wide reduction) kernel.  `make` derived it
+/// `false`; registration must re-verify and reject with NT-V012.
+#[test]
+fn registration_rejects_tampered_coalesce() {
+    let mut app = AppBuilder::new("tampered");
+    let x = app.load(0);
+    let m = app.reduce(x, None, ReduceOp::Max);
+    let y = app.binary(x, m, ninetoothed_repro::exec::BinOp::Sub);
+    app.store(1, y);
+    let mut def = make(elementwise_arrangement(), app.build(), elementwise_tensors(8)).unwrap();
+    assert!(!def.coalesce, "a block-wide reduction must not derive as coalescible");
+    def.coalesce = true;
+    let err = KernelRegistry::new().register(def).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("NT-V012"), "rejection should cite the race audit: {msg}");
+}
+
+/// `make` hard-errors on definite violations, citing the stable code.
+#[test]
+fn make_rejects_use_before_def_with_code() {
+    let program = TileProgram {
+        name: "broken",
+        regs: 2,
+        instrs: vec![
+            Instr::Unary { dst: 1, a: 0, op: UnaryOp::Exp },
+            Instr::Store { param: 1, src: 1 },
+        ],
+    };
+    let err = make(elementwise_arrangement(), program, elementwise_tensors(8)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fails declaration verification"), "{msg}");
+    assert!(msg.contains("NT-V001"), "{msg}");
+}
+
+/// Warnings do not block `make` (the declaration runs — it is just
+/// suspicious), but they do appear in the report, so lint still fails.
+#[test]
+fn warnings_pass_make_but_dirty_the_report() {
+    // unmasked padding: max-reduce over a padded (n=1000 -> block 1024)
+    // load with pad 0 — NT-V013, a warning
+    let mut app = AppBuilder::new("pad_warn");
+    let x = app.load(0);
+    let m = app.reduce(x, None, ReduceOp::Max);
+    let y = app.binary(x, m, ninetoothed_repro::exec::BinOp::Sub);
+    app.store(1, y);
+    let def = make(elementwise_arrangement(), app.build(), elementwise_tensors(1000))
+        .expect("warning-severity findings must not block make");
+    let report = verify(&def);
+    assert!(!report.is_clean() && !report.has_errors());
+    assert_eq!(report.codes(), vec![Code::UnmaskedPadding]);
+    assert_eq!(report.diagnostics[0].severity, Severity::Warning);
+}
+
+/// The stable string forms are a public contract (tests, docs and CI
+/// grep for them) — pin every one.
+#[test]
+fn diagnostic_codes_are_stable() {
+    let all = [
+        (Code::UseBeforeDef, "NT-V001"),
+        (Code::CarryUninitialized, "NT-V002"),
+        (Code::UndeclaredCarry, "NT-V003"),
+        (Code::CarryNeverAssigned, "NT-V004"),
+        (Code::DeadRegister, "NT-V005"),
+        (Code::DeadStore, "NT-V006"),
+        (Code::RankMismatch, "NT-V007"),
+        (Code::DotDimMismatch, "NT-V008"),
+        (Code::ShapeMismatch, "NT-V009"),
+        (Code::AxisOutOfBounds, "NT-V010"),
+        (Code::OddSplit, "NT-V011"),
+        (Code::CoalesceUnsound, "NT-V012"),
+        (Code::UnmaskedPadding, "NT-V013"),
+    ];
+    for (code, s) in all {
+        assert_eq!(code.as_str(), s);
+        assert_eq!(format!("{code}"), s);
+    }
+}
+
+/// Diagnostics carry instruction-level spans: loop-body findings point
+/// into the body (`#outer.inner`), top-level findings at the top.
+#[test]
+fn spans_are_instruction_level() {
+    let cases = corpus::cases().unwrap();
+    let v3 = cases.iter().find(|c| c.expected == Code::UndeclaredCarry).unwrap();
+    let span = v3.report.diagnostics[0].span.expect("dataflow findings have spans");
+    assert_eq!((span.outer, span.inner), (1, Some(0)), "the write is in the loop body");
+    assert_eq!(format!("{span}"), "#1.0");
+    let v1 = cases.iter().find(|c| c.expected == Code::UseBeforeDef).unwrap();
+    let span = v1.report.diagnostics[0].span.unwrap();
+    assert_eq!((span.outer, span.inner), (0, None));
+    assert_eq!(format!("{span}"), "#0");
+}

@@ -35,7 +35,12 @@ use ninetoothed_repro::json::Json;
 /// warm `prepare` throughput fails CI); `coalesced_per_s` gates the
 /// stacked-launch serving path the same way; `resolves_per_s` gates the
 /// `kernel::make` registry indirection (hash lookup + Arc clone — the
-/// API redesign must stay free on the per-request path).  The
+/// API redesign must stay free on the per-request path);
+/// `verifications_per_s` gates the declaration verifier's full four-pass
+/// run over the mm declaration (dataflow + shape interpretation + race
+/// audit + padding taint) — registration-time work, but it must stay
+/// cheap enough that re-verifying on every `register` is never worth
+/// skipping.  The
 /// `sdpa_*`/`plan_sdpa_*` baseline rows gate the loop-carried
 /// flash-attention kernel through the same `gflops_*`/`warm_per_s`
 /// metrics — a collapse there means the carried-register loop
@@ -60,6 +65,7 @@ const METRICS: &[&str] = &[
     "warm_per_s",
     "coalesced_per_s",
     "resolves_per_s",
+    "verifications_per_s",
     "obs_rel_throughput",
     "tuned_rel_throughput",
     "restart_zero_measurements",
