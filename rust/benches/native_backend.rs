@@ -15,7 +15,8 @@
 //!    evidence, gated so a warm-path regression fails CI;
 //! 4. **coalescing** — N same-shape requests executed sequentially vs
 //!    stacked into one grid launch (requests/s both ways), plus the
-//!    observability-overhead and **autotune** gates (tuned winner vs the
+//!    observability-overhead, **flight-recorder** (NDJSON event log on
+//!    the admit path) and **autotune** gates (tuned winner vs the
 //!    block-size heuristic; warm tuning-table restart must re-measure
 //!    nothing);
 //! 5. the **artifact path** for context, when AOT artifacts + a PJRT
@@ -38,7 +39,7 @@ use std::time::Duration;
 use ninetoothed_repro::benchkit::{bench_for, fmt_duration, Table};
 use ninetoothed_repro::coordinator::Coalescer;
 use ninetoothed_repro::exec::{self, GridScheduler, PlanCache, Tile, TuneMode, Tuner};
-use ninetoothed_repro::obs::{MetricsRegistry, Span, SpanKind, Trace, TraceRecorder};
+use ninetoothed_repro::obs::{EventLog, MetricsRegistry, Span, SpanKind, Trace, TraceRecorder};
 use ninetoothed_repro::json::Json;
 use ninetoothed_repro::prng::SplitMix64;
 use ninetoothed_repro::runtime::{HostTensor, Manifest, Registry, Runtime};
@@ -437,6 +438,8 @@ fn main() {
                         coalesced: true,
                         plan_hit: Some(true),
                         total_us: 64,
+                        trace_id: None,
+                        client_id: None,
                         spans: vec![
                             Span { kind: SpanKind::Queued, start_us: 0, end_us: 8 },
                             Span { kind: SpanKind::Execute, start_us: 8, end_us: 60 },
@@ -463,6 +466,62 @@ fn main() {
             ("coalesced_per_s", Json::Num(coal_per_s)),
             ("obs_rel_throughput", Json::Num(rel)),
         ]));
+    }
+
+    // -- 4b2. flight-recorder overhead: the same serving-shaped coalesced
+    //         execution with an admit event written per request through an
+    //         enabled NDJSON EventLog (one locked write_all per line).
+    //         Gated: `eventlog_rel_throughput` must stay >= 0.95 of the
+    //         bare execution (baseline row tolerance).
+    {
+        let reqs = 8usize;
+        let (r, c) = (16usize, 256usize);
+        let kernel = exec::lookup("softmax").expect("softmax");
+        let per_request: Vec<Vec<HostTensor>> =
+            (0..reqs).map(|_| vec![HostTensor::randn(vec![r, c], &mut rng)]).collect();
+        let refs: Vec<Vec<&HostTensor>> =
+            per_request.iter().map(|inputs| inputs.iter().collect()).collect();
+        let stacked = Coalescer::stack(&refs).expect("stack");
+        let pooled = GridScheduler::pooled(threads);
+        let cache = PlanCache::new(8);
+        let stacked_shapes: Vec<&[usize]> = stacked.iter().map(|t| t.shape.as_slice()).collect();
+        let plan = cache.prepare(&kernel, "nt", &stacked_shapes).expect("plan");
+        let bare = bench_for(1, min_time, || {
+            let outs = plan.execute(&stacked, &pooled).expect("bare run");
+            Coalescer::unstack(reqs, outs).expect("unstack");
+        });
+        let log_path =
+            std::env::temp_dir().join(format!("nt_bench_events_{}.ndjson", std::process::id()));
+        let _ = std::fs::remove_file(&log_path);
+        let log = EventLog::to_file(log_path.clone(), 64 << 20, None).expect("event log");
+        let shape = format!("{r}x{c}");
+        let logged = bench_for(1, min_time, || {
+            let outs = plan.execute(&stacked, &pooled).expect("logged run");
+            Coalescer::unstack(reqs, outs).expect("unstack");
+            // the admission event the coordinator emits per enqueued request
+            for _ in 0..reqs {
+                log.admit("softmax", &shape, Some("bench"));
+            }
+        });
+        let rel = bare.mean_s / logged.mean_s;
+        let coal_per_s = reqs as f64 / logged.mean_s;
+        println!(
+            "event-log overhead ({reqs} x softmax {r}x{c} coalesced): bare {} vs logged {} \
+             ({coal_per_s:.0} req/s, {:.1}% overhead)",
+            fmt_duration(bare.mean_s),
+            fmt_duration(logged.mean_s),
+            (1.0 / rel - 1.0) * 100.0,
+        );
+        rows.push(obj(vec![
+            ("key", Json::Str(format!("obs_eventlog_softmax_{reqs}x{r}x{c}"))),
+            ("kernel", Json::Str("softmax".to_string())),
+            ("bare_mean_s", Json::Num(bare.mean_s)),
+            ("logged_mean_s", Json::Num(logged.mean_s)),
+            ("coalesced_per_s", Json::Num(coal_per_s)),
+            ("eventlog_rel_throughput", Json::Num(rel)),
+        ]));
+        let _ = std::fs::remove_file(&log_path);
+        let _ = std::fs::remove_file(ninetoothed_repro::obs::events::rotated_path(&log_path));
     }
 
     // -- 4c. autotune: elected winner vs the block-size heuristic, plus the

@@ -8,14 +8,20 @@
 //! cargo run --release --example client -- --addr 127.0.0.1:7071 --shutdown
 //! ```
 //!
-//! `--shutdown` asks the server to drain and exit after the burst (the
-//! serve process prints its final stats table and returns).
+//! Every submit carries a `trace_id` (and, with `--client-id NAME`, a
+//! tenant identity); the server echoes a per-span breakdown in each
+//! reply, rendered for the first round and checked for consistency
+//! (span durations must fit inside the server's own total).
+//!
+//! `--dump-prom PATH` writes the scraped Prometheus exposition to a file
+//! (CI greps it for `nt_slo_` series); `--shutdown` asks the server to
+//! drain and exit after the burst.
 
 use std::time::Duration;
 
 use anyhow::{ensure, Result};
 use ninetoothed_repro::cli::Args;
-use ninetoothed_repro::coordinator::net::Client;
+use ninetoothed_repro::coordinator::net::{Client, TraceBreakdown};
 use ninetoothed_repro::prng::SplitMix64;
 use ninetoothed_repro::runtime::HostTensor;
 
@@ -26,6 +32,9 @@ fn main() -> Result<()> {
 
     // the server may still be binding (CI starts it in the background)
     let mut client = Client::connect_with_retry(&addr, Duration::from_secs(10))?;
+    if let Some(client_id) = args.opt("client-id") {
+        client.set_client_id(client_id);
+    }
 
     let health = client.health()?;
     println!(
@@ -41,17 +50,21 @@ fn main() -> Result<()> {
     // flash-style attention all through the same four-byte-prefix frames
     let mut rng = SplitMix64::new(42);
     let mut completed = 0;
+    let mut traced = 0;
     for round in 0..rounds {
         let x = HostTensor::randn(vec![1000], &mut rng);
         let y = HostTensor::randn(vec![1000], &mut rng);
         // verify the elementwise result client-side
         let expect: Vec<f32> = x.as_f32()?.iter().zip(y.as_f32()?).map(|(a, b)| a + b).collect();
-        let reply = client.submit("add", "nt", &[x, y])?;
+        let trace_id = format!("burst-{round}-add");
+        let reply = client.submit_traced("add", "nt", &[x, y], Some(&trace_id))?;
         ensure!(
             reply.outputs[0].as_f32()? == expect.as_slice(),
             "add result differs from the client-side sum"
         );
+        check_breakdown(&trace_id, reply.trace.as_ref(), round == 0)?;
         completed += 1;
+        traced += 1;
 
         for (kernel, inputs, out_shape) in [
             (
@@ -73,7 +86,8 @@ fn main() -> Result<()> {
                 vec![2, 2, 100, 16],
             ),
         ] {
-            let reply = client.submit(kernel, "nt", &inputs)?;
+            let trace_id = format!("burst-{round}-{kernel}");
+            let reply = client.submit_traced(kernel, "nt", &inputs, Some(&trace_id))?;
             ensure!(
                 reply.outputs[0].shape == out_shape,
                 "{kernel} output shape {:?} != {out_shape:?}",
@@ -85,10 +99,15 @@ fn main() -> Result<()> {
                     reply.backend, reply.batch_size, reply.queue_us, reply.exec_us
                 );
             }
+            check_breakdown(&trace_id, reply.trace.as_ref(), round == 0)?;
             completed += 1;
+            traced += 1;
         }
     }
-    println!("burst complete: {completed} requests verified over the wire");
+    println!(
+        "burst complete: {completed} requests verified over the wire, \
+         {traced} with consistent span breakdowns"
+    );
 
     // scrape the server-side metrics and sanity-check the exposition
     let prom = client.stats_prometheus()?;
@@ -107,10 +126,55 @@ fn main() -> Result<()> {
         "latency histogram missing from the exposition"
     );
     println!("stats scrape OK: server counted {submitted} submitted requests");
+    if let Some(path) = args.opt("dump-prom") {
+        std::fs::write(path, &prom)?;
+        println!("prometheus exposition written to {path}");
+    }
 
     if args.flag("shutdown") {
         client.shutdown_server()?;
         println!("server draining");
+    }
+    Ok(())
+}
+
+/// Validate one echoed breakdown: the trace id round-trips, a `net_read`
+/// span is present (the request was wire-originated), and the span
+/// durations are consistent with the server's own total — they must not
+/// exceed it, and the only un-spanned gap (batch-end to plan-start) must
+/// stay a small fraction of it.
+fn check_breakdown(trace_id: &str, trace: Option<&TraceBreakdown>, render: bool) -> Result<()> {
+    let trace = trace
+        .ok_or_else(|| anyhow::anyhow!("submit {trace_id} returned no span breakdown"))?;
+    ensure!(
+        trace.trace_id.as_deref() == Some(trace_id),
+        "trace id {:?} did not round-trip (sent {trace_id:?})",
+        trace.trace_id
+    );
+    ensure!(
+        trace.spans.iter().any(|(kind, _)| kind == "net_read"),
+        "breakdown for {trace_id} has no net_read span: {:?}",
+        trace.spans
+    );
+    if render {
+        let rendered: Vec<String> =
+            trace.spans.iter().map(|(kind, us)| format!("{kind}={us}µs")).collect();
+        println!("    trace {trace_id}: total={}µs [{}]", trace.total_us, rendered.join(" "));
+    }
+    let span_sum: u64 = trace.spans.iter().map(|(_, us)| us).sum();
+    if trace.total_us > 0 {
+        ensure!(
+            span_sum <= trace.total_us,
+            "span sum {span_sum}µs exceeds server total {}µs for {trace_id}",
+            trace.total_us
+        );
+        let gap = trace.total_us - span_sum;
+        ensure!(
+            gap <= trace.total_us / 4 + 1000,
+            "unaccounted {gap}µs of {}µs for {trace_id} (spans {:?})",
+            trace.total_us,
+            trace.spans
+        );
     }
     Ok(())
 }

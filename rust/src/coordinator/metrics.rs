@@ -164,21 +164,34 @@ impl MetricsSnapshot {
         }
     }
 
-    /// Latency quantile from the log2 histogram.  Returns the bucket's
-    /// inclusive upper bound (`2^(i+1) - 1` µs for bucket `i`), so the
-    /// estimate never understates the true quantile.
+    /// Latency quantile from the log2 histogram, log-linearly
+    /// interpolated inside the bucket the quantile falls in (bucket `i`
+    /// spans `[2^i, 2^(i+1))` µs).  The old behaviour — returning the
+    /// bucket's inclusive upper bound — overstated p50/p99 by up to 2×;
+    /// the interpolated estimate assumes samples spread evenly through
+    /// the bucket and is clamped to the bucket's true range, so it can
+    /// neither under-run the bucket's lower bound nor overshoot its
+    /// upper bound.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
         let total: u64 = self.latency_hist.iter().sum();
         if total == 0 {
             return 0;
         }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut seen = 0;
-        for (i, count) in self.latency_hist.iter().enumerate() {
-            seen += count;
-            if seen >= target {
-                return (1u64 << (i + 1)) - 1;
+        let target = (total as f64 * q).ceil().max(1.0);
+        let mut seen = 0.0;
+        for (i, &count) in self.latency_hist.iter().enumerate() {
+            if count == 0 {
+                continue;
             }
+            let count = count as f64;
+            if seen + count >= target {
+                let lo = 1u64 << i;
+                let hi = (1u64 << (i + 1)) - 1; // inclusive bucket range
+                let into = (target - seen) / count; // (0, 1]
+                let est = lo as f64 + into * lo as f64;
+                return (est.round() as u64).clamp(lo, hi);
+            }
+            seen += count;
         }
         (1u64 << BUCKETS) - 1
     }
@@ -272,6 +285,24 @@ mod tests {
         let s = m.snapshot(0, 0);
         assert_eq!(s.latency_hist[1], 2);
         assert_eq!(s.latency_hist[2], 1);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        // 800 samples of 100µs all land in bucket 6 ([64, 128)).  The
+        // old upper-bound estimator returned 127 for every quantile —
+        // interpolation spreads the estimates through the bucket.
+        let m = Metrics::new();
+        for _ in 0..800 {
+            m.observe_latency_us(100);
+        }
+        let s = m.snapshot(0, 0);
+        assert_eq!(s.latency_quantile_us(0.25), 80);
+        assert_eq!(s.latency_quantile_us(0.5), 96);
+        assert_eq!(s.latency_quantile_us(0.99), 127);
+        // estimates never leave the bucket's [lo, hi] range
+        assert_eq!(s.latency_quantile_us(1e-9), 64);
+        assert_eq!(s.latency_quantile_us(1.0), 127);
     }
 
     #[test]

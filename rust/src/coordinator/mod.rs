@@ -44,4 +44,4 @@ pub use batcher::{Coalescer, PackPlan, Packer};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use net::{Client, NetConfig, Server};
 pub use router::{Request, Response, Router};
-pub use server::{Coordinator, CoordinatorConfig, SubmitError};
+pub use server::{Coordinator, CoordinatorConfig, SubmitError, SubmitOpts};

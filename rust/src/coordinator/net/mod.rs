@@ -67,14 +67,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::server::{Coordinator, SubmitError};
+use super::server::{Coordinator, SubmitError, SubmitOpts};
 use crate::exec::pool;
 use crate::json::Json;
 use crate::runtime::HostTensor;
 use self::frame::{read_frame, write_frame, FrameError};
 use self::protocol::{
-    decode_request, error_reply, ok_reply, tensor_from_json, tensor_to_json, ErrorCode,
-    PROTOCOL_VERSION,
+    decode_request, error_reply, error_reply_fields, ok_reply, tensor_from_json, tensor_to_json,
+    ErrorCode, WireRequest, PROTOCOL_VERSION,
 };
 
 /// Wire-transport knobs, startup-validated like every other `NT_*` knob.
@@ -267,12 +267,30 @@ fn serve_connection(shared: Arc<ServerShared>, stream: TcpStream) {
     loop {
         match read_frame(&mut reader, config.max_frame_bytes) {
             Ok(payload) => {
-                let reply = handle_frame(&shared, &payload);
+                // the instant the full request frame was received: decode
+                // and dispatch from here to submit is the net_read span
+                let received = Instant::now();
+                let (reply, trace) = handle_frame(&shared, &payload, received);
+                let write_start = Instant::now();
                 if let Err(e) = write_frame(&mut writer, &reply) {
                     if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
                         shared.coordinator.note_net_timeout();
                     }
                     return;
+                }
+                if let Some((mut trace, sampled)) = trace {
+                    // the reply frame is on the wire: append the
+                    // net_write span, then hand the finished trace to
+                    // the obs layer (trace ring + flight recorder)
+                    let write_us = write_start.elapsed().as_micros() as u64;
+                    let start = trace.total_us;
+                    trace.spans.push(crate::obs::Span {
+                        kind: crate::obs::SpanKind::NetWrite,
+                        start_us: start,
+                        end_us: start + write_us,
+                    });
+                    trace.total_us += write_us;
+                    shared.coordinator.obs().note_request_done(sampled, trace);
                 }
             }
             Err(FrameError::Closed) => return,
@@ -298,25 +316,37 @@ fn serve_connection(shared: Arc<ServerShared>, stream: TcpStream) {
 }
 
 /// Decode one frame payload and execute its op.  Always returns a reply
-/// frame — every failure mode maps to a structured error.
-fn handle_frame(shared: &ServerShared, payload: &str) -> String {
+/// frame — every failure mode maps to a structured error.  Successful
+/// submits also return the request's trace (and its sampled flag) so the
+/// connection loop can append the `net_write` span after the reply frame
+/// is actually written.
+fn handle_frame(
+    shared: &ServerShared,
+    payload: &str,
+    received: Instant,
+) -> (String, Option<(crate::obs::Trace, bool)>) {
     let req = match decode_request(payload) {
         Ok(req) => req,
-        Err((code, msg)) => return error_reply(None, code, &msg, None),
+        Err((code, msg)) => return (error_reply(None, code, &msg, None), None),
     };
     match req.op.as_str() {
-        "health" => handle_health(shared, req.id),
-        "kernels" => handle_kernels(req.id),
-        "stats" => handle_stats(shared, req.id, &req.body),
-        "submit" => handle_submit(shared, req.id, &req.body),
+        "health" => (handle_health(shared, req.id), None),
+        "kernels" => (handle_kernels(req.id), None),
+        "stats" => (handle_stats(shared, req.id, &req.body), None),
+        "submit" => handle_submit(shared, &req, received),
         "shutdown" => {
             shared.shutdown_requested.store(true, Ordering::Release);
-            ok_reply(req.id, vec![("draining", Json::Bool(true))])
+            (ok_reply(req.id, vec![("draining", Json::Bool(true))]), None)
         }
-        other => error_reply(
-            req.id,
-            ErrorCode::UnknownOp,
-            &format!("unknown op {other:?} (expected submit, kernels, stats, health, shutdown)"),
+        other => (
+            error_reply(
+                req.id,
+                ErrorCode::UnknownOp,
+                &format!(
+                    "unknown op {other:?} (expected submit, kernels, stats, health, shutdown)"
+                ),
+                None,
+            ),
             None,
         ),
     }
@@ -378,13 +408,21 @@ fn handle_stats(shared: &ServerShared, id: Option<u64>, body: &Json) -> String {
     }
 }
 
-fn handle_submit(shared: &ServerShared, id: Option<u64>, body: &Json) -> String {
+fn handle_submit(
+    shared: &ServerShared,
+    req: &WireRequest,
+    received: Instant,
+) -> (String, Option<(crate::obs::Trace, bool)>) {
+    let id = req.id;
+    let body = &req.body;
     if shared.draining.load(Ordering::Acquire) {
-        return error_reply(id, ErrorCode::ShuttingDown, "server is draining", None);
+        return (error_reply(id, ErrorCode::ShuttingDown, "server is draining", None), None);
     }
     let kernel = match body.str("kernel") {
         Ok(k) => k,
-        Err(e) => return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None),
+        Err(e) => {
+            return (error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None), None)
+        }
     };
     let variant = body.get("variant").and_then(Json::as_str).unwrap_or("nt");
     let inputs: Vec<HostTensor> = match body
@@ -393,36 +431,96 @@ fn handle_submit(shared: &ServerShared, id: Option<u64>, body: &Json) -> String 
         .and_then(|arr| arr.iter().map(tensor_from_json).collect())
     {
         Ok(inputs) => inputs,
-        Err(e) => return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None),
+        Err(e) => {
+            return (error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None), None)
+        }
     };
-    let rx = match shared.coordinator.submit_admit(kernel, variant, inputs) {
+    let opts = SubmitOpts {
+        client_id: req.client_id.clone(),
+        trace_id: req.trace_id.clone(),
+        net_read_us: Some(received.elapsed().as_micros() as u64),
+    };
+    let rx = match shared.coordinator.submit_with(kernel, variant, inputs, opts) {
         Ok(rx) => rx,
         Err(SubmitError::Invalid(e)) => {
-            return error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None)
+            return (error_reply(id, ErrorCode::InvalidArgument, &format!("{e:#}"), None), None)
         }
-        Err(SubmitError::Overloaded { depth, watermark, retry_after_ms }) => {
-            return error_reply(
-                id,
-                ErrorCode::Overloaded,
-                &format!("queue depth {depth} >= shed watermark {watermark}"),
-                Some(retry_after_ms),
-            )
+        Err(SubmitError::Overloaded { depth, watermark, retry_after_ms, slo_objective }) => {
+            // a machine-readable shed reason: plain backpressure, or the
+            // SLO feedback loop tightening admission while a budget burns
+            let reason = if slo_objective.is_some() { "slo_burn" } else { "queue_full" };
+            let msg = match &slo_objective {
+                Some(obj) => format!(
+                    "queue depth {depth} >= shed watermark {watermark} \
+                     (lowered while SLO {obj} burns)"
+                ),
+                None => format!("queue depth {depth} >= shed watermark {watermark}"),
+            };
+            let mut extra = vec![("reason", Json::Str(reason.to_string()))];
+            if let Some(obj) = slo_objective {
+                extra.push(("objective", Json::Str(obj)));
+            }
+            return (
+                error_reply_fields(id, ErrorCode::Overloaded, &msg, Some(retry_after_ms), extra),
+                None,
+            );
         }
     };
     match rx.recv() {
-        Ok(Ok(resp)) => ok_reply(
-            id,
-            vec![
+        Ok(Ok(resp)) => {
+            let mut fields = vec![
                 ("backend", Json::Str(resp.backend.to_string())),
                 ("batch_size", Json::Num(resp.batch_size as f64)),
                 ("exec_us", Json::Num(resp.exec_us as f64)),
                 ("outputs", Json::Arr(resp.outputs.iter().map(tensor_to_json).collect())),
                 ("queue_us", Json::Num(resp.queue_us as f64)),
-            ],
-        ),
-        Ok(Err(e)) => error_reply(id, ErrorCode::Internal, &format!("{e:#}"), None),
-        Err(_) => error_reply(id, ErrorCode::Internal, "worker dropped the reply", None),
+            ];
+            if let Some(trace) = &resp.trace {
+                fields.push(("trace", breakdown_json(trace)));
+            }
+            (ok_reply(id, fields), resp.trace.map(|t| (t, resp.sampled)))
+        }
+        Ok(Err(e)) => (error_reply(id, ErrorCode::Internal, &format!("{e:#}"), None), None),
+        Err(_) => (error_reply(id, ErrorCode::Internal, "worker dropped the reply", None), None),
     }
+}
+
+/// The per-span breakdown echoed inside a submit reply: span kinds and
+/// durations (µs) in timeline order, the server-side total, and the
+/// echoed trace id.  Built before the reply frame is written, so the
+/// `net_write` span is never in it — only the server's own recorded
+/// trace carries that.
+fn breakdown_json(t: &crate::obs::Trace) -> Json {
+    let spans = t
+        .spans
+        .iter()
+        .map(|s| {
+            let mut span = BTreeMap::new();
+            span.insert("kind".to_string(), Json::Str(s.kind.name().to_string()));
+            span.insert(
+                "us".to_string(),
+                Json::Num(s.end_us.saturating_sub(s.start_us) as f64),
+            );
+            Json::Obj(span)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("spans".to_string(), Json::Arr(spans));
+    o.insert("total_us".to_string(), Json::Num(t.total_us as f64));
+    if let Some(trace_id) = &t.trace_id {
+        o.insert("trace_id".to_string(), Json::Str(trace_id.clone()));
+    }
+    Json::Obj(o)
+}
+
+/// The server's span breakdown, decoded from a submit reply's `trace`
+/// field: `(kind, duration µs)` pairs in timeline order plus the
+/// server-side total and the echoed trace id.
+#[derive(Debug, Clone)]
+pub struct TraceBreakdown {
+    pub spans: Vec<(String, u64)>,
+    pub total_us: u64,
+    pub trace_id: Option<String>,
 }
 
 /// A decoded `submit` success reply.
@@ -433,6 +531,8 @@ pub struct SubmitReply {
     pub exec_us: u64,
     pub batch_size: usize,
     pub backend: String,
+    /// the server's per-span breakdown (wire submits always carry one)
+    pub trace: Option<TraceBreakdown>,
 }
 
 /// The tiny client helper: one connection, sequential request/reply.
@@ -442,6 +542,8 @@ pub struct Client {
     stream: TcpStream,
     max_frame_bytes: usize,
     next_id: u64,
+    /// tenant identity attached to every submit (None = anonymous)
+    client_id: Option<String>,
 }
 
 impl Client {
@@ -449,7 +551,18 @@ impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
-        Ok(Client { stream, max_frame_bytes: frame::MAX_FRAME_BYTES, next_id: 0 })
+        Ok(Client {
+            stream,
+            max_frame_bytes: frame::MAX_FRAME_BYTES,
+            next_id: 0,
+            client_id: None,
+        })
+    }
+
+    /// Attach a tenant identity: every later submit carries it as
+    /// `client_id`, landing in the server's per-client metrics rows.
+    pub fn set_client_id(&mut self, client_id: impl Into<String>) {
+        self.client_id = Some(client_id.into());
     }
 
     /// Connect, retrying with backoff until `timeout` elapses — for
@@ -544,10 +657,28 @@ impl Client {
         variant: &str,
         inputs: &[HostTensor],
     ) -> Result<Json> {
+        self.submit_raw_traced(kernel, variant, inputs, None)
+    }
+
+    /// [`Client::submit_raw`] with a trace correlation id; the client's
+    /// `client_id` (if set) rides along on both.
+    pub fn submit_raw_traced(
+        &mut self,
+        kernel: &str,
+        variant: &str,
+        inputs: &[HostTensor],
+        trace_id: Option<&str>,
+    ) -> Result<Json> {
         let mut o = Self::op("submit");
         o.insert("kernel".to_string(), Json::Str(kernel.to_string()));
         o.insert("variant".to_string(), Json::Str(variant.to_string()));
         o.insert("inputs".to_string(), Json::Arr(inputs.iter().map(tensor_to_json).collect()));
+        if let Some(trace_id) = trace_id {
+            o.insert("trace_id".to_string(), Json::Str(trace_id.to_string()));
+        }
+        if let Some(client_id) = &self.client_id {
+            o.insert("client_id".to_string(), Json::Str(client_id.clone()));
+        }
         self.call(o)
     }
 
@@ -558,18 +689,35 @@ impl Client {
         variant: &str,
         inputs: &[HostTensor],
     ) -> Result<SubmitReply> {
-        let reply = Self::expect_ok(self.submit_raw(kernel, variant, inputs)?)?;
+        self.submit_traced(kernel, variant, inputs, None)
+    }
+
+    /// [`Client::submit`] with a trace correlation id: the decoded reply
+    /// includes the server's span breakdown with the id echoed back.
+    pub fn submit_traced(
+        &mut self,
+        kernel: &str,
+        variant: &str,
+        inputs: &[HostTensor],
+        trace_id: Option<&str>,
+    ) -> Result<SubmitReply> {
+        let reply = Self::expect_ok(self.submit_raw_traced(kernel, variant, inputs, trace_id)?)?;
         let outputs = reply
             .arr("outputs")?
             .iter()
             .map(tensor_from_json)
             .collect::<Result<Vec<_>>>()?;
+        let trace = match reply.get("trace") {
+            Some(t) => Some(parse_breakdown(t)?),
+            None => None,
+        };
         Ok(SubmitReply {
             outputs,
             queue_us: reply.usize("queue_us")? as u64,
             exec_us: reply.usize("exec_us")? as u64,
             batch_size: reply.usize("batch_size")?,
             backend: reply.str("backend")?.to_string(),
+            trace,
         })
     }
 
@@ -578,4 +726,18 @@ impl Client {
         Self::expect_ok(self.call(Self::op("shutdown"))?)?;
         Ok(())
     }
+}
+
+/// Decode a submit reply's `trace` field.
+fn parse_breakdown(v: &Json) -> Result<TraceBreakdown> {
+    let spans = v
+        .arr("spans")?
+        .iter()
+        .map(|s| Ok((s.str("kind")?.to_string(), s.usize("us")? as u64)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TraceBreakdown {
+        spans,
+        total_us: v.usize("total_us")? as u64,
+        trace_id: v.get("trace_id").and_then(Json::as_str).map(str::to_string),
+    })
 }

@@ -120,12 +120,18 @@ pub fn tensor_from_json(v: &Json) -> Result<HostTensor> {
     }
 }
 
-/// A decoded request envelope: the op name, the echo id, and the raw
-/// object for op-specific fields.
+/// A decoded request envelope: the op name, the echo id, the optional
+/// trace-context fields, and the raw object for op-specific fields.
 #[derive(Debug)]
 pub struct WireRequest {
     pub op: String,
     pub id: Option<u64>,
+    /// client-supplied trace correlation id (`"trace_id"`), echoed in the
+    /// submit reply's span breakdown and recorded on the server trace
+    pub trace_id: Option<String>,
+    /// tenant identity (`"client_id"`) — the per-client metrics and SLO
+    /// dimension
+    pub client_id: Option<String>,
     pub body: Json,
 }
 
@@ -144,7 +150,26 @@ pub fn decode_request(payload: &str) -> Result<WireRequest, (ErrorCode, String)>
             return Err((ErrorCode::UnknownOp, "request has no \"op\" field".to_string()))
         }
     };
-    Ok(WireRequest { op, id, body })
+    let trace_id = opt_context_str(&body, "trace_id")?;
+    let client_id = opt_context_str(&body, "client_id")?;
+    Ok(WireRequest { op, id, trace_id, client_id, body })
+}
+
+/// Extract an optional trace-context string field (`trace_id` /
+/// `client_id`): absent is fine, present must be a non-empty string of
+/// at most 128 characters — ids are labels in metrics and logs, so
+/// unbounded client-controlled values are rejected at the door.
+fn opt_context_str(body: &Json, key: &str) -> Result<Option<String>, (ErrorCode, String)> {
+    match body.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) if !s.is_empty() && s.chars().count() <= 128 => {
+            Ok(Some(s.clone()))
+        }
+        Some(_) => Err((
+            ErrorCode::InvalidArgument,
+            format!("\"{key}\" must be a non-empty string of at most 128 characters"),
+        )),
+    }
 }
 
 fn base_reply(id: Option<u64>, ok: bool) -> BTreeMap<String, Json> {
@@ -173,11 +198,28 @@ pub fn error_reply(
     message: &str,
     retry_after_ms: Option<u64>,
 ) -> String {
+    error_reply_fields(id, code, message, retry_after_ms, Vec::new())
+}
+
+/// [`error_reply`] with extra structured fields inside the error object —
+/// the overloaded reply uses it to attach a machine-readable shed
+/// `reason` (and the burning SLO `objective` when admission was
+/// tightened by it).
+pub fn error_reply_fields(
+    id: Option<u64>,
+    code: ErrorCode,
+    message: &str,
+    retry_after_ms: Option<u64>,
+    extra: Vec<(&str, Json)>,
+) -> String {
     let mut err = BTreeMap::new();
     err.insert("code".to_string(), Json::Str(code.as_str().to_string()));
     err.insert("message".to_string(), Json::Str(message.to_string()));
     if let Some(ms) = retry_after_ms {
         err.insert("retry_after_ms".to_string(), Json::Num(ms as f64));
+    }
+    for (k, v) in extra {
+        err.insert(k.to_string(), v);
     }
     let mut o = base_reply(id, false);
     o.insert("error".to_string(), Json::Obj(err));
@@ -229,9 +271,31 @@ mod tests {
     fn request_envelope_decodes() {
         let req = decode_request(r#"{"id":4,"op":"health"}"#).unwrap();
         assert_eq!((req.op.as_str(), req.id), ("health", Some(4)));
+        assert_eq!((req.trace_id, req.client_id), (None, None));
         assert_eq!(decode_request("nonsense").unwrap_err().0, ErrorCode::BadRequest);
         assert_eq!(decode_request("[1,2]").unwrap_err().0, ErrorCode::BadRequest);
         assert_eq!(decode_request(r#"{"id":1}"#).unwrap_err().0, ErrorCode::UnknownOp);
+    }
+
+    #[test]
+    fn trace_context_fields_decode_and_validate() {
+        let req = decode_request(
+            r#"{"client_id":"acme","id":7,"op":"submit","trace_id":"req-0042"}"#,
+        )
+        .unwrap();
+        assert_eq!(req.trace_id.as_deref(), Some("req-0042"));
+        assert_eq!(req.client_id.as_deref(), Some("acme"));
+        for bad in [
+            r#"{"op":"submit","trace_id":""}"#,         // empty
+            r#"{"op":"submit","trace_id":7}"#,          // not a string
+            r#"{"client_id":[1],"op":"submit"}"#,       // not a string
+        ] {
+            assert_eq!(decode_request(bad).unwrap_err().0, ErrorCode::InvalidArgument, "{bad}");
+        }
+        let long = format!(r#"{{"op":"submit","trace_id":"{}"}}"#, "x".repeat(129));
+        assert_eq!(decode_request(&long).unwrap_err().0, ErrorCode::InvalidArgument);
+        let max = format!(r#"{{"op":"submit","trace_id":"{}"}}"#, "x".repeat(128));
+        assert_eq!(decode_request(&max).unwrap().trace_id.unwrap().len(), 128);
     }
 
     #[test]
@@ -243,6 +307,20 @@ mod tests {
         assert_eq!(
             error_reply(None, ErrorCode::Overloaded, "queue full", Some(3)),
             r#"{"error":{"code":"overloaded","message":"queue full","retry_after_ms":3},"ok":false}"#
+        );
+    }
+
+    #[test]
+    fn error_reply_extra_fields_render_inside_error_object() {
+        assert_eq!(
+            error_reply_fields(
+                Some(2),
+                ErrorCode::Overloaded,
+                "queue depth 4 >= shed watermark 4",
+                Some(5),
+                vec![("reason", Json::Str("queue_full".into()))],
+            ),
+            r#"{"error":{"code":"overloaded","message":"queue depth 4 >= shed watermark 4","reason":"queue_full","retry_after_ms":5},"ok":false}"#
         );
     }
 }

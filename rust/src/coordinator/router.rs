@@ -31,6 +31,16 @@ pub struct Request {
     /// wall-clock of the first-use autotune search this submit triggered
     /// (`None` for the common no-tuning case) — traced as a `Tune` span
     pub tune_us: Option<u64>,
+    /// tenant identity (wire `client_id`) — the per-client metrics and
+    /// SLO dimension; `None` for anonymous / in-process submits
+    pub client_id: Option<String>,
+    /// client-supplied trace correlation id, carried into the recorded
+    /// trace and echoed in the wire reply's breakdown
+    pub trace_id: Option<String>,
+    /// wire ingress time (frame read + decode) in µs; `Some` marks the
+    /// request wire-originated — its trace gains a leading `net_read`
+    /// span and its [`Response`] always carries the built trace
+    pub net_read_us: Option<u64>,
     /// where the response is delivered
     pub reply: mpsc::Sender<Result<Response>>,
 }
@@ -44,6 +54,13 @@ pub struct Response {
     pub batch_size: usize,
     /// which backend served the request ("artifact", "native", "reference")
     pub backend: &'static str,
+    /// span timeline, present only for wire-originated requests: the
+    /// front door echoes a per-span breakdown in the reply, then appends
+    /// the `net_write` span and hands the trace to the obs layer
+    pub trace: Option<crate::obs::Trace>,
+    /// whether the trace recorder sampled this request (the front door
+    /// rings only sampled wire traces)
+    pub sampled: bool,
 }
 
 /// Element-wise kernels whose single vector argument may be slot-packed.

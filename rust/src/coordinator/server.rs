@@ -17,7 +17,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{Coalescer, Packer};
 use super::metrics::Metrics;
@@ -62,6 +62,21 @@ pub struct CoordinatorConfig {
     /// on-disk tuning table (`NT_TUNE_TABLE`): consulted at startup to
     /// restore winners, rewritten atomically after each search
     pub tune_table: Option<std::path::PathBuf>,
+    /// latency-SLO objectives (`NT_SLO` spec string, e.g.
+    /// `p99<2ms;mm:p99<5ms;client=acme:p95<10ms`), parsed and validated
+    /// at startup.  While an objective's error budget is burning,
+    /// admission sheds at half the configured watermark.
+    pub slo: Option<String>,
+    /// SLO evaluation window in milliseconds (`NT_SLO_WINDOW_MS`)
+    pub slo_window_ms: usize,
+    /// flight-recorder NDJSON path (`NT_EVENT_LOG`); `None` disables it
+    pub event_log: Option<std::path::PathBuf>,
+    /// rotate the event log before it would exceed this many KiB
+    /// (`NT_EVENT_LOG_MAX_KB`)
+    pub event_log_max_kb: usize,
+    /// record the full trace of any request at least this slow (µs) into
+    /// the event log (`NT_SLOW_US`); inert without `event_log`
+    pub slow_us: Option<u64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -75,6 +90,11 @@ impl Default for CoordinatorConfig {
             plan_cache_capacity: 256,
             tune_mode: TuneMode::Off,
             tune_table: None,
+            slo: None,
+            slo_window_ms: 1000,
+            event_log: None,
+            event_log_max_kb: crate::obs::events::DEFAULT_MAX_KB,
+            slow_us: None,
         }
     }
 }
@@ -82,9 +102,10 @@ impl Default for CoordinatorConfig {
 impl CoordinatorConfig {
     /// Apply environment overrides: `NT_QUEUE_CAP`, `NT_SHED_WATERMARK`,
     /// `NT_COALESCE_FANIN`, `NT_PLAN_CACHE_CAP`, `NT_TUNE`,
-    /// `NT_TUNE_TABLE` (all validated — garbage is a clean error, not a
-    /// silent default).  `NT_POOL_THREADS` is read by the shared pool
-    /// itself; [`Coordinator::start`] validates it too.
+    /// `NT_TUNE_TABLE`, `NT_SLO`, `NT_SLO_WINDOW_MS`, `NT_EVENT_LOG`,
+    /// `NT_EVENT_LOG_MAX_KB`, `NT_SLOW_US` (all validated — garbage is a
+    /// clean error, not a silent default).  `NT_POOL_THREADS` is read by
+    /// the shared pool itself; [`Coordinator::start`] validates it too.
     pub fn from_env(mut self) -> Result<CoordinatorConfig> {
         if let Some(v) = pool::parse_env_usize("NT_QUEUE_CAP")? {
             self.queue_capacity = v;
@@ -101,6 +122,21 @@ impl CoordinatorConfig {
         self.tune_mode = TuneMode::from_env()?;
         if let Ok(path) = std::env::var("NT_TUNE_TABLE") {
             self.tune_table = Some(std::path::PathBuf::from(path));
+        }
+        if let Ok(spec) = std::env::var("NT_SLO") {
+            self.slo = Some(spec);
+        }
+        if let Some(v) = pool::parse_env_usize("NT_SLO_WINDOW_MS")? {
+            self.slo_window_ms = v;
+        }
+        if let Ok(path) = std::env::var("NT_EVENT_LOG") {
+            self.event_log = Some(std::path::PathBuf::from(path));
+        }
+        if let Some(v) = pool::parse_env_usize("NT_EVENT_LOG_MAX_KB")? {
+            self.event_log_max_kb = v;
+        }
+        if let Some(v) = pool::parse_env_usize("NT_SLOW_US")? {
+            self.slow_us = Some(v as u64);
         }
         self.validate()?;
         Ok(self)
@@ -122,6 +158,8 @@ impl CoordinatorConfig {
             ("max_fanin", self.max_fanin),
             ("coalesce_fanin", self.coalesce_fanin),
             ("plan_cache_capacity", self.plan_cache_capacity),
+            ("slo_window_ms", self.slo_window_ms),
+            ("event_log_max_kb", self.event_log_max_kb),
         ] {
             if value == 0 {
                 bail!("coordinator config: {name} must be >= 1, got 0");
@@ -133,6 +171,10 @@ impl CoordinatorConfig {
                 self.effective_shed_watermark(),
                 self.queue_capacity
             );
+        }
+        if let Some(spec) = &self.slo {
+            crate::obs::parse_slo_spec(spec)
+                .with_context(|| format!("coordinator config: invalid NT_SLO spec {spec:?}"))?;
         }
         Ok(())
     }
@@ -147,20 +189,49 @@ pub enum SubmitError {
     /// retrying the same request can never succeed
     Invalid(anyhow::Error),
     /// admission control shed the request: the queue depth reached the
-    /// shed watermark.  The request was valid — retry after the hint.
-    Overloaded { depth: usize, watermark: usize, retry_after_ms: u64 },
+    /// effective shed watermark.  The request was valid — retry after the
+    /// hint.  `slo_objective` is `Some(spec)` when a burning SLO budget
+    /// had lowered the watermark below its configured value.
+    Overloaded {
+        depth: usize,
+        watermark: usize,
+        retry_after_ms: u64,
+        slo_objective: Option<String>,
+    },
 }
 
 impl SubmitError {
     pub fn into_anyhow(self) -> anyhow::Error {
         match self {
             SubmitError::Invalid(e) => e,
-            SubmitError::Overloaded { depth, watermark, retry_after_ms } => anyhow!(
-                "coordinator overloaded: queue depth {depth} >= shed watermark {watermark} \
-                 (retry in ~{retry_after_ms}ms)"
-            ),
+            SubmitError::Overloaded { depth, watermark, retry_after_ms, slo_objective } => {
+                let burn = slo_objective
+                    .map(|o| format!(" [slo burn: {o}]"))
+                    .unwrap_or_default();
+                anyhow!(
+                    "coordinator overloaded: queue depth {depth} >= shed watermark \
+                     {watermark}{burn} (retry in ~{retry_after_ms}ms)"
+                )
+            }
         }
     }
+}
+
+/// Optional per-request context for [`Coordinator::submit_with`].  The
+/// wire front door threads tenant identity and trace correlation through
+/// it; in-process callers use [`Default`].
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// tenant identity for per-client metrics rows and SLO scoping
+    pub client_id: Option<String>,
+    /// client-supplied trace id, echoed in the reply's span breakdown
+    pub trace_id: Option<String>,
+    /// wire ingress time (frame read + decode) in µs.  `Some` marks the
+    /// request wire-originated: its trace gains a leading `net_read`
+    /// span (shifting every later span right) and its [`Response`]
+    /// always carries the built trace, so the front door can echo a
+    /// breakdown and append the `net_write` span after the reply write.
+    pub net_read_us: Option<u64>,
 }
 
 struct Shared {
@@ -213,8 +284,27 @@ impl Coordinator {
             }),
             available: Condvar::new(),
             metrics: Metrics::new(),
-            // NT_TRACE_SAMPLE is validated here, with the other knobs
-            obs: crate::obs::Obs::from_env()?,
+            // NT_TRACE_SAMPLE is validated here, with the other knobs;
+            // the SLO engine and flight recorder are config-driven (their
+            // env knobs flow through CoordinatorConfig::from_env), so
+            // tests can inject them without touching process globals
+            obs: {
+                let mut obs = crate::obs::Obs::from_env()?;
+                if let Some(spec) = &config.slo {
+                    obs.slo = crate::obs::SloEngine::new(
+                        crate::obs::parse_slo_spec(spec)?,
+                        std::time::Duration::from_millis(config.slo_window_ms as u64),
+                    );
+                }
+                if let Some(path) = &config.event_log {
+                    obs.events = crate::obs::EventLog::to_file(
+                        path.clone(),
+                        (config.event_log_max_kb as u64) << 10,
+                        config.slow_us,
+                    )?;
+                }
+                obs
+            },
         });
         let router = Arc::new(Router::new(manifest.clone()));
         let plan_cache = Arc::new(PlanCache::new(config.plan_cache_capacity));
@@ -295,6 +385,22 @@ impl Coordinator {
         variant: &str,
         inputs: Vec<crate::runtime::HostTensor>,
     ) -> Result<mpsc::Receiver<Result<Response>>, SubmitError> {
+        self.submit_with(kernel, variant, inputs, SubmitOpts::default())
+    }
+
+    /// [`Coordinator::submit_admit`] with per-request context: tenant
+    /// identity (per-client metrics rows, SLO scoping), trace correlation
+    /// and the wire ingress time — the wire front door's entry point.
+    pub fn submit_with(
+        &self,
+        kernel: &str,
+        variant: &str,
+        inputs: Vec<crate::runtime::HostTensor>,
+        opts: SubmitOpts,
+    ) -> Result<mpsc::Receiver<Result<Response>>, SubmitError> {
+        // due SLO windows evaluate on the submit path (a cheap no-op
+        // between windows); breach transitions land in the event log
+        self.shared.obs.tick_slo();
         let (tx, rx) = mpsc::channel();
         let shape_sig = {
             let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
@@ -308,11 +414,18 @@ impl Coordinator {
             shape_sig,
             sampled: self.shared.obs.traces.should_sample(),
             tune_us: None,
+            client_id: opts.client_id,
+            trace_id: opts.trace_id,
+            net_read_us: opts.net_read_us,
             reply: tx,
         };
         // one registry lookup per submit; every admission outcome below
-        // records against the same per-(kernel, shape) row
-        let per_kernel = self.shared.obs.per_kernel.handle(&req.kernel, &req.shape_sig);
+        // records against the same per-(kernel, shape, client) row
+        let per_kernel = self.shared.obs.per_kernel.handle_for(
+            &req.kernel,
+            &req.shape_sig,
+            req.client_id.as_deref(),
+        );
         let route = match self.router.admit(&req) {
             Ok(route) => route,
             Err(e) => {
@@ -340,6 +453,12 @@ impl Coordinator {
                             m.tune_us_total.fetch_add(outcome.tune_us, Ordering::Relaxed);
                             m.tune_measurements.fetch_add(outcome.measurements, Ordering::Relaxed);
                         }
+                        self.shared.obs.events.tune(
+                            &req.kernel,
+                            &req.shape_sig,
+                            outcome.tune_us,
+                            outcome.measurements,
+                        );
                     }
                     Ok(None) => {}
                     Err(e) => eprintln!(
@@ -350,7 +469,14 @@ impl Coordinator {
                 }
             }
         }
-        let watermark = self.config.effective_shed_watermark();
+        let (watermark, slo_objective) = self.effective_watermark_now();
+        // the admit event's fields, gathered before `req` moves into the
+        // queue; emitted after the lock drops (never file I/O under it)
+        let admit_event = if self.shared.obs.events.enabled() {
+            Some((req.kernel.clone(), req.shape_sig.clone(), req.client_id.clone()))
+        } else {
+            None
+        };
         {
             let mut state = self.shared.queues.lock().unwrap();
             if state.depth >= watermark {
@@ -358,10 +484,21 @@ impl Coordinator {
                 drop(state);
                 self.shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 per_kernel.shed.fetch_add(1, Ordering::Relaxed);
+                if let Some((kernel, shapes, client)) = admit_event {
+                    self.shared.obs.events.shed(
+                        &kernel,
+                        &shapes,
+                        client.as_deref(),
+                        depth,
+                        watermark,
+                        slo_objective.as_deref(),
+                    );
+                }
                 return Err(SubmitError::Overloaded {
                     depth,
                     watermark,
                     retry_after_ms: self.retry_after_ms(depth),
+                    slo_objective,
                 });
             }
             if !state.pending.contains_key(&route) {
@@ -372,8 +509,23 @@ impl Coordinator {
         }
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         per_kernel.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some((kernel, shapes, client)) = admit_event {
+            self.shared.obs.events.admit(&kernel, &shapes, client.as_deref());
+        }
         self.shared.available.notify_one();
         Ok(rx)
+    }
+
+    /// The watermark admission enforces right now: the configured value,
+    /// halved (min 1) while an SLO error budget is burning — the feedback
+    /// loop that sheds load early to protect latency.  Returns the
+    /// burning objective's spec alongside, for the structured shed reason.
+    pub fn effective_watermark_now(&self) -> (usize, Option<String>) {
+        let configured = self.config.effective_shed_watermark();
+        match self.shared.obs.slo.burning_objective() {
+            Some(objective) => ((configured / 2).max(1), Some(objective)),
+            None => (configured, None),
+        }
     }
 
     /// Estimate how long a shed client should wait before retrying:
@@ -419,14 +571,18 @@ impl Coordinator {
     }
 
     /// One coherent snapshot of everything observable — global metrics,
-    /// per-kernel/per-shape rows, per-kernel plan-cache attribution, the
-    /// slowest sampled traces, per-plan profiles (under `NT_PROFILE=1`),
-    /// and pool gauges.
+    /// per-kernel/per-shape/per-client rows, per-kernel plan-cache
+    /// attribution, SLO verdicts, the slowest sampled traces, per-plan
+    /// profiles (under `NT_PROFILE=1`), and pool gauges.
     pub fn obs_snapshot(&self) -> crate::obs::ObsSnapshot {
+        // scrapes also drive due SLO windows, so an idle-but-scraped
+        // server still evaluates its objectives
+        self.shared.obs.tick_slo();
         crate::obs::ObsSnapshot {
             global: self.metrics(),
             kernels: self.shared.obs.per_kernel.snapshot(),
             plan_kernels: self.plan_cache.kernel_counters(),
+            slo: self.shared.obs.slo.statuses(),
             traces: self.shared.obs.traces.slowest(crate::obs::TRACE_TOP_N),
             profiles: self.plan_cache.profile_snapshots(),
             pool: pool::global_gauges(),
@@ -631,41 +787,56 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
             m.coalesced.fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
     }
+    if plan_hit == Some(false) {
+        shared.obs.events.plan_compile(&route.kernel, &head_sig);
+    }
 
     match result {
         Ok(outputs_per_req) => {
             let n = batch.len();
             for ((req, outputs), q_us) in batch.into_iter().zip(outputs_per_req).zip(queue_us) {
-                let req_metrics = shared.obs.per_kernel.handle(&route.kernel, &req.shape_sig);
-                let total_us = req.submitted.elapsed().as_micros() as u64;
+                let req_metrics = shared.obs.per_kernel.handle_for(
+                    &route.kernel,
+                    &req.shape_sig,
+                    req.client_id.as_deref(),
+                );
+                let wire = req.net_read_us.is_some();
+                let total_us =
+                    req.submitted.elapsed().as_micros() as u64 + req.net_read_us.unwrap_or(0);
                 for m in [&shared.metrics, &*req_metrics] {
                     m.completed.fetch_add(1, Ordering::Relaxed);
                     m.queue_us_total.fetch_add(q_us, Ordering::Relaxed);
                     m.observe_latency_us(total_us);
                 }
+                // a trace is built when the sampler picked the request,
+                // when it is wire-originated (the front door echoes the
+                // breakdown), or when the flight recorder may want it as
+                // a slow-request event
+                let trace = if req.sampled || wire || shared.obs.events.wants_slow() {
+                    Some(build_trace(
+                        route, &req, drained, plan_span, t0, exec_end, plan_hit, n, coalesced,
+                    ))
+                } else {
+                    None
+                };
+                let resp_trace = if wire { trace.clone() } else { None };
+                let sampled = req.sampled;
                 let _ = req.reply.send(Ok(Response {
                     outputs,
                     queue_us: q_us,
                     exec_us,
                     batch_size: n,
                     backend: backend_name,
+                    trace: resp_trace,
+                    sampled,
                 }));
-                // recorded after the send so the Reply span covers delivery
-                // (send takes &self, so req is still usable here)
-                if req.sampled {
-                    shared.obs.traces.record(build_trace(
-                        route,
-                        &req.shape_sig,
-                        req.submitted,
-                        drained,
-                        req.tune_us,
-                        plan_span,
-                        t0,
-                        exec_end,
-                        plan_hit,
-                        n,
-                        coalesced,
-                    ));
+                // wire traces are finished (net_write appended) and
+                // recorded by the front door after the reply frame is
+                // written; in-process traces land here
+                if !wire {
+                    if let Some(trace) = trace {
+                        shared.obs.note_request_done(sampled, trace);
+                    }
                 }
             }
         }
@@ -678,17 +849,18 @@ fn execute_batch(shared: &Shared, registry: &Registry, route: &RouteKey, batch: 
     }
 }
 
-/// Assemble the span waterfall for one completed request: (tune →)
-/// queued → batched → plan lookup/compile → grid execute → reply, all as
-/// offsets from the request's own submit instant.  The `Tune` span only
-/// appears on the request that triggered a first-use search.
+/// Assemble the span waterfall for one completed request: (net_read →)
+/// (tune →) queued → batched → plan lookup/compile → grid execute →
+/// reply, all as offsets from the wire ingress start (wire requests) or
+/// the submit instant (in-process).  The `NetRead` span only appears on
+/// wire-originated requests — it shifts every later span right by the
+/// ingress time — and the `Tune` span only on the request that triggered
+/// a first-use search.
 #[allow(clippy::too_many_arguments)]
 fn build_trace(
     route: &RouteKey,
-    shape_sig: &str,
-    submitted: Instant,
+    req: &Request,
     drained: Instant,
-    tune_us: Option<u64>,
     plan_span: Option<(Instant, Instant)>,
     exec_start: Instant,
     exec_end: Instant,
@@ -697,15 +869,20 @@ fn build_trace(
     coalesced: bool,
 ) -> crate::obs::Trace {
     use crate::obs::{Span, SpanKind};
-    let off = |t: Instant| t.saturating_duration_since(submitted).as_micros() as u64;
+    let shift = req.net_read_us.unwrap_or(0);
+    let off =
+        |t: Instant| t.saturating_duration_since(req.submitted).as_micros() as u64 + shift;
     let reply_end = Instant::now();
     let mut spans = Vec::new();
-    let queued_start = match tune_us {
+    if req.net_read_us.is_some() {
+        spans.push(Span { kind: SpanKind::NetRead, start_us: 0, end_us: shift });
+    }
+    let queued_start = match req.tune_us {
         Some(t) => {
-            spans.push(Span { kind: SpanKind::Tune, start_us: 0, end_us: t });
-            t.min(off(drained))
+            spans.push(Span { kind: SpanKind::Tune, start_us: shift, end_us: shift + t });
+            (shift + t).min(off(drained))
         }
-        None => 0,
+        None => shift,
     };
     spans.push(Span { kind: SpanKind::Queued, start_us: queued_start, end_us: off(drained) });
     spans.push(Span { kind: SpanKind::Batch, start_us: off(drained), end_us: off(exec_start) });
@@ -722,11 +899,13 @@ fn build_trace(
     spans.push(Span { kind: SpanKind::Reply, start_us: off(exec_end), end_us: off(reply_end) });
     crate::obs::Trace {
         kernel: route.kernel.clone(),
-        shapes: shape_sig.to_string(),
+        shapes: req.shape_sig.clone(),
         batch_size,
         coalesced,
         plan_hit,
         total_us: off(reply_end),
+        trace_id: req.trace_id.clone(),
+        client_id: req.client_id.clone(),
         spans,
     }
 }
@@ -752,6 +931,9 @@ mod tests {
             shape_sig,
             sampled: false,
             tune_us: None,
+            client_id: None,
+            trace_id: None,
+            net_read_us: None,
             reply: tx,
         }
     }

@@ -1,0 +1,101 @@
+//! `repro events` — inspect the flight recorder's NDJSON event log.
+//!
+//! Reads the rotated predecessor (`<path>.1`) first and then the live
+//! file, so output is chronological across a rotation.  Filters stack:
+//! `--kind admit`, `--kernel softmax`, `--client acme`; `--last N`
+//! keeps only the newest N matching events; `--check` validates every
+//! line parses as a JSON object (exit non-zero otherwise) — the CI
+//! serving smoke runs it against the log a live server just wrote.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let path = match args.opt("file").map(PathBuf::from).or_else(|| {
+        std::env::var("NT_EVENT_LOG").ok().map(PathBuf::from)
+    }) {
+        Some(path) => path,
+        None => bail!(
+            "no event log given: pass --file PATH or set NT_EVENT_LOG \
+             (the server writes it when started with the same knob)"
+        ),
+    };
+    let kind = args.opt("kind");
+    let kernel = args.opt("kernel");
+    let client = args.opt("client");
+    let last = args.opt_positive("last")?;
+    let check = args.flag("check");
+
+    let mut events: Vec<(usize, String, Option<Json>)> = Vec::new();
+    let mut files = 0usize;
+    for candidate in [crate::obs::events::rotated_path(&path), path.clone()] {
+        if !candidate.exists() {
+            continue;
+        }
+        files += 1;
+        read_lines(&candidate, &mut events)?;
+    }
+    if files == 0 {
+        bail!("event log {} does not exist (nor does its rotation)", path.display());
+    }
+
+    let mut bad = 0usize;
+    let mut kept: Vec<&(usize, String, Option<Json>)> = Vec::new();
+    for entry in &events {
+        let (_, line, parsed) = entry;
+        let Some(obj) = parsed else {
+            bad += 1;
+            eprintln!("unparseable event line: {line}");
+            continue;
+        };
+        let field = |key: &str| obj.get(key).and_then(Json::as_str);
+        if kind.is_some_and(|want| field("event") != Some(want)) {
+            continue;
+        }
+        if kernel.is_some_and(|want| field("kernel") != Some(want)) {
+            continue;
+        }
+        if client.is_some_and(|want| field("client_id") != Some(want)) {
+            continue;
+        }
+        kept.push(entry);
+    }
+    if let Some(n) = last {
+        if kept.len() > n {
+            kept.drain(..kept.len() - n);
+        }
+    }
+    for (_, line, _) in &kept {
+        println!("{line}");
+    }
+    eprintln!(
+        "{} event(s) shown of {} total ({} file(s)){}",
+        kept.len(),
+        events.len(),
+        files,
+        if bad > 0 { format!(", {bad} unparseable") } else { String::new() }
+    );
+    if check && bad > 0 {
+        bail!("{bad} event line(s) failed to parse as JSON objects");
+    }
+    Ok(())
+}
+
+fn read_lines(path: &Path, out: &mut Vec<(usize, String, Option<Json>)>) -> Result<()> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening event log {}", path.display()))?;
+    for (i, line) in BufReader::new(file).lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(&line).ok().filter(|v| matches!(v, Json::Obj(_)));
+        out.push((i, line, parsed));
+    }
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //! validation utilities.  Each `run` prints the same rows/series the paper
 //! reports (see DESIGN.md §5 for the experiment index).
 
+pub mod events;
 pub mod fig6;
 pub mod fig7;
 pub mod golden;

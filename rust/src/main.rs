@@ -15,6 +15,8 @@
 //!                 the on-disk tuning table (NT_TUNE / NT_TUNE_TABLE)
 //!   lint          run the declaration verifier over the registry (--kernel
 //!                 NAME for one, --corpus for the negative test corpus)
+//!   events        inspect the flight-recorder NDJSON log (--file PATH,
+//!                 --kind/--kernel/--client filters, --last N, --check)
 //!   kernels       list the kernel registry (serving-deployment debugging)
 //!   inspect       print manifest + launch-plan details
 
@@ -38,6 +40,7 @@ fn main() -> Result<()> {
         Some("stats") => harness::stats::run(&args),
         Some("tune") => harness::tune::run(&args),
         Some("lint") => harness::lint::run(&args),
+        Some("events") => harness::events::run(&args),
         Some("kernels") => kernels_cmd(),
         Some("inspect") => inspect(),
         other => {
@@ -62,6 +65,9 @@ fn main() -> Result<()> {
                  \x20 lint           run the declaration verifier (dataflow, shapes,\n\
                  \x20                coalesce audit, padding safety) over the registry\n\
                  \x20                (--kernel NAME, --corpus; docs/diagnostics.md)\n\
+                 \x20 events         inspect the flight-recorder NDJSON log (--file PATH\n\
+                 \x20                or NT_EVENT_LOG; --kind/--kernel/--client, --last N,\n\
+                 \x20                --check; docs/observability.md)\n\
                  \x20 kernels        list the kernel registry (name, arity, arrangement,\n\
                  \x20                coalescible, loop-carried, native/artifact availability)\n\
                  \x20 inspect        print manifest and launch-plan details"

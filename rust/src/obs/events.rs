@@ -1,0 +1,400 @@
+//! The flight recorder: a bounded, low-overhead NDJSON event log for
+//! the serving path.
+//!
+//! Every line is one self-contained JSON object with at least `"event"`
+//! (the kind) and `"ts_ms"` (wall clock, Unix millis).  The recorder
+//! captures the decisions that matter when debugging an incident after
+//! the fact: admissions, sheds (with the effective watermark and the
+//! structured reason), plan compiles, autotune decisions, SLO breach
+//! transitions, and — when `NT_SLOW_US` is set — the full span trace of
+//! any request at least that slow.
+//!
+//! Durability discipline:
+//!
+//! * **one `write_all` per line** — a line is never split across
+//!   syscalls, so concurrent emitters cannot tear each other's records
+//!   (the line is formatted outside the sink lock, written under it);
+//! * **size-bounded rotation** — when appending a line would push the
+//!   file past the cap, the current file is atomically renamed to
+//!   `<path>.1` (replacing any previous rotation) and a fresh file is
+//!   started, all under the sink lock: at most two files ever exist and
+//!   every line lands whole in exactly one of them;
+//! * **fail-open** — an I/O error disables the sink with one warning to
+//!   stderr; the serving path never blocks or errors on the recorder.
+//!
+//! Disabled (the default — no `NT_EVENT_LOG`), every emitter returns
+//! after one branch.  `repro events` tails and filters the log.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use super::slo::SloStatus;
+use super::trace::{Span, Trace};
+use crate::json::Json;
+
+/// Default rotation cap (`NT_EVENT_LOG_MAX_KB`), in KiB.
+pub const DEFAULT_MAX_KB: usize = 4096;
+
+/// The event log handle; cheap to probe when disabled.
+pub struct EventLog {
+    sink: Option<Sink>,
+    slow_us: Option<u64>,
+}
+
+struct Sink {
+    path: PathBuf,
+    max_bytes: u64,
+    /// set on the first I/O error; further writes are skipped
+    failed: AtomicBool,
+    state: Mutex<SinkState>,
+}
+
+struct SinkState {
+    file: File,
+    written: u64,
+}
+
+impl EventLog {
+    /// No sink: every emitter is a no-op after one branch.
+    pub fn disabled() -> EventLog {
+        EventLog { sink: None, slow_us: None }
+    }
+
+    /// Open (append) an NDJSON sink rotating at `max_bytes` (clamped to
+    /// ≥ 1 KiB).  `slow_us` arms slow-request trace capture.
+    pub fn to_file(path: PathBuf, max_bytes: u64, slow_us: Option<u64>) -> Result<EventLog> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening event log {}", path.display()))?;
+        let written = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(EventLog {
+            sink: Some(Sink {
+                path,
+                max_bytes: max_bytes.max(1024),
+                failed: AtomicBool::new(false),
+                state: Mutex::new(SinkState { file, written }),
+            }),
+            slow_us,
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.sink.as_ref().map(|s| s.path.as_path())
+    }
+
+    pub fn slow_us(&self) -> Option<u64> {
+        self.slow_us
+    }
+
+    /// Whether completed-request traces should be offered to
+    /// [`EventLog::maybe_slow_request`] — i.e. whether building a trace
+    /// purely for slow-capture is worth it.
+    pub fn wants_slow(&self) -> bool {
+        self.sink.is_some() && self.slow_us.is_some()
+    }
+
+    /// Emit one event line: `{"event": kind, "ts_ms": now, ...fields}`.
+    pub fn emit(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        let Some(sink) = &self.sink else { return };
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str(kind.to_string()));
+        o.insert("ts_ms".to_string(), Json::Num(now_ms() as f64));
+        for (k, v) in fields {
+            o.insert(k.to_string(), v);
+        }
+        let mut line = Json::Obj(o).to_string();
+        line.push('\n');
+        sink.write_line(&line);
+    }
+
+    pub fn admit(&self, kernel: &str, shapes: &str, client: Option<&str>) {
+        if !self.enabled() {
+            return;
+        }
+        let mut fields = vec![
+            ("kernel", Json::Str(kernel.to_string())),
+            ("shapes", Json::Str(shapes.to_string())),
+        ];
+        push_client(&mut fields, client);
+        self.emit("admit", fields);
+    }
+
+    /// `objective` is the burning SLO clause when the shed happened at a
+    /// lowered watermark (`reason: "slo_burn"` vs `"queue_full"`).
+    pub fn shed(
+        &self,
+        kernel: &str,
+        shapes: &str,
+        client: Option<&str>,
+        depth: usize,
+        watermark: usize,
+        objective: Option<&str>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let reason = if objective.is_some() { "slo_burn" } else { "queue_full" };
+        let mut fields = vec![
+            ("kernel", Json::Str(kernel.to_string())),
+            ("shapes", Json::Str(shapes.to_string())),
+            ("depth", Json::Num(depth as f64)),
+            ("watermark", Json::Num(watermark as f64)),
+            ("reason", Json::Str(reason.to_string())),
+        ];
+        if let Some(obj) = objective {
+            fields.push(("objective", Json::Str(obj.to_string())));
+        }
+        push_client(&mut fields, client);
+        self.emit("shed", fields);
+    }
+
+    pub fn plan_compile(&self, kernel: &str, shapes: &str) {
+        if !self.enabled() {
+            return;
+        }
+        self.emit(
+            "plan_compile",
+            vec![
+                ("kernel", Json::Str(kernel.to_string())),
+                ("shapes", Json::Str(shapes.to_string())),
+            ],
+        );
+    }
+
+    pub fn tune(&self, kernel: &str, shapes: &str, tune_us: u64, measurements: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.emit(
+            "tune",
+            vec![
+                ("kernel", Json::Str(kernel.to_string())),
+                ("shapes", Json::Str(shapes.to_string())),
+                ("tune_us", Json::Num(tune_us as f64)),
+                ("measurements", Json::Num(measurements as f64)),
+            ],
+        );
+    }
+
+    pub fn slo_breach(&self, status: &SloStatus) {
+        if !self.enabled() {
+            return;
+        }
+        self.emit(
+            "slo_breach",
+            vec![
+                ("objective", Json::Str(status.objective.clone())),
+                ("burn_rate", Json::Num(status.burn_rate)),
+                ("window_total", Json::Num(status.window_total as f64)),
+                ("window_violations", Json::Num(status.window_violations as f64)),
+            ],
+        );
+    }
+
+    /// Record the full span trace of a completed request if it is at
+    /// least `NT_SLOW_US` µs end to end.
+    pub fn maybe_slow_request(&self, trace: &Trace) {
+        let Some(limit) = self.slow_us else { return };
+        if self.sink.is_none() || trace.total_us < limit {
+            return;
+        }
+        let mut fields = vec![
+            ("kernel", Json::Str(trace.kernel.clone())),
+            ("shapes", Json::Str(trace.shapes.clone())),
+            ("batch_size", Json::Num(trace.batch_size as f64)),
+            ("coalesced", Json::Bool(trace.coalesced)),
+            ("total_us", Json::Num(trace.total_us as f64)),
+            ("spans", Json::Arr(trace.spans.iter().map(span_json).collect())),
+        ];
+        if let Some(c) = &trace.client_id {
+            fields.push(("client_id", Json::Str(c.clone())));
+        }
+        if let Some(t) = &trace.trace_id {
+            fields.push(("trace_id", Json::Str(t.clone())));
+        }
+        self.emit("slow_request", fields);
+    }
+}
+
+fn push_client(fields: &mut Vec<(&str, Json)>, client: Option<&str>) {
+    if let Some(c) = client {
+        fields.push(("client_id", Json::Str(c.to_string())));
+    }
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("kind".to_string(), Json::Str(s.kind.name().to_string()));
+    o.insert("start_us".to_string(), Json::Num(s.start_us as f64));
+    o.insert("end_us".to_string(), Json::Num(s.end_us as f64));
+    Json::Obj(o)
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// `<path>.1`, the single rotation slot.
+pub fn rotated_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".1");
+    PathBuf::from(os)
+}
+
+impl Sink {
+    fn write_line(&self, line: &str) {
+        if self.failed.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut state = self.state.lock().unwrap();
+        if state.written > 0 && state.written + line.len() as u64 > self.max_bytes {
+            if let Err(e) = self.rotate(&mut state) {
+                self.fail(&format!("rotate: {e}"));
+                return;
+            }
+        }
+        if let Err(e) = state.file.write_all(line.as_bytes()) {
+            self.fail(&format!("write: {e}"));
+            return;
+        }
+        state.written += line.len() as u64;
+    }
+
+    fn rotate(&self, state: &mut SinkState) -> std::io::Result<()> {
+        state.file.flush()?;
+        std::fs::rename(&self.path, rotated_path(&self.path))?;
+        state.file = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        state.written = 0;
+        Ok(())
+    }
+
+    fn fail(&self, why: &str) {
+        if !self.failed.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "nt-events: disabling event log {}: {why}",
+                self.path.display()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nt_events_{}_{name}.ndjson", std::process::id()))
+    }
+
+    fn cleanup(path: &Path) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(rotated_path(path));
+    }
+
+    fn lines(path: &Path) -> Vec<String> {
+        match std::fs::read_to_string(path) {
+            Ok(s) => s.lines().map(str::to_string).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    #[test]
+    fn disabled_log_is_inert() {
+        let log = EventLog::disabled();
+        assert!(!log.enabled());
+        assert!(!log.wants_slow());
+        log.emit("admit", vec![("kernel", Json::Str("mm".into()))]);
+        log.admit("mm", "8x8", None);
+    }
+
+    #[test]
+    fn events_land_as_parseable_ndjson() {
+        let path = temp("basic");
+        cleanup(&path);
+        let log = EventLog::to_file(path.clone(), 1 << 20, None).unwrap();
+        log.admit("mm", "8x8|8x8", Some("acme"));
+        log.shed("mm", "8x8|8x8", None, 9, 4, Some("p99<1ms"));
+        log.plan_compile("softmax", "4x16");
+        log.tune("mm", "8x8|8x8", 1234, 21);
+        let all = lines(&path);
+        assert_eq!(all.len(), 4);
+        for line in &all {
+            let v = crate::json::parse(line).expect("line parses");
+            assert!(v.get("event").is_some() && v.get("ts_ms").is_some(), "{line}");
+        }
+        let shed = crate::json::parse(&all[1]).unwrap();
+        assert_eq!(shed.str("reason").unwrap(), "slo_burn");
+        assert_eq!(shed.str("objective").unwrap(), "p99<1ms");
+        assert_eq!(shed.usize("watermark").unwrap(), 4);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn rotation_keeps_whole_lines_in_two_files() {
+        let path = temp("rotate");
+        cleanup(&path);
+        // cap clamps to 1024 bytes; ~100-byte lines force several rotations
+        let log = EventLog::to_file(path.clone(), 1, None).unwrap();
+        for i in 0..64 {
+            log.admit("softmax", &format!("row_{i:04}_padpadpadpadpadpadpadpad"), Some("hammer"));
+        }
+        let rotated = rotated_path(&path);
+        assert!(rotated.exists(), "rotation happened");
+        for file in [&rotated, &path] {
+            let all = lines(file);
+            assert!(!all.is_empty());
+            assert!(std::fs::metadata(file).unwrap().len() <= 2048);
+            for line in &all {
+                crate::json::parse(line).expect("rotated line parses");
+            }
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn slow_capture_respects_threshold() {
+        use crate::obs::{SpanKind, Trace};
+        let path = temp("slow");
+        cleanup(&path);
+        let log = EventLog::to_file(path.clone(), 1 << 20, Some(100)).unwrap();
+        assert!(log.wants_slow());
+        let mut t = Trace {
+            kernel: "mm".into(),
+            shapes: "8x8|8x8".into(),
+            batch_size: 1,
+            coalesced: false,
+            plan_hit: Some(true),
+            total_us: 99,
+            trace_id: Some("req-1".into()),
+            client_id: Some("acme".into()),
+            spans: vec![Span { kind: SpanKind::Execute, start_us: 0, end_us: 99 }],
+        };
+        log.maybe_slow_request(&t); // under threshold: dropped
+        t.total_us = 100;
+        log.maybe_slow_request(&t); // at threshold: recorded
+        let all = lines(&path);
+        assert_eq!(all.len(), 1);
+        let v = crate::json::parse(&all[0]).unwrap();
+        assert_eq!(v.str("event").unwrap(), "slow_request");
+        assert_eq!(v.str("trace_id").unwrap(), "req-1");
+        assert_eq!(v.str("client_id").unwrap(), "acme");
+        assert_eq!(v.arr("spans").unwrap().len(), 1);
+        cleanup(&path);
+    }
+}

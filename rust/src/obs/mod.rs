@@ -16,14 +16,23 @@
 //! 3. **Execution profiling** — [`ProfileReport`], opt-in (`NT_PROFILE=1`)
 //!    wall-time attribution per IR instruction kind and per grid cell,
 //!    attached to each compiled plan, plus worker-pool [`PoolGauges`].
+//! 4. **Latency SLOs** — [`SloEngine`], per-kernel / per-client
+//!    objectives (`NT_SLO`) evaluated over rolling windows against the
+//!    registry's histograms; a burning error budget feeds back into
+//!    admission (the coordinator halves its shed watermark).
+//! 5. **The flight recorder** — [`EventLog`], a bounded NDJSON event
+//!    log (`NT_EVENT_LOG`) of admissions, sheds, plan compiles, tune
+//!    decisions, SLO breaches and slow-request traces (`NT_SLOW_US`).
 //!
 //! Snapshots render three ways: a human table ([`ObsSnapshot::render_table`],
 //! the `repro stats` subcommand), Prometheus text exposition
 //! ([`ObsSnapshot::render_prometheus`], ready for a future TCP `/metrics`
 //! endpoint), and JSON ([`ObsSnapshot::to_json`]).
 
+pub mod events;
 pub mod profile;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
 use std::collections::BTreeMap;
@@ -32,8 +41,10 @@ use anyhow::Result;
 
 use crate::coordinator::MetricsSnapshot;
 use crate::json::Json;
+pub use events::EventLog;
 pub use profile::{InstrStat, PoolGauges, ProfileReport, ProfileSnapshot, INSTR_KINDS};
-pub use registry::{KernelShapeSnapshot, MetricsRegistry};
+pub use registry::{KernelShapeSnapshot, MetricsRegistry, MAX_CLIENT_ROWS, OVERFLOW_CLIENT};
+pub use slo::{parse_slo_spec, SloEngine, SloObjective, SloStatus};
 pub use trace::{render_waterfall, Span, SpanKind, Trace, TraceRecorder};
 
 /// How many slowest traces an [`ObsSnapshot`] retains and renders.
@@ -65,13 +76,42 @@ pub fn shape_sig(shapes: &[&[usize]]) -> String {
 pub struct Obs {
     pub per_kernel: MetricsRegistry,
     pub traces: TraceRecorder,
+    pub slo: SloEngine,
+    pub events: EventLog,
 }
 
 impl Obs {
     /// Build with knobs from the environment (`NT_TRACE_SAMPLE`); garbage
-    /// values fail loudly, matching the pool knobs.
+    /// values fail loudly, matching the pool knobs.  The SLO engine and
+    /// flight recorder start disabled — their knobs (`NT_SLO`,
+    /// `NT_EVENT_LOG`, …) are coordinator configuration, installed by
+    /// `Coordinator::start` from `CoordinatorConfig`.
     pub fn from_env() -> Result<Obs> {
-        Ok(Obs { per_kernel: MetricsRegistry::new(), traces: TraceRecorder::from_env()? })
+        Ok(Obs {
+            per_kernel: MetricsRegistry::new(),
+            traces: TraceRecorder::from_env()?,
+            slo: SloEngine::disabled(),
+            events: EventLog::disabled(),
+        })
+    }
+
+    /// Evaluate the SLO window if one is due (cheap no-op otherwise) and
+    /// log breach transitions to the flight recorder.
+    pub fn tick_slo(&self) {
+        for breached in self.slo.maybe_evaluate(&self.per_kernel) {
+            self.events.slo_breach(&breached);
+        }
+    }
+
+    /// Account a finished request's trace: offer it to slow-request
+    /// capture, then ring it if the request was sampled.  The coordinator
+    /// calls this for in-process completions, the wire front door after
+    /// the reply write (so the trace carries the `net_write` span).
+    pub fn note_request_done(&self, sampled: bool, trace: Trace) {
+        self.events.maybe_slow_request(&trace);
+        if sampled {
+            self.traces.record(trace);
+        }
     }
 }
 
@@ -79,10 +119,14 @@ impl Obs {
 pub struct ObsSnapshot {
     /// the coordinator's global counters, plan h/m included
     pub global: MetricsSnapshot,
-    /// per-(kernel, shape) rows, sorted; plan h/m zero (see `plan_kernels`)
+    /// per-(kernel, shape, client) rows, sorted; plan h/m zero (see
+    /// `plan_kernels`)
     pub kernels: Vec<KernelShapeSnapshot>,
     /// per-kernel plan-cache (hits, misses) from [`crate::exec::PlanCache`]
     pub plan_kernels: Vec<(String, u64, u64)>,
+    /// per-objective SLO verdicts for the last evaluated window (empty
+    /// when no `NT_SLO` is configured)
+    pub slo: Vec<SloStatus>,
     /// the `TRACE_TOP_N` slowest retained traces, slowest first
     pub traces: Vec<Trace>,
     /// per-plan profiles (non-empty only under `NT_PROFILE=1`)
@@ -105,17 +149,19 @@ impl ObsSnapshot {
         out.push_str(&self.global.render());
         out.push_str("\nper-kernel/per-shape (plan h/m is kernel-level):\n");
         out.push_str(&format!(
-            "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8}\n",
-            "kernel", "shapes", "count", "p50_us", "p99_us", "coalesced", "batched", "plan h/m",
-            "tuned", "tune_ms"
+            "  {:<10} {:<24} {:<10} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8}\n",
+            "kernel", "shapes", "client", "count", "p50_us", "p99_us", "coalesced", "batched",
+            "plan h/m", "tuned", "tune_ms"
         ));
         for row in &self.kernels {
             let m = &row.metrics;
             let (hits, misses) = self.plan_for(&row.kernel);
+            let client = if row.client.is_empty() { "-" } else { row.client.as_str() };
             out.push_str(&format!(
-                "  {:<10} {:<24} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8.1}\n",
+                "  {:<10} {:<24} {:<10} {:>6} {:>8} {:>8} {:>9} {:>9} {:>11} {:>5} {:>8.1}\n",
                 row.kernel,
                 row.shapes,
+                client,
                 m.completed,
                 m.latency_quantile_us(0.5),
                 m.latency_quantile_us(0.99),
@@ -125,6 +171,19 @@ impl ObsSnapshot {
                 m.tuned_plans,
                 m.tune_us_total as f64 / 1000.0,
             ));
+        }
+        if !self.slo.is_empty() {
+            out.push_str("slo objectives (burn = violation rate / error budget):\n");
+            for s in &self.slo {
+                out.push_str(&format!(
+                    "  {:<28} window n={:<6} viol={:<6} burn={:<8.2} {}\n",
+                    s.objective,
+                    s.window_total,
+                    s.window_violations,
+                    s.burn_rate,
+                    if s.burning { "BURNING" } else { "ok" }
+                ));
+            }
         }
         out.push_str(&self.pool.render());
         out.push('\n');
@@ -208,7 +267,7 @@ impl ObsSnapshot {
         out.push_str("# HELP nt_kernel_requests_total Per-kernel/per-shape requests by event.\n");
         out.push_str("# TYPE nt_kernel_requests_total counter\n");
         for row in &self.kernels {
-            let (kernel, shapes) = (escape_label(&row.kernel), escape_label(&row.shapes));
+            let labels = row_labels(row);
             let m = &row.metrics;
             for (event, v) in [
                 ("submitted", m.submitted),
@@ -220,20 +279,67 @@ impl ObsSnapshot {
                 ("tuned", m.tuned_plans),
             ] {
                 out.push_str(&format!(
-                    "nt_kernel_requests_total{{kernel=\"{kernel}\",shapes=\"{shapes}\",\
-                     event=\"{event}\"}} {v}\n"
+                    "nt_kernel_requests_total{{{labels},event=\"{event}\"}} {v}\n"
                 ));
             }
         }
         out.push_str("# HELP nt_kernel_latency_us Per-kernel/per-shape latency quantiles.\n");
         out.push_str("# TYPE nt_kernel_latency_us gauge\n");
         for row in &self.kernels {
-            let (kernel, shapes) = (escape_label(&row.kernel), escape_label(&row.shapes));
+            let labels = row_labels(row);
             for (q, label) in [(0.5, "0.5"), (0.99, "0.99")] {
                 out.push_str(&format!(
-                    "nt_kernel_latency_us{{kernel=\"{kernel}\",shapes=\"{shapes}\",\
-                     quantile=\"{label}\"}} {}\n",
+                    "nt_kernel_latency_us{{{labels},quantile=\"{label}\"}} {}\n",
                     row.metrics.latency_quantile_us(q)
+                ));
+            }
+        }
+        if !self.slo.is_empty() {
+            out.push_str(
+                "# HELP nt_slo_burn_rate Error-budget burn rate per objective \
+                 over the last window (>1 = burning).\n",
+            );
+            out.push_str("# TYPE nt_slo_burn_rate gauge\n");
+            for s in &self.slo {
+                out.push_str(&format!(
+                    "nt_slo_burn_rate{{objective=\"{}\"}} {:.4}\n",
+                    escape_label(&s.objective),
+                    s.burn_rate
+                ));
+            }
+            out.push_str(
+                "# HELP nt_slo_burning Whether the objective is burning \
+                 (admission sheds early).\n",
+            );
+            out.push_str("# TYPE nt_slo_burning gauge\n");
+            for s in &self.slo {
+                out.push_str(&format!(
+                    "nt_slo_burning{{objective=\"{}\"}} {}\n",
+                    escape_label(&s.objective),
+                    u64::from(s.burning)
+                ));
+            }
+            out.push_str(
+                "# HELP nt_slo_window_total Completions in the objective's last window.\n",
+            );
+            out.push_str("# TYPE nt_slo_window_total gauge\n");
+            for s in &self.slo {
+                out.push_str(&format!(
+                    "nt_slo_window_total{{objective=\"{}\"}} {}\n",
+                    escape_label(&s.objective),
+                    s.window_total
+                ));
+            }
+            out.push_str(
+                "# HELP nt_slo_window_violations Estimated over-threshold completions \
+                 in the objective's last window.\n",
+            );
+            out.push_str("# TYPE nt_slo_window_violations gauge\n");
+            for s in &self.slo {
+                out.push_str(&format!(
+                    "nt_slo_window_violations{{objective=\"{}\"}} {}\n",
+                    escape_label(&s.objective),
+                    s.window_violations
                 ));
             }
         }
@@ -278,6 +384,7 @@ impl ObsSnapshot {
                         let mut o = BTreeMap::new();
                         o.insert("kernel".to_string(), Json::Str(row.kernel.clone()));
                         o.insert("shapes".to_string(), Json::Str(row.shapes.clone()));
+                        o.insert("client".to_string(), Json::Str(row.client.clone()));
                         o.insert("metrics".to_string(), metrics_json(&row.metrics));
                         o.insert("plan_hits".to_string(), Json::Num(hits as f64));
                         o.insert("plan_misses".to_string(), Json::Num(misses as f64));
@@ -305,6 +412,20 @@ impl ObsSnapshot {
                             },
                         );
                         o.insert("total_us".to_string(), Json::Num(t.total_us as f64));
+                        o.insert(
+                            "trace_id".to_string(),
+                            match &t.trace_id {
+                                Some(id) => Json::Str(id.clone()),
+                                None => Json::Null,
+                            },
+                        );
+                        o.insert(
+                            "client_id".to_string(),
+                            match &t.client_id {
+                                Some(c) => Json::Str(c.clone()),
+                                None => Json::Null,
+                            },
+                        );
                         o.insert(
                             "spans".to_string(),
                             Json::Arr(
@@ -368,6 +489,28 @@ impl ObsSnapshot {
                     .collect(),
             ),
         );
+        root.insert(
+            "slo".to_string(),
+            Json::Arr(
+                self.slo
+                    .iter()
+                    .map(|s| {
+                        let mut o = BTreeMap::new();
+                        o.insert("objective".to_string(), Json::Str(s.objective.clone()));
+                        o.insert("quantile".to_string(), Json::Num(s.quantile));
+                        o.insert("threshold_us".to_string(), Json::Num(s.threshold_us as f64));
+                        o.insert("window_total".to_string(), Json::Num(s.window_total as f64));
+                        o.insert(
+                            "window_violations".to_string(),
+                            Json::Num(s.window_violations as f64),
+                        );
+                        o.insert("burn_rate".to_string(), Json::Num(s.burn_rate));
+                        o.insert("burning".to_string(), Json::Bool(s.burning));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
         let mut pool = BTreeMap::new();
         pool.insert("workers".to_string(), Json::Num(self.pool.workers as f64));
         pool.insert("queue_depth".to_string(), Json::Num(self.pool.queue_depth as f64));
@@ -403,6 +546,21 @@ fn metrics_json(m: &MetricsSnapshot) -> Json {
         o.insert(k.to_string(), Json::Num(v as f64));
     }
     Json::Obj(o)
+}
+
+/// The Prometheus label set for one registry row; the `client` label is
+/// only present on attributed rows, so unattributed series keep their
+/// pre-tenancy identity.
+fn row_labels(row: &KernelShapeSnapshot) -> String {
+    let mut labels = format!(
+        "kernel=\"{}\",shapes=\"{}\"",
+        escape_label(&row.kernel),
+        escape_label(&row.shapes)
+    );
+    if !row.client.is_empty() {
+        labels.push_str(&format!(",client=\"{}\"", escape_label(&row.client)));
+    }
+    labels
 }
 
 fn escape_label(value: &str) -> String {

@@ -1,16 +1,30 @@
-//! The per-kernel/per-shape metrics registry.
+//! The per-kernel/per-shape/per-client metrics registry.
 //!
-//! A [`MetricsRegistry`] maps `(kernel, shape signature)` to the same
-//! lock-free atomic [`Metrics`](crate::coordinator::Metrics) struct the
-//! coordinator uses globally.  Handles are `Arc`s: the hot path takes a
-//! read lock once per request to fetch (or, first time, a write lock to
-//! create) the handle, then records with plain relaxed atomics exactly
-//! like the global struct.
+//! A [`MetricsRegistry`] maps `(kernel, shape signature, client id)` to
+//! the same lock-free atomic [`Metrics`](crate::coordinator::Metrics)
+//! struct the coordinator uses globally.  Handles are `Arc`s: the hot
+//! path takes a read lock once per request to fetch (or, first time, a
+//! write lock to create) the handle, then records with plain relaxed
+//! atomics exactly like the global struct.
+//!
+//! The client dimension is optional (`""` = unattributed, the
+//! in-process / anonymous-wire default) and **cardinality-bounded**: at
+//! most [`MAX_CLIENT_ROWS`] distinct client ids get their own rows;
+//! later ids are folded into the [`OVERFLOW_CLIENT`] row so a client
+//! that invents ids per request cannot grow the registry (or the
+//! Prometheus exposition) without bound.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::{Metrics, MetricsSnapshot};
+
+/// Most distinct client ids that get dedicated rows; the rest fold into
+/// [`OVERFLOW_CLIENT`].
+pub const MAX_CLIENT_ROWS: usize = 64;
+
+/// The shared row for clients beyond the cardinality cap.
+pub const OVERFLOW_CLIENT: &str = "other";
 
 /// One registry row, snapshotted.
 ///
@@ -22,10 +36,19 @@ use crate::coordinator::{Metrics, MetricsSnapshot};
 pub struct KernelShapeSnapshot {
     pub kernel: String,
     pub shapes: String,
+    /// client id the row is attributed to; `""` = unattributed,
+    /// [`OVERFLOW_CLIENT`] = beyond the cardinality cap
+    pub client: String,
     pub metrics: MetricsSnapshot,
 }
 
-/// Concurrent map of per-(kernel, shape) [`Metrics`].
+struct Inner {
+    rows: HashMap<(String, String, String), Arc<Metrics>>,
+    /// distinct non-empty client ids holding dedicated rows
+    clients: HashSet<String>,
+}
+
+/// Concurrent map of per-(kernel, shape, client) [`Metrics`].
 ///
 /// ```
 /// use std::sync::atomic::Ordering;
@@ -40,52 +63,75 @@ pub struct KernelShapeSnapshot {
 /// let rows = reg.snapshot();
 /// assert_eq!(rows.len(), 1);
 /// assert_eq!(rows[0].kernel, "softmax");
+/// assert_eq!(rows[0].client, "");
 /// assert_eq!(rows[0].metrics.completed, 1);
 /// assert_eq!(reg.merged().submitted, 1);
 /// ```
 pub struct MetricsRegistry {
-    inner: RwLock<HashMap<(String, String), Arc<Metrics>>>,
+    inner: RwLock<Inner>,
 }
 
 impl MetricsRegistry {
     pub fn new() -> MetricsRegistry {
-        MetricsRegistry { inner: RwLock::new(HashMap::new()) }
+        MetricsRegistry {
+            inner: RwLock::new(Inner { rows: HashMap::new(), clients: HashSet::new() }),
+        }
     }
 
-    /// Fetch the metrics handle for `(kernel, shapes)`, creating it on
-    /// first use.  Read-lock fast path; the write lock is only taken the
-    /// first time a (kernel, shape) pair is seen.
+    /// Fetch the unattributed metrics handle for `(kernel, shapes)` —
+    /// [`MetricsRegistry::handle_for`] without a client id.
     pub fn handle(&self, kernel: &str, shapes: &str) -> Arc<Metrics> {
-        if let Some(m) = self
-            .inner
-            .read()
-            .unwrap()
-            .get(&(kernel.to_string(), shapes.to_string()))
+        self.handle_for(kernel, shapes, None)
+    }
+
+    /// Fetch the metrics handle for `(kernel, shapes, client)`, creating
+    /// it on first use.  Read-lock fast path; the write lock is only
+    /// taken the first time a key is seen.  A new client id past
+    /// [`MAX_CLIENT_ROWS`] resolves to the [`OVERFLOW_CLIENT`] row.
+    pub fn handle_for(&self, kernel: &str, shapes: &str, client: Option<&str>) -> Arc<Metrics> {
+        let client = client.unwrap_or("");
         {
-            return m.clone();
+            let inner = self.inner.read().unwrap();
+            let eff = effective_client(&inner, client);
+            let key = (kernel.to_string(), shapes.to_string(), eff.to_string());
+            if let Some(m) = inner.rows.get(&key) {
+                return m.clone();
+            }
         }
-        self.inner
-            .write()
-            .unwrap()
-            .entry((kernel.to_string(), shapes.to_string()))
+        let mut inner = self.inner.write().unwrap();
+        let eff = if client.is_empty() || inner.clients.contains(client) {
+            client.to_string()
+        } else if inner.clients.len() >= MAX_CLIENT_ROWS {
+            OVERFLOW_CLIENT.to_string()
+        } else {
+            inner.clients.insert(client.to_string());
+            client.to_string()
+        };
+        inner
+            .rows
+            .entry((kernel.to_string(), shapes.to_string(), eff))
             .or_default()
             .clone()
     }
 
-    /// Snapshot every row, sorted by kernel then shape signature.
+    /// Snapshot every row, sorted by kernel, shape signature, client.
     pub fn snapshot(&self) -> Vec<KernelShapeSnapshot> {
         let mut rows: Vec<KernelShapeSnapshot> = self
             .inner
             .read()
             .unwrap()
+            .rows
             .iter()
-            .map(|((kernel, shapes), m)| KernelShapeSnapshot {
+            .map(|((kernel, shapes, client), m)| KernelShapeSnapshot {
                 kernel: kernel.clone(),
                 shapes: shapes.clone(),
+                client: client.clone(),
                 metrics: m.snapshot(0, 0),
             })
             .collect();
-        rows.sort_by(|a, b| (&a.kernel, &a.shapes).cmp(&(&b.kernel, &b.shapes)));
+        rows.sort_by(|a, b| {
+            (&a.kernel, &a.shapes, &a.client).cmp(&(&b.kernel, &b.shapes, &b.client))
+        });
         rows
     }
 
@@ -99,13 +145,32 @@ impl MetricsRegistry {
         total
     }
 
-    /// Number of distinct (kernel, shape) rows.
+    /// Number of distinct (kernel, shape, client) rows.
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().len()
+        self.inner.read().unwrap().rows.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.read().unwrap().is_empty()
+        self.inner.read().unwrap().rows.is_empty()
+    }
+
+    /// Distinct client ids currently holding dedicated rows (excludes
+    /// `""` and [`OVERFLOW_CLIENT`]).
+    pub fn distinct_clients(&self) -> usize {
+        self.inner.read().unwrap().clients.len()
+    }
+}
+
+/// Resolve the row a client id lands in without mutating: known and
+/// unattributed ids map to themselves; an unknown id maps to itself
+/// while dedicated slots remain, otherwise to the overflow row.
+fn effective_client<'a>(inner: &Inner, client: &'a str) -> &'a str {
+    if client.is_empty() || inner.clients.contains(client) {
+        client
+    } else if inner.clients.len() >= MAX_CLIENT_ROWS {
+        OVERFLOW_CLIENT
+    } else {
+        client
     }
 }
 
@@ -142,5 +207,46 @@ mod tests {
         assert_eq!((rows[0].shapes.as_str(), rows[0].metrics.completed), ("4x16", 1));
         assert_eq!((rows[1].shapes.as_str(), rows[1].metrics.completed), ("4x32", 3));
         assert_eq!(reg.merged().completed, 4);
+    }
+
+    #[test]
+    fn clients_get_distinct_rows_sorted_after_unattributed() {
+        let reg = MetricsRegistry::new();
+        reg.handle_for("mm", "8x8|8x8", Some("acme")).completed.fetch_add(1, Ordering::Relaxed);
+        reg.handle("mm", "8x8|8x8").completed.fetch_add(2, Ordering::Relaxed);
+        let a = reg.handle_for("mm", "8x8|8x8", Some("acme"));
+        let b = reg.handle_for("mm", "8x8|8x8", Some("acme"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let rows = reg.snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].client.as_str(), rows[0].metrics.completed), ("", 2));
+        assert_eq!((rows[1].client.as_str(), rows[1].metrics.completed), ("acme", 1));
+        assert_eq!(reg.merged().completed, 3);
+        assert_eq!(reg.distinct_clients(), 1);
+    }
+
+    #[test]
+    fn client_cardinality_overflows_into_other() {
+        let reg = MetricsRegistry::new();
+        for i in 0..MAX_CLIENT_ROWS + 8 {
+            reg.handle_for("mm", "8x8|8x8", Some(&format!("client_{i:03}")))
+                .completed
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        assert_eq!(reg.distinct_clients(), MAX_CLIENT_ROWS);
+        // MAX dedicated rows + one shared overflow row
+        assert_eq!(reg.len(), MAX_CLIENT_ROWS + 1);
+        let rows = reg.snapshot();
+        let other = rows.iter().find(|r| r.client == OVERFLOW_CLIENT).unwrap();
+        assert_eq!(other.metrics.completed, 8);
+        // an already-capped id keeps resolving to its dedicated row
+        reg.handle_for("mm", "8x8|8x8", Some("client_000"))
+            .completed
+            .fetch_add(1, Ordering::Relaxed);
+        assert_eq!(reg.len(), MAX_CLIENT_ROWS + 1);
+        let rows = reg.snapshot();
+        let first = rows.iter().find(|r| r.client == "client_000").unwrap();
+        assert_eq!(first.metrics.completed, 2);
+        assert_eq!(reg.merged().completed, (MAX_CLIENT_ROWS + 9) as u64);
     }
 }

@@ -1,0 +1,451 @@
+//! Latency SLOs: per-kernel and per-client objectives evaluated over
+//! rolling windows against the per-row log2 histograms in
+//! [`MetricsRegistry`].
+//!
+//! An objective is declared in the `NT_SLO` spec string — a
+//! semicolon-separated list of `[scope:]pQ<duration` clauses:
+//!
+//! * `p99<2ms` — every request, any kernel, any client;
+//! * `mm:p99<5ms` — scoped to one kernel;
+//! * `client=acme:p95<10ms` — scoped to one tenant.
+//!
+//! Durations take `us`, `ms` or `s` units.  A malformed spec is a clean
+//! startup error (`CoordinatorConfig::validate`), matching every other
+//! `NT_*` knob.
+//!
+//! Evaluation is windowed and cheap: [`SloEngine::maybe_evaluate`] runs
+//! on the submit path but no more than once per window (`try_lock` + an
+//! elapsed check — between windows it is a single mutex probe).  Each
+//! window the engine diffs the current filtered histograms against the
+//! previous boundary, estimates the fraction of completions at or above
+//! the threshold (log-linear interpolation inside the boundary bucket),
+//! and derives the **error-budget burn rate**: the observed violation
+//! fraction over the allowed fraction `1 - q`.  A burn rate above 1.0
+//! marks the objective *burning*, which admission reads through
+//! [`SloEngine::burning_objective`] to shed earlier (the coordinator
+//! halves its effective watermark).  An idle window (zero completions)
+//! keeps the previous verdict — no traffic is no evidence of recovery.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::registry::MetricsRegistry;
+
+/// One parsed `NT_SLO` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloObjective {
+    /// kernel filter (`None` = every kernel)
+    pub kernel: Option<String>,
+    /// client filter (`None` = every client, attributed or not)
+    pub client: Option<String>,
+    /// quantile in (0, 1), e.g. `0.99` for `p99`
+    pub quantile: f64,
+    /// latency threshold in microseconds
+    pub threshold_us: u64,
+    /// the original clause text, the stable `objective` label
+    pub spec: String,
+}
+
+/// One objective's verdict for the most recent evaluated window.
+#[derive(Debug, Clone)]
+pub struct SloStatus {
+    /// the clause text, e.g. `"mm:p99<5ms"`
+    pub objective: String,
+    pub quantile: f64,
+    pub threshold_us: u64,
+    /// completions observed in the window
+    pub window_total: u64,
+    /// estimated completions at or above the threshold in the window
+    pub window_violations: u64,
+    /// violation fraction / allowed fraction (`1 - q`); > 1.0 = burning
+    pub burn_rate: f64,
+    pub burning: bool,
+}
+
+/// Parse a full `NT_SLO` spec string into its objectives.
+pub fn parse_slo_spec(spec: &str) -> Result<Vec<SloObjective>> {
+    let mut objectives = Vec::new();
+    for clause in spec.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        objectives.push(parse_objective(clause)?);
+    }
+    if objectives.is_empty() {
+        bail!("SLO spec {spec:?} contains no objectives");
+    }
+    Ok(objectives)
+}
+
+fn parse_objective(text: &str) -> Result<SloObjective> {
+    let (scope, body) = match text.split_once(':') {
+        Some((scope, body)) => (Some(scope.trim()), body.trim()),
+        None => (None, text.trim()),
+    };
+    let (kernel, client) = match scope {
+        None => (None, None),
+        Some(scope) => match scope.strip_prefix("client=") {
+            Some("") => bail!("SLO objective {text:?}: empty client name"),
+            Some(client) => (None, Some(client.to_string())),
+            None if scope.is_empty() => bail!("SLO objective {text:?}: empty kernel scope"),
+            None => (Some(scope.to_string()), None),
+        },
+    };
+    let body = body.strip_prefix('p').ok_or_else(|| {
+        anyhow!("SLO objective {text:?}: expected pQ<duration (e.g. p99<2ms)")
+    })?;
+    let (q_text, dur_text) = body.split_once('<').ok_or_else(|| {
+        anyhow!("SLO objective {text:?}: expected pQ<duration (e.g. p99<2ms)")
+    })?;
+    let q: f64 = q_text
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("SLO objective {text:?}: bad quantile {q_text:?}"))?;
+    if !(q > 0.0 && q < 100.0) {
+        bail!("SLO objective {text:?}: quantile must be in (0, 100)");
+    }
+    let threshold_us =
+        parse_duration_us(dur_text.trim()).with_context(|| format!("SLO objective {text:?}"))?;
+    Ok(SloObjective {
+        kernel,
+        client,
+        quantile: q / 100.0,
+        threshold_us,
+        spec: text.to_string(),
+    })
+}
+
+fn parse_duration_us(text: &str) -> Result<u64> {
+    let (value, scale) = if let Some(v) = text.strip_suffix("us") {
+        (v, 1.0)
+    } else if let Some(v) = text.strip_suffix("ms") {
+        (v, 1_000.0)
+    } else if let Some(v) = text.strip_suffix('s') {
+        (v, 1_000_000.0)
+    } else {
+        bail!("duration {text:?} needs a unit (us, ms or s)");
+    };
+    let value: f64 = value
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad duration value {text:?}"))?;
+    let us = (value * scale).round();
+    if !(1.0..9e15).contains(&us) {
+        bail!("duration {text:?} must be at least 1us");
+    }
+    Ok(us as u64)
+}
+
+struct SloState {
+    last_eval: Option<Instant>,
+    /// cumulative per-objective filtered histograms at the last window
+    /// boundary — the subtrahend that makes the window rolling
+    baselines: Vec<Vec<u64>>,
+    statuses: Vec<SloStatus>,
+}
+
+/// The windowed evaluator.  One per coordinator, shared by every
+/// submitter; disabled (no objectives) it is a single branch.
+pub struct SloEngine {
+    objectives: Vec<SloObjective>,
+    window: Duration,
+    /// mirror of "any status is burning", readable without the lock on
+    /// the admission fast path
+    any_burning: AtomicBool,
+    state: Mutex<SloState>,
+}
+
+impl SloEngine {
+    pub fn new(objectives: Vec<SloObjective>, window: Duration) -> SloEngine {
+        let statuses = objectives
+            .iter()
+            .map(|o| SloStatus {
+                objective: o.spec.clone(),
+                quantile: o.quantile,
+                threshold_us: o.threshold_us,
+                window_total: 0,
+                window_violations: 0,
+                burn_rate: 0.0,
+                burning: false,
+            })
+            .collect();
+        let baselines = objectives.iter().map(|_| Vec::new()).collect();
+        SloEngine {
+            objectives,
+            window: window.max(Duration::from_millis(1)),
+            any_burning: AtomicBool::new(false),
+            state: Mutex::new(SloState { last_eval: None, baselines, statuses }),
+        }
+    }
+
+    /// No objectives: every entry point is a cheap no-op.
+    pub fn disabled() -> SloEngine {
+        SloEngine::new(Vec::new(), Duration::from_secs(1))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !self.objectives.is_empty()
+    }
+
+    pub fn objectives(&self) -> &[SloObjective] {
+        &self.objectives
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Evaluate the window if one has elapsed; returns the objectives
+    /// that *transitioned into* burning (for the flight recorder).
+    /// Contention-free: a submitter that loses the `try_lock` race just
+    /// skips — someone else is evaluating.
+    pub fn maybe_evaluate(&self, registry: &MetricsRegistry) -> Vec<SloStatus> {
+        if self.objectives.is_empty() {
+            return Vec::new();
+        }
+        let Ok(mut state) = self.state.try_lock() else {
+            return Vec::new();
+        };
+        if let Some(last) = state.last_eval {
+            if last.elapsed() < self.window {
+                return Vec::new();
+            }
+        }
+        self.evaluate_locked(&mut state, registry)
+    }
+
+    /// Force a window evaluation now — tests and diagnostics;
+    /// [`SloEngine::maybe_evaluate`] is the rate-limited serving entry.
+    pub fn evaluate_now(&self, registry: &MetricsRegistry) -> Vec<SloStatus> {
+        if self.objectives.is_empty() {
+            return Vec::new();
+        }
+        let mut state = self.state.lock().unwrap();
+        self.evaluate_locked(&mut state, registry)
+    }
+
+    fn evaluate_locked(
+        &self,
+        state: &mut SloState,
+        registry: &MetricsRegistry,
+    ) -> Vec<SloStatus> {
+        state.last_eval = Some(Instant::now());
+        let rows = registry.snapshot();
+        let mut newly_burning = Vec::new();
+        for (i, obj) in self.objectives.iter().enumerate() {
+            let mut cur: Vec<u64> = Vec::new();
+            for row in &rows {
+                if obj.kernel.as_deref().is_some_and(|k| k != row.kernel) {
+                    continue;
+                }
+                if obj.client.as_deref().is_some_and(|c| c != row.client) {
+                    continue;
+                }
+                if cur.len() < row.metrics.latency_hist.len() {
+                    cur.resize(row.metrics.latency_hist.len(), 0);
+                }
+                for (acc, v) in cur.iter_mut().zip(&row.metrics.latency_hist) {
+                    *acc += v;
+                }
+            }
+            let baseline = &mut state.baselines[i];
+            if baseline.len() < cur.len() {
+                baseline.resize(cur.len(), 0);
+            }
+            let delta: Vec<u64> = cur
+                .iter()
+                .zip(baseline.iter())
+                .map(|(c, b)| c.saturating_sub(*b))
+                .collect();
+            baseline.clone_from(&cur);
+            let total: u64 = delta.iter().sum();
+            if total == 0 {
+                // an idle window is no evidence either way: keep the
+                // previous verdict until traffic returns
+                continue;
+            }
+            let violations = violations_at_or_above(&delta, obj.threshold_us);
+            let burn = (violations / total as f64) / (1.0 - obj.quantile);
+            let status = &mut state.statuses[i];
+            let was_burning = status.burning;
+            status.window_total = total;
+            status.window_violations = violations.round() as u64;
+            status.burn_rate = burn;
+            status.burning = burn > 1.0;
+            if status.burning && !was_burning {
+                newly_burning.push(status.clone());
+            }
+        }
+        self.any_burning
+            .store(state.statuses.iter().any(|s| s.burning), Ordering::Relaxed);
+        newly_burning
+    }
+
+    /// Whether any objective's error budget is burning right now — one
+    /// relaxed load, the admission fast path.
+    pub fn is_burning(&self) -> bool {
+        self.any_burning.load(Ordering::Relaxed)
+    }
+
+    /// The first burning objective's spec, for the structured shed
+    /// reason.  Takes the state lock only while actually burning.
+    pub fn burning_objective(&self) -> Option<String> {
+        if !self.is_burning() {
+            return None;
+        }
+        self.state
+            .lock()
+            .unwrap()
+            .statuses
+            .iter()
+            .find(|s| s.burning)
+            .map(|s| s.objective.clone())
+    }
+
+    /// Every objective's latest verdict (initialized at construction, so
+    /// the `nt_slo_*` series exist before the first window completes).
+    pub fn statuses(&self) -> Vec<SloStatus> {
+        self.state.lock().unwrap().statuses.clone()
+    }
+}
+
+/// Estimated completions at or above `threshold_us` in a log2 histogram
+/// delta (bucket `i` spans `[2^i, 2^(i+1))` µs): whole buckets above the
+/// threshold count fully, the boundary bucket contributes its
+/// interpolated fraction.
+fn violations_at_or_above(hist: &[u64], threshold_us: u64) -> f64 {
+    let mut violations = 0.0;
+    for (i, &count) in hist.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let lo = 1u64 << i;
+        let hi = 1u64 << (i + 1);
+        if threshold_us <= lo {
+            violations += count as f64;
+        } else if threshold_us < hi {
+            let frac = (hi - threshold_us) as f64 / (hi - lo) as f64;
+            violations += count as f64 * frac;
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_scopes_and_units() {
+        let objs = parse_slo_spec("p99<2ms; mm:p99<5ms; client=acme:p95<10ms").unwrap();
+        assert_eq!(objs.len(), 3);
+        assert_eq!(
+            (objs[0].kernel.as_deref(), objs[0].client.as_deref()),
+            (None, None)
+        );
+        assert!((objs[0].quantile - 0.99).abs() < 1e-12);
+        assert_eq!(objs[0].threshold_us, 2_000);
+        assert_eq!(objs[1].kernel.as_deref(), Some("mm"));
+        assert_eq!(objs[1].threshold_us, 5_000);
+        assert_eq!(objs[2].client.as_deref(), Some("acme"));
+        assert!((objs[2].quantile - 0.95).abs() < 1e-12);
+        assert_eq!(objs[2].threshold_us, 10_000);
+        assert_eq!(parse_slo_spec("p50<500us").unwrap()[0].threshold_us, 500);
+        assert_eq!(parse_slo_spec("p50<1s").unwrap()[0].threshold_us, 1_000_000);
+        assert_eq!(parse_slo_spec("p99.9<1ms").unwrap()[0].quantile, 0.999);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        for bad in [
+            "",
+            "p99",
+            "p99<",
+            "p99<2",       // no unit
+            "p99<0us",     // sub-1us threshold
+            "p0<2ms",      // quantile 0
+            "p100<2ms",    // quantile 100
+            "q99<2ms",     // no leading p
+            "client=:p99<2ms",
+            ":p99<2ms",
+            "mm:client=acme:p99<2ms",
+        ] {
+            assert!(parse_slo_spec(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn violation_interpolation() {
+        // 10 samples in bucket 6 ([64, 128) µs)
+        let mut hist = vec![0u64; 28];
+        hist[6] = 10;
+        assert_eq!(violations_at_or_above(&hist, 64) as u64, 10); // all
+        assert_eq!(violations_at_or_above(&hist, 128) as u64, 0); // none
+        let half = violations_at_or_above(&hist, 96); // midpoint
+        assert!((half - 5.0).abs() < 1e-9, "{half}");
+    }
+
+    #[test]
+    fn burn_trips_recovers_and_holds_through_idle_windows() {
+        let reg = MetricsRegistry::new();
+        let eng = SloEngine::new(
+            parse_slo_spec("p50<100us").unwrap(),
+            Duration::from_millis(1),
+        );
+        assert!(!eng.is_burning());
+        assert_eq!(eng.statuses().len(), 1, "statuses exist before any window");
+
+        let m = reg.handle("mm", "8x8|8x8");
+        for _ in 0..10 {
+            m.observe_latency_us(1000); // all violate 100us
+        }
+        let newly = eng.evaluate_now(&reg);
+        assert_eq!(newly.len(), 1);
+        assert!(eng.is_burning());
+        assert_eq!(eng.burning_objective().as_deref(), Some("p50<100us"));
+        let s = &eng.statuses()[0];
+        assert_eq!((s.window_total, s.window_violations), (10, 10));
+        assert!(s.burn_rate > 1.0, "burn={}", s.burn_rate);
+
+        // an idle window keeps the verdict: no traffic, still burning
+        assert!(eng.evaluate_now(&reg).is_empty());
+        assert!(eng.is_burning());
+
+        // a healthy window recovers (and is not a "newly burning" event)
+        for _ in 0..10 {
+            m.observe_latency_us(10);
+        }
+        assert!(eng.evaluate_now(&reg).is_empty());
+        assert!(!eng.is_burning());
+        assert!(eng.burning_objective().is_none());
+    }
+
+    #[test]
+    fn scoped_objectives_filter_rows() {
+        let reg = MetricsRegistry::new();
+        // mm is slow, softmax is fast; acme's requests are slow
+        for _ in 0..10 {
+            reg.handle("mm", "8x8|8x8").observe_latency_us(5000);
+            reg.handle("softmax", "4x16").observe_latency_us(10);
+            reg.handle_for("softmax", "4x16", Some("acme")).observe_latency_us(5000);
+        }
+        let eng = SloEngine::new(
+            parse_slo_spec("softmax:p50<100us;client=acme:p50<100us").unwrap(),
+            Duration::from_millis(1),
+        );
+        eng.evaluate_now(&reg);
+        let statuses = eng.statuses();
+        // the softmax objective sees both the fast anonymous rows and
+        // acme's slow ones: 10 of 20 violate = exactly the p50 budget
+        assert_eq!(statuses[0].window_total, 20);
+        assert_eq!(statuses[0].window_violations, 10);
+        // the client objective sees only acme's slow rows and burns
+        assert_eq!(statuses[1].window_total, 10);
+        assert!(statuses[1].burning);
+        assert_eq!(eng.burning_objective().as_deref(), Some("client=acme:p50<100us"));
+    }
+}

@@ -19,6 +19,10 @@ use anyhow::Result;
 /// The phases a request passes through, in lifecycle order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpanKind {
+    /// wire ingress: frame read + request decode (wire requests only;
+    /// its duration shifts every later span right, so offsets count
+    /// from the frame's arrival, not the coordinator submit)
+    NetRead,
     /// first-use autotune search on the submitting thread (only present
     /// on the request that triggered it)
     Tune,
@@ -32,17 +36,22 @@ pub enum SpanKind {
     Execute,
     /// unpack/unstack and reply delivery
     Reply,
+    /// wire egress: the reply frame's write, appended by the front door
+    /// after the write completes (wire requests only)
+    NetWrite,
 }
 
 impl SpanKind {
     pub fn name(&self) -> &'static str {
         match self {
+            SpanKind::NetRead => "net_read",
             SpanKind::Tune => "tune",
             SpanKind::Queued => "queued",
             SpanKind::Batch => "batch",
             SpanKind::Plan => "plan",
             SpanKind::Execute => "execute",
             SpanKind::Reply => "reply",
+            SpanKind::NetWrite => "net_write",
         }
     }
 }
@@ -73,6 +82,10 @@ pub struct Trace {
     /// backend has no plan cache (artifact / reference paths)
     pub plan_hit: Option<bool>,
     pub total_us: u64,
+    /// client-supplied wire correlation id, echoed in the reply breakdown
+    pub trace_id: Option<String>,
+    /// tenant identity the request was attributed to
+    pub client_id: Option<String>,
     pub spans: Vec<Span>,
 }
 
@@ -158,10 +171,18 @@ pub fn render_waterfall(traces: &[Trace]) -> String {
             Some(false) => "plan=compile",
             None => "plan=-",
         };
-        out.push_str(&format!(
-            "{} [{}] total={}us batch={} coalesced={} {}\n",
+        let mut head = format!(
+            "{} [{}] total={}us batch={} coalesced={} {}",
             t.kernel, t.shapes, t.total_us, t.batch_size, t.coalesced, hit
-        ));
+        );
+        if let Some(c) = &t.client_id {
+            head.push_str(&format!(" client={c}"));
+        }
+        if let Some(id) = &t.trace_id {
+            head.push_str(&format!(" trace={id}"));
+        }
+        head.push('\n');
+        out.push_str(&head);
         let total = t.total_us.max(1);
         for span in &t.spans {
             let start_col = (span.start_us as usize * WIDTH / total as usize).min(WIDTH);
@@ -195,6 +216,8 @@ mod tests {
             coalesced: false,
             plan_hit: Some(true),
             total_us,
+            trace_id: None,
+            client_id: None,
             spans: vec![
                 Span { kind: SpanKind::Queued, start_us: 0, end_us: total_us / 2 },
                 Span { kind: SpanKind::Execute, start_us: total_us / 2, end_us: total_us },

@@ -7,8 +7,11 @@
 //!   replies (never hangs) and the shed count lands in the obs snapshot,
 //! * frame/protocol violations get clean error replies with the documented
 //!   connection policy (garbage JSON survives; framing violations close),
+//! * a `trace_id`/`client_id`-tagged submit rides end to end: the reply
+//!   echoes a span breakdown, the server-side trace carries both net spans
+//!   and the identity fields, and the flight recorder logs it as NDJSON,
 //! * every replayable example in `docs/wire-protocol.md` is replayed
-//!   byte-for-byte (modulo the two documented timing fields).
+//!   byte-for-byte (modulo the documented timing fields).
 
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -18,6 +21,7 @@ use ninetoothed_repro::coordinator::net::frame::{read_frame, write_frame, FrameE
 use ninetoothed_repro::coordinator::net::{Client, NetConfig, Server};
 use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
 use ninetoothed_repro::json::Json;
+use ninetoothed_repro::obs::{render_waterfall, SpanKind};
 use ninetoothed_repro::prng::SplitMix64;
 use ninetoothed_repro::runtime::{HostTensor, Manifest};
 
@@ -138,6 +142,11 @@ fn flooding_a_small_queue_sheds_cleanly() {
                     assert!(
                         err.usize("retry_after_ms").unwrap() >= 1,
                         "shed replies must carry a retry hint: {reply}"
+                    );
+                    assert_eq!(
+                        err.str("reason").unwrap(),
+                        "queue_full",
+                        "no SLO is configured, so sheds must be plain queue_full: {reply}"
                     );
                     shed += 1;
                 }
@@ -263,6 +272,99 @@ fn submit_errors_carry_protocol_codes() {
     coordinator.drain();
 }
 
+#[test]
+fn traced_submit_rides_end_to_end_into_waterfall_and_event_log() {
+    // the acceptance path of the observability plane in one round trip: a
+    // trace_id-tagged TCP submit must (1) echo a span breakdown in the
+    // reply, (2) land in the trace ring with both net spans and the tenant
+    // identity, and (3) be captured by the flight recorder as a
+    // slow_request event (NT_SLOW_US=1 makes every request "slow")
+    let log_path =
+        std::env::temp_dir().join(format!("nt_net_events_{}.ndjson", std::process::id()));
+    let _ = std::fs::remove_file(&log_path);
+    let _ = std::fs::remove_file(ninetoothed_repro::obs::events::rotated_path(&log_path));
+    let (coordinator, server) = start_server(CoordinatorConfig {
+        event_log: Some(log_path.clone()),
+        slow_us: Some(1),
+        ..Default::default()
+    });
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    client.set_client_id("acme");
+    let mut rng = SplitMix64::new(5);
+    let x = HostTensor::randn(vec![7, 301], &mut rng);
+    let reply = client.submit_traced("softmax", "nt", &[x], Some("trace-e2e-1")).unwrap();
+
+    // (1) the echoed breakdown: id round-trips, net_read leads, spans
+    // telescope inside the server's own total
+    let breakdown = reply.trace.expect("wire submits must return a span breakdown");
+    assert_eq!(breakdown.trace_id.as_deref(), Some("trace-e2e-1"));
+    assert_eq!(
+        breakdown.spans.first().map(|(kind, _)| kind.as_str()),
+        Some("net_read"),
+        "breakdown must start with the net_read span: {:?}",
+        breakdown.spans
+    );
+    let span_sum: u64 = breakdown.spans.iter().map(|(_, us)| us).sum();
+    assert!(
+        span_sum <= breakdown.total_us,
+        "span sum {span_sum}µs exceeds the server total {}µs",
+        breakdown.total_us
+    );
+
+    // the reply write happens before the trace is recorded server-side;
+    // joining the connection threads makes the recording visible
+    drop(client);
+    server.shutdown();
+
+    // (2) the server-side trace: identity fields, both net spans, rendered
+    let traces = coordinator.obs().traces.recent();
+    let trace = traces
+        .iter()
+        .find(|t| t.trace_id.as_deref() == Some("trace-e2e-1"))
+        .expect("the traced submit must land in the trace ring");
+    assert_eq!(trace.client_id.as_deref(), Some("acme"));
+    assert_eq!(trace.kernel, "softmax");
+    assert!(trace.spans.iter().any(|s| matches!(s.kind, SpanKind::NetRead)));
+    assert!(
+        matches!(trace.spans.last().map(|s| s.kind), Some(SpanKind::NetWrite)),
+        "net_write must be the final span: {:?}",
+        trace.spans
+    );
+    let waterfall = render_waterfall(std::slice::from_ref(trace));
+    for marker in ["trace=trace-e2e-1", "client=acme", "net_read", "net_write"] {
+        assert!(waterfall.contains(marker), "waterfall missing {marker:?}:\n{waterfall}");
+    }
+
+    // the per-tenant metrics row exists alongside the trace
+    let snapshot = coordinator.obs_snapshot();
+    assert!(
+        snapshot.kernels.iter().any(|row| row.kernel == "softmax" && row.client == "acme"),
+        "expected a (softmax, acme) metrics row"
+    );
+    coordinator.drain();
+
+    // (3) the flight recorder: a parseable slow_request NDJSON line with
+    // the trace identity and the span array
+    let text = std::fs::read_to_string(&log_path).expect("the event log must exist");
+    let event = text
+        .lines()
+        .filter(|line| !line.trim().is_empty())
+        .map(|line| Json::parse(line).unwrap_or_else(|e| panic!("bad NDJSON {line:?}: {e}")))
+        .find(|e| {
+            e.get("event").and_then(Json::as_str) == Some("slow_request")
+                && e.get("trace_id").and_then(Json::as_str) == Some("trace-e2e-1")
+        })
+        .expect("the traced submit must be recorded as a slow_request event");
+    assert_eq!(event.get("client_id").and_then(Json::as_str), Some("acme"));
+    assert_eq!(event.get("kernel").and_then(Json::as_str), Some("softmax"));
+    assert!(
+        matches!(event.get("spans"), Some(Json::Arr(spans)) if !spans.is_empty()),
+        "slow_request must carry the span array: {event}"
+    );
+    let _ = std::fs::remove_file(&log_path);
+    let _ = std::fs::remove_file(ninetoothed_repro::obs::events::rotated_path(&log_path));
+}
+
 // ---------------------------------------------------------------------------
 // docs/wire-protocol.md replay
 // ---------------------------------------------------------------------------
@@ -305,14 +407,27 @@ fn doc_examples(doc: &str) -> Vec<(String, String)> {
     pairs
 }
 
-/// Zero the two documented timing fields so a reply can be compared
-/// byte-for-byte against the doc (which explains this normalization).
+/// Zero the documented timing fields so a reply can be compared
+/// byte-for-byte against the doc (which explains this normalization):
+/// top-level `queue_us`/`exec_us`, and inside a `trace` breakdown the
+/// `total_us` plus every span's `us`.  Span kinds and their order stay
+/// verbatim, so the doc pins the span sequence.
 fn normalize_timings(reply: &str) -> String {
     let mut v = Json::parse(reply).unwrap_or_else(|e| panic!("unparseable reply {reply:?}: {e}"));
     if let Json::Obj(map) = &mut v {
         for key in ["queue_us", "exec_us"] {
             if map.contains_key(key) {
                 map.insert(key.to_string(), Json::Num(0.0));
+            }
+        }
+        if let Some(Json::Obj(trace)) = map.get_mut("trace") {
+            trace.insert("total_us".to_string(), Json::Num(0.0));
+            if let Some(Json::Arr(spans)) = trace.get_mut("spans") {
+                for span in spans {
+                    if let Json::Obj(span) = span {
+                        span.insert("us".to_string(), Json::Num(0.0));
+                    }
+                }
             }
         }
     }

@@ -1,17 +1,22 @@
 //! Observability-layer integration tests: the per-kernel/per-shape
 //! metrics registry under concurrency, the coordinator's recording
-//! points, Prometheus exposition validity, trace sampling, and the
-//! opt-in execution profiler.
+//! points, Prometheus exposition validity, trace sampling, the SLO
+//! admission feedback loop, the flight recorder under concurrency, and
+//! the opt-in execution profiler.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig};
+use ninetoothed_repro::coordinator::{Coordinator, CoordinatorConfig, SubmitError};
 use ninetoothed_repro::exec::{lookup, GridScheduler, PlanCache};
 use ninetoothed_repro::harness::golden;
-use ninetoothed_repro::obs::{MetricsRegistry, ProfileReport, TraceRecorder};
+use ninetoothed_repro::json::Json;
+use ninetoothed_repro::obs::{
+    render_waterfall, EventLog, MetricsRegistry, ProfileReport, Span, SpanKind, Trace,
+    TraceRecorder,
+};
 use ninetoothed_repro::prng::SplitMix64;
-use ninetoothed_repro::runtime::Manifest;
+use ninetoothed_repro::runtime::{HostTensor, Manifest};
 
 /// 8 threads hammer 8 distinct kernels through one shared registry; the
 /// per-kernel rows must come out exact, and the merged (bare global)
@@ -48,8 +53,9 @@ fn registry_under_concurrent_distinct_kernel_hammering() {
         assert_eq!(row.metrics.submitted, PER_THREAD);
         assert_eq!(row.metrics.completed, PER_THREAD);
         assert_eq!(row.metrics.latency_us_sum, PER_THREAD * 100);
-        // 100µs lands in bucket [64, 128): inclusive upper bound 127
-        assert_eq!(row.metrics.latency_quantile_us(0.5), 127);
+        // 100µs lands in bucket [64, 127]; quantiles interpolate
+        // log-linearly within it: p50 sits mid-bucket, p99 at the top
+        assert_eq!(row.metrics.latency_quantile_us(0.5), 96);
         assert_eq!(row.metrics.latency_quantile_us(0.99), 127);
     }
     // bare global == sum of per-kernel rows
@@ -225,6 +231,189 @@ fn prometheus_exposition_parses() {
     assert!(text.contains("nt_requests_total"));
     assert!(text.contains("nt_kernel_requests_total"));
     assert!(text.contains("nt_request_latency_us_bucket"));
+}
+
+/// Waterfall rendering edge cases: zero-duration spans still draw a
+/// visible bar, an empty trace list renders to nothing, and slowest-N
+/// with tied totals returns exactly N rows.
+#[test]
+fn waterfall_edge_cases() {
+    let t = |kernel: &str, total_us: u64, spans: Vec<Span>| Trace {
+        kernel: kernel.to_string(),
+        shapes: "2x2".to_string(),
+        batch_size: 1,
+        coalesced: false,
+        plan_hit: None,
+        total_us,
+        trace_id: Some("edge-1".to_string()),
+        client_id: Some("acme".to_string()),
+        spans,
+    };
+    assert_eq!(render_waterfall(&[]), "", "no traces, no output");
+
+    // a zero-duration span must still render a visible bar
+    let zero = t(
+        "add",
+        50,
+        vec![
+            Span { kind: SpanKind::Queued, start_us: 0, end_us: 0 },
+            Span { kind: SpanKind::Execute, start_us: 0, end_us: 50 },
+        ],
+    );
+    let out = render_waterfall(&[zero]);
+    for line in out.lines().skip(1) {
+        assert!(line.contains('#'), "span row without a bar: {line:?}");
+    }
+    // the header carries the wire identity fields
+    assert!(out.contains("client=acme"), "{out}");
+    assert!(out.contains("trace=edge-1"), "{out}");
+
+    // net spans render under their wire names
+    let wire = t(
+        "mm",
+        100,
+        vec![
+            Span { kind: SpanKind::NetRead, start_us: 0, end_us: 10 },
+            Span { kind: SpanKind::Execute, start_us: 10, end_us: 90 },
+            Span { kind: SpanKind::NetWrite, start_us: 90, end_us: 100 },
+        ],
+    );
+    let out = render_waterfall(&[wire]);
+    assert!(out.contains("net_read"), "{out}");
+    assert!(out.contains("net_write"), "{out}");
+
+    // slowest-N with ties: still exactly N, all with the tied total
+    let rec = TraceRecorder::new(1, 8);
+    for _ in 0..5 {
+        rec.record(t("softmax", 200, vec![]));
+    }
+    let slow = rec.slowest(3);
+    assert_eq!(slow.len(), 3);
+    assert!(slow.iter().all(|s| s.total_us == 200));
+}
+
+/// 8 threads hammer one flight recorder through rotations: every line in
+/// both generations must parse as a complete JSON object — one torn or
+/// interleaved write fails the test.
+#[test]
+fn event_log_rotation_survives_concurrent_hammering() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 64;
+    let path = std::env::temp_dir().join(format!("nt_obs_hammer_{}.ndjson", std::process::id()));
+    let rotated = ninetoothed_repro::obs::events::rotated_path(&path);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&rotated);
+
+    // a tight cap so the hammer crosses several rotations
+    let log = Arc::new(EventLog::to_file(path.clone(), 2048, None).unwrap());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|i| {
+            let log = log.clone();
+            std::thread::spawn(move || {
+                let client = format!("tenant_{i}");
+                for j in 0..PER_THREAD {
+                    log.admit("softmax", "8x256", Some(&client));
+                    if j % 16 == 0 {
+                        log.plan_compile("softmax", "8x256");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut lines = 0usize;
+    for file in [&rotated, &path] {
+        let Ok(text) = std::fs::read_to_string(file) else { continue };
+        assert!(text.ends_with('\n') || text.is_empty(), "{}: torn tail", file.display());
+        for line in text.lines() {
+            let parsed = Json::parse(line)
+                .unwrap_or_else(|e| panic!("unparseable event line {line:?}: {e}"));
+            assert!(matches!(parsed, Json::Obj(_)), "non-object event: {line}");
+            let kind = parsed.get("event").and_then(Json::as_str).unwrap();
+            assert!(["admit", "plan_compile"].contains(&kind), "unexpected event {kind}");
+            lines += 1;
+        }
+    }
+    assert!(lines > 0, "the hammer must leave events behind");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&rotated);
+}
+
+/// The SLO feedback loop end to end: completions that blow an
+/// unsatisfiable objective flip the engine to burning, which (a) halves
+/// the effective shed watermark, (b) tags sheds with the objective, and
+/// (c) exports burn-rate gauges in the Prometheus exposition.
+#[test]
+fn slo_burn_lowers_watermark_and_exports_burn_rate() {
+    let config = CoordinatorConfig {
+        workers: 1,
+        queue_capacity: 4,
+        // every real request violates p99 < 1µs, so the budget burns as
+        // soon as one evaluation window sees a completion
+        slo: Some("p99<1us".to_string()),
+        slo_window_ms: 1,
+        ..Default::default()
+    };
+    let coordinator = Coordinator::start(Arc::new(Manifest::builtin()), config).unwrap();
+    assert_eq!(
+        coordinator.effective_watermark_now(),
+        (4, None),
+        "no completions yet: the configured watermark holds"
+    );
+
+    let mut rng = SplitMix64::new(19);
+    for _ in 0..8 {
+        let inputs = golden::native_task_inputs("mm", &mut rng).unwrap();
+        coordinator.submit("mm", "nt", inputs).unwrap().recv().unwrap().unwrap();
+    }
+    // let the 1ms window elapse, then evaluate via the snapshot path
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let snapshot = coordinator.obs_snapshot();
+    let (watermark, objective) = coordinator.effective_watermark_now();
+    assert_eq!(watermark, 2, "burning SLO must halve the watermark");
+    assert_eq!(objective.as_deref(), Some("p99<1us"));
+    let status = snapshot.slo.iter().find(|s| s.objective == "p99<1us").unwrap();
+    assert!(status.burning, "{status:?}");
+    assert!(status.burn_rate > 1.0, "{status:?}");
+    assert!(status.window_violations > 0, "{status:?}");
+
+    let prom = snapshot.render_prometheus();
+    for series in [
+        "nt_slo_burn_rate{objective=\"p99<1us\"}",
+        "nt_slo_burning{objective=\"p99<1us\"} 1",
+    ] {
+        assert!(prom.contains(series), "missing {series} in:\n{prom}");
+    }
+
+    // overload against the lowered watermark: park the single worker on
+    // a large matmul, then flood — the shed must carry the objective
+    let big = vec![
+        HostTensor::randn(vec![128, 128], &mut rng),
+        HostTensor::randn(vec![128, 128], &mut rng),
+    ];
+    let mut receivers = vec![coordinator.submit("mm", "nt", big).unwrap()];
+    let mut shed = None;
+    for _ in 0..20 {
+        let inputs = golden::native_task_inputs("softmax", &mut rng).unwrap();
+        match coordinator.submit_admit("softmax", "nt", inputs) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitError::Overloaded { watermark, slo_objective, .. }) => {
+                shed = Some((watermark, slo_objective));
+                break;
+            }
+            Err(SubmitError::Invalid(e)) => panic!("unexpected invalid: {e:#}"),
+        }
+    }
+    let (shed_watermark, shed_objective) = shed.expect("flooding a 1-worker queue must shed");
+    assert_eq!(shed_watermark, 2, "shed at the lowered watermark");
+    assert_eq!(shed_objective.as_deref(), Some("p99<1us"));
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    coordinator.shutdown();
 }
 
 /// The sampling knob keeps every k-th request; the ring drops the oldest.

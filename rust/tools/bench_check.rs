@@ -56,6 +56,11 @@ use ninetoothed_repro::json::Json;
 /// heuristic.  `restart_zero_measurements` gates the warm start on
 /// `tune_table_restart`: 1.0 iff a fresh tuner restored every winner
 /// from the just-written table without a single timed execution.
+/// `eventlog_rel_throughput` gates the flight recorder on the
+/// `obs_eventlog_*` row: bare-execution / logged-execution time with an
+/// admit event written per request — baseline 1.0, per-row 5% tolerance,
+/// so an enabled NDJSON event log may cost at most 5% of serving
+/// throughput.
 const METRICS: &[&str] = &[
     "gflops",
     "naive_gflops",
@@ -67,6 +72,7 @@ const METRICS: &[&str] = &[
     "resolves_per_s",
     "verifications_per_s",
     "obs_rel_throughput",
+    "eventlog_rel_throughput",
     "tuned_rel_throughput",
     "restart_zero_measurements",
 ];
